@@ -1,0 +1,68 @@
+//! Core census micro/meso benchmarks: the algorithm ladder (naive ->
+//! Batagelj-Mrvar -> merged traversal) and the parallel engine's
+//! policy x accumulation matrix. This is the harness behind the §Perf
+//! numbers in EXPERIMENTS.md.
+
+use triadic::bench::Bench;
+use triadic::census::{batagelj_mrvar, census_parallel, merged, naive, Accumulation, ParallelConfig};
+use triadic::graph::generators::power_law;
+use triadic::sched::Policy;
+
+fn main() {
+    let mut b = Bench::from_env(10);
+
+    // algorithm ladder on a mid-size scale-free graph
+    let g = power_law(5_000, 2.2, 10.0, 42);
+    println!(
+        "# graph: n={} arcs={} dyads={}",
+        g.node_count(),
+        g.arc_count(),
+        g.dyad_count()
+    );
+    let small = power_law(300, 2.2, 8.0, 42);
+    b.run("naive_oracle_n300", || naive::census(&small));
+    b.run("batagelj_mrvar_n300", || batagelj_mrvar::census(&small));
+    b.run("merged_n300", || merged::census(&small));
+
+    b.run("batagelj_mrvar_n5000", || batagelj_mrvar::census(&g));
+    b.run("merged_n5000", || merged::census(&g));
+
+    // O(m) scaling check: double the arcs, expect ~2x the time
+    for &(n, d) in &[(5_000usize, 10.0f64), (10_000, 10.0), (20_000, 10.0)] {
+        let gg = power_law(n, 2.2, d, 7);
+        b.run(&format!("merged_m{}k", gg.arc_count() / 1000), || {
+            merged::census(&gg)
+        });
+    }
+
+    // parallel engine: policies x accumulation (ablation)
+    for policy in [
+        Policy::Static { chunk: 1024 },
+        Policy::Dynamic { chunk: 256 },
+        Policy::Guided { min_chunk: 64 },
+    ] {
+        for (acc, acc_name) in [
+            (Accumulation::Bank { slots: 64 }, "bank64"),
+            (Accumulation::PerThread, "private"),
+        ] {
+            let cfg = ParallelConfig {
+                threads: 4,
+                policy,
+                accumulation: acc,
+            };
+            b.run(&format!("parallel_{}_{}_t4", policy.name(), acc_name), || {
+                census_parallel(&g, &cfg)
+            });
+        }
+    }
+
+    // contention ablation: bank slot counts (paper chose 64)
+    for slots in [1usize, 4, 16, 64, 256] {
+        let cfg = ParallelConfig {
+            threads: 4,
+            policy: Policy::dynamic_default(),
+            accumulation: Accumulation::Bank { slots },
+        };
+        b.run(&format!("bank_slots_{slots}_t4"), || census_parallel(&g, &cfg));
+    }
+}

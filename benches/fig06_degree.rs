@@ -1,0 +1,12 @@
+//! FIG6 bench: regenerate the outdegree-distribution figure and time
+//! the generation + characterization pipeline.
+
+use triadic::bench::Bench;
+use triadic::figures::{fig6, Scale};
+
+fn main() {
+    let mut b = Bench::from_env(3);
+    let out = b.run("fig06_degree_small", || fig6(Scale::Small));
+    let _ = out;
+    println!("\n{}", fig6(Scale::Small));
+}

@@ -1,0 +1,11 @@
+//! FIG9 bench: regenerate the XMT CPU-utilization timeline (orkut @ 8
+//! procs) and time the simulation.
+
+use triadic::bench::Bench;
+use triadic::figures::{fig9, Scale};
+
+fn main() {
+    let mut b = Bench::from_env(3);
+    b.run("fig09_utilization_small", || fig9(Scale::Small));
+    println!("\n{}", fig9(Scale::Small));
+}

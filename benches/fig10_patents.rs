@@ -1,0 +1,11 @@
+//! FIG10 bench: the patents-network three-machine comparison
+//! (exec time + speedup across 1..128 processors).
+
+use triadic::bench::Bench;
+use triadic::figures::{fig10, Scale};
+
+fn main() {
+    let mut b = Bench::from_env(3);
+    b.run("fig10_patents_small", || fig10(Scale::Small));
+    println!("\n{}", fig10(Scale::Small));
+}

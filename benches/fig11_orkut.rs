@@ -1,0 +1,10 @@
+//! FIG11 bench: the orkut-network three-machine comparison.
+
+use triadic::bench::Bench;
+use triadic::figures::{fig11, Scale};
+
+fn main() {
+    let mut b = Bench::from_env(3);
+    b.run("fig11_orkut_small", || fig11(Scale::Small));
+    println!("\n{}", fig11(Scale::Small));
+}

@@ -1,0 +1,10 @@
+//! FIG12 bench: NUMA parallel-efficiency detail at 32-48 cores.
+
+use triadic::bench::Bench;
+use triadic::figures::{fig12, Scale};
+
+fn main() {
+    let mut b = Bench::from_env(3);
+    b.run("fig12_numa_detail_small", || fig12(Scale::Small));
+    println!("\n{}", fig12(Scale::Small));
+}

@@ -1,0 +1,10 @@
+//! FIG13 bench: webgraph scaling on the 512-processor XMT (64-512).
+
+use triadic::bench::Bench;
+use triadic::figures::{fig13, Scale};
+
+fn main() {
+    let mut b = Bench::from_env(3);
+    b.run("fig13_webgraph_small", || fig13(Scale::Small));
+    println!("\n{}", fig13(Scale::Small));
+}

@@ -1,0 +1,11 @@
+//! SCHED bench: the scheduling-policy study (static/dynamic/guided),
+//! simulated on the paper's machines and measured on this host.
+
+use triadic::bench::Bench;
+use triadic::figures::{fig_sched, Scale};
+
+fn main() {
+    let mut b = Bench::from_env(2);
+    b.run("sched_policies_small", || fig_sched(Scale::Small));
+    println!("\n{}", fig_sched(Scale::Small));
+}

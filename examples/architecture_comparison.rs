@@ -1,0 +1,93 @@
+//! The paper's §7 study as a runnable example: characterize the three
+//! workloads, sweep the three machine models, and print the crossover
+//! analysis the paper's Figs 10–13 describe.
+//!
+//! ```sh
+//! cargo run --release --example architecture_comparison [-- full]
+//! ```
+
+use triadic::graph::GraphSpec;
+use triadic::sched::Policy;
+use triadic::simulator::{
+    simulate, Machine, NumaMachine, SuperdomeMachine, WorkloadProfile, XmtMachine,
+};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "full");
+    let (np, no, nw) = if full {
+        (200_000, 50_000, 400_000)
+    } else {
+        (60_000, 12_000, 80_000)
+    };
+
+    let workloads = [
+        GraphSpec::patents(np),
+        GraphSpec::orkut(no),
+        GraphSpec::webgraph(nw),
+    ];
+    let xmt = XmtMachine::pnnl();
+    let numa = NumaMachine::magny_cours();
+    let sd = SuperdomeMachine::sd64();
+    let machines: [&dyn Machine; 3] = [&xmt, &numa, &sd];
+    let pol = Policy::dynamic_default();
+
+    for spec in &workloads {
+        eprintln!("generating {} (n={})...", spec.name, spec.n);
+        let g = spec.generate();
+        let prof = WorkloadProfile::from_graph(spec.name, &g);
+        println!(
+            "\n=== {} === n={} arcs={} slots={} slot-imbalance={:.0}x random_fraction={:.2}",
+            spec.name,
+            g.node_count(),
+            g.arc_count(),
+            prof.len(),
+            prof.imbalance(),
+            prof.random_fraction
+        );
+        println!("{:>6} {:>14} {:>14} {:>14}", "procs", "XMT", "NUMA", "Superdome");
+        let procs = [1usize, 2, 4, 8, 16, 32, 36, 40, 48, 64, 96, 128];
+        let mut series: Vec<Vec<Option<f64>>> = vec![Vec::new(); 3];
+        for &p in &procs {
+            let mut row = format!("{p:>6}");
+            for (i, m) in machines.iter().enumerate() {
+                if p <= m.max_procs() {
+                    let t = simulate(*m, &prof, p, pol).makespan;
+                    series[i].push(Some(t));
+                    row += &format!(" {:>12.3}ms", t * 1e3);
+                } else {
+                    series[i].push(None);
+                    row += &format!(" {:>14}", "-");
+                }
+            }
+            println!("{row}");
+        }
+
+        // crossover analysis: first p where XMT beats NUMA / Superdome
+        for (other_idx, other_name) in [(1usize, "NUMA"), (2, "Superdome")] {
+            let cross = procs.iter().enumerate().find_map(|(i, &p)| {
+                match (series[0][i], series[other_idx][i]) {
+                    (Some(x), Some(o)) if x < o => Some(p),
+                    _ => None,
+                }
+            });
+            match cross {
+                Some(p) => println!("  XMT overtakes {other_name} at ~{p} procs"),
+                None => println!("  XMT never overtakes {other_name} in this sweep"),
+            }
+        }
+    }
+
+    // Fig 13: the big-machine run
+    println!("\n=== webgraph on the 512-processor XMT (Fig 13) ===");
+    let spec = GraphSpec::webgraph(nw);
+    let g = spec.generate();
+    let prof = WorkloadProfile::from_graph(spec.name, &g);
+    let m512 = XmtMachine::cray512();
+    let t64 = simulate(&m512, &prof, 64, pol).makespan;
+    println!("{:>6} {:>14} {:>10}", "procs", "time", "speedup");
+    for p in [64usize, 128, 256, 512] {
+        let t = simulate(&m512, &prof, p, pol).makespan;
+        println!("{p:>6} {:>12.3}ms {:>9.1}x", t * 1e3, t64 / t * 64.0);
+    }
+    println!("\narchitecture_comparison OK");
+}

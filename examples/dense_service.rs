@@ -1,0 +1,87 @@
+//! Dense-backend serving demo: batched census requests through the
+//! PJRT AOT path, with latency/throughput reporting — the
+//! "coordinator as a serving router" view of the system.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example dense_service
+//! ```
+//!
+//! Submits a mixed stream of window-sized graphs, reports per-size
+//! latency percentiles and overall throughput, and cross-checks a
+//! sample of responses against the sparse engine.
+
+use std::path::PathBuf;
+
+use triadic::census::merged;
+use triadic::coordinator::{Coordinator, CoordinatorConfig, Route};
+use triadic::graph::generators::erdos_renyi;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = ["artifacts", "../artifacts"]
+        .iter()
+        .map(PathBuf::from)
+        .find(|p| p.join("manifest.tsv").exists());
+    if artifacts.is_none() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: artifacts,
+        ..CoordinatorConfig::default()
+    })?;
+    anyhow::ensure!(coord.dense_enabled(), "dense backend failed to start");
+
+    // a mixed request stream: three window sizes, dense-routable
+    let mut requests = Vec::new();
+    for seed in 0..60u64 {
+        let (n, m) = match seed % 3 {
+            0 => (48, 400),
+            1 => (100, 1500),
+            _ => (220, 5000),
+        };
+        requests.push(erdos_renyi(n, m, seed));
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut latencies: Vec<(usize, f64)> = Vec::new();
+    for (i, g) in requests.iter().enumerate() {
+        let out = coord.census(g)?;
+        let Route::Dense { size } = out.route else {
+            anyhow::bail!("request {i} unexpectedly routed sparse");
+        };
+        latencies.push((size, out.seconds));
+        // spot-check exactness on every 10th request
+        if i % 10 == 0 {
+            anyhow::ensure!(
+                out.census == merged::census(g),
+                "dense result mismatch on request {i}"
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("served {} dense census requests in {wall:.3}s", requests.len());
+    println!("throughput: {:.1} req/s\n", requests.len() as f64 / wall);
+    for size in [64usize, 128, 256] {
+        let mut ls: Vec<f64> = latencies
+            .iter()
+            .filter(|(s, _)| *s == size)
+            .map(|&(_, l)| l)
+            .collect();
+        if ls.is_empty() {
+            continue;
+        }
+        ls.sort_by(f64::total_cmp);
+        let p = |q: f64| ls[((ls.len() - 1) as f64 * q) as usize];
+        println!(
+            "artifact {size:>3}: {:>2} reqs  p50 {:>8.3}ms  p90 {:>8.3}ms  max {:>8.3}ms",
+            ls.len(),
+            p(0.5) * 1e3,
+            p(0.9) * 1e3,
+            ls.last().unwrap() * 1e3
+        );
+    }
+    println!("\nmetrics:\n{}", coord.metrics().render());
+    println!("dense_service OK");
+    Ok(())
+}

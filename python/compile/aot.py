@@ -1,0 +1,74 @@
+"""AOT lowering: JAX census model -> HLO text artifacts for the Rust
+PJRT runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--sizes 64,128,256]
+
+Writes one ``census_dense_<n>.hlo.txt`` per size plus a ``manifest.tsv``
+the Rust artifact cache reads at startup.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import census_dense_tuple
+
+DEFAULT_SIZES = (64, 128, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (tuple return)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_census(n: int) -> str:
+    """Lower the dense census for a fixed n×n adjacency to HLO text."""
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    lowered = jax.jit(census_dense_tuple).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in DEFAULT_SIZES),
+        help="comma-separated dense census sizes to lower",
+    )
+    args = ap.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_rows = []
+    for n in sizes:
+        if n & (n - 1) or n < 8:
+            raise SystemExit(f"size {n} must be a power of two >= 8 (BlockSpec tiling)")
+        text = lower_census(n)
+        name = f"census_dense_{n}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_rows.append(f"census_dense\t{n}\t{name}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# kind\tsize\tfile\n")
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.tsv')}")
+
+
+if __name__ == "__main__":
+    main()

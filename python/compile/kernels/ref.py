@@ -1,0 +1,145 @@
+"""Pure-jnp oracle for the Pallas kernels and the dense census.
+
+Everything here is deliberately naive: materialized matmuls, no tiling,
+no fusion. ``pytest`` pins the Pallas kernel and the AOT model against
+these references; the Rust side independently pins the same arithmetic
+against the sparse algorithms.
+"""
+
+import jax.numpy as jnp
+
+
+def triple_product_ref(x, y, z):
+    """Unfused ``sum((x @ y) * z)``."""
+    return jnp.sum((x @ y) * z)
+
+
+def dyad_decompose_ref(a):
+    """(M, As, N) indicator matrices from adjacency ``a`` (0/1 f32)."""
+    at = a.T
+    m = a * at
+    asym = a - m
+    n = a.shape[0]
+    eye = jnp.eye(n, dtype=a.dtype)
+    nul = jnp.ones_like(a) - eye - m - asym - asym.T
+    return m, asym, nul
+
+
+def census_ref(a):
+    """Dense 16-class triad census from adjacency ``a``, as an f32
+    vector indexed 0..15 in Batagelj–Mrvar census order
+    (003, 012, 102, 021D, 021U, 021C, 111D, 111U, 030T, 030C, 201,
+    120D, 120U, 120C, 210, 300).
+
+    This is the reference formulation of Moody's matrix method; the
+    L2 model computes the same 15 triple products through the Pallas
+    kernel.
+    """
+    m, asym, nul = dyad_decompose_ref(a)
+    at = asym.T
+    s = asym + at
+    t = triple_product_ref
+
+    n = a.shape[0]
+    counts = [
+        t(nul, nul, s) / 2.0,      # 012
+        t(nul, nul, m) / 2.0,      # 102
+        t(at, asym, nul) / 2.0,    # 021D
+        t(asym, at, nul) / 2.0,    # 021U
+        t(asym, asym, nul),        # 021C
+        t(m, at, nul),             # 111D
+        t(m, asym, nul),           # 111U
+        t(asym, asym, asym),       # 030T
+        t(asym, asym, at) / 3.0,   # 030C
+        t(m, m, nul) / 2.0,        # 201
+        t(at, asym, m) / 2.0,      # 120D
+        t(asym, at, m) / 2.0,      # 120U
+        t(asym, asym, m),          # 120C
+        t(m, m, s) / 2.0,          # 210
+        t(m, m, m) / 6.0,          # 300
+    ]
+    nonnull = jnp.stack(counts)
+    total = n * (n - 1) * (n - 2) / 6.0
+    null = total - jnp.sum(nonnull)
+    return jnp.concatenate([jnp.array([null], dtype=nonnull.dtype), nonnull])
+
+
+def naive_census_ref(a):
+    """Brute-force triple-enumeration census — the ground truth for the
+    python test suite, independent of the matrix formulas. O(n^3)."""
+    import numpy as np
+
+    a = np.asarray(a).astype(np.int64)
+    n = a.shape[0]
+    counts = np.zeros(16, dtype=np.int64)
+    for u in range(n):
+        for v in range(u + 1, n):
+            for w in range(v + 1, n):
+                code = (
+                    a[u, v]
+                    | a[v, u] << 1
+                    | a[u, w] << 2
+                    | a[w, u] << 3
+                    | a[v, w] << 4
+                    | a[w, v] << 5
+                )
+                counts[_TRICODE_TABLE[code]] += 1
+    return counts
+
+
+def _classify(code: int) -> int:
+    """First-principles tricode classifier (mirror of the Rust
+    ``classify_tricode``), returning the 0-based census index."""
+    uv, vu = code & 1, (code >> 1) & 1
+    uw, wu = (code >> 2) & 1, (code >> 3) & 1
+    vw, wv = (code >> 4) & 1, (code >> 5) & 1
+
+    def dyad(x, y):
+        return 2 if (x and y) else (1 if (x or y) else 0)
+
+    d = [dyad(uv, vu), dyad(uw, wu), dyad(vw, wv)]
+    m, a_cnt = d.count(2), d.count(1)
+    n_cnt = d.count(0)
+    out = [uv + uw, vu + vw, wu + wv]
+    inn = [vu + wu, uv + wv, uw + vw]
+    mut = [d[0] == 2 or d[1] == 2, d[0] == 2 or d[2] == 2, d[1] == 2 or d[2] == 2]
+
+    key = (m, a_cnt, n_cnt)
+    if key == (0, 0, 3):
+        return 0
+    if key == (0, 1, 2):
+        return 1
+    if key == (1, 0, 2):
+        return 2
+    if key == (0, 2, 1):
+        if 2 in out:
+            return 3  # 021D
+        if 2 in inn:
+            return 4  # 021U
+        return 5  # 021C
+    if key == (1, 1, 1):
+        # head of the asym arc inside the mutual dyad => 111D
+        if d[0] == 1:
+            head_in = mut[1] if uv else mut[0]
+        elif d[1] == 1:
+            head_in = mut[2] if uw else mut[0]
+        else:
+            head_in = mut[2] if vw else mut[1]
+        return 6 if head_in else 7  # 111D / 111U
+    if key == (0, 3, 0):
+        return 9 if out == [1, 1, 1] else 8  # 030C else 030T
+    if key == (2, 0, 1):
+        return 10  # 201
+    if key == (1, 2, 0):
+        z = mut.index(False)
+        if out[z] == 2:
+            return 11  # 120D
+        if inn[z] == 2:
+            return 12  # 120U
+        return 13  # 120C
+    if key == (2, 1, 0):
+        return 14  # 210
+    return 15  # 300
+
+
+_TRICODE_TABLE = [_classify(c) for c in range(64)]

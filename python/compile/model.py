@@ -1,0 +1,70 @@
+"""Layer-2 JAX model: Moody's matrix-method dense triad census.
+
+The compute graph takes a padded ``(n, n)`` f32 adjacency matrix and
+produces the 16-element census vector (census order 003..300). The dyad
+decomposition and all 15 triple-product reductions run through the
+Layer-1 Pallas kernels so the whole census lowers into one HLO module
+that the Rust runtime executes via PJRT.
+
+Numerics: counts are exact in f32 while every individual product stays
+below 2^24; with the AOT sizes n <= 256 the largest single term is
+C(256,3) ≈ 2.8M, well inside the exact range. The Rust caller still
+recomputes the null slot in u128 when applying padding corrections.
+
+Build-time only — never imported on the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.triple_product import dyad_decompose, triple_product
+
+
+def census_dense(a, block: int | None = None):
+    """Full 16-class census of adjacency ``a`` through the Pallas path.
+
+    Returns an f32 vector in census order (003 first).
+
+    ``block`` selects the Pallas tile edge. Default (None) picks the
+    MXU-shaped schedule (128, see kernels.triple_product._block_for);
+    the CPU-PJRT AOT path passes ``block = n`` because interpret-mode
+    grid cells are pure emulation overhead there (§Perf: 4x at n=256).
+    """
+    import functools
+
+    n = a.shape[0]
+    m, asym, nul = dyad_decompose(a, block=block)
+    at = jnp.transpose(asym)
+    s = asym + at
+    t = functools.partial(triple_product, block=block)
+
+    counts = [
+        t(nul, nul, s) / 2.0,      # 012
+        t(nul, nul, m) / 2.0,      # 102
+        t(at, asym, nul) / 2.0,    # 021D
+        t(asym, at, nul) / 2.0,    # 021U
+        t(asym, asym, nul),        # 021C
+        t(m, at, nul),             # 111D
+        t(m, asym, nul),           # 111U
+        t(asym, asym, asym),       # 030T
+        t(asym, asym, at) / 3.0,   # 030C
+        t(m, m, nul) / 2.0,        # 201
+        t(at, asym, m) / 2.0,      # 120D
+        t(asym, at, m) / 2.0,      # 120U
+        t(asym, asym, m),          # 120C
+        t(m, m, s) / 2.0,          # 210
+        t(m, m, m) / 6.0,          # 300
+    ]
+    nonnull = jnp.stack(counts)
+    total = n * (n - 1) * (n - 2) / 6.0
+    null = total - jnp.sum(nonnull)
+    return jnp.concatenate([jnp.array([null], dtype=nonnull.dtype), nonnull])
+
+
+def census_dense_tuple(a):
+    """AOT entrypoint: 1-tuple result (the HLO-text interchange lowers
+    with ``return_tuple=True`` and the Rust side unwraps ``to_tuple1``).
+
+    Uses the CPU-PJRT schedule (single grid cell): the artifact targets
+    the Rust CPU client; on a real TPU toolchain lower with the default
+    ``block`` instead."""
+    return (census_dense(a, block=a.shape[0]),)

@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references.
+
+Hypothesis sweeps shapes, densities and dtypescales; assert_allclose
+against ref.py is THE core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    dyad_decompose_ref,
+    triple_product_ref,
+)
+from compile.kernels.triple_product import (
+    _block_for,
+    dyad_decompose,
+    triple_product,
+)
+
+SIZES = [8, 16, 32, 64, 128]
+
+
+def rand_matrix(rng, n, density=0.2, binary=True):
+    x = (rng.random((n, n)) < density).astype(np.float32)
+    if not binary:
+        x *= rng.random((n, n)).astype(np.float32) * 4.0 - 2.0
+    return jnp.asarray(x)
+
+
+class TestBlockFor:
+    def test_divides(self):
+        for n in [8, 16, 24, 48, 64, 128, 256, 512]:
+            b = _block_for(n)
+            assert n % b == 0
+            assert b <= 128
+
+    def test_caps_at_mxu_edge(self):
+        assert _block_for(256) == 128
+        assert _block_for(128) == 128
+        assert _block_for(64) == 64
+
+
+class TestTripleProduct:
+    @pytest.mark.parametrize("n", SIZES)
+    def test_binary_matrices(self, n):
+        rng = np.random.default_rng(n)
+        x, y, z = (rand_matrix(rng, n) for _ in range(3))
+        got = triple_product(x, y, z)
+        want = triple_product_ref(x, y, z)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @pytest.mark.parametrize("n", SIZES)
+    def test_real_valued_matrices(self, n):
+        rng = np.random.default_rng(100 + n)
+        x, y, z = (rand_matrix(rng, n, density=0.5, binary=False) for _ in range(3))
+        got = triple_product(x, y, z)
+        want = triple_product_ref(x, y, z)
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+    def test_explicit_block_override(self):
+        rng = np.random.default_rng(7)
+        x, y, z = (rand_matrix(rng, 64, 0.3) for _ in range(3))
+        want = triple_product_ref(x, y, z)
+        for block in [8, 16, 32, 64]:
+            got = triple_product(x, y, z, block=block)
+            np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_zero_and_identity(self):
+        n = 16
+        zero = jnp.zeros((n, n), jnp.float32)
+        eye = jnp.eye(n, dtype=jnp.float32)
+        ones = jnp.ones((n, n), jnp.float32)
+        assert float(triple_product(zero, ones, ones)) == 0.0
+        # (I @ ones) * ones sums to n*n
+        assert float(triple_product(eye, ones, ones)) == n * n
+        # trace-like: (I @ I) * I = I
+        assert float(triple_product(eye, eye, eye)) == n
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_pow=st.integers(min_value=3, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31),
+        density=st.floats(min_value=0.0, max_value=1.0),
+    )
+    def test_hypothesis_sweep(self, n_pow, seed, density):
+        n = 2**n_pow
+        rng = np.random.default_rng(seed)
+        x = rand_matrix(rng, n, density)
+        y = rand_matrix(rng, n, density)
+        z = rand_matrix(rng, n, density)
+        got = triple_product(x, y, z)
+        want = triple_product_ref(x, y, z)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestDyadDecompose:
+    @pytest.mark.parametrize("n", SIZES)
+    def test_matches_ref(self, n):
+        rng = np.random.default_rng(n * 3 + 1)
+        a = rand_matrix(rng, n, 0.3)
+        a = a * (1.0 - jnp.eye(n))  # no self-loops
+        got = dyad_decompose(a)
+        want = dyad_decompose_ref(a)
+        for g, w, name in zip(got, want, ["M", "As", "N"]):
+            np.testing.assert_allclose(g, w, rtol=1e-6, err_msg=name)
+
+    def test_partition_property(self):
+        # M + As + As^T + N + I must be the all-ones matrix
+        rng = np.random.default_rng(5)
+        n = 32
+        a = rand_matrix(rng, n, 0.4) * (1.0 - jnp.eye(n))
+        m, asym, nul = dyad_decompose(a)
+        total = m + asym + asym.T + nul + jnp.eye(n)
+        np.testing.assert_allclose(total, jnp.ones((n, n)), rtol=1e-6)
+
+    def test_m_symmetric_as_antisupported(self):
+        rng = np.random.default_rng(9)
+        n = 16
+        a = rand_matrix(rng, n, 0.5) * (1.0 - jnp.eye(n))
+        m, asym, _ = dyad_decompose(a)
+        np.testing.assert_allclose(m, m.T)
+        # As and As^T never overlap
+        assert float(jnp.max(asym * asym.T)) == 0.0
+
+
+class TestJitAndGrid:
+    def test_jit_cache_stable(self):
+        # second call must reuse the compiled function (no retrace error)
+        rng = np.random.default_rng(2)
+        a = rand_matrix(rng, 16, 0.3)
+        b = rand_matrix(rng, 16, 0.3)
+        c = rand_matrix(rng, 16, 0.3)
+        r1 = triple_product(a, b, c)
+        r2 = triple_product(a, b, c)
+        assert float(r1) == float(r2)
+
+    def test_grid_multiblock_consistency(self):
+        # n=128 with block 32 exercises a 4x4x4 grid with j-accumulation
+        rng = np.random.default_rng(11)
+        x, y, z = (rand_matrix(rng, 128, 0.1) for _ in range(3))
+        got = triple_product(x, y, z, block=32)
+        want = triple_product_ref(x, y, z)
+        np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,126 @@
+"""L2 correctness: the dense census model vs the brute-force oracle.
+
+``census_dense`` (Pallas path) and ``census_ref`` (pure-jnp matrix
+formulas) must both equal ``naive_census_ref`` (triple enumeration with
+the first-principles tricode classifier) exactly after rounding.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import census_ref, naive_census_ref, _TRICODE_TABLE
+from compile.model import census_dense
+
+
+def rand_digraph(rng, n, density):
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(a, 0.0)
+    return a
+
+
+def as_int(v):
+    return np.asarray(jnp.round(v)).astype(np.int64)
+
+
+class TestTricodeTable:
+    def test_multiplicities(self):
+        # Holland–Leinhardt labeled-triad counts per class
+        expected = [1, 6, 3, 3, 3, 6, 6, 6, 6, 2, 3, 3, 3, 6, 6, 1]
+        for idx, want in enumerate(expected):
+            assert _TRICODE_TABLE.count(idx) == want, f"class {idx}"
+
+    def test_arc_conservation(self):
+        arcs_per_class = [0, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 6]
+        for code in range(64):
+            assert bin(code).count("1") == arcs_per_class[_TRICODE_TABLE[code]]
+
+
+class TestFixtures:
+    def test_cycle3(self):
+        a = np.zeros((8, 8), np.float32)
+        a[0, 1] = a[1, 2] = a[2, 0] = 1.0
+        want = naive_census_ref(a)
+        np.testing.assert_array_equal(as_int(census_dense(jnp.asarray(a))), want)
+        assert want[9] == 1  # one 030C
+
+    def test_complete_mutual(self):
+        n = 8
+        a = np.ones((n, n), np.float32)
+        np.fill_diagonal(a, 0.0)
+        got = as_int(census_dense(jnp.asarray(a)))
+        want = np.zeros(16, np.int64)
+        want[15] = n * (n - 1) * (n - 2) // 6
+        np.testing.assert_array_equal(got, want)
+
+    def test_empty(self):
+        n = 16
+        a = np.zeros((n, n), np.float32)
+        got = as_int(census_dense(jnp.asarray(a)))
+        assert got[0] == n * (n - 1) * (n - 2) // 6
+        assert got[1:].sum() == 0
+
+    def test_out_star(self):
+        a = np.zeros((8, 8), np.float32)
+        a[0, 1] = a[0, 2] = a[0, 3] = 1.0
+        got = as_int(census_dense(jnp.asarray(a)))
+        np.testing.assert_array_equal(got, naive_census_ref(a))
+        assert got[3] == 3  # 021D
+
+
+class TestAgainstOracle:
+    @pytest.mark.parametrize("n", [8, 16])
+    @pytest.mark.parametrize("density", [0.05, 0.2, 0.5, 0.9])
+    def test_census_dense_exact(self, n, density):
+        rng = np.random.default_rng(int(n * 100 + density * 10))
+        a = rand_digraph(rng, n, density)
+        want = naive_census_ref(a)
+        got = as_int(census_dense(jnp.asarray(a)))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("n", [8, 16])
+    def test_ref_formulas_exact(self, n):
+        rng = np.random.default_rng(n)
+        a = rand_digraph(rng, n, 0.3)
+        want = naive_census_ref(a)
+        got = as_int(census_ref(jnp.asarray(a)))
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31),
+        density=st.floats(min_value=0.0, max_value=1.0),
+    )
+    def test_hypothesis_small_graphs(self, seed, density):
+        rng = np.random.default_rng(seed)
+        a = rand_digraph(rng, 8, density)
+        want = naive_census_ref(a)
+        got = as_int(census_dense(jnp.asarray(a)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_census_totals(self):
+        rng = np.random.default_rng(42)
+        n = 32
+        a = rand_digraph(rng, n, 0.15)
+        got = as_int(census_dense(jnp.asarray(a)))
+        assert got.sum() == n * (n - 1) * (n - 2) // 6
+
+    def test_padding_adds_only_null_and_dyadic(self):
+        # zero-padding a graph must keep all connected-triad classes
+        # fixed — the property the Rust runtime's padding correction
+        # relies on.
+        rng = np.random.default_rng(3)
+        a = rand_digraph(rng, 12, 0.3)
+        pad = np.zeros((16, 16), np.float32)
+        pad[:12, :12] = a
+        small = as_int(census_dense(jnp.asarray(a)))
+        big = as_int(census_dense(jnp.asarray(pad)))
+        # classes with >= 2 connected dyads are untouched by padding
+        np.testing.assert_array_equal(small[3:], big[3:])
+        # 012/102 grow by (#extra nodes) * (#asym / #mutual dyads)
+        extra = 4
+        n_asym = int((a * (1 - a.T)).sum())
+        n_mut = int((a * a.T).sum() // 2)
+        assert big[1] - small[1] == extra * n_asym
+        assert big[2] - small[2] == extra * n_mut

@@ -1,0 +1,15 @@
+//! Triadic security analysis — the paper's application layer
+//! (Figs 3–4): computing the triad census of computer-network traffic at
+//! fixed time intervals, tracking the proportions of triad types over
+//! time, and alerting when combinations of triads characteristic of
+//! threats depart from their baseline behaviour.
+
+pub mod monitor;
+pub mod patterns;
+pub mod traffic;
+pub mod window;
+
+pub use monitor::{Alert, MonitorConfig, TriadMonitor};
+pub use patterns::{builtin_patterns, ThreatPattern};
+pub use traffic::{TrafficEvent, TrafficGenerator, TrafficScenario};
+pub use window::{census_series, WindowCensus, Windower};

@@ -1,0 +1,319 @@
+//! The Fig 4 monitoring tool: track triad-class proportions over time,
+//! maintain a rolling baseline, and raise alerts when the deviations
+//! match a threat pattern "outside its normal behavior".
+
+use super::patterns::ThreatPattern;
+use super::window::WindowCensus;
+use crate::census::{Census, TriadType};
+
+/// Volume-independent per-class signature of a window census.
+///
+/// Raw proportions over `C(n,3)` are useless for alerting: the null
+/// class absorbs ~100% of mass and every extra active host dilutes all
+/// other classes cubically. Instead, the standard conditional
+/// normalization of triadic analysis:
+///
+/// * `003` → 0 (never informative for the Fig 3 patterns);
+/// * dyadic classes (`012`, `102`) → share of all *dyadic* triads
+///   (mutual-vs-asymmetric dyad balance);
+/// * connected classes (`021D`..`300`) → share of all *connected*
+///   triads ("proportions of triad types relative to one another", as
+///   the paper puts it).
+pub fn signature(census: &Census) -> [f64; 16] {
+    let mut s = [0f64; 16];
+    let dyadic = (census[TriadType::T012] + census[TriadType::T102]).max(1) as f64;
+    let connected: u64 = TriadType::ALL
+        .iter()
+        .filter(|t| t.is_connected_triad())
+        .map(|&t| census[t])
+        .sum();
+    let connected = connected.max(1) as f64;
+    for t in TriadType::ALL {
+        let i = t.index() - 1;
+        s[i] = match t {
+            TriadType::T003 => 0.0,
+            TriadType::T012 | TriadType::T102 => census[t] as f64 / dyadic,
+            _ => census[t] as f64 / connected,
+        };
+    }
+    s
+}
+
+/// Monitor configuration.
+#[derive(Debug, Clone)]
+pub struct MonitorConfig {
+    /// Windows used to warm the baseline before alerting begins.
+    pub warmup_windows: usize,
+    /// EWMA smoothing factor for the per-class baseline (0..1, smaller
+    /// = slower adaptation).
+    pub alpha: f64,
+    /// Pattern score (in baseline σ units) at which an alert fires.
+    pub threshold: f64,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig {
+            warmup_windows: 8,
+            alpha: 0.15,
+            threshold: 6.0,
+        }
+    }
+}
+
+/// A raised alert.
+#[derive(Debug, Clone)]
+pub struct Alert {
+    /// Window start time.
+    pub window_start: f64,
+    /// Matching pattern name.
+    pub pattern: &'static str,
+    /// Pattern score (σ units).
+    pub score: f64,
+    /// The three most-deviating triad classes driving the score.
+    pub top_classes: [TriadType; 3],
+}
+
+/// Per-class EWMA mean/variance baseline state.
+#[derive(Debug, Clone, Default)]
+struct Baseline {
+    mean: [f64; 16],
+    var: [f64; 16],
+    windows: usize,
+}
+
+impl Baseline {
+    fn update(&mut self, props: &[f64; 16], alpha: f64) {
+        if self.windows == 0 {
+            self.mean = *props;
+            self.var = [1e-6; 16];
+        } else {
+            for i in 0..16 {
+                let d = props[i] - self.mean[i];
+                self.mean[i] += alpha * d;
+                self.var[i] = (1.0 - alpha) * (self.var[i] + alpha * d * d);
+            }
+        }
+        self.windows += 1;
+    }
+
+    fn z_scores(&self, props: &[f64; 16]) -> [f64; 16] {
+        let mut z = [0f64; 16];
+        for i in 0..16 {
+            // floor sigma at 3% of share scale: rare classes (201, 030C,
+            // 300) otherwise alert on a single random triad
+            let sigma = self.var[i].sqrt().max(0.03);
+            z[i] = (props[i] - self.mean[i]) / sigma;
+        }
+        z
+    }
+}
+
+/// The monitoring tool: feed window censuses, collect alerts.
+#[derive(Debug)]
+pub struct TriadMonitor {
+    cfg: MonitorConfig,
+    patterns: Vec<ThreatPattern>,
+    baseline: Baseline,
+    history: Vec<(f64, [f64; 16])>,
+}
+
+impl TriadMonitor {
+    /// Create a monitor with the given patterns (see
+    /// [`super::patterns::builtin_patterns`]).
+    pub fn new(cfg: MonitorConfig, patterns: Vec<ThreatPattern>) -> TriadMonitor {
+        TriadMonitor {
+            cfg,
+            patterns,
+            baseline: Baseline::default(),
+            history: Vec::new(),
+        }
+    }
+
+    /// Number of windows observed so far.
+    pub fn windows_seen(&self) -> usize {
+        self.baseline.windows
+    }
+
+    /// The proportion history (for plotting Fig 4-style timelines).
+    pub fn history(&self) -> &[(f64, [f64; 16])] {
+        &self.history
+    }
+
+    /// Observe one window census; returns any alerts it triggers.
+    pub fn observe(&mut self, w: &WindowCensus) -> Vec<Alert> {
+        let props = signature(&w.census);
+        self.history.push((w.start, props));
+
+        let mut alerts = Vec::new();
+        if self.baseline.windows >= self.cfg.warmup_windows {
+            let z = self.baseline.z_scores(&props);
+            for p in &self.patterns {
+                let score = p.score(&z);
+                if score > self.cfg.threshold {
+                    alerts.push(Alert {
+                        window_start: w.start,
+                        pattern: p.name,
+                        score,
+                        top_classes: top3(&z, &p.weights),
+                    });
+                }
+            }
+        }
+        // Alerted windows are anomalies: keep them out of the baseline
+        // so a sustained attack cannot normalize itself.
+        if alerts.is_empty() {
+            self.baseline.update(&props, self.cfg.alpha);
+        }
+        alerts
+    }
+}
+
+/// The three classes with the largest weighted deviation.
+fn top3(z: &[f64; 16], weights: &[f64; 16]) -> [TriadType; 3] {
+    let mut idx: Vec<usize> = (0..16).collect();
+    idx.sort_by(|&a, &b| (weights[b] * z[b]).total_cmp(&(weights[a] * z[a])));
+    [
+        TriadType::from_index(idx[0] + 1),
+        TriadType::from_index(idx[1] + 1),
+        TriadType::from_index(idx[2] + 1),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::patterns::builtin_patterns;
+    use crate::analysis::traffic::{TrafficGenerator, TrafficScenario};
+    use crate::analysis::window::census_series;
+    use crate::census::merged;
+
+    fn run_monitor(gen: TrafficGenerator, duration: f64) -> (Vec<Alert>, usize) {
+        let events = gen.generate(duration);
+        let series = census_series(&events, 1.0, merged::census);
+        let n = series.len();
+        let mut mon = TriadMonitor::new(MonitorConfig::default(), builtin_patterns());
+        let mut alerts = Vec::new();
+        for w in &series {
+            alerts.extend(mon.observe(w));
+        }
+        (alerts, n)
+    }
+
+    #[test]
+    fn quiet_traffic_raises_no_alarms() {
+        let gen = TrafficGenerator::background(400, 120.0, 11);
+        let (alerts, n) = run_monitor(gen, 40.0);
+        assert!(n >= 35);
+        assert!(
+            alerts.len() <= 1,
+            "false alarms on quiet traffic: {:?}",
+            alerts
+        );
+    }
+
+    #[test]
+    fn port_scan_detected_as_scan() {
+        let gen = TrafficGenerator::background(400, 120.0, 11).with(TrafficScenario::PortScan {
+            start: 30.2,
+            end: 30.9,
+            attacker: 5,
+            targets: 60,
+        });
+        let (alerts, _) = run_monitor(gen, 40.0);
+        assert!(!alerts.is_empty(), "scan not detected");
+        let a = alerts
+            .iter()
+            .max_by(|x, y| x.score.total_cmp(&y.score))
+            .unwrap();
+        assert_eq!(a.pattern, "port-scan", "strongest alert: {a:?}");
+        assert!((a.window_start - 30.0).abs() < 1e-9);
+        assert_eq!(a.top_classes[0], crate::census::TriadType::T021D);
+    }
+
+    #[test]
+    fn ddos_detected_as_ddos() {
+        let gen = TrafficGenerator::background(400, 120.0, 7).with(TrafficScenario::Ddos {
+            start: 25.1,
+            end: 25.8,
+            victim: 2,
+            sources: 60,
+        });
+        let (alerts, _) = run_monitor(gen, 40.0);
+        let a = alerts
+            .iter()
+            .max_by(|x, y| x.score.total_cmp(&y.score))
+            .expect("ddos not detected");
+        assert_eq!(a.pattern, "ddos");
+    }
+
+    #[test]
+    fn botnet_detected() {
+        let gen =
+            TrafficGenerator::background(400, 120.0, 3).with(TrafficScenario::BotnetSync {
+                start: 22.1,
+                end: 22.9,
+                first_peer: 3_000_000,
+                peers: 12,
+            });
+        let (alerts, _) = run_monitor(gen, 40.0);
+        let a = alerts
+            .iter()
+            .max_by(|x, y| x.score.total_cmp(&y.score))
+            .expect("botnet not detected");
+        assert_eq!(a.pattern, "botnet-sync");
+    }
+
+    #[test]
+    fn relay_detected() {
+        let gen = TrafficGenerator::background(400, 120.0, 5).with(TrafficScenario::Relay {
+            start: 28.1,
+            end: 28.9,
+            first_hop: 4_000_000,
+            length: 16,
+            chains: 12,
+        });
+        let (alerts, _) = run_monitor(gen, 40.0);
+        let a = alerts
+            .iter()
+            .max_by(|x, y| x.score.total_cmp(&y.score))
+            .expect("relay not detected");
+        assert_eq!(a.pattern, "relay");
+    }
+
+    #[test]
+    fn signature_is_volume_invariant() {
+        use crate::census::Census;
+        // same structure at 2x the node count -> same signature for the
+        // connected classes
+        let mut a = Census::zero();
+        a.add_count(TriadType::T021C, 50);
+        a.add_count(TriadType::T021D, 25);
+        a.add_count(TriadType::T012, 1000);
+        a.close_with_null(100);
+        let mut b = Census::zero();
+        b.add_count(TriadType::T021C, 50);
+        b.add_count(TriadType::T021D, 25);
+        b.add_count(TriadType::T012, 4000); // dyadic scales with n
+        b.close_with_null(400);
+        let sa = signature(&a);
+        let sb = signature(&b);
+        for t in [TriadType::T021C, TriadType::T021D] {
+            assert!((sa[t.index() - 1] - sb[t.index() - 1]).abs() < 1e-12);
+        }
+        assert_eq!(sa[0], 0.0);
+    }
+
+    #[test]
+    fn warmup_suppresses_early_alerts() {
+        let gen = TrafficGenerator::background(400, 120.0, 9).with(TrafficScenario::PortScan {
+            start: 2.0,
+            end: 2.5,
+            attacker: 5,
+            targets: 80,
+        });
+        let (alerts, _) = run_monitor(gen, 12.0);
+        // scan happens inside the warmup window: nothing may fire there
+        assert!(alerts.iter().all(|a| a.window_start > 8.0), "{alerts:?}");
+    }
+}

@@ -1,0 +1,144 @@
+//! The paper's Fig 3: computer-network activities a security analyst
+//! monitors, and the triad classes relevant to each.
+//!
+//! Each pattern weights the 16 census classes; a window's *pattern
+//! score* is the weighted sum of its per-class deviations from baseline
+//! (see [`super::monitor`]). Weights are positive for classes the
+//! activity inflates.
+
+use crate::census::TriadType;
+
+/// A named threat/anomaly triad pattern.
+#[derive(Debug, Clone)]
+pub struct ThreatPattern {
+    /// Short name ("port-scan", ...).
+    pub name: &'static str,
+    /// Analyst-facing description of the activity.
+    pub description: &'static str,
+    /// Per-class weights (census-index order).
+    pub weights: [f64; 16],
+}
+
+impl ThreatPattern {
+    /// Build a pattern from `(class, weight)` pairs.
+    pub fn new(
+        name: &'static str,
+        description: &'static str,
+        weights: &[(TriadType, f64)],
+    ) -> ThreatPattern {
+        let mut w = [0f64; 16];
+        for &(t, v) in weights {
+            w[t.index() - 1] = v;
+        }
+        ThreatPattern {
+            name,
+            description,
+            weights: w,
+        }
+    }
+
+    /// Score a per-class deviation vector (e.g. z-scores) against this
+    /// pattern.
+    pub fn score(&self, deviations: &[f64; 16]) -> f64 {
+        self.weights
+            .iter()
+            .zip(deviations)
+            .map(|(w, d)| w * d)
+            .sum()
+    }
+}
+
+/// The four Fig 3 activities.
+///
+/// * **port-scan** — one source probing many targets: out-stars (`021D`)
+///   and, as targets answer, out-star + chain mixes (`111U`).
+/// * **ddos** — many sources converging on one victim: in-stars
+///   (`021U`, `111D`).
+/// * **relay** — stepping-stone/exfiltration chains: paths (`021C`) and
+///   transitive closures (`030T`).
+/// * **botnet-sync** — peer coordination: reciprocated and cyclic
+///   structure (`102`, `030C`, `201`, `300`).
+pub fn builtin_patterns() -> Vec<ThreatPattern> {
+    vec![
+        ThreatPattern::new(
+            "port-scan",
+            "single source fanning out to many destinations (reconnaissance)",
+            &[
+                (TriadType::T021D, 1.0),
+                (TriadType::T111U, 0.3),
+                (TriadType::T012, 0.1),
+            ],
+        ),
+        ThreatPattern::new(
+            "ddos",
+            "many sources converging on a single destination (flooding)",
+            &[
+                (TriadType::T021U, 1.0),
+                (TriadType::T111D, 0.3),
+                (TriadType::T012, 0.1),
+            ],
+        ),
+        ThreatPattern::new(
+            "relay",
+            "multi-hop relay chains (stepping stones / exfiltration)",
+            &[
+                // chains rise while the star classes sink (shares are
+                // conditional, so a chain surge *displaces* D/U mass);
+                // the negative weights double as specificity against
+                // scan/ddos windows, whose D/U z-scores explode
+                (TriadType::T021C, 1.5),
+                (TriadType::T030T, 0.6),
+                (TriadType::T021D, -0.4),
+                (TriadType::T021U, -0.4),
+            ],
+        ),
+        ThreatPattern::new(
+            "botnet-sync",
+            "reciprocated peer-to-peer coordination (command & control)",
+            &[
+                (TriadType::T102, 0.5),
+                (TriadType::T030C, 1.0),
+                (TriadType::T201, 0.7),
+                (TriadType::T300, 1.0),
+            ],
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_patterns_with_distinct_signatures() {
+        let pats = builtin_patterns();
+        assert_eq!(pats.len(), 4);
+        for (i, a) in pats.iter().enumerate() {
+            for b in pats.iter().skip(i + 1) {
+                assert_ne!(a.weights, b.weights, "{} vs {}", a.name, b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn score_is_weighted_dot() {
+        let p = ThreatPattern::new("t", "", &[(TriadType::T021D, 2.0)]);
+        let mut dev = [0f64; 16];
+        dev[TriadType::T021D.index() - 1] = 3.0;
+        dev[TriadType::T300.index() - 1] = 100.0; // unweighted, ignored
+        assert_eq!(p.score(&dev), 6.0);
+    }
+
+    #[test]
+    fn scan_and_ddos_are_duals() {
+        // reversing all arcs should map scan deviations onto ddos's
+        let pats = builtin_patterns();
+        let scan = &pats[0];
+        let ddos = &pats[1];
+        for t in TriadType::ALL {
+            let w_scan = scan.weights[t.index() - 1];
+            let w_ddos = ddos.weights[t.reversed().index() - 1];
+            assert_eq!(w_scan, w_ddos, "{t}");
+        }
+    }
+}

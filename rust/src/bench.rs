@@ -1,0 +1,121 @@
+//! Minimal benchmarking harness (criterion is not in the offline vendor
+//! set): warmup + timed iterations with mean / stddev / min reporting,
+//! used by every target under `benches/`.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    /// Render one aligned report line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>4} it  mean {:>12}  sd {:>10}  min {:>12}",
+            self.name,
+            self.iters,
+            human_time(self.mean_s),
+            human_time(self.stddev_s),
+            human_time(self.min_s),
+        )
+    }
+}
+
+/// Pretty-print seconds.
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner: fixed iteration count with one warmup run.
+pub struct Bench {
+    iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Bench {
+    /// `iters` timed iterations per case (after 1 warmup).
+    pub fn new(iters: usize) -> Bench {
+        Bench {
+            iters: iters.max(1),
+            results: Vec::new(),
+        }
+    }
+
+    /// Honors `BENCH_ITERS` env override (CI dials it down).
+    pub fn from_env(default_iters: usize) -> Bench {
+        let iters = std::env::var("BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default_iters);
+        Bench::new(iters)
+    }
+
+    /// Time `f`, preventing the result from being optimized out.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        let _warm = std::hint::black_box(f());
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed().as_secs_f64());
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: mean,
+            stddev_s: var.sqrt(),
+            min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: times.iter().cloned().fold(0.0, f64::max),
+        };
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let mut b = Bench::new(5);
+        let s = b.run("noop-ish", || {
+            std::hint::black_box((0..1000u64).sum::<u64>())
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s.max(s.mean_s));
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with(" s"));
+        assert!(human_time(2e-3).ends_with(" ms"));
+        assert!(human_time(2e-6).ends_with(" us"));
+        assert!(human_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,34 @@
+//! Triad census algorithms.
+//!
+//! A *triad* is a subgraph of three nodes of a directed graph; it has 64
+//! possible edge configurations that collapse into 16 isomorphism
+//! classes (the Holland–Leinhardt M-A-N taxonomy). The *triad census*
+//! counts the triads of a graph in each class and is the computational
+//! core of triadic analysis (paper §3–4).
+//!
+//! Implementations, in increasing sophistication:
+//!
+//! * [`naive::census`] — `O(n^3)` enumeration of all triples; the test
+//!   oracle.
+//! * [`batagelj_mrvar::census`] — the `O(m)` subquadratic algorithm of
+//!   Batagelj & Mrvar (paper Fig 5), transcribed literally.
+//! * [`merged::census`] — the paper's optimized serial variant: merged
+//!   two-pointer traversal of the sorted neighbor arrays (Fig 8) with
+//!   *in situ* tricode construction from the direction bits.
+//! * [`parallel::census`] — the paper's contribution: the merged variant
+//!   over a manhattan-collapsed iteration space with OpenMP-style
+//!   scheduling and hash-distributed local census vectors.
+//! * [`moody::census`] — Moody's dense matrix-method census, the
+//!   baseline the dense (JAX/Pallas AOT) path mirrors.
+
+pub mod batagelj_mrvar;
+pub mod isotricode;
+pub mod merged;
+pub mod moody;
+pub mod naive;
+pub mod parallel;
+pub mod types;
+
+pub use isotricode::{classify_tricode, tricode_of, TRICODE_TABLE};
+pub use parallel::{census_parallel, Accumulation, ParallelConfig};
+pub use types::{Census, TriadType};

@@ -1,0 +1,95 @@
+//! Naive `O(n^3)` triad census: enumerate every node triple and classify
+//! it. Exponentially slower than the `O(m)` algorithms on sparse graphs
+//! but trivially correct — this is the oracle every other implementation
+//! is validated against (paper §4's "simple, naive algorithm").
+
+use super::isotricode::{tricode_of, TRICODE_TABLE};
+use super::types::Census;
+use crate::graph::CsrGraph;
+
+/// Compute the full 16-class census by triple enumeration.
+pub fn census(g: &CsrGraph) -> Census {
+    let n = g.node_count() as u32;
+    let mut c = Census::zero();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            for w in (v + 1)..n {
+                let code = tricode_of(g, u, v, w);
+                c.bump(TRICODE_TABLE[code as usize]);
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::census::types::TriadType;
+    use crate::graph::generators::named;
+
+    #[test]
+    fn cycle3_is_one_030c() {
+        let c = census(&named::cycle3());
+        assert_eq!(c[TriadType::T030C], 1);
+        assert_eq!(c.total(), 1);
+    }
+
+    #[test]
+    fn transitive3_is_one_030t() {
+        let c = census(&named::transitive3());
+        assert_eq!(c[TriadType::T030T], 1);
+        assert_eq!(c.total(), 1);
+    }
+
+    #[test]
+    fn mutual3_is_one_300() {
+        let c = census(&named::mutual3());
+        assert_eq!(c[TriadType::T300], 1);
+    }
+
+    #[test]
+    fn out_star4() {
+        let c = census(&named::out_star4());
+        assert_eq!(c[TriadType::T021D], 3);
+        assert_eq!(c[TriadType::T012], 0);
+        // triads {1,2,3} have no arcs
+        assert_eq!(c[TriadType::T003], 1);
+        assert_eq!(c.total(), 4);
+    }
+
+    #[test]
+    fn in_star4() {
+        let c = census(&named::in_star4());
+        assert_eq!(c[TriadType::T021U], 3);
+        assert_eq!(c[TriadType::T003], 1);
+    }
+
+    #[test]
+    fn complete_mutual_5_all_300() {
+        let c = census(&named::complete_mutual(5));
+        assert_eq!(c[TriadType::T300], 10);
+        assert_eq!(c.total(), 10);
+    }
+
+    #[test]
+    fn cycle5_census() {
+        // 5-cycle: C(5,3)=10 triads. Each triple of consecutive nodes
+        // (5 of them) is a chain 021C; the other 5 triples have exactly
+        // 2 non-adjacent arcs? Enumerate: nodes {i, i+1, i+3}: arcs
+        // i->i+1 only plus (i+3 -> i+4 not in set)... trust the oracle's
+        // own arithmetic here and check invariants instead.
+        let c = census(&named::cycle5());
+        assert_eq!(c.total(), 10);
+        // every arc appears in n-2 = 3 triads; 5 arcs -> 15 arc-slots
+        assert_eq!(c.implied_arc_triples(), 15);
+        assert_eq!(c[TriadType::T021C], 5);
+    }
+
+    #[test]
+    fn total_always_choose_3() {
+        let g = crate::graph::generators::power_law(40, 2.0, 4.0, 1);
+        let c = census(&g);
+        assert_eq!(c.total(), Census::expected_total(40));
+    }
+}

@@ -1,0 +1,323 @@
+//! The paper's parallel triad census engine.
+//!
+//! Combines every optimization of §6–7:
+//!
+//! * **Manhattan collapse** — the imperfectly nested `(u ∈ V, v ∈ N(u))`
+//!   loops of Fig 5 are flattened into the CSR entry index space
+//!   `0..entry_count`, so scheduler chunks see uniform-cost *slots*
+//!   rather than whole (wildly imbalanced, power-law) vertex rows. A
+//!   worker seats itself with one `O(log n)` offset search per chunk and
+//!   walks linearly from there.
+//! * **OpenMP-style policies** — static / dynamic / guided, from
+//!   [`crate::sched`]. The paper's finding (dynamic best, guided
+//!   severely underperforming) is reproduced by `benches/sched_policies`.
+//! * **Local census vectors** — instead of hammering one shared
+//!   16-element vector, increments go to one of `B` (default 64) atomic
+//!   census vectors selected by a hash of `(u, v)`, exactly the paper's
+//!   hot-spot mitigation; the bank is summed once at the end. The
+//!   alternative `PerThread` accumulation (fully private vectors, no
+//!   atomics) is provided for the ablation bench.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::merged::dyad_task;
+use super::types::{Census, CensusSink, TriadType};
+use crate::graph::csr::CsrGraph;
+use crate::rng::splitmix64;
+use crate::sched::{run_partitioned, Policy, ThreadPoolStats};
+
+/// How triad increments are accumulated across threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Accumulation {
+    /// The paper's scheme: `B` shared atomic census vectors, selected per
+    /// dyad by `hash(u, v) % B`.
+    Bank { slots: usize },
+    /// Fully private per-thread vectors (no shared writes at all).
+    PerThread,
+}
+
+/// Configuration of a parallel census run.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelConfig {
+    pub threads: usize,
+    pub policy: Policy,
+    pub accumulation: Accumulation,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig {
+            threads: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+            policy: Policy::dynamic_default(),
+            // The paper's 64 local census vectors target the XMT's
+            // word-level synchronization; on cache-coherent hosts the
+            // §Perf ablation (benches/census_core.rs) measures the
+            // atomic bank at ~2x the cost of fully private vectors, so
+            // private accumulation is the default here. Pass
+            // `Accumulation::Bank { slots: 64 }` to reproduce the
+            // paper's scheme exactly.
+            accumulation: Accumulation::PerThread,
+        }
+    }
+}
+
+/// A bank of `B` atomic 16-element census vectors (the paper's "64 local
+/// triad census vectors"), padded to cache lines to avoid false sharing.
+pub struct CensusBank {
+    // 16 counters per slot; slot stride padded to 2 cache lines (16*8B).
+    slots: Vec<[AtomicU64; 16]>,
+}
+
+impl CensusBank {
+    /// Create a bank with `slots` vectors.
+    pub fn new(slots: usize) -> CensusBank {
+        assert!(slots > 0);
+        CensusBank {
+            slots: (0..slots)
+                .map(|_| std::array::from_fn(|_| AtomicU64::new(0)))
+                .collect(),
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True if no slots (never: constructor asserts).
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The paper's uniform hash of the `(u, v)` pair onto a slot.
+    #[inline]
+    pub fn slot_of(&self, u: u32, v: u32) -> usize {
+        let mut key = ((u as u64) << 32) | v as u64;
+        (splitmix64(&mut key) % self.slots.len() as u64) as usize
+    }
+
+    /// Reduce the bank into a single census (Fig 5 steps 3–4 analogue).
+    pub fn reduce(&self) -> Census {
+        let mut total = Census::zero();
+        for slot in &self.slots {
+            for (i, c) in slot.iter().enumerate() {
+                total.add_count(
+                    TriadType::from_index(i + 1),
+                    c.load(Ordering::Relaxed),
+                );
+            }
+        }
+        total
+    }
+}
+
+/// Sink view of one bank slot: all increments are atomic fetch-adds,
+/// mirroring the XMT's word-level `int_fetch_add` synchronization.
+pub struct BankSlot<'a> {
+    slot: &'a [AtomicU64; 16],
+}
+
+impl CensusSink for BankSlot<'_> {
+    #[inline]
+    fn bump(&mut self, t: TriadType) {
+        self.slot[t.index() - 1].fetch_add(1, Ordering::Relaxed);
+    }
+    #[inline]
+    fn add(&mut self, t: TriadType, k: u64) {
+        self.slot[t.index() - 1].fetch_add(k, Ordering::Relaxed);
+    }
+}
+
+/// Result of a parallel census run: the census plus scheduler telemetry
+/// (consumed by the workload characterizer and the figures harness).
+#[derive(Debug, Clone)]
+pub struct ParallelRun {
+    pub census: Census,
+    pub stats: ThreadPoolStats,
+}
+
+/// Parallel triad census over the collapsed entry space.
+pub fn census_parallel(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
+    let len = g.entry_count();
+    let n = g.node_count();
+
+    let (census, stats) = match cfg.accumulation {
+        Accumulation::Bank { slots } => {
+            let bank = CensusBank::new(slots);
+            let (_, stats) = run_partitioned(
+                len,
+                cfg.threads,
+                cfg.policy,
+                |_tid| (),
+                |_acc, _tid, s, e| {
+                    walk_chunk(g, s, e, |u, v, dir| {
+                        let mut sink = BankSlot {
+                            slot: &bank.slots[bank.slot_of(u, v)],
+                        };
+                        dyad_task(g, u, v, dir, &mut sink);
+                    });
+                },
+            );
+            (bank.reduce(), stats)
+        }
+        Accumulation::PerThread => {
+            let (parts, stats) = run_partitioned(
+                len,
+                cfg.threads,
+                cfg.policy,
+                |_tid| Census::zero(),
+                |acc, _tid, s, e| {
+                    walk_chunk(g, s, e, |u, v, dir| {
+                        dyad_task(g, u, v, dir, acc);
+                    });
+                },
+            );
+            (
+                parts.into_iter().fold(Census::zero(), |a, b| a + b),
+                stats,
+            )
+        }
+    };
+
+    let mut census = census;
+    census.close_with_null(n);
+    ParallelRun { census, stats }
+}
+
+/// Walk the collapsed entry range `[s, e)`, invoking `f(u, v, dir)` for
+/// every entry that is the canonical (`u < v`) side of a dyad. One
+/// offset binary search seats the walk; node advancement is linear.
+#[inline]
+fn walk_chunk<F: FnMut(u32, u32, crate::graph::Dir)>(g: &CsrGraph, s: usize, e: usize, mut f: F) {
+    if s >= e {
+        return;
+    }
+    let offsets = g.offsets();
+    let mut u = g.owner_of_entry(s);
+    for idx in s..e {
+        // advance u past empty rows until idx is inside u's row
+        while idx >= offsets[u as usize + 1] {
+            u += 1;
+        }
+        let entry = g.entry(idx);
+        let v = entry.nbr();
+        if u < v {
+            f(u, v, entry.dir());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::census::naive;
+    use crate::graph::generators::{self, named};
+
+    fn cfg(threads: usize, policy: Policy, acc: Accumulation) -> ParallelConfig {
+        ParallelConfig {
+            threads,
+            policy,
+            accumulation: acc,
+        }
+    }
+
+    #[test]
+    fn matches_naive_all_policies_and_accumulations() {
+        let g = generators::power_law(80, 2.2, 5.0, 13);
+        let want = naive::census(&g);
+        for policy in [
+            Policy::Static { chunk: 7 },
+            Policy::Dynamic { chunk: 16 },
+            Policy::Guided { min_chunk: 4 },
+        ] {
+            for acc in [Accumulation::Bank { slots: 64 }, Accumulation::PerThread] {
+                for threads in [1, 2, 4] {
+                    let run = census_parallel(&g, &cfg(threads, policy, acc));
+                    assert_eq!(run.census, want, "{policy:?} {acc:?} x{threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_merged_on_larger_graph() {
+        let g = generators::power_law(3000, 2.1, 10.0, 5);
+        let want = crate::census::merged::census(&g);
+        let run = census_parallel(&g, &ParallelConfig::default());
+        assert_eq!(run.census, want);
+    }
+
+    #[test]
+    fn bank_slot_hash_is_uniformish() {
+        let bank = CensusBank::new(64);
+        let mut counts = vec![0usize; 64];
+        for u in 0..200u32 {
+            for v in (u + 1)..200u32 {
+                counts[bank.slot_of(u, v)] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let mean = total as f64 / 64.0;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > mean * 0.5 && (c as f64) < mean * 1.5,
+                "slot {i} count {c} vs mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn bank_reduce_sums_slots() {
+        let bank = CensusBank::new(4);
+        let mut s0 = BankSlot {
+            slot: &bank.slots[0],
+        };
+        s0.bump(TriadType::T300);
+        s0.add(TriadType::T012, 3);
+        let mut s3 = BankSlot {
+            slot: &bank.slots[3],
+        };
+        s3.add(TriadType::T012, 2);
+        let c = bank.reduce();
+        assert_eq!(c[TriadType::T300], 1);
+        assert_eq!(c[TriadType::T012], 5);
+    }
+
+    #[test]
+    fn walk_chunk_covers_every_canonical_dyad_once() {
+        let g = generators::power_law(200, 2.3, 6.0, 21);
+        let mut seen = std::collections::HashSet::new();
+        // split the space into odd-sized chunks
+        let len = g.entry_count();
+        let mut s = 0;
+        while s < len {
+            let e = (s + 17).min(len);
+            walk_chunk(&g, s, e, |u, v, _| {
+                assert!(seen.insert((u, v)), "dyad ({u},{v}) seen twice");
+            });
+            s = e;
+        }
+        assert_eq!(seen.len() as u64, g.dyad_count());
+    }
+
+    #[test]
+    fn empty_and_tiny_graphs() {
+        for g in [CsrGraph::empty(5), named::cycle3()] {
+            let want = naive::census(&g);
+            let run = census_parallel(&g, &ParallelConfig::default());
+            assert_eq!(run.census, want);
+        }
+    }
+
+    #[test]
+    fn stats_cover_all_entries() {
+        let g = generators::power_law(500, 2.2, 8.0, 2);
+        let run = census_parallel(
+            &g,
+            &cfg(3, Policy::Dynamic { chunk: 64 }, Accumulation::PerThread),
+        );
+        assert_eq!(run.stats.items.iter().sum::<usize>(), g.entry_count());
+    }
+}

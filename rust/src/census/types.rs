@@ -1,0 +1,420 @@
+//! The 16-class triad taxonomy and the census accumulator.
+//!
+//! Classes follow the standard Holland–Leinhardt M-A-N naming, indexed
+//! 1..=16 exactly as in Batagelj–Mrvar (and the paper's Fig 5, where
+//! `TriType` 1 = null `003`, 2 = `012`, 3 = `102`).
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Index, IndexMut};
+
+/// The 16 triad isomorphism classes. The `M-A-N` digits give the counts
+/// of Mutual, Asymmetric and Null dyads; the letter distinguishes
+/// orientation (Down = diverging from a source, Up = converging into a
+/// sink, Cyclic / Transitive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum TriadType {
+    /// Empty triad (three null dyads).
+    T003 = 1,
+    /// Single arc.
+    T012 = 2,
+    /// Single mutual dyad.
+    T102 = 3,
+    /// `A <- B -> C` — out-star.
+    T021D = 4,
+    /// `A -> B <- C` — in-star.
+    T021U = 5,
+    /// `A -> B -> C` — chain.
+    T021C = 6,
+    /// `A <-> B <- C` — arc into a mutual dyad.
+    T111D = 7,
+    /// `A <-> B -> C` — arc out of a mutual dyad.
+    T111U = 8,
+    /// Transitive triple.
+    T030T = 9,
+    /// 3-cycle.
+    T030C = 10,
+    /// Two mutual dyads, third pair null.
+    T201 = 11,
+    /// Mutual dyad + out-star arcs.
+    T120D = 12,
+    /// Mutual dyad + in-star arcs.
+    T120U = 13,
+    /// Mutual dyad + chain.
+    T120C = 14,
+    /// Two mutual dyads + one asymmetric.
+    T210 = 15,
+    /// Complete: three mutual dyads.
+    T300 = 16,
+}
+
+impl TriadType {
+    /// All 16 types in census-index order.
+    pub const ALL: [TriadType; 16] = [
+        TriadType::T003,
+        TriadType::T012,
+        TriadType::T102,
+        TriadType::T021D,
+        TriadType::T021U,
+        TriadType::T021C,
+        TriadType::T111D,
+        TriadType::T111U,
+        TriadType::T030T,
+        TriadType::T030C,
+        TriadType::T201,
+        TriadType::T120D,
+        TriadType::T120U,
+        TriadType::T120C,
+        TriadType::T210,
+        TriadType::T300,
+    ];
+
+    /// 1-based census index (matches Batagelj–Mrvar / Fig 5).
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// From a 1-based census index.
+    #[inline]
+    pub fn from_index(i: usize) -> TriadType {
+        assert!((1..=16).contains(&i), "triad index out of range: {i}");
+        TriadType::ALL[i - 1]
+    }
+
+    /// Standard M-A-N label.
+    pub fn label(self) -> &'static str {
+        match self {
+            TriadType::T003 => "003",
+            TriadType::T012 => "012",
+            TriadType::T102 => "102",
+            TriadType::T021D => "021D",
+            TriadType::T021U => "021U",
+            TriadType::T021C => "021C",
+            TriadType::T111D => "111D",
+            TriadType::T111U => "111U",
+            TriadType::T030T => "030T",
+            TriadType::T030C => "030C",
+            TriadType::T201 => "201",
+            TriadType::T120D => "120D",
+            TriadType::T120U => "120U",
+            TriadType::T120C => "120C",
+            TriadType::T210 => "210",
+            TriadType::T300 => "300",
+        }
+    }
+
+    /// Counts of (mutual, asymmetric, null) dyads in this class.
+    pub fn man(self) -> (u8, u8, u8) {
+        match self {
+            TriadType::T003 => (0, 0, 3),
+            TriadType::T012 => (0, 1, 2),
+            TriadType::T102 => (1, 0, 2),
+            TriadType::T021D | TriadType::T021U | TriadType::T021C => (0, 2, 1),
+            TriadType::T111D | TriadType::T111U => (1, 1, 1),
+            TriadType::T030T | TriadType::T030C => (0, 3, 0),
+            TriadType::T201 => (2, 0, 1),
+            TriadType::T120D | TriadType::T120U | TriadType::T120C => (1, 2, 0),
+            TriadType::T210 => (2, 1, 0),
+            TriadType::T300 => (3, 0, 0),
+        }
+    }
+
+    /// Number of arcs in the class.
+    pub fn arc_count(self) -> u8 {
+        let (m, a, _) = self.man();
+        2 * m + a
+    }
+
+    /// The class of the arc-reversed (transpose) triad: `D` and `U`
+    /// variants swap, everything else is self-dual.
+    pub fn reversed(self) -> TriadType {
+        match self {
+            TriadType::T021D => TriadType::T021U,
+            TriadType::T021U => TriadType::T021D,
+            TriadType::T111D => TriadType::T111U,
+            TriadType::T111U => TriadType::T111D,
+            TriadType::T120D => TriadType::T120U,
+            TriadType::T120U => TriadType::T120D,
+            t => t,
+        }
+    }
+
+    /// True if at least one dyad is connected (i.e. the triad is dyadic
+    /// or connected in the paper's terms — not null).
+    pub fn is_nonnull(self) -> bool {
+        self != TriadType::T003
+    }
+
+    /// True if every node touches at least one arc within the triad (the
+    /// paper's *connected* triads — those counted by the inner loop).
+    pub fn is_connected_triad(self) -> bool {
+        let (m, a, n) = self.man();
+        // with at most one null dyad, a triad of 3 nodes can only strand
+        // a node if two dyads are null
+        let _ = (m, a);
+        n < 2
+    }
+}
+
+impl fmt::Display for TriadType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A 16-element triad census (counts per class, u64).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Census {
+    counts: [u64; 16],
+}
+
+impl Census {
+    /// All-zero census.
+    pub fn zero() -> Census {
+        Census::default()
+    }
+
+    /// Build from counts in census-index order.
+    pub fn from_counts(counts: [u64; 16]) -> Census {
+        Census { counts }
+    }
+
+    /// The raw counts in census-index order.
+    pub fn counts(&self) -> &[u64; 16] {
+        &self.counts
+    }
+
+    /// Increment one class.
+    #[inline]
+    pub fn bump(&mut self, t: TriadType) {
+        self.counts[t.index() - 1] += 1;
+    }
+
+    /// Add `k` to one class.
+    #[inline]
+    pub fn add_count(&mut self, t: TriadType, k: u64) {
+        self.counts[t.index() - 1] += k;
+    }
+
+    /// Total triads counted.
+    pub fn total(&self) -> u128 {
+        self.counts.iter().map(|&c| c as u128).sum()
+    }
+
+    /// Sum of non-null classes (indices 2..=16) — the `sum` of Fig 5
+    /// step 3-4.
+    pub fn nonnull_total(&self) -> u128 {
+        self.counts[1..].iter().map(|&c| c as u128).sum()
+    }
+
+    /// Number of triads a graph of `n` nodes has: `C(n,3)`.
+    pub fn expected_total(n: usize) -> u128 {
+        let n = n as u128;
+        if n < 3 {
+            0
+        } else {
+            n * (n - 1) * (n - 2) / 6
+        }
+    }
+
+    /// Fill the null-class slot from `C(n,3) - Σ non-null` (Fig 5 step 5).
+    pub fn close_with_null(&mut self, n: usize) {
+        let total = Census::expected_total(n);
+        let nonnull = self.nonnull_total();
+        assert!(
+            nonnull <= total,
+            "census overflow: nonnull {nonnull} > C(n,3) {total}"
+        );
+        self.counts[0] = (total - nonnull) as u64;
+    }
+
+    /// The census of the transpose graph: D/U classes swap.
+    pub fn reversed(&self) -> Census {
+        let mut out = Census::zero();
+        for t in TriadType::ALL {
+            // fully qualified: `std::ops::Add` is in scope here and would
+            // otherwise shadow the inherent two-argument `add`
+            out.add_count(t.reversed(), self[t]);
+        }
+        out
+    }
+
+    /// Proportion vector (sums to 1 unless empty).
+    pub fn proportions(&self) -> [f64; 16] {
+        let tot = self.total() as f64;
+        let mut p = [0f64; 16];
+        if tot > 0.0 {
+            for i in 0..16 {
+                p[i] = self.counts[i] as f64 / tot;
+            }
+        }
+        p
+    }
+
+    /// Number of arcs implied by the census (consistency invariant:
+    /// each arc is in exactly `n - 2` triads).
+    pub fn implied_arc_triples(&self) -> u128 {
+        TriadType::ALL
+            .iter()
+            .map(|&t| t.arc_count() as u128 * self[t] as u128)
+            .sum()
+    }
+
+    /// Render as a compact labeled table row set.
+    pub fn table(&self) -> String {
+        let mut s = String::new();
+        for t in TriadType::ALL {
+            s.push_str(&format!("{:>5}  {:>16}\n", t.label(), self[t]));
+        }
+        s
+    }
+}
+
+/// Abstraction over census accumulation targets, letting the same
+/// triad-enumeration kernel feed either a private per-thread [`Census`]
+/// or a shared atomic census bank (the paper's 64 local vectors).
+pub trait CensusSink {
+    /// Count one triad of class `t`.
+    fn bump(&mut self, t: TriadType);
+    /// Count `k` triads of class `t`.
+    fn add(&mut self, t: TriadType, k: u64);
+}
+
+impl CensusSink for Census {
+    #[inline]
+    fn bump(&mut self, t: TriadType) {
+        Census::bump(self, t);
+    }
+    #[inline]
+    fn add(&mut self, t: TriadType, k: u64) {
+        Census::add_count(self, t, k);
+    }
+}
+
+impl Index<TriadType> for Census {
+    type Output = u64;
+    #[inline]
+    fn index(&self, t: TriadType) -> &u64 {
+        &self.counts[t.index() - 1]
+    }
+}
+
+impl IndexMut<TriadType> for Census {
+    #[inline]
+    fn index_mut(&mut self, t: TriadType) -> &mut u64 {
+        &mut self.counts[t.index() - 1]
+    }
+}
+
+impl Add for Census {
+    type Output = Census;
+    fn add(mut self, rhs: Census) -> Census {
+        self += rhs;
+        self
+    }
+}
+
+impl AddAssign for Census {
+    fn add_assign(&mut self, rhs: Census) {
+        for i in 0..16 {
+            self.counts[i] += rhs.counts[i];
+        }
+    }
+}
+
+impl fmt::Display for Census {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, t) in TriadType::ALL.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{}={}", t.label(), self[*t])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_round_trip() {
+        for t in TriadType::ALL {
+            assert_eq!(TriadType::from_index(t.index()), t);
+        }
+        assert_eq!(TriadType::T003.index(), 1);
+        assert_eq!(TriadType::T300.index(), 16);
+    }
+
+    #[test]
+    fn man_digits_match_labels() {
+        for t in TriadType::ALL {
+            let (m, a, n) = t.man();
+            assert_eq!(m + a + n, 3, "{t}");
+            let lbl = t.label().as_bytes();
+            assert_eq!(lbl[0] - b'0', m, "{t}");
+            assert_eq!(lbl[1] - b'0', a, "{t}");
+            assert_eq!(lbl[2] - b'0', n, "{t}");
+        }
+    }
+
+    #[test]
+    fn reversal_is_involution() {
+        for t in TriadType::ALL {
+            assert_eq!(t.reversed().reversed(), t);
+            // M-A-N counts invariant under reversal
+            assert_eq!(t.reversed().man(), t.man());
+        }
+    }
+
+    #[test]
+    fn census_arithmetic() {
+        let mut a = Census::zero();
+        a.bump(TriadType::T300);
+        a.add_count(TriadType::T012, 5);
+        let mut b = Census::zero();
+        b.add_count(TriadType::T012, 2);
+        let c = a + b;
+        assert_eq!(c[TriadType::T012], 7);
+        assert_eq!(c[TriadType::T300], 1);
+        assert_eq!(c.total(), 8);
+    }
+
+    #[test]
+    fn close_with_null() {
+        let mut c = Census::zero();
+        c.add_count(TriadType::T030C, 1); // e.g. the 3-cycle on n=5
+        c.close_with_null(5);
+        assert_eq!(c[TriadType::T003], Census::expected_total(5) as u64 - 1);
+        assert_eq!(c.total(), Census::expected_total(5));
+    }
+
+    #[test]
+    fn expected_total_small() {
+        assert_eq!(Census::expected_total(0), 0);
+        assert_eq!(Census::expected_total(2), 0);
+        assert_eq!(Census::expected_total(3), 1);
+        assert_eq!(Census::expected_total(4), 4);
+        assert_eq!(Census::expected_total(6), 20);
+    }
+
+    #[test]
+    fn proportions_sum_to_one() {
+        let mut c = Census::zero();
+        c.add_count(TriadType::T003, 10);
+        c.add_count(TriadType::T012, 30);
+        let p = c.proportions();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arc_counts_per_class() {
+        assert_eq!(TriadType::T003.arc_count(), 0);
+        assert_eq!(TriadType::T012.arc_count(), 1);
+        assert_eq!(TriadType::T102.arc_count(), 2);
+        assert_eq!(TriadType::T030T.arc_count(), 3);
+        assert_eq!(TriadType::T300.arc_count(), 6);
+    }
+}

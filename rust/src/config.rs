@@ -1,0 +1,197 @@
+//! CLI argument parsing and run configuration.
+//!
+//! The offline environment vendors no argument-parsing crate, so this is
+//! a small, strict flag parser: `--key value` / `--key=value` / bare
+//! `--flag` booleans, with typed accessors and unknown-flag rejection.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (subcommand).
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags consumed so far (for unknown-flag detection).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.command = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(stripped) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {tok:?}"));
+            };
+            if let Some((k, v)) = stripped.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                args.flags.insert(stripped.to_string(), it.next().unwrap());
+            } else {
+                args.flags.insert(stripped.to_string(), "true".to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| format!("bad value for --{key}: {v:?} ({e})")),
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated list of a parseable type.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse::<T>()
+                        .map_err(|e| format!("bad element in --{key}: {s:?} ({e})"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any provided flag was never consumed (catches typos).
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Resolve a workload spec from CLI flags (`--graph patents|orkut|web`,
+/// `--nodes N`, `--seed S`).
+pub fn graph_spec_from(args: &Args) -> Result<crate::graph::GraphSpec, String> {
+    let name = args.str_or("graph", "patents");
+    let default_nodes = match name.as_str() {
+        "patents" => 200_000,
+        "orkut" => 50_000,
+        "web" | "webgraph" => 400_000,
+        _ => 0,
+    };
+    let nodes = args.get_or("nodes", default_nodes)?;
+    let mut spec = match name.as_str() {
+        "patents" => crate::graph::GraphSpec::patents(nodes),
+        "orkut" => crate::graph::GraphSpec::orkut(nodes),
+        "web" | "webgraph" => crate::graph::GraphSpec::webgraph(nodes),
+        other => return Err(format!("unknown graph {other:?} (patents|orkut|web)")),
+    };
+    if let Some(seed) = args.opt_str("seed") {
+        spec.seed = seed.parse().map_err(|e| format!("bad --seed: {e}"))?;
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("census --graph orkut --nodes 1000 --verbose");
+        assert_eq!(a.command.as_deref(), Some("census"));
+        assert_eq!(a.str_or("graph", "x"), "orkut");
+        assert_eq!(a.get_or("nodes", 0usize).unwrap(), 1000);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --policy=dynamic:64");
+        assert_eq!(a.str_or("policy", ""), "dynamic:64");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("x --procs 1,2,4,8");
+        assert_eq!(a.list_or("procs", &[0usize]).unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(a.list_or("missing", &[3usize]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("x --nodes abc");
+        assert!(a.get_or("nodes", 0usize).is_err());
+        assert!(Args::parse(vec!["x".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejection() {
+        let a = parse("x --known 1 --typo 2");
+        let _ = a.get_or("known", 0usize);
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get_or("typo", 0usize);
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn graph_specs() {
+        let a = parse("x --graph web --nodes 5000 --seed 9");
+        let spec = graph_spec_from(&a).unwrap();
+        assert_eq!(spec.name, "webgraph");
+        assert_eq!(spec.n, 5000);
+        assert_eq!(spec.seed, 9);
+        let a = parse("x --graph nope");
+        assert!(graph_spec_from(&a).is_err());
+    }
+}

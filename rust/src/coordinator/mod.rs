@@ -1,0 +1,32 @@
+//! The coordinator: the service layer that owns both census backends
+//! and routes work between them.
+//!
+//! Architecture (Python never appears at runtime):
+//!
+//! ```text
+//!            submit(graph)                 ┌──────────────────────┐
+//!  client ────────────────▶  Router ─────▶ │ sparse engine        │
+//!                              │           │ (parallel BM census) │
+//!                              │           └──────────────────────┘
+//!                              │   dense   ┌──────────────────────┐
+//!                              └─────────▶ │ dense service thread │
+//!                                          │ owns PJRT runtime,   │
+//!                                          │ drains request queue │
+//!                                          └──────────────────────┘
+//! ```
+//!
+//! * **Routing** ([`router`]): small graphs that fit an AOT artifact go
+//!   to the dense PJRT backend (one matmul-census execution, ideal for
+//!   the monitoring application's windowed subgraphs); everything else
+//!   runs on the sparse parallel engine.
+//! * **Dense service** ([`service`]): `PjRtLoadedExecutable` is not
+//!   `Send`, so a dedicated thread owns the [`DenseCensusRuntime`]
+//!   (compile-once) and serves a bounded request queue — the same
+//!   confine-and-batch pattern a GPU serving router uses.
+//! * **Metrics**: counters + latency histograms per backend.
+
+pub mod router;
+pub mod service;
+
+pub use router::{Route, Router, RoutingPolicy};
+pub use service::{Coordinator, CoordinatorConfig, CensusOutcome};

@@ -1,0 +1,128 @@
+//! Routing policy: which backend serves a census request.
+
+use crate::graph::CsrGraph;
+
+/// The backend chosen for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Sparse parallel Batagelj–Mrvar engine (L3).
+    Sparse,
+    /// Dense AOT (JAX/Pallas via PJRT) backend, with the artifact size
+    /// the graph will be padded to.
+    Dense { size: usize },
+}
+
+/// Tunable routing policy.
+#[derive(Debug, Clone)]
+pub struct RoutingPolicy {
+    /// Dense artifact sizes available (ascending), from the runtime
+    /// manifest. Empty ⇒ everything routes sparse.
+    pub dense_sizes: Vec<usize>,
+    /// Graphs above this node count never go dense even if an artifact
+    /// fits (padding waste dominates).
+    pub dense_max_nodes: usize,
+    /// Minimum dyad density (connected dyads / possible dyads) below
+    /// which the sparse engine wins even for tiny graphs: the dense
+    /// backend's Θ(n³) matmuls only pay off when the merged traversal
+    /// would touch a comparable volume.
+    pub min_dense_density: f64,
+}
+
+impl Default for RoutingPolicy {
+    fn default() -> Self {
+        RoutingPolicy {
+            dense_sizes: Vec::new(),
+            dense_max_nodes: 256,
+            min_dense_density: 0.02,
+        }
+    }
+}
+
+/// The router proper.
+#[derive(Debug, Clone, Default)]
+pub struct Router {
+    policy: RoutingPolicy,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Router {
+        Router { policy }
+    }
+
+    /// Current policy.
+    pub fn policy(&self) -> &RoutingPolicy {
+        &self.policy
+    }
+
+    /// Decide the backend for a graph.
+    pub fn route(&self, g: &CsrGraph) -> Route {
+        let n = g.node_count();
+        if n == 0 || n > self.policy.dense_max_nodes {
+            return Route::Sparse;
+        }
+        let Some(&size) = self.policy.dense_sizes.iter().find(|&&s| s >= n) else {
+            return Route::Sparse;
+        };
+        let possible = (n as f64) * (n as f64 - 1.0) / 2.0;
+        let density = if possible > 0.0 {
+            g.dyad_count() as f64 / possible
+        } else {
+            0.0
+        };
+        if density >= self.policy.min_dense_density {
+            Route::Dense { size }
+        } else {
+            Route::Sparse
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, named, power_law};
+
+    fn router() -> Router {
+        Router::new(RoutingPolicy {
+            dense_sizes: vec![64, 128, 256],
+            dense_max_nodes: 256,
+            min_dense_density: 0.02,
+        })
+    }
+
+    #[test]
+    fn dense_for_small_dense_graphs() {
+        let r = router();
+        let g = erdos_renyi(50, 400, 1);
+        assert_eq!(r.route(&g), Route::Dense { size: 64 });
+        let g = erdos_renyi(100, 2000, 1);
+        assert_eq!(r.route(&g), Route::Dense { size: 128 });
+    }
+
+    #[test]
+    fn sparse_for_large_graphs() {
+        let r = router();
+        let g = power_law(5000, 2.2, 5.0, 1);
+        assert_eq!(r.route(&g), Route::Sparse);
+    }
+
+    #[test]
+    fn sparse_for_sparse_small_graphs() {
+        let r = router();
+        // 200 nodes, ~20 dyads: density 0.001 « 0.02
+        let g = erdos_renyi(200, 20, 1);
+        assert_eq!(r.route(&g), Route::Sparse);
+    }
+
+    #[test]
+    fn sparse_when_no_artifacts() {
+        let r = Router::new(RoutingPolicy::default());
+        assert_eq!(r.route(&named::mutual3()), Route::Sparse);
+    }
+
+    #[test]
+    fn empty_graph_routes_sparse() {
+        let r = router();
+        assert_eq!(r.route(&crate::graph::CsrGraph::empty(0)), Route::Sparse);
+    }
+}

@@ -1,0 +1,271 @@
+//! The coordinator service: request intake, backend dispatch, dense
+//! service thread, metrics.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::router::{Route, Router, RoutingPolicy};
+use crate::census::{census_parallel, Census, ParallelConfig};
+use crate::graph::CsrGraph;
+use crate::metrics::Metrics;
+use crate::runtime::DenseCensusRuntime;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Artifact directory for the dense backend; `None` disables it.
+    pub artifacts_dir: Option<PathBuf>,
+    /// Sparse engine configuration.
+    pub sparse: ParallelConfig,
+    /// Routing overrides (dense sizes are filled from the manifest).
+    pub routing: RoutingPolicy,
+    /// Dense request queue depth (backpressure bound).
+    pub dense_queue: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts_dir: Some(PathBuf::from("artifacts")),
+            sparse: ParallelConfig::default(),
+            routing: RoutingPolicy::default(),
+            dense_queue: 64,
+        }
+    }
+}
+
+/// A served census with provenance and timing.
+#[derive(Debug, Clone)]
+pub struct CensusOutcome {
+    pub census: Census,
+    pub route: Route,
+    pub seconds: f64,
+}
+
+/// Request envelope for the dense service thread.
+struct DenseRequest {
+    graph: CsrGraph,
+    reply: mpsc::Sender<Result<Census>>,
+}
+
+/// The coordinator: owns the router, the sparse engine configuration and
+/// (if artifacts are present) the dense service thread.
+pub struct Coordinator {
+    router: Router,
+    sparse: ParallelConfig,
+    dense_tx: Option<mpsc::SyncSender<DenseRequest>>,
+    dense_thread: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start the coordinator. Compiles all dense artifacts up front (on
+    /// the service thread) if an artifact directory is configured and
+    /// readable; otherwise runs sparse-only.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let metrics = Arc::new(Metrics::new());
+        let mut routing = cfg.routing.clone();
+
+        let (dense_tx, dense_thread) = match &cfg.artifacts_dir {
+            Some(dir) if dir.join("manifest.tsv").exists() => {
+                let (tx, rx) = mpsc::sync_channel::<DenseRequest>(cfg.dense_queue);
+                let (size_tx, size_rx) = mpsc::channel::<Result<Vec<usize>>>();
+                let dir = dir.clone();
+                let m = metrics.clone();
+                // PjRtLoadedExecutable is not Send: the runtime lives and
+                // dies on this thread; requests arrive by channel.
+                let handle = std::thread::Builder::new()
+                    .name("dense-census".into())
+                    .spawn(move || dense_service(dir, rx, size_tx, m))
+                    .context("spawning dense service thread")?;
+                let sizes = size_rx
+                    .recv()
+                    .context("dense service thread died during startup")??;
+                routing.dense_sizes = sizes;
+                (Some(tx), Some(handle))
+            }
+            _ => (None, None),
+        };
+
+        Ok(Coordinator {
+            router: Router::new(routing),
+            sparse: cfg.sparse,
+            dense_tx,
+            dense_thread,
+            metrics,
+        })
+    }
+
+    /// Whether the dense backend is live.
+    pub fn dense_enabled(&self) -> bool {
+        self.dense_tx.is_some()
+    }
+
+    /// The routing table in force.
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Shared metrics registry.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Serve one census request synchronously (the monitor and the CLI
+    /// drive this; concurrent callers are fine — the sparse engine is
+    /// reentrant and the dense service serializes behind its queue).
+    pub fn census(&self, g: &CsrGraph) -> Result<CensusOutcome> {
+        let t0 = Instant::now();
+        let route = self.router.route(g);
+        let census = match (route, &self.dense_tx) {
+            (Route::Dense { .. }, Some(tx)) => {
+                self.metrics.inc("census_dense_total", 1);
+                let (reply_tx, reply_rx) = mpsc::channel();
+                tx.send(DenseRequest {
+                    graph: g.clone(),
+                    reply: reply_tx,
+                })
+                .ok()
+                .context("dense service thread gone")?;
+                let res = self
+                    .metrics
+                    .time("dense_census", || reply_rx.recv())
+                    .context("dense service dropped the request")??;
+                res
+            }
+            _ => {
+                self.metrics.inc("census_sparse_total", 1);
+                self.metrics
+                    .time("sparse_census", || census_parallel(g, &self.sparse))
+                    .census
+            }
+        };
+        Ok(CensusOutcome {
+            census,
+            route,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Drain and stop the dense service thread.
+    pub fn shutdown(mut self) {
+        self.dense_tx.take(); // close the channel; service loop exits
+        if let Some(h) = self.dense_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.dense_tx.take();
+        if let Some(h) = self.dense_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of the dense service thread: compile artifacts, report sizes,
+/// then drain the queue until the coordinator closes it.
+fn dense_service(
+    dir: PathBuf,
+    rx: mpsc::Receiver<DenseRequest>,
+    size_tx: mpsc::Sender<Result<Vec<usize>>>,
+    metrics: Arc<Metrics>,
+) {
+    let mut runtime = match DenseCensusRuntime::load_dir(&dir) {
+        Ok(rt) => {
+            let _ = size_tx.send(Ok(rt.sizes()));
+            rt
+        }
+        Err(e) => {
+            let _ = size_tx.send(Err(e));
+            return;
+        }
+    };
+    metrics.inc("dense_artifacts_compiled", runtime.stats().compiled as u64);
+    while let Ok(req) = rx.recv() {
+        let result = runtime.census(&req.graph);
+        metrics.inc("dense_executions_total", 1);
+        let _ = req.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::census::merged;
+    use crate::graph::generators;
+
+    fn artifacts_available() -> bool {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.tsv")
+            .exists()
+    }
+
+    fn test_config() -> CoordinatorConfig {
+        CoordinatorConfig {
+            artifacts_dir: Some(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")),
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn sparse_only_when_artifacts_missing() {
+        let cfg = CoordinatorConfig {
+            artifacts_dir: Some(PathBuf::from("/nonexistent")),
+            ..CoordinatorConfig::default()
+        };
+        let coord = Coordinator::start(cfg).unwrap();
+        assert!(!coord.dense_enabled());
+        let g = generators::erdos_renyi(40, 300, 3);
+        let out = coord.census(&g).unwrap();
+        assert_eq!(out.route, Route::Sparse);
+        assert_eq!(out.census, merged::census(&g));
+    }
+
+    #[test]
+    fn routes_and_answers_match_both_backends() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let coord = Coordinator::start(test_config()).unwrap();
+        assert!(coord.dense_enabled());
+
+        // dense route: small dense graph
+        let g = generators::erdos_renyi(50, 500, 7);
+        let out = coord.census(&g).unwrap();
+        assert!(matches!(out.route, Route::Dense { size: 64 }), "{:?}", out.route);
+        assert_eq!(out.census, merged::census(&g));
+
+        // sparse route: large graph
+        let g = generators::power_law(2000, 2.2, 6.0, 5);
+        let out = coord.census(&g).unwrap();
+        assert_eq!(out.route, Route::Sparse);
+        assert_eq!(out.census, merged::census(&g));
+
+        assert_eq!(coord.metrics().get("census_dense_total"), 1);
+        assert_eq!(coord.metrics().get("census_sparse_total"), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn many_requests_through_the_queue() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let coord = Coordinator::start(test_config()).unwrap();
+        for seed in 0..8 {
+            let g = generators::erdos_renyi(30, 200, seed);
+            let out = coord.census(&g).unwrap();
+            assert_eq!(out.census, merged::census(&g), "seed {seed}");
+        }
+        assert_eq!(coord.metrics().get("dense_executions_total"), 8);
+    }
+}

@@ -1,0 +1,398 @@
+//! Figure regeneration harness: one function per table/figure of the
+//! paper's evaluation section, each returning the plotted series as a
+//! TSV-formatted string (and usable programmatically). The `repro
+//! figures` CLI subcommand and the `benches/figNN_*` benches are thin
+//! wrappers over this module; EXPERIMENTS.md records paper-vs-measured
+//! for each.
+//!
+//! Scaling: the paper's graphs (16.5M–2.5B edges) exceed this container,
+//! so each figure runs on the DESIGN.md-documented synthetic stand-ins
+//! at a `--scale`-controlled size. Shapes (who wins, where the
+//! crossovers fall) are the reproduction target, not absolute seconds.
+
+use std::fmt::Write as _;
+
+use crate::census::{census_parallel, Accumulation, ParallelConfig};
+use crate::graph::degree::{fit_out_degree_exponent, out_degrees, DegreeStats, OutDegreeHistogram};
+use crate::graph::GraphSpec;
+use crate::sched::Policy;
+use crate::simulator::{
+    efficiencies, simulate, speedups, sweep, Machine, NumaMachine, ScalePoint, SuperdomeMachine,
+    WorkloadProfile, XmtMachine,
+};
+
+/// Workload scale for figure regeneration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Small graphs — seconds-fast, CI-friendly.
+    Small,
+    /// The DESIGN.md default sizes (a few hundred thousand nodes).
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Scale, String> {
+        match s {
+            "small" => Ok(Scale::Small),
+            "full" => Ok(Scale::Full),
+            other => Err(format!("unknown scale {other:?} (small|full)")),
+        }
+    }
+
+    fn patents(self) -> GraphSpec {
+        GraphSpec::patents(match self {
+            Scale::Small => 40_000,
+            Scale::Full => 200_000,
+        })
+    }
+
+    fn orkut(self) -> GraphSpec {
+        GraphSpec::orkut(match self {
+            Scale::Small => 10_000,
+            Scale::Full => 50_000,
+        })
+    }
+
+    fn web(self) -> GraphSpec {
+        GraphSpec::webgraph(match self {
+            Scale::Small => 60_000,
+            Scale::Full => 400_000,
+        })
+    }
+}
+
+/// Profile a spec's workload (generation + characterization).
+fn profile_of(spec: &GraphSpec) -> WorkloadProfile {
+    let g = spec.generate();
+    WorkloadProfile::from_graph(spec.name, &g)
+}
+
+/// Fig 6: outdegree distribution charts (log-binned) and power-law
+/// exponents for the three workloads.
+pub fn fig6(scale: Scale) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# FIG6: outdegree distributions (paper exponents: patents 3.126, orkut 2.127, web 1.516)"
+    );
+    for spec in [scale.patents(), scale.orkut(), scale.web()] {
+        let g = spec.generate();
+        let degs = out_degrees(&g);
+        let stats = DegreeStats::from_sequence(&degs);
+        let fitted = fit_out_degree_exponent(&g).unwrap_or(f64::NAN);
+        let _ = writeln!(
+            out,
+            "## {}: n={} arcs={} max_outdeg={} fitted_gamma={:.3} (target {:.3})",
+            spec.name,
+            g.node_count(),
+            g.arc_count(),
+            stats.max,
+            fitted,
+            spec.gamma
+        );
+        let _ = writeln!(out, "degree\tfrequency_density");
+        for (k, dens) in OutDegreeHistogram::new(&g).log_binned(4) {
+            let _ = writeln!(out, "{k:.1}\t{dens:.4}");
+        }
+    }
+    out
+}
+
+/// Fig 9: CPU utilization over time, Orkut @ 8 XMT processors.
+pub fn fig9(scale: Scale) -> String {
+    let prof = profile_of(&scale.orkut());
+    let m = XmtMachine::pnnl();
+    let r = simulate(&m, &prof, 8, Policy::dynamic_default());
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# FIG9: simulated XMT CPU utilization, {} @ 8 procs (paper: 60-70% steady state)",
+        prof.name
+    );
+    let _ = writeln!(out, "seconds\tutilization");
+    for (t, u) in r.utilization_timeline(40) {
+        let _ = writeln!(out, "{t:.4}\t{u:.3}");
+    }
+    out
+}
+
+/// A three-machine sweep table (Figs 10a/11a) plus speedups (10b/11b).
+fn machine_comparison(prof: &WorkloadProfile, procs: &[usize], header: &str) -> String {
+    let xmt = XmtMachine::pnnl();
+    let numa = NumaMachine::magny_cours();
+    let sd = SuperdomeMachine::sd64();
+    let pol = Policy::dynamic_default();
+
+    let sx = sweep(&xmt, prof, pol, procs);
+    let sn: Vec<ScalePoint> = procs
+        .iter()
+        .filter(|&&p| p <= numa.max_procs())
+        .map(|&p| ScalePoint {
+            procs: p,
+            seconds: simulate(&numa, prof, p, pol).makespan,
+        })
+        .collect();
+    let ss = sweep(&sd, prof, pol, procs);
+
+    let mut out = String::new();
+    let _ = writeln!(out, "{header}");
+    let _ = writeln!(out, "procs\txmt_s\tnuma_s\tsuperdome_s");
+    for (i, &p) in procs.iter().enumerate() {
+        let numa_s = sn
+            .iter()
+            .find(|sp| sp.procs == p)
+            .map(|sp| format!("{:.6}", sp.seconds))
+            .unwrap_or_else(|| "-".into());
+        let _ = writeln!(
+            out,
+            "{p}\t{:.6}\t{}\t{:.6}",
+            sx[i].seconds, numa_s, ss[i].seconds
+        );
+    }
+    let _ = writeln!(out, "\nprocs\txmt_speedup\tnuma_speedup\tsuperdome_speedup");
+    let spx = speedups(&sx);
+    let spn = speedups(&sn);
+    let sps = speedups(&ss);
+    for (i, &p) in procs.iter().enumerate() {
+        let n = spn
+            .iter()
+            .find(|(pp, _)| *pp == p)
+            .map(|(_, s)| format!("{s:.2}"))
+            .unwrap_or_else(|| "-".into());
+        let _ = writeln!(out, "{p}\t{:.2}\t{n}\t{:.2}", spx[i].1, sps[i].1);
+    }
+    out
+}
+
+const SWEEP_PROCS: &[usize] = &[1, 2, 4, 8, 12, 16, 24, 32, 36, 40, 44, 48, 56, 64, 96, 128];
+
+/// Fig 10: patents network across the three machines.
+pub fn fig10(scale: Scale) -> String {
+    let prof = profile_of(&scale.patents());
+    machine_comparison(
+        &prof,
+        SWEEP_PROCS,
+        "# FIG10: patents — exec time & speedup (paper: NUMA best at low p, XMT crosses at ~36, Superdome cell boundary at 8)",
+    )
+}
+
+/// Fig 11: Orkut network across the three machines.
+pub fn fig11(scale: Scale) -> String {
+    let prof = profile_of(&scale.orkut());
+    machine_comparison(
+        &prof,
+        SWEEP_PROCS,
+        "# FIG11: orkut — exec time & speedup (paper: NUMA leads to ~64 vcores, Superdome cabinet boundary at 64, flat XMT efficiency)",
+    )
+}
+
+/// Fig 12: NUMA parallel-efficiency detail, cores 32–48.
+pub fn fig12(scale: Scale) -> String {
+    let prof = profile_of(&scale.orkut());
+    let numa = NumaMachine::magny_cours();
+    let pol = Policy::dynamic_default();
+    let procs: Vec<usize> = (32..=48).collect();
+    let series: Vec<ScalePoint> = std::iter::once(1usize)
+        .chain(procs.iter().copied())
+        .map(|p| ScalePoint {
+            procs: p,
+            seconds: simulate(&numa, &prof, p, pol).makespan,
+        })
+        .collect();
+    let effs = efficiencies(&series);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# FIG12: NUMA orkut detail 32-48 cores (paper: efficiency deteriorates through the 40s)"
+    );
+    let _ = writeln!(out, "cores\tseconds\tparallel_efficiency");
+    for (sp, (p, e)) in series.iter().zip(&effs).skip(1) {
+        let _ = writeln!(out, "{}\t{:.6}\t{:.3}", p, sp.seconds, e);
+    }
+    out
+}
+
+/// Fig 13: webgraph on the 512-proc XMT, 64–512 processors.
+pub fn fig13(scale: Scale) -> String {
+    let prof = profile_of(&scale.web());
+    let m = XmtMachine::cray512();
+    let procs = [64usize, 96, 128, 192, 256, 384, 512];
+    let series = sweep(&m, &prof, Policy::dynamic_default(), &procs);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# FIG13: webgraph on 512p XMT (paper: good linear speedup 64-512)"
+    );
+    let _ = writeln!(out, "procs\tseconds\tspeedup_vs_64");
+    let t64 = series[0].seconds;
+    for sp in &series {
+        let _ = writeln!(
+            out,
+            "{}\t{:.6}\t{:.2}",
+            sp.procs,
+            sp.seconds,
+            t64 / sp.seconds * 64.0
+        );
+    }
+    out
+}
+
+/// SCHED: the scheduling-policy study on the real thread pool (measured,
+/// this host) and on the simulated machines — the paper's "dynamic best,
+/// guided severely underperformed" claim.
+pub fn fig_sched(scale: Scale) -> String {
+    let spec = match scale {
+        Scale::Small => GraphSpec::patents(20_000),
+        Scale::Full => GraphSpec::patents(100_000),
+    };
+    let g = spec.generate();
+    let prof = WorkloadProfile::from_graph(spec.name, &g);
+    let policies = [
+        ("static", Policy::static_default()),
+        ("dynamic", Policy::dynamic_default()),
+        ("guided", Policy::guided_default()),
+    ];
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# SCHED: scheduling policies on patents-like workload (paper: dynamic best, guided severely underperforms)"
+    );
+    // simulated Superdome & NUMA at 32 cores
+    for (mname, m) in [
+        ("superdome", &SuperdomeMachine::sd64() as &dyn Machine),
+        ("numa", &NumaMachine::magny_cours() as &dyn Machine),
+    ] {
+        let _ = writeln!(out, "## simulated {mname} @32 cores");
+        let _ = writeln!(out, "policy\tseconds\tbalance");
+        for (pname, pol) in policies {
+            let r = simulate(m, &prof, 32, pol);
+            let _ = writeln!(out, "{pname}\t{:.6}\t{:.3}", r.makespan, r.balance());
+        }
+    }
+    // measured on this host (thread pool, wall-clock)
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let _ = writeln!(out, "## measured on this host ({threads} hw threads)");
+    let _ = writeln!(out, "policy\tseconds\timbalance");
+    for (pname, pol) in policies {
+        let cfg = ParallelConfig {
+            threads: threads.max(2),
+            policy: pol,
+            accumulation: Accumulation::Bank { slots: 64 },
+        };
+        let run = census_parallel(&g, &cfg);
+        let _ = writeln!(
+            out,
+            "{pname}\t{:.6}\t{:.3}",
+            run.stats.wall,
+            run.stats.imbalance()
+        );
+    }
+    out
+}
+
+/// All figures, concatenated (the `--fig all` path).
+pub fn all_figures(scale: Scale) -> Vec<(&'static str, String)> {
+    vec![
+        ("fig06_degree", fig6(scale)),
+        ("fig09_utilization", fig9(scale)),
+        ("fig10_patents", fig10(scale)),
+        ("fig11_orkut", fig11(scale)),
+        ("fig12_numa_detail", fig12(scale)),
+        ("fig13_webgraph", fig13(scale)),
+        ("sched_policies", fig_sched(scale)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_reports_three_workloads() {
+        let s = fig6(Scale::Small);
+        for name in ["patents", "orkut", "webgraph"] {
+            assert!(s.contains(name), "missing {name} in:\n{s}");
+        }
+        assert!(s.contains("fitted_gamma"));
+    }
+
+    #[test]
+    fn fig9_steady_state_in_paper_band() {
+        let s = fig9(Scale::Small);
+        // parse utilization column; steady state = middle samples
+        let utils: Vec<f64> = s
+            .lines()
+            .filter(|l| !l.starts_with('#') && !l.starts_with("seconds"))
+            .filter_map(|l| l.split('\t').nth(1)?.parse().ok())
+            .collect();
+        assert!(utils.len() >= 30);
+        let mid = &utils[utils.len() / 3..utils.len() * 2 / 3];
+        let avg = mid.iter().sum::<f64>() / mid.len() as f64;
+        assert!(
+            (0.55..=0.75).contains(&avg),
+            "steady-state utilization {avg} outside the paper's 60-70% band"
+        );
+    }
+
+    #[test]
+    fn fig10_contains_crossover() {
+        let s = fig10(Scale::Small);
+        assert!(s.contains("procs\txmt_s"));
+        // parse the time table and verify NUMA wins at p=4 while XMT wins
+        // at a high count where NUMA data exists (48)
+        let mut xmt4 = 0.0;
+        let mut numa4 = 0.0;
+        let mut xmt48 = 0.0;
+        let mut numa48 = 0.0;
+        // only the first (execution-time) table — stop at the blank line
+        for l in s.lines().take_while(|l| !l.trim().is_empty()) {
+            let cols: Vec<&str> = l.split('\t').collect();
+            if cols.len() == 4 {
+                if cols[0] == "4" {
+                    xmt4 = cols[1].parse().unwrap_or(0.0);
+                    numa4 = cols[2].parse().unwrap_or(f64::NAN);
+                }
+                if cols[0] == "48" {
+                    xmt48 = cols[1].parse().unwrap_or(0.0);
+                    numa48 = cols[2].parse().unwrap_or(f64::NAN);
+                }
+            }
+        }
+        assert!(numa4 < xmt4, "NUMA should lead at 4 cores");
+        assert!(xmt48 < numa48 * 1.35, "XMT should be at/near crossover by 48");
+    }
+
+    #[test]
+    fn fig13_near_linear() {
+        let s = fig13(Scale::Small);
+        let last = s.lines().last().unwrap();
+        let speedup: f64 = last.split('\t').nth(2).unwrap().parse().unwrap();
+        assert!(speedup > 280.0, "64->512 speedup only {speedup}");
+    }
+
+    #[test]
+    fn sched_guided_underperforms_on_simulated_machines() {
+        let s = fig_sched(Scale::Small);
+        // within each simulated section, guided must be slowest
+        for section in s.split("## ").filter(|x| x.starts_with("simulated")) {
+            let mut times = std::collections::HashMap::new();
+            for l in section.lines() {
+                let cols: Vec<&str> = l.split('\t').collect();
+                if cols.len() == 3 {
+                    if let Ok(t) = cols[1].parse::<f64>() {
+                        times.insert(cols[0].to_string(), t);
+                    }
+                }
+            }
+            if times.len() == 3 {
+                assert!(
+                    times["guided"] > times["dynamic"],
+                    "guided {} should trail dynamic {} in {section}",
+                    times["guided"],
+                    times["dynamic"]
+                );
+            }
+        }
+    }
+}

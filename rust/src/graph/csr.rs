@@ -1,0 +1,531 @@
+//! Compact CSR graph with 2-bit edge-direction encoding — the paper's
+//! Fig 7 data structure.
+//!
+//! Graph nodes are elements of an offsets array; the collective set of
+//! edges for all nodes lives in a single allocation. Each neighbor entry
+//! packs the neighbor id in the high 30 bits and the edge direction in
+//! the low 2 bits:
+//!
+//! * `01` — unidirectional edge from the current node to the neighbor,
+//! * `10` — unidirectional edge from the neighbor to the current node,
+//! * `11` — bidirectional (mutual) edge.
+//!
+//! Per-node neighbor sub-arrays are sorted by neighbor id, enabling both
+//! binary-searched `has_arc` queries and the merged two-pointer traversal
+//! of Fig 8. Because the direction bits occupy the *low* bits, packed
+//! entries sort exactly as their neighbor ids do.
+
+use std::fmt;
+
+/// Direction of the edge(s) between a node and one of its neighbors, as
+/// encoded in the low two bits of a packed neighbor entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u32)]
+pub enum Dir {
+    /// `01` — arc from current node to neighbor.
+    Out = 0b01,
+    /// `10` — arc from neighbor to current node.
+    In = 0b10,
+    /// `11` — arcs both ways (mutual dyad).
+    Both = 0b11,
+}
+
+impl Dir {
+    /// Decode from the low two bits of a packed entry. `00` is invalid —
+    /// a neighbor entry exists only if at least one arc exists.
+    #[inline]
+    pub fn from_bits(bits: u32) -> Dir {
+        match bits & 0b11 {
+            0b01 => Dir::Out,
+            0b10 => Dir::In,
+            0b11 => Dir::Both,
+            _ => unreachable!("packed edge with 00 direction bits"),
+        }
+    }
+
+    /// The same relation seen from the other endpoint.
+    #[inline]
+    pub fn reversed(self) -> Dir {
+        match self {
+            Dir::Out => Dir::In,
+            Dir::In => Dir::Out,
+            Dir::Both => Dir::Both,
+        }
+    }
+
+    /// True if there is an arc current→neighbor.
+    #[inline]
+    pub fn has_out(self) -> bool {
+        (self as u32) & 0b01 != 0
+    }
+
+    /// True if there is an arc neighbor→current.
+    #[inline]
+    pub fn has_in(self) -> bool {
+        (self as u32) & 0b10 != 0
+    }
+}
+
+/// Classification of the ordered pair `(u, v)` as a dyad.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DyadType {
+    /// No arc in either direction.
+    Null,
+    /// Arc `u -> v` only.
+    Asym,
+    /// Arc `v -> u` only.
+    AsymRev,
+    /// Arcs both ways.
+    Mutual,
+}
+
+impl DyadType {
+    /// True if at least one arc exists.
+    #[inline]
+    pub fn connected(self) -> bool {
+        !matches!(self, DyadType::Null)
+    }
+}
+
+/// A packed neighbor entry: `(neighbor_id << 2) | direction_bits`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(transparent)]
+pub struct PackedEdge(pub u32);
+
+impl PackedEdge {
+    /// Pack a neighbor id and direction. `nbr` must fit in 30 bits.
+    #[inline]
+    pub fn new(nbr: u32, dir: Dir) -> PackedEdge {
+        debug_assert!(nbr <= CsrGraph::MAX_NODE_ID, "node id exceeds 30 bits");
+        PackedEdge((nbr << 2) | dir as u32)
+    }
+
+    /// The neighbor node id.
+    #[inline]
+    pub fn nbr(self) -> u32 {
+        self.0 >> 2
+    }
+
+    /// The direction bits.
+    #[inline]
+    pub fn dir(self) -> Dir {
+        Dir::from_bits(self.0)
+    }
+}
+
+impl fmt::Display for PackedEdge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{:?}", self.nbr(), self.dir())
+    }
+}
+
+/// The paper's compact shared-memory graph representation (Fig 7):
+/// compressed sparse row over *undirected adjacency* with per-entry
+/// direction bits. Symmetric: if `v` appears in `u`'s list, `u` appears
+/// in `v`'s list with the reversed direction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrGraph {
+    /// `offsets[u]..offsets[u+1]` indexes `edges` for node `u`.
+    offsets: Vec<usize>,
+    /// Packed neighbor entries, sorted within each node's sub-array.
+    edges: Vec<PackedEdge>,
+    /// Number of directed arcs (a mutual dyad counts as two arcs).
+    arc_count: u64,
+}
+
+impl CsrGraph {
+    /// Largest representable node id (30 bits; two low bits hold the
+    /// direction encoding).
+    pub const MAX_NODE_ID: u32 = (1 << 30) - 1;
+
+    /// Assemble from raw parts. `offsets` must be monotonically
+    /// non-decreasing with `offsets[0] == 0` and
+    /// `offsets[n] == edges.len()`; each node's sub-array must be sorted
+    /// by neighbor id with no duplicates and no self-loops. Checked in
+    /// debug builds (and by [`CsrGraph::validate`]).
+    pub fn from_parts(offsets: Vec<usize>, edges: Vec<PackedEdge>, arc_count: u64) -> CsrGraph {
+        let g = CsrGraph {
+            offsets,
+            edges,
+            arc_count,
+        };
+        debug_assert!(g.validate().is_ok(), "{:?}", g.validate());
+        g
+    }
+
+    /// An empty graph with `n` isolated nodes.
+    pub fn empty(n: usize) -> CsrGraph {
+        CsrGraph {
+            offsets: vec![0; n + 1],
+            edges: Vec::new(),
+            arc_count: 0,
+        }
+    }
+
+    /// Structural validation: returns a description of the first
+    /// violated invariant, if any.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.offsets.is_empty() {
+            return Err("offsets must have at least one entry".into());
+        }
+        if self.offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        if *self.offsets.last().unwrap() != self.edges.len() {
+            return Err("offsets[n] != edges.len()".into());
+        }
+        let n = self.node_count();
+        let mut arcs = 0u64;
+        for u in 0..n {
+            if self.offsets[u] > self.offsets[u + 1] {
+                return Err(format!("offsets not monotone at node {u}"));
+            }
+            let row = &self.edges[self.offsets[u]..self.offsets[u + 1]];
+            let mut prev: Option<u32> = None;
+            for e in row {
+                let v = e.nbr();
+                if v as usize >= n {
+                    return Err(format!("node {u} has neighbor {v} out of range"));
+                }
+                if v as usize == u {
+                    return Err(format!("self-loop at node {u}"));
+                }
+                if let Some(p) = prev {
+                    if v <= p {
+                        return Err(format!("row of node {u} not strictly sorted at {v}"));
+                    }
+                }
+                prev = Some(v);
+                let d = e.dir();
+                arcs += d.has_out() as u64;
+                // symmetry: v must list u with reversed direction
+                match self.find_entry(v, u as u32) {
+                    Some(back) if back.dir() == d.reversed() => {}
+                    Some(back) => {
+                        return Err(format!(
+                            "asymmetric encoding: {u}->{v} is {:?} but {v}->{u} is {:?}",
+                            d,
+                            back.dir()
+                        ))
+                    }
+                    None => return Err(format!("missing reverse entry for {u}->{v}")),
+                }
+            }
+        }
+        if arcs != self.arc_count {
+            return Err(format!(
+                "arc_count mismatch: stored {} counted {arcs}",
+                self.arc_count
+            ));
+        }
+        Ok(())
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn node_count(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of directed arcs (mutual dyads count twice).
+    #[inline]
+    pub fn arc_count(&self) -> u64 {
+        self.arc_count
+    }
+
+    /// Number of connected (non-null) dyads, i.e. undirected adjacency
+    /// entries / 2.
+    #[inline]
+    pub fn dyad_count(&self) -> u64 {
+        (self.edges.len() / 2) as u64
+    }
+
+    /// Total packed entries (2× dyad count).
+    #[inline]
+    pub fn entry_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// The sorted packed-neighbor row of `u`.
+    #[inline]
+    pub fn row(&self, u: u32) -> &[PackedEdge] {
+        &self.edges[self.offsets[u as usize]..self.offsets[u as usize + 1]]
+    }
+
+    /// The CSR offsets array (`n + 1` entries). Exposed for the
+    /// manhattan-collapsed flat iteration space of the parallel engine.
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// The packed edge at flat index `idx` (`0..entry_count()`).
+    #[inline]
+    pub fn entry(&self, idx: usize) -> PackedEdge {
+        self.edges[idx]
+    }
+
+    /// The node owning flat entry `idx` — the inverse of the offsets
+    /// mapping, via binary search. Used to seat a scheduler chunk inside
+    /// the collapsed iteration space in `O(log n)`, after which the
+    /// worker walks forward linearly.
+    #[inline]
+    pub fn owner_of_entry(&self, idx: usize) -> u32 {
+        debug_assert!(idx < self.edges.len());
+        // partition_point: first u with offsets[u+1] > idx
+        (self.offsets.partition_point(|&o| o <= idx) - 1) as u32
+    }
+
+    /// Undirected degree (number of distinct neighbors).
+    #[inline]
+    pub fn degree(&self, u: u32) -> usize {
+        self.offsets[u as usize + 1] - self.offsets[u as usize]
+    }
+
+    /// Out-degree (arcs leaving `u`).
+    pub fn out_degree(&self, u: u32) -> usize {
+        self.row(u).iter().filter(|e| e.dir().has_out()).count()
+    }
+
+    /// In-degree (arcs entering `u`).
+    pub fn in_degree(&self, u: u32) -> usize {
+        self.row(u).iter().filter(|e| e.dir().has_in()).count()
+    }
+
+    /// Binary-search `u`'s row for neighbor `v` (the paper's fast edge
+    /// search over sorted sub-arrays).
+    #[inline]
+    pub fn find_entry(&self, u: u32, v: u32) -> Option<PackedEdge> {
+        let row = self.row(u);
+        row.binary_search_by_key(&v, |e| e.nbr())
+            .ok()
+            .map(|i| row[i])
+    }
+
+    /// True if the arc `u -> v` exists.
+    #[inline]
+    pub fn has_arc(&self, u: u32, v: u32) -> bool {
+        self.find_entry(u, v).map_or(false, |e| e.dir().has_out())
+    }
+
+    /// True if `v` is a neighbor of `u` in either direction (the paper's
+    /// `uÂv` relation).
+    #[inline]
+    pub fn is_neighbor(&self, u: u32, v: u32) -> bool {
+        self.find_entry(u, v).is_some()
+    }
+
+    /// Classify the ordered pair `(u, v)`.
+    #[inline]
+    pub fn dyad(&self, u: u32, v: u32) -> DyadType {
+        match self.find_entry(u, v).map(PackedEdge::dir) {
+            None => DyadType::Null,
+            Some(Dir::Out) => DyadType::Asym,
+            Some(Dir::In) => DyadType::AsymRev,
+            Some(Dir::Both) => DyadType::Mutual,
+        }
+    }
+
+    /// Iterate all connected dyads `(u, v, dir)` with `u < v`.
+    pub fn dyads(&self) -> impl Iterator<Item = (u32, u32, Dir)> + '_ {
+        (0..self.node_count() as u32).flat_map(move |u| {
+            self.row(u)
+                .iter()
+                .filter(move |e| e.nbr() > u)
+                .map(move |e| (u, e.nbr(), e.dir()))
+        })
+    }
+
+    /// Iterate all directed arcs `(u, v)`.
+    pub fn arcs(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.node_count() as u32).flat_map(move |u| {
+            self.row(u)
+                .iter()
+                .filter(|e| e.dir().has_out())
+                .map(move |e| (u, e.nbr()))
+        })
+    }
+
+    /// The transpose graph (every arc reversed). Mutual dyads are
+    /// unchanged; asymmetric entries flip direction. O(m).
+    pub fn transpose(&self) -> CsrGraph {
+        let edges = self
+            .edges
+            .iter()
+            .map(|e| PackedEdge::new(e.nbr(), e.dir().reversed()))
+            .collect();
+        CsrGraph {
+            offsets: self.offsets.clone(),
+            edges,
+            arc_count: self.arc_count,
+        }
+    }
+
+    /// Dense adjacency matrix (row-major `n*n`, `1.0` where `u -> v`),
+    /// used to feed the dense (Moody / AOT) census backends.
+    pub fn to_dense_f32(&self) -> Vec<f32> {
+        let n = self.node_count();
+        let mut a = vec![0f32; n * n];
+        for (u, v) in self.arcs() {
+            a[u as usize * n + v as usize] = 1.0;
+        }
+        a
+    }
+
+    /// Approximate resident memory of the structure in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+            + self.edges.len() * std::mem::size_of::<PackedEdge>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn triangle() -> CsrGraph {
+        // 0 -> 1, 1 -> 2, 2 -> 0 (3-cycle) plus mutual 0 <-> 2? no: keep cycle
+        GraphBuilder::new(3)
+            .arcs(&[(0, 1), (1, 2), (2, 0)])
+            .build()
+    }
+
+    #[test]
+    fn dir_bits_round_trip() {
+        for d in [Dir::Out, Dir::In, Dir::Both] {
+            assert_eq!(Dir::from_bits(d as u32), d);
+            assert_eq!(d.reversed().reversed(), d);
+        }
+        assert!(Dir::Out.has_out() && !Dir::Out.has_in());
+        assert!(!Dir::In.has_out() && Dir::In.has_in());
+        assert!(Dir::Both.has_out() && Dir::Both.has_in());
+    }
+
+    #[test]
+    fn packed_edge_round_trip() {
+        let e = PackedEdge::new(123_456, Dir::Both);
+        assert_eq!(e.nbr(), 123_456);
+        assert_eq!(e.dir(), Dir::Both);
+        let max = PackedEdge::new(CsrGraph::MAX_NODE_ID, Dir::In);
+        assert_eq!(max.nbr(), CsrGraph::MAX_NODE_ID);
+        assert_eq!(max.dir(), Dir::In);
+    }
+
+    #[test]
+    fn packed_edges_sort_by_neighbor() {
+        let mut v = vec![
+            PackedEdge::new(5, Dir::Out),
+            PackedEdge::new(2, Dir::Both),
+            PackedEdge::new(9, Dir::In),
+        ];
+        v.sort();
+        let ids: Vec<u32> = v.iter().map(|e| e.nbr()).collect();
+        assert_eq!(ids, vec![2, 5, 9]);
+    }
+
+    #[test]
+    fn cycle_structure() {
+        let g = triangle();
+        assert_eq!(g.node_count(), 3);
+        assert_eq!(g.arc_count(), 3);
+        assert_eq!(g.dyad_count(), 3);
+        assert!(g.has_arc(0, 1) && !g.has_arc(1, 0));
+        assert!(g.has_arc(2, 0) && !g.has_arc(0, 2));
+        assert_eq!(g.dyad(0, 1), DyadType::Asym);
+        assert_eq!(g.dyad(1, 0), DyadType::AsymRev);
+        assert_eq!(g.dyad(0, 2), DyadType::AsymRev);
+        assert_eq!(g.out_degree(0), 1);
+        assert_eq!(g.in_degree(0), 1);
+        assert_eq!(g.degree(0), 2);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn mutual_encoding() {
+        let g = GraphBuilder::new(2).arcs(&[(0, 1), (1, 0)]).build();
+        assert_eq!(g.dyad(0, 1), DyadType::Mutual);
+        assert_eq!(g.dyad(1, 0), DyadType::Mutual);
+        assert_eq!(g.arc_count(), 2);
+        assert_eq!(g.dyad_count(), 1);
+        assert_eq!(g.row(0)[0].dir(), Dir::Both);
+    }
+
+    #[test]
+    fn transpose_flips_asym_keeps_mutual() {
+        let g = GraphBuilder::new(4)
+            .arcs(&[(0, 1), (1, 2), (2, 1), (3, 0)])
+            .build();
+        let t = g.transpose();
+        assert_eq!(t.dyad(1, 0), DyadType::Asym);
+        assert_eq!(t.dyad(0, 1), DyadType::AsymRev);
+        assert_eq!(t.dyad(1, 2), DyadType::Mutual);
+        assert_eq!(t.transpose(), g);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn dyads_iterator_yields_each_pair_once() {
+        let g = GraphBuilder::new(4)
+            .arcs(&[(0, 1), (1, 0), (2, 3), (1, 3)])
+            .build();
+        let ds: Vec<_> = g.dyads().collect();
+        assert_eq!(ds.len(), 3);
+        for (u, v, _) in &ds {
+            assert!(u < v);
+        }
+    }
+
+    #[test]
+    fn arcs_iterator_matches_arc_count() {
+        let g = GraphBuilder::new(5)
+            .arcs(&[(0, 1), (1, 0), (2, 3), (4, 2), (3, 2)])
+            .build();
+        assert_eq!(g.arcs().count() as u64, g.arc_count());
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let g = triangle();
+        let a = g.to_dense_f32();
+        assert_eq!(a.len(), 9);
+        assert_eq!(a[0 * 3 + 1], 1.0);
+        assert_eq!(a[1 * 3 + 2], 1.0);
+        assert_eq!(a[2 * 3 + 0], 1.0);
+        assert_eq!(a.iter().sum::<f32>(), 3.0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::empty(10);
+        assert_eq!(g.node_count(), 10);
+        assert_eq!(g.arc_count(), 0);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.dyads().count(), 0);
+    }
+
+    #[test]
+    fn owner_of_entry_inverts_offsets() {
+        let g = GraphBuilder::new(6)
+            .arcs(&[(1, 2), (1, 3), (4, 5), (0, 4)])
+            .build();
+        for u in 0..6u32 {
+            let (s, e) = (g.offsets()[u as usize], g.offsets()[u as usize + 1]);
+            for idx in s..e {
+                assert_eq!(g.owner_of_entry(idx), u, "idx {idx}");
+                assert_eq!(g.entry(idx), g.row(u)[idx - s]);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_broken_symmetry() {
+        // hand-build an asymmetric structure: 0 lists 1, but 1's row empty
+        let g = CsrGraph {
+            offsets: vec![0, 1, 1],
+            edges: vec![PackedEdge::new(1, Dir::Out)],
+            arc_count: 1,
+        };
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! Deterministic graph generators.
+//!
+//! The paper evaluates on three real scale-free graphs (NBER patents,
+//! Orkut, and a .uk webgraph). Those datasets are not redistributable /
+//! not feasible at container scale, so — per the substitution rule in
+//! DESIGN.md — we generate synthetic graphs whose *outdegree power-law
+//! exponents match the paper's measured exponents* (3.126, 2.127, 1.516)
+//! and whose density matches the originals' average degree, at a
+//! CLI-scalable node count.
+
+use super::builder::GraphBuilder;
+use super::csr::CsrGraph;
+use crate::rng::Rng;
+
+/// A named, reproducible workload specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSpec {
+    /// Human-readable name (used in figures and EXPERIMENTS.md).
+    pub name: &'static str,
+    /// Node count.
+    pub n: usize,
+    /// Target power-law exponent of the outdegree distribution.
+    pub gamma: f64,
+    /// Average outdegree (arcs / node).
+    pub avg_out_degree: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl GraphSpec {
+    /// Synthetic stand-in for the NBER patents citation network
+    /// (paper: 16.5M arcs, outdegree exponent 3.126 — sparse).
+    pub fn patents(n: usize) -> GraphSpec {
+        GraphSpec {
+            name: "patents",
+            n,
+            gamma: 3.126,
+            avg_out_degree: 4.4,
+            seed: 0x9a7e_2012,
+        }
+    }
+
+    /// Synthetic stand-in for the Orkut social network
+    /// (paper: 3.1M nodes / 234.4M arcs, exponent 2.127 — dense).
+    pub fn orkut(n: usize) -> GraphSpec {
+        GraphSpec {
+            name: "orkut",
+            n,
+            gamma: 2.127,
+            avg_out_degree: 75.0,
+            seed: 0x0e4b_2012,
+        }
+    }
+
+    /// Synthetic stand-in for the .uk webgraph
+    /// (paper: 105.2M nodes / 2.5B arcs, exponent 1.516 — heavy tail).
+    pub fn webgraph(n: usize) -> GraphSpec {
+        GraphSpec {
+            name: "webgraph",
+            n,
+            gamma: 1.516,
+            avg_out_degree: 23.0,
+            seed: 0x7eb_2012,
+        }
+    }
+
+    /// Generate the graph for this spec.
+    pub fn generate(&self) -> CsrGraph {
+        power_law(self.n, self.gamma, self.avg_out_degree, self.seed)
+    }
+}
+
+/// Directed scale-free graph via the configuration model: outdegrees are
+/// drawn from a truncated discrete power law `P(k) ∝ k^(-gamma)`, scaled
+/// to hit `avg_out_degree`, then each arc's head is sampled uniformly.
+/// Duplicate arcs / self-loops are dropped by the builder (standard
+/// "erased" configuration model).
+pub fn power_law(n: usize, gamma: f64, avg_out_degree: f64, seed: u64) -> CsrGraph {
+    assert!(n >= 2, "need at least two nodes");
+    let mut rng = Rng::new(seed);
+    let kmax = ((n - 1) as f64).min(1.0e6);
+    // Draw raw degrees, then rescale to the target mean: the truncated
+    // zeta mean depends on gamma, so fix it empirically.
+    let mut degs: Vec<u64> = (0..n).map(|_| rng.power_law(gamma, 1.0, kmax)).collect();
+    let raw_mean = degs.iter().sum::<u64>() as f64 / n as f64;
+    let scale = avg_out_degree / raw_mean;
+    if scale < 1.0 {
+        // Thin by dropping arcs probabilistically, preserving the shape.
+        for d in degs.iter_mut() {
+            let keep = (*d as f64 * scale).floor() as u64;
+            let frac = *d as f64 * scale - keep as f64;
+            *d = keep + rng.chance(frac) as u64;
+        }
+    } else if scale > 1.0 {
+        for d in degs.iter_mut() {
+            let want = *d as f64 * scale;
+            let keep = want.floor() as u64;
+            let frac = want - keep as f64;
+            *d = (keep + rng.chance(frac) as u64).min(n as u64 - 1);
+        }
+    }
+    let mut b = GraphBuilder::new(n);
+    for (u, &d) in degs.iter().enumerate() {
+        for _ in 0..d {
+            let mut v = rng.node(n as u32);
+            if v as usize == u {
+                v = (v + 1) % n as u32;
+            }
+            b.arc(u as u32, v);
+        }
+    }
+    b.build()
+}
+
+/// Directed Barabási–Albert preferential attachment: each new node emits
+/// `m` arcs to targets chosen proportionally to (in-degree + 1) via a
+/// repeated-endpoint urn.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> CsrGraph {
+    assert!(n > m && m >= 1);
+    let mut rng = Rng::new(seed);
+    let mut urn: Vec<u32> = (0..m as u32).collect(); // seed clique targets
+    let mut b = GraphBuilder::new(n);
+    for u in m..n {
+        for _ in 0..m {
+            // preferential: mostly sample the urn, occasionally uniform
+            let v = if !urn.is_empty() && rng.chance(0.9) {
+                urn[rng.below(urn.len() as u64) as usize]
+            } else {
+                rng.node(u as u32)
+            };
+            if v != u as u32 {
+                b.arc(u as u32, v);
+                urn.push(v);
+                urn.push(u as u32);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Directed Erdős–Rényi G(n, m): `m` arcs sampled uniformly.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    for _ in 0..m {
+        let u = rng.node(n as u32);
+        let mut v = rng.node(n as u32);
+        if v == u {
+            v = (v + 1) % n as u32;
+        }
+        b.arc(u, v);
+    }
+    b.build()
+}
+
+/// Named tiny fixtures with hand-computable censuses, used across the
+/// test suites.
+pub mod named {
+    use super::*;
+    use crate::graph::builder::from_arcs;
+
+    /// 3-cycle: one 030C triad.
+    pub fn cycle3() -> CsrGraph {
+        from_arcs(3, &[(0, 1), (1, 2), (2, 0)])
+    }
+
+    /// Transitive triple 0→1, 1→2, 0→2: one 030T triad.
+    pub fn transitive3() -> CsrGraph {
+        from_arcs(3, &[(0, 1), (1, 2), (0, 2)])
+    }
+
+    /// Complete mutual triangle: one 300 triad.
+    pub fn mutual3() -> CsrGraph {
+        from_arcs(3, &[(0, 1), (1, 0), (1, 2), (2, 1), (0, 2), (2, 0)])
+    }
+
+    /// Out-star on 4 nodes (0→1, 0→2, 0→3): three 021D triads plus one 003.
+    pub fn out_star4() -> CsrGraph {
+        from_arcs(4, &[(0, 1), (0, 2), (0, 3)])
+    }
+
+    /// In-star on 4 nodes: three 021U triads plus one 003.
+    pub fn in_star4() -> CsrGraph {
+        from_arcs(4, &[(1, 0), (2, 0), (3, 0)])
+    }
+
+    /// Directed 5-cycle.
+    pub fn cycle5() -> CsrGraph {
+        from_arcs(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0)])
+    }
+
+    /// Complete mutual digraph K5 (all dyads mutual): C(5,3)=10 300-triads.
+    pub fn complete_mutual(n: usize) -> CsrGraph {
+        let mut b = GraphBuilder::new(n);
+        for u in 0..n as u32 {
+            for v in 0..n as u32 {
+                if u != v {
+                    b.arc(u, v);
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// The paper's Fig 1 examples combined: reciprocity, transitivity and
+    /// intransitivity patterns on 7 nodes.
+    pub fn fig1() -> CsrGraph {
+        from_arcs(
+            7,
+            &[
+                (0, 1),
+                (1, 0), // reciprocal pair
+                (2, 3),
+                (3, 4),
+                (2, 4), // transitive triple
+                (4, 5),
+                (5, 6), // chain (intransitive)
+            ],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_law_deterministic() {
+        let a = power_law(500, 2.2, 8.0, 42);
+        let b = power_law(500, 2.2, 8.0, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn power_law_seed_changes_graph() {
+        let a = power_law(500, 2.2, 8.0, 1);
+        let b = power_law(500, 2.2, 8.0, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn power_law_hits_target_density() {
+        let n = 4000;
+        let target = 10.0;
+        let g = power_law(n, 2.5, target, 7);
+        let avg = g.arc_count() as f64 / n as f64;
+        // erasure of duplicates loses a little density
+        assert!(avg > target * 0.7 && avg < target * 1.1, "avg={avg}");
+    }
+
+    #[test]
+    fn power_law_is_heavy_tailed() {
+        let g = power_law(3000, 2.0, 10.0, 3);
+        let mut degs: Vec<usize> = (0..3000).map(|u| g.out_degree(u as u32)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // hub much larger than the median
+        let median = degs[1500];
+        assert!(degs[0] > 10 * median.max(1), "hub={} median={}", degs[0], median);
+    }
+
+    #[test]
+    fn spec_generators_validate() {
+        for spec in [
+            GraphSpec::patents(2000),
+            GraphSpec::orkut(1000),
+            GraphSpec::webgraph(2000),
+        ] {
+            let g = spec.generate();
+            assert_eq!(g.node_count(), spec.n);
+            assert!(g.validate().is_ok(), "{}", spec.name);
+            assert!(g.arc_count() > 0);
+        }
+    }
+
+    #[test]
+    fn ba_validates_and_is_dense_enough() {
+        let g = barabasi_albert(800, 3, 5);
+        assert!(g.validate().is_ok());
+        assert!(g.arc_count() as usize > 800);
+    }
+
+    #[test]
+    fn er_arc_count_close() {
+        let g = erdos_renyi(1000, 5000, 9);
+        // duplicates get merged; expect most to survive
+        assert!(g.arc_count() > 4800);
+    }
+
+    #[test]
+    fn named_fixtures_validate() {
+        for g in [
+            named::cycle3(),
+            named::transitive3(),
+            named::mutual3(),
+            named::out_star4(),
+            named::in_star4(),
+            named::cycle5(),
+            named::complete_mutual(5),
+            named::fig1(),
+        ] {
+            assert!(g.validate().is_ok());
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Graph I/O: whitespace edge-list text (the format the paper's datasets
+//! ship in — SNAP/LAW style) and a compact binary format for fast reload
+//! of generated workloads.
+
+use std::fs::File;
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::builder::GraphBuilder;
+use super::csr::{CsrGraph, PackedEdge};
+
+/// Magic + version for the binary format.
+const MAGIC: &[u8; 8] = b"TRIADIC1";
+
+/// Parse a whitespace/tab separated edge list (`u v` per line, `#`
+/// comments allowed, ids arbitrary u32 — the max id defines `n`).
+pub fn read_edge_list<R: BufRead>(r: R) -> io::Result<CsrGraph> {
+    let mut arcs: Vec<(u32, u32)> = Vec::new();
+    let mut max_id = 0u32;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (a, b) = match (it.next(), it.next()) {
+            (Some(a), Some(b)) => (a, b),
+            _ => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("line {}: expected two ids", lineno + 1),
+                ))
+            }
+        };
+        let parse = |s: &str| {
+            s.parse::<u32>().map_err(|e| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("line {}: bad id {s:?}: {e}", lineno + 1),
+                )
+            })
+        };
+        let (u, v) = (parse(a)?, parse(b)?);
+        max_id = max_id.max(u).max(v);
+        arcs.push((u, v));
+    }
+    let n = if arcs.is_empty() { 0 } else { max_id as usize + 1 };
+    let mut b = GraphBuilder::new(n);
+    b.extend(arcs);
+    Ok(b.build())
+}
+
+/// Read an edge-list file.
+pub fn read_edge_list_file<P: AsRef<Path>>(path: P) -> io::Result<CsrGraph> {
+    read_edge_list(BufReader::new(File::open(path)?))
+}
+
+/// Write a graph as a directed edge list (one arc per line).
+pub fn write_edge_list<W: Write>(g: &CsrGraph, mut w: W) -> io::Result<()> {
+    writeln!(w, "# triadic edge list: {} nodes {} arcs", g.node_count(), g.arc_count())?;
+    for (u, v) in g.arcs() {
+        writeln!(w, "{u}\t{v}")?;
+    }
+    Ok(())
+}
+
+/// Write an edge-list file.
+pub fn write_edge_list_file<P: AsRef<Path>>(g: &CsrGraph, path: P) -> io::Result<()> {
+    write_edge_list(g, BufWriter::new(File::create(path)?))
+}
+
+/// Serialize the CSR structure verbatim (offsets + packed edges) —
+/// loads back without rebuilding/sorting.
+pub fn write_binary<W: Write>(g: &CsrGraph, mut w: W) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    let n = g.node_count() as u64;
+    let m = g.entry_count() as u64;
+    w.write_all(&n.to_le_bytes())?;
+    w.write_all(&m.to_le_bytes())?;
+    w.write_all(&g.arc_count().to_le_bytes())?;
+    for u in 0..g.node_count() as u32 {
+        w.write_all(&(g.degree(u) as u32).to_le_bytes())?;
+    }
+    for u in 0..g.node_count() as u32 {
+        for e in g.row(u) {
+            w.write_all(&e.0.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize the binary format.
+pub fn read_binary<R: Read>(mut r: R) -> io::Result<CsrGraph> {
+    let bad = |m: &str| io::Error::new(io::ErrorKind::InvalidData, m.to_string());
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let m = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let arc_count = u64::from_le_bytes(b8);
+    let mut offsets = Vec::with_capacity(n + 1);
+    offsets.push(0usize);
+    let mut b4 = [0u8; 4];
+    for _ in 0..n {
+        r.read_exact(&mut b4)?;
+        let d = u32::from_le_bytes(b4) as usize;
+        offsets.push(offsets.last().unwrap() + d);
+    }
+    if *offsets.last().unwrap() != m {
+        return Err(bad("degree sum != edge count"));
+    }
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        r.read_exact(&mut b4)?;
+        edges.push(PackedEdge(u32::from_le_bytes(b4)));
+    }
+    let g = CsrGraph::from_parts(offsets, edges, arc_count);
+    g.validate()
+        .map_err(|e| bad(&format!("invalid graph: {e}")))?;
+    Ok(g)
+}
+
+/// Write the binary format to a file.
+pub fn write_binary_file<P: AsRef<Path>>(g: &CsrGraph, path: P) -> io::Result<()> {
+    write_binary(g, BufWriter::new(File::create(path)?))
+}
+
+/// Read the binary format from a file.
+pub fn read_binary_file<P: AsRef<Path>>(path: P) -> io::Result<CsrGraph> {
+    read_binary(BufReader::new(File::open(path)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{named, power_law};
+
+    #[test]
+    fn edge_list_round_trip() {
+        let g = power_law(300, 2.4, 5.0, 77);
+        let mut buf = Vec::new();
+        write_edge_list(&g, &mut buf).unwrap();
+        let g2 = read_edge_list(BufReader::new(&buf[..])).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn edge_list_parses_comments_and_blank_lines() {
+        let text = "# comment\n\n0 1\n% also comment\n1\t2\n";
+        let g = read_edge_list(BufReader::new(text.as_bytes())).unwrap();
+        assert_eq!(g.node_count(), 3);
+        assert_eq!(g.arc_count(), 2);
+    }
+
+    #[test]
+    fn edge_list_rejects_garbage() {
+        assert!(read_edge_list(BufReader::new("0 x\n".as_bytes())).is_err());
+        assert!(read_edge_list(BufReader::new("0\n".as_bytes())).is_err());
+    }
+
+    #[test]
+    fn binary_round_trip() {
+        let g = power_law(500, 2.1, 8.0, 5);
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        let g2 = read_binary(&buf[..]).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn binary_rejects_corruption() {
+        let g = named::cycle5();
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        // corrupt magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0xff;
+        assert!(read_binary(&bad[..]).is_err());
+        // truncate
+        assert!(read_binary(&buf[..buf.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let g = named::fig1();
+        let dir = std::env::temp_dir();
+        let p1 = dir.join("triadic_test_graph.txt");
+        let p2 = dir.join("triadic_test_graph.bin");
+        write_edge_list_file(&g, &p1).unwrap();
+        write_binary_file(&g, &p2).unwrap();
+        assert_eq!(read_edge_list_file(&p1).unwrap(), g);
+        assert_eq!(read_binary_file(&p2).unwrap(), g);
+        let _ = std::fs::remove_file(p1);
+        let _ = std::fs::remove_file(p2);
+    }
+}

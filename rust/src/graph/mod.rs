@@ -1,0 +1,15 @@
+//! Graph substrate: the paper's compact CSR structure (Fig 7), builders,
+//! deterministic scale-free generators (the synthetic stand-ins for the
+//! patents / Orkut / .uk-webgraph datasets), edge-list I/O and degree /
+//! power-law analysis (Fig 6).
+
+pub mod builder;
+pub mod csr;
+pub mod degree;
+pub mod generators;
+pub mod io;
+
+pub use builder::GraphBuilder;
+pub use csr::{CsrGraph, Dir, DyadType, PackedEdge};
+pub use degree::{DegreeStats, OutDegreeHistogram};
+pub use generators::{named, GraphSpec};

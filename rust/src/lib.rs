@@ -1,0 +1,49 @@
+//! # triadic — scalable triadic analysis of large-scale graphs
+//!
+//! Reproduction of Chin, Marquez, Choudhury & Feo (PNNL, 2012),
+//! *"Scalable Triadic Analysis of Large-Scale Graphs: Multi-Core vs.
+//! Multi-Processor vs. Multi-Threaded Shared Memory Architectures"*.
+//!
+//! The crate provides, as a library:
+//!
+//! * [`graph`] — the paper's compact CSR graph structure (Fig 7) with
+//!   2-bit edge-direction encoding, deterministic scale-free generators,
+//!   I/O, and degree / power-law analysis (Fig 6).
+//! * [`census`] — the triad taxonomy (64 tricodes → 16 isomorphism
+//!   classes), a naive `O(n^3)` oracle, Batagelj–Mrvar's `O(m)` census
+//!   (Fig 5), the merged-traversal optimized variant (Fig 8), Moody's
+//!   dense matrix-method census, and the parallel engine with
+//!   hash-distributed local census vectors.
+//! * [`sched`] — an OpenMP-like scheduler (static / dynamic / guided)
+//!   over a manhattan-collapsed iteration space, on a custom thread pool.
+//! * [`simulator`] — analytic machine models of the paper's three
+//!   testbeds (Cray XMT, HP Superdome, AMD Magny-Cours NUMA) driven by a
+//!   measured workload characterization; regenerates Figs 9–13.
+//! * [`analysis`] — the triadic security-monitoring application of the
+//!   paper's Figs 3–4: windowed census streams, threat triad patterns,
+//!   and baseline/z-score anomaly detection.
+//! * [`runtime`] — a PJRT (XLA) runtime that loads AOT-compiled HLO
+//!   artifacts (the JAX/Pallas dense census) and executes them from Rust.
+//! * [`coordinator`] — the service layer: routes census jobs between the
+//!   sparse parallel engine and the dense AOT backend, batches windowed
+//!   requests, and exposes metrics.
+//!
+//! Python (JAX + Pallas) appears only at build time: `make artifacts`
+//! lowers Moody's matrix census to HLO text which [`runtime`] loads; no
+//! Python is on the request path.
+
+pub mod analysis;
+pub mod bench;
+pub mod census;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod graph;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod sched;
+pub mod simulator;
+
+pub use census::{Census, TriadType};
+pub use graph::CsrGraph;

@@ -1,0 +1,359 @@
+//! `repro` — the triadic-analysis CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!
+//! * `census`   — compute the triad census of a generated or loaded graph
+//!                through the coordinator (sparse engine or dense AOT
+//!                backend, routed automatically).
+//! * `generate` — write a synthetic workload graph to disk.
+//! * `figures`  — regenerate the paper's evaluation figures (Figs 6–13 +
+//!                the scheduling study) as TSV tables.
+//! * `simulate` — sweep one machine model over processor counts.
+//! * `monitor`  — run the Fig 3/4 security monitor on synthetic traffic.
+//! * `serve`    — start the coordinator and serve census requests from
+//!                stdin (one edge-list file path per line).
+
+use std::io::BufRead;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use triadic::analysis::{builtin_patterns, census_series, MonitorConfig, TriadMonitor};
+use triadic::analysis::{TrafficGenerator, TrafficScenario};
+use triadic::census::{census_parallel, Accumulation, ParallelConfig};
+use triadic::config::{graph_spec_from, Args};
+use triadic::coordinator::{Coordinator, CoordinatorConfig};
+use triadic::figures::{self, Scale};
+use triadic::graph::{degree, io};
+use triadic::sched::Policy;
+use triadic::simulator::{
+    simulate, Machine, NumaMachine, SuperdomeMachine, WorkloadProfile, XmtMachine,
+};
+
+const USAGE: &str = "\
+repro — scalable triadic analysis (paper reproduction)
+
+USAGE: repro <command> [flags]
+
+COMMANDS
+  census    --graph patents|orkut|web [--nodes N] [--seed S] [--input FILE]
+            [--threads T] [--policy static|dynamic|guided[:chunk]]
+            [--backend auto|sparse] [--artifacts DIR]
+  generate  --graph ... --out FILE [--format txt|bin]
+  figures   [--fig 6|9|10|11|12|13|sched|all] [--scale small|full] [--out DIR]
+  simulate  --machine xmt|xmt512|numa|superdome --graph ... [--procs 1,2,...]
+  monitor   [--hosts N] [--rate EPS] [--duration S] [--window S]
+            [--attack scan|ddos|relay|botnet|all]
+  serve     [--artifacts DIR] [--threads T]
+";
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    match args.command.as_deref() {
+        Some("census") => cmd_census(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("monitor") => cmd_monitor(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn load_or_generate(args: &Args) -> Result<(String, triadic::graph::CsrGraph)> {
+    if let Some(path) = args.opt_str("input") {
+        let g = if path.ends_with(".bin") {
+            io::read_binary_file(&path)?
+        } else {
+            io::read_edge_list_file(&path)?
+        };
+        Ok((path, g))
+    } else {
+        let spec = graph_spec_from(args).map_err(anyhow::Error::msg)?;
+        eprintln!(
+            "generating {} graph: n={} gamma={} avg_deg={}",
+            spec.name, spec.n, spec.gamma, spec.avg_out_degree
+        );
+        Ok((spec.name.to_string(), spec.generate()))
+    }
+}
+
+fn cmd_census(args: &Args) -> Result<()> {
+    let (name, g) = load_or_generate(args)?;
+    let threads = args
+        .get_or(
+            "threads",
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        )
+        .map_err(anyhow::Error::msg)?;
+    let policy = Policy::parse(&args.str_or("policy", "dynamic")).map_err(anyhow::Error::msg)?;
+    let backend = args.str_or("backend", "auto");
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+
+    let sparse = ParallelConfig {
+        threads,
+        policy,
+        accumulation: Accumulation::Bank { slots: 64 },
+    };
+
+    let t0 = std::time::Instant::now();
+    let census = if backend == "sparse" {
+        let run = census_parallel(&g, &sparse);
+        println!(
+            "# backend=sparse threads={threads} policy={} wall={:.3}s imbalance={:.2}",
+            policy.name(),
+            run.stats.wall,
+            run.stats.imbalance()
+        );
+        run.census
+    } else {
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: Some(PathBuf::from(artifacts)),
+            sparse,
+            ..CoordinatorConfig::default()
+        })?;
+        let out = coord.census(&g)?;
+        println!(
+            "# backend={:?} dense_enabled={} wall={:.3}s",
+            out.route,
+            coord.dense_enabled(),
+            out.seconds
+        );
+        out.census
+    };
+    println!(
+        "# graph={} nodes={} arcs={} elapsed={:.3}s",
+        name,
+        g.node_count(),
+        g.arc_count(),
+        t0.elapsed().as_secs_f64()
+    );
+    print!("{}", census.table());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let spec = graph_spec_from(args).map_err(anyhow::Error::msg)?;
+    let out = args.opt_str("out").context("--out FILE required")?;
+    let format = args.str_or("format", "txt");
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+
+    let g = spec.generate();
+    match format.as_str() {
+        "txt" => io::write_edge_list_file(&g, &out)?,
+        "bin" => io::write_binary_file(&g, &out)?,
+        other => bail!("unknown format {other:?} (txt|bin)"),
+    }
+    let gamma = degree::fit_out_degree_exponent(&g).unwrap_or(f64::NAN);
+    println!(
+        "wrote {}: n={} arcs={} fitted_gamma={:.3}",
+        out,
+        g.node_count(),
+        g.arc_count(),
+        gamma
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let which = args.str_or("fig", "all");
+    let scale = Scale::parse(&args.str_or("scale", "small")).map_err(anyhow::Error::msg)?;
+    let out_dir = args.opt_str("out");
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+
+    let figs: Vec<(&str, String)> = match which.as_str() {
+        "all" => figures::all_figures(scale),
+        "6" => vec![("fig06_degree", figures::fig6(scale))],
+        "9" => vec![("fig09_utilization", figures::fig9(scale))],
+        "10" => vec![("fig10_patents", figures::fig10(scale))],
+        "11" => vec![("fig11_orkut", figures::fig11(scale))],
+        "12" => vec![("fig12_numa_detail", figures::fig12(scale))],
+        "13" => vec![("fig13_webgraph", figures::fig13(scale))],
+        "sched" => vec![("sched_policies", figures::fig_sched(scale))],
+        other => bail!("unknown figure {other:?} (6|9|10|11|12|13|sched|all)"),
+    };
+    for (name, text) in figs {
+        if let Some(dir) = &out_dir {
+            std::fs::create_dir_all(dir)?;
+            let path = PathBuf::from(dir).join(format!("{name}.tsv"));
+            std::fs::write(&path, &text)?;
+            eprintln!("wrote {}", path.display());
+        } else {
+            println!("{text}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let machine = args.str_or("machine", "xmt");
+    let spec = graph_spec_from(args).map_err(anyhow::Error::msg)?;
+    let procs = args
+        .list_or("procs", &[1usize, 2, 4, 8, 16, 32, 64, 128])
+        .map_err(anyhow::Error::msg)?;
+    let policy = Policy::parse(&args.str_or("policy", "dynamic")).map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+
+    let m: Box<dyn Machine> = match machine.as_str() {
+        "xmt" => Box::new(XmtMachine::pnnl()),
+        "xmt512" => Box::new(XmtMachine::cray512()),
+        "numa" => Box::new(NumaMachine::magny_cours()),
+        "superdome" => Box::new(SuperdomeMachine::sd64()),
+        other => bail!("unknown machine {other:?}"),
+    };
+    eprintln!("generating {} (n={})...", spec.name, spec.n);
+    let g = spec.generate();
+    let prof = WorkloadProfile::from_graph(spec.name, &g);
+    println!(
+        "# machine={} workload={} slots={} total_cost={} imbalance={:.1}",
+        m.name(),
+        prof.name,
+        prof.len(),
+        prof.total_cost,
+        prof.imbalance()
+    );
+    println!("procs\tseconds\tbalance\tchunks");
+    for p in procs {
+        let r = simulate(m.as_ref(), &prof, p, policy);
+        println!("{p}\t{:.6}\t{:.3}\t{}", r.makespan, r.balance(), r.chunks);
+    }
+    Ok(())
+}
+
+fn cmd_monitor(args: &Args) -> Result<()> {
+    let hosts = args.get_or("hosts", 400u64).map_err(anyhow::Error::msg)?;
+    let rate = args.get_or("rate", 120.0f64).map_err(anyhow::Error::msg)?;
+    let duration = args.get_or("duration", 60.0f64).map_err(anyhow::Error::msg)?;
+    let window = args.get_or("window", 1.0f64).map_err(anyhow::Error::msg)?;
+    let attack = args.str_or("attack", "all");
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+
+    let mut gen = TrafficGenerator::background(hosts, rate, 2012);
+    let quarter = duration / 4.0;
+    let add = |g: TrafficGenerator, which: &str| -> TrafficGenerator {
+        match which {
+            "scan" => g.with(TrafficScenario::PortScan {
+                start: quarter,
+                end: quarter + window * 0.8,
+                attacker: 5,
+                targets: 60,
+            }),
+            "ddos" => g.with(TrafficScenario::Ddos {
+                start: 2.0 * quarter,
+                end: 2.0 * quarter + window * 0.8,
+                victim: 2,
+                sources: 60,
+            }),
+            "relay" => g.with(TrafficScenario::Relay {
+                start: 2.5 * quarter,
+                end: 2.5 * quarter + window * 0.8,
+                first_hop: 4_000_000,
+                length: 16,
+                chains: 12,
+            }),
+            "botnet" => g.with(TrafficScenario::BotnetSync {
+                start: 3.0 * quarter,
+                end: 3.0 * quarter + window * 0.8,
+                first_peer: 3_000_000,
+                peers: 12,
+            }),
+            _ => g,
+        }
+    };
+    if attack == "all" {
+        for a in ["scan", "ddos", "relay", "botnet"] {
+            gen = add(gen, a);
+        }
+    } else {
+        gen = add(gen, &attack);
+    }
+
+    let events = gen.generate(duration);
+    println!("# {} events over {duration}s, window {window}s", events.len());
+    let series = census_series(&events, window, |g| {
+        census_parallel(g, &ParallelConfig::default()).census
+    });
+    let mut mon = TriadMonitor::new(MonitorConfig::default(), builtin_patterns());
+    let mut total_alerts = 0;
+    for w in &series {
+        for a in mon.observe(w) {
+            total_alerts += 1;
+            println!(
+                "ALERT t={:.0}s pattern={} score={:.1} top={},{},{}",
+                a.window_start,
+                a.pattern,
+                a.score,
+                a.top_classes[0],
+                a.top_classes[1],
+                a.top_classes[2]
+            );
+        }
+    }
+    println!(
+        "# {} windows, {} alerts ({} hosts peak)",
+        series.len(),
+        total_alerts,
+        series.iter().map(|w| w.hosts).max().unwrap_or(0)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let threads = args
+        .get_or(
+            "threads",
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        )
+        .map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(anyhow::Error::msg)?;
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: Some(PathBuf::from(artifacts)),
+        sparse: ParallelConfig {
+            threads,
+            ..ParallelConfig::default()
+        },
+        ..CoordinatorConfig::default()
+    })?;
+    eprintln!(
+        "coordinator up (dense={}): send one edge-list path per line on stdin",
+        coord.dense_enabled()
+    );
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let path = line?;
+        let path = path.trim();
+        if path.is_empty() {
+            continue;
+        }
+        match io::read_edge_list_file(path)
+            .map_err(anyhow::Error::from)
+            .and_then(|g| coord.census(&g))
+        {
+            Ok(out) => {
+                println!("# {path} route={:?} {:.3}s", out.route, out.seconds);
+                print!("{}", out.census.table());
+            }
+            Err(e) => eprintln!("error on {path}: {e:#}"),
+        }
+    }
+    println!("{}", coord.metrics().render());
+    Ok(())
+}

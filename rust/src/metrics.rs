@@ -1,0 +1,165 @@
+//! Lightweight process metrics: monotonic counters and duration
+//! histograms with a text exposition format (Prometheus-style lines),
+//! used by the coordinator service and the figures harness.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Fixed histogram buckets (seconds) for latency tracking.
+const BUCKETS: [f64; 12] = [
+    1e-6, 1e-5, 1e-4, 5e-4, 1e-3, 5e-3, 1e-2, 5e-2, 1e-1, 5e-1, 1.0, 5.0,
+];
+
+/// A labelled duration histogram.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    counts: [AtomicU64; 13], // 12 buckets + overflow
+    sum_micros: AtomicU64,
+    total: AtomicU64,
+}
+
+impl Histogram {
+    /// Record one observation in seconds.
+    pub fn observe(&self, seconds: f64) {
+        let idx = BUCKETS.partition_point(|&b| b < seconds);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_micros
+            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Mean observation in seconds.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        }
+    }
+
+    /// Approximate quantile from the bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let want = (q * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= want {
+                return if i < BUCKETS.len() { BUCKETS[i] } else { f64::INFINITY };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Process-wide metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Increment a named counter.
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Read a counter.
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Fetch (or create) a histogram handle.
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Time a closure into a histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let h = self.histogram(name);
+        let t = Instant::now();
+        let out = f();
+        h.observe(t.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Prometheus-style text exposition.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!("{k}_count {}\n", h.count()));
+            out.push_str(&format!("{k}_mean_seconds {:.6}\n", h.mean()));
+            out.push_str(&format!("{k}_p50_seconds {:.6}\n", h.quantile(0.5)));
+            out.push_str(&format!("{k}_p99_seconds {:.6}\n", h.quantile(0.99)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters() {
+        let m = Metrics::new();
+        m.inc("requests_total", 1);
+        m.inc("requests_total", 2);
+        assert_eq!(m.get("requests_total"), 3);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::default();
+        for _ in 0..100 {
+            h.observe(0.002);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.002).abs() < 1e-4);
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= 0.002 && p50 <= 0.01, "p50={p50}");
+    }
+
+    #[test]
+    fn time_records() {
+        let m = Metrics::new();
+        let v = m.time("op", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.histogram("op").count(), 1);
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let m = Metrics::new();
+        m.inc("a_total", 5);
+        m.histogram("lat").observe(0.1);
+        let text = m.render();
+        assert!(text.contains("a_total 5"));
+        assert!(text.contains("lat_count 1"));
+    }
+}

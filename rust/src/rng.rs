@@ -1,0 +1,186 @@
+//! Small deterministic PRNG (xoshiro256++ seeded via splitmix64).
+//!
+//! Every stochastic component in the crate (graph generators, synthetic
+//! traffic, workload jitter) draws from this generator so that all
+//! experiments are exactly reproducible from a `u64` seed, with no
+//! dependency on an external RNG crate.
+
+/// splitmix64 step — used to expand a single `u64` seed into the
+/// xoshiro256++ state, as recommended by the xoshiro authors.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG. Deterministic, fast, passes BigCrush; good enough
+/// for synthetic workload generation (not for cryptography).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `u64` in `[0, bound)` using Lemire's multiply-shift
+    /// (slight modulo bias at 2^64 scale is irrelevant here).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform `u32` node id in `[0, n)`.
+    #[inline]
+    pub fn node(&mut self, n: u32) -> u32 {
+        self.below(n as u64) as u32
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample from a discrete power law `P(k) ∝ k^(-gamma)` for
+    /// `k ∈ [kmin, kmax]` by inverse transform on the continuous
+    /// approximation, then floor. This is the standard generator for
+    /// scale-free degree sequences.
+    #[inline]
+    pub fn power_law(&mut self, gamma: f64, kmin: f64, kmax: f64) -> u64 {
+        let u = self.next_f64();
+        let e = 1.0 - gamma;
+        // inverse CDF of truncated continuous power law
+        let x = (kmin.powf(e) + u * (kmax.powf(e) - kmin.powf(e))).powf(1.0 / e);
+        x.floor() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Rng::new(9);
+        for bound in [1u64, 2, 3, 10, 1000] {
+            for _ in 0..1000 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut r = Rng::new(11);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            seen[r.below(8) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn power_law_within_bounds_and_heavy_tailed() {
+        let mut r = Rng::new(5);
+        let (kmin, kmax) = (1.0, 1000.0);
+        let n = 200_000;
+        let mut big = 0usize;
+        let mut sum = 0u64;
+        for _ in 0..n {
+            let k = r.power_law(2.1, kmin, kmax);
+            assert!(k >= 1 && k <= 1000);
+            if k >= 100 {
+                big += 1;
+            }
+            sum += k;
+        }
+        // Heavy tail: some mass above 100x the minimum, but most draws small.
+        assert!(big > 0);
+        assert!((sum as f64 / n as f64) < 20.0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+}

@@ -1,0 +1,235 @@
+//! The PJRT executor: artifact discovery, one-time compilation, and the
+//! execute path used by the coordinator's dense backend.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::{dyad_tallies, padding_correction};
+use crate::census::{Census, TriadType};
+use crate::graph::CsrGraph;
+
+/// Cumulative execution statistics of the dense backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    /// Artifacts compiled at startup.
+    pub compiled: usize,
+    /// Census executions served.
+    pub executions: u64,
+    /// Total seconds inside PJRT execute calls.
+    pub execute_seconds: f64,
+    /// Total seconds spent padding/staging inputs.
+    pub staging_seconds: f64,
+}
+
+/// A compiled dense-census executable for one fixed adjacency size.
+struct SizedExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    size: usize,
+}
+
+/// The dense census backend: a PJRT CPU client plus one compiled
+/// executable per artifact size. Construction compiles everything once;
+/// execution is allocation-light and Python-free.
+pub struct DenseCensusRuntime {
+    client: xla::PjRtClient,
+    by_size: BTreeMap<usize, SizedExecutable>,
+    stats: RuntimeStats,
+    dir: PathBuf,
+}
+
+impl DenseCensusRuntime {
+    /// Load every artifact listed in `<dir>/manifest.tsv` and compile it
+    /// on a fresh PJRT CPU client.
+    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<DenseCensusRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}; run `make artifacts` first", manifest.display()))?;
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut by_size = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let (kind, size, file) = match (cols.next(), cols.next(), cols.next()) {
+                (Some(k), Some(s), Some(f)) => (k, s, f),
+                _ => bail!("malformed manifest row: {line:?}"),
+            };
+            if kind != "census_dense" {
+                continue; // future artifact kinds are ignored, not fatal
+            }
+            let size: usize = size.parse().with_context(|| format!("bad size in {line:?}"))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            by_size.insert(size, SizedExecutable { exe, size });
+        }
+        if by_size.is_empty() {
+            bail!("manifest {} lists no census_dense artifacts", manifest.display());
+        }
+        let compiled = by_size.len();
+        Ok(DenseCensusRuntime {
+            client,
+            by_size,
+            stats: RuntimeStats {
+                compiled,
+                ..RuntimeStats::default()
+            },
+            dir,
+        })
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Available dense sizes, ascending.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.by_size.keys().copied().collect()
+    }
+
+    /// Largest size this runtime can serve.
+    pub fn max_size(&self) -> usize {
+        *self.by_size.keys().last().unwrap()
+    }
+
+    /// The smallest artifact size that fits a graph of `n` nodes.
+    pub fn size_for(&self, n: usize) -> Option<usize> {
+        self.by_size.range(n..).next().map(|(&s, _)| s)
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Cumulative stats.
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats
+    }
+
+    /// Compute the exact triad census of `g` on the dense AOT path:
+    /// pad the adjacency to the best-fitting artifact size, execute,
+    /// round to integers and undo the padding contribution.
+    pub fn census(&mut self, g: &CsrGraph) -> Result<Census> {
+        let n = g.node_count();
+        let size = self
+            .size_for(n)
+            .with_context(|| format!("graph ({n} nodes) exceeds dense capacity {}", self.max_size()))?;
+
+        let t0 = Instant::now();
+        // stage the padded adjacency
+        let mut a = vec![0f32; size * size];
+        for (u, v) in g.arcs() {
+            a[u as usize * size + v as usize] = 1.0;
+        }
+        let lit = xla::Literal::vec1(&a)
+            .reshape(&[size as i64, size as i64])
+            .context("reshaping adjacency literal")?;
+        self.stats.staging_seconds += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let sized = &self.by_size[&size];
+        debug_assert_eq!(sized.size, size);
+        let result = sized
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("device->host literal")?;
+        self.stats.execute_seconds += t1.elapsed().as_secs_f64();
+        self.stats.executions += 1;
+
+        // lowered with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<f32>().context("reading census vector")?;
+        if values.len() != 16 {
+            bail!("artifact returned {} values, expected 16", values.len());
+        }
+
+        let mut padded = Census::zero();
+        for (i, &v) in values.iter().enumerate() {
+            let r = v.round();
+            if (v - r).abs() > 1e-3 || r < 0.0 {
+                bail!("non-integral census component {i}: {v}");
+            }
+            padded.add_count(TriadType::from_index(i + 1), r as u64);
+        }
+
+        let (mutual, asym) = dyad_tallies(g);
+        Ok(padding_correction(&padded, n, size - n, mutual, asym))
+    }
+}
+
+// PjRtLoadedExecutable and PjRtClient wrap C++ objects behind pointers;
+// the xla crate does not mark them Send. The coordinator confines the
+// runtime to a dedicated service thread (see coordinator::service), so
+// no cross-thread sharing happens through this type.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::census::merged;
+    use crate::graph::generators;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.tsv").exists().then_some(dir)
+    }
+
+    #[test]
+    fn runtime_census_matches_sparse_engines() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built (`make artifacts`)");
+            return;
+        };
+        let mut rt = DenseCensusRuntime::load_dir(dir).unwrap();
+        assert!(rt.sizes().contains(&64));
+        for seed in 0..3 {
+            let g = generators::power_law(50, 2.2, 5.0, seed);
+            let want = merged::census(&g);
+            let got = rt.census(&g).unwrap();
+            assert_eq!(got, want, "seed {seed}");
+        }
+        // exact-size (no padding) path
+        let g = generators::power_law(64, 2.0, 6.0, 7);
+        assert_eq!(rt.census(&g).unwrap(), merged::census(&g));
+        assert!(rt.stats().executions >= 4);
+    }
+
+    #[test]
+    fn size_routing() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built (`make artifacts`)");
+            return;
+        };
+        let rt = DenseCensusRuntime::load_dir(dir).unwrap();
+        assert_eq!(rt.size_for(10), Some(64));
+        assert_eq!(rt.size_for(64), Some(64));
+        assert_eq!(rt.size_for(65), Some(128));
+        assert_eq!(rt.size_for(200), Some(256));
+        assert_eq!(rt.size_for(257), None);
+    }
+
+    #[test]
+    fn missing_dir_is_informative() {
+        let err = match DenseCensusRuntime::load_dir("/nonexistent") {
+            Ok(_) => panic!("load of /nonexistent succeeded"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

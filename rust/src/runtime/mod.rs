@@ -1,0 +1,104 @@
+//! PJRT runtime: loads the AOT-compiled dense census artifacts
+//! (HLO text lowered from the JAX/Pallas model by `make artifacts`) and
+//! executes them from Rust. Python is never on this path.
+//!
+//! The artifact contract:
+//!
+//! * `artifacts/manifest.tsv` — rows `kind \t size \t file`;
+//! * each `census_dense_<n>.hlo.txt` computes the 16-class census of an
+//!   `n×n` f32 adjacency matrix (census order, 003 first), as a 1-tuple.
+//!
+//! Graphs smaller than an available size are zero-padded; padding adds
+//! only null (003) and dyadic (012/102) triads, which
+//! [`padding_correction`] removes exactly (see
+//! `python/tests/test_model.py::test_padding_adds_only_null_and_dyadic`
+//! for the property and the derivation).
+
+pub mod executor;
+
+pub use executor::{DenseCensusRuntime, RuntimeStats};
+
+use crate::census::{Census, TriadType};
+use crate::graph::CsrGraph;
+
+/// Number of mutual and asymmetric dyads of a graph (the inputs to the
+/// padding correction).
+pub fn dyad_tallies(g: &CsrGraph) -> (u64, u64) {
+    let mut mutual = 0u64;
+    let mut asym = 0u64;
+    for (_, _, dir) in g.dyads() {
+        match dir {
+            crate::graph::Dir::Both => mutual += 1,
+            _ => asym += 1,
+        }
+    }
+    (mutual, asym)
+}
+
+/// Remove the triads contributed by `pad` isolated padding nodes from a
+/// census computed over the padded graph, restoring the census of the
+/// real `n`-node graph.
+///
+/// Padding nodes have no arcs, so every triad touching one has at most
+/// one connected dyad: classes with ≥ 2 connected dyads are untouched;
+/// `012`/`102` gain `pad * (#asym / #mutual dyads)`; `003` absorbs the
+/// rest and is recomputed from `C(n,3)`.
+pub fn padding_correction(
+    padded: &Census,
+    n_real: usize,
+    pad: usize,
+    mutual_dyads: u64,
+    asym_dyads: u64,
+) -> Census {
+    let mut c = *padded;
+    let extra_012 = pad as u64 * asym_dyads;
+    let extra_102 = pad as u64 * mutual_dyads;
+    assert!(
+        c[TriadType::T012] >= extra_012 && c[TriadType::T102] >= extra_102,
+        "padding correction underflow: census inconsistent with dyad tallies"
+    );
+    c[TriadType::T012] -= extra_012;
+    c[TriadType::T102] -= extra_102;
+    c.close_with_null(n_real);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::census::merged;
+    use crate::graph::generators;
+
+    #[test]
+    fn dyad_tallies_counts() {
+        let g = crate::graph::builder::from_arcs(4, &[(0, 1), (1, 0), (2, 3), (1, 2)]);
+        let (m, a) = dyad_tallies(&g);
+        assert_eq!(m, 1);
+        assert_eq!(a, 2);
+    }
+
+    #[test]
+    fn padding_correction_round_trip() {
+        // Build g, embed it in a larger empty graph, and check that the
+        // corrected census of the padded graph equals the original.
+        let n = 30;
+        let pad = 14;
+        let g = generators::power_law(n, 2.2, 4.0, 9);
+        let mut b = crate::graph::builder::GraphBuilder::new(n + pad);
+        b.extend(g.arcs());
+        let padded_graph = b.build();
+
+        let want = merged::census(&g);
+        let padded_census = merged::census(&padded_graph);
+        let (m, a) = dyad_tallies(&g);
+        let got = padding_correction(&padded_census, n, pad, m, a);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn padding_correction_rejects_inconsistent_tallies() {
+        let c = Census::zero();
+        padding_correction(&c, 10, 5, 100, 100);
+    }
+}

@@ -1,0 +1,16 @@
+//! OpenMP-like work scheduling over a flat (manhattan-collapsed)
+//! iteration space.
+//!
+//! The paper ports the XMT code to OpenMP for the Superdome and NUMA
+//! machines and finds that (a) the imperfectly nested `(u, v)` loops must
+//! be manually collapsed to balance power-law workloads, and (b) the
+//! *dynamic* schedule wins, *guided* "severely underperforms", and
+//! *static* sits in between. This module reimplements those three
+//! policies over a custom scoped-thread pool so the same study can be
+//! run (and the claim benchmarked) without an OpenMP runtime.
+
+pub mod policy;
+pub mod pool;
+
+pub use policy::{ChunkIter, Policy};
+pub use pool::{run_partitioned, ThreadPoolStats};

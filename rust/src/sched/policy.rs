@@ -1,0 +1,254 @@
+//! Scheduling policies: how a flat iteration space `0..len` is carved
+//! into chunks and claimed by worker threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// OpenMP-style loop schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Block-cyclic: chunk `i` goes to thread `i % nthreads`,
+    /// precomputed, zero runtime coordination (OpenMP `schedule(static,
+    /// chunk)`).
+    Static { chunk: usize },
+    /// First-come-first-served chunks off a shared counter (OpenMP
+    /// `schedule(dynamic, chunk)`). The paper's winner on power-law
+    /// workloads.
+    Dynamic { chunk: usize },
+    /// Exponentially decreasing chunks, `max(remaining / (2·nthreads),
+    /// min_chunk)` (OpenMP `schedule(guided, min_chunk)`). The paper
+    /// found this to "severely underperform": early huge chunks capture
+    /// the hub vertices of scale-free graphs and serialize the tail.
+    Guided { min_chunk: usize },
+}
+
+impl Policy {
+    /// Sensible defaults used across the benches.
+    pub fn static_default() -> Policy {
+        Policy::Static { chunk: 1024 }
+    }
+    pub fn dynamic_default() -> Policy {
+        Policy::Dynamic { chunk: 256 }
+    }
+    pub fn guided_default() -> Policy {
+        Policy::Guided { min_chunk: 64 }
+    }
+
+    /// Parse from a CLI string: `static[:chunk]`, `dynamic[:chunk]`,
+    /// `guided[:min]`.
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let num = |d: usize| -> Result<usize, String> {
+            match arg {
+                None => Ok(d),
+                Some(a) => a
+                    .parse::<usize>()
+                    .map_err(|e| format!("bad chunk {a:?}: {e}"))
+                    .and_then(|v| {
+                        if v == 0 {
+                            Err("chunk must be positive".into())
+                        } else {
+                            Ok(v)
+                        }
+                    }),
+            }
+        };
+        match name {
+            "static" => Ok(Policy::Static { chunk: num(1024)? }),
+            "dynamic" => Ok(Policy::Dynamic { chunk: num(256)? }),
+            "guided" => Ok(Policy::Guided { min_chunk: num(64)? }),
+            _ => Err(format!("unknown policy {name:?} (static|dynamic|guided)")),
+        }
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Static { .. } => "static",
+            Policy::Dynamic { .. } => "dynamic",
+            Policy::Guided { .. } => "guided",
+        }
+    }
+}
+
+/// Shared chunk dispenser for one parallel loop execution.
+pub struct ChunkSource {
+    len: usize,
+    nthreads: usize,
+    policy: Policy,
+    cursor: AtomicUsize,
+}
+
+impl ChunkSource {
+    pub fn new(len: usize, nthreads: usize, policy: Policy) -> ChunkSource {
+        ChunkSource {
+            len,
+            nthreads: nthreads.max(1),
+            policy,
+            cursor: AtomicUsize::new(0),
+        }
+    }
+
+    /// The chunk iterator for worker `tid`.
+    pub fn for_thread(&self, tid: usize) -> ChunkIter<'_> {
+        ChunkIter {
+            src: self,
+            tid,
+            next_static: tid,
+        }
+    }
+
+    /// Claim the next chunk for a shared-counter policy.
+    fn claim_shared(&self) -> Option<(usize, usize)> {
+        match self.policy {
+            Policy::Dynamic { chunk } => {
+                let start = self.cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= self.len {
+                    None
+                } else {
+                    Some((start, (start + chunk).min(self.len)))
+                }
+            }
+            Policy::Guided { min_chunk } => loop {
+                let start = self.cursor.load(Ordering::Relaxed);
+                if start >= self.len {
+                    return None;
+                }
+                let remaining = self.len - start;
+                let chunk = (remaining / (2 * self.nthreads)).max(min_chunk).min(remaining);
+                if self
+                    .cursor
+                    .compare_exchange_weak(
+                        start,
+                        start + chunk,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+                {
+                    return Some((start, start + chunk));
+                }
+            },
+            Policy::Static { .. } => unreachable!("static uses per-thread iteration"),
+        }
+    }
+}
+
+/// Iterator of `[start, end)` ranges assigned to one worker.
+pub struct ChunkIter<'a> {
+    src: &'a ChunkSource,
+    #[allow(dead_code)]
+    tid: usize,
+    /// Next chunk ordinal for the static (block-cyclic) schedule.
+    next_static: usize,
+}
+
+impl<'a> Iterator for ChunkIter<'a> {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        match self.src.policy {
+            Policy::Static { chunk } => {
+                let start = self.next_static * chunk;
+                if start >= self.src.len {
+                    return None;
+                }
+                self.next_static += self.src.nthreads;
+                Some((start, (start + chunk).min(self.src.len)))
+            }
+            _ => self.src.claim_shared(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn collect_coverage(len: usize, nthreads: usize, policy: Policy) -> Vec<(usize, usize)> {
+        let src = ChunkSource::new(len, nthreads, policy);
+        let mut all = Vec::new();
+        for t in 0..nthreads {
+            for r in src.for_thread(t) {
+                all.push(r);
+            }
+        }
+        all
+    }
+
+    fn assert_exact_cover(len: usize, ranges: &[(usize, usize)]) {
+        let mut seen = HashSet::new();
+        for &(s, e) in ranges {
+            assert!(s < e && e <= len, "bad range {s}..{e}");
+            for i in s..e {
+                assert!(seen.insert(i), "index {i} covered twice");
+            }
+        }
+        assert_eq!(seen.len(), len, "not all indices covered");
+    }
+
+    #[test]
+    fn static_exact_cover() {
+        for (len, nt, chunk) in [(1000, 4, 64), (1000, 3, 1), (7, 16, 2), (0, 4, 8)] {
+            let ranges = collect_coverage(len, nt, Policy::Static { chunk });
+            assert_exact_cover(len, &ranges);
+        }
+    }
+
+    #[test]
+    fn dynamic_exact_cover_serial_claim() {
+        for (len, nt, chunk) in [(1000, 4, 64), (999, 5, 100), (5, 2, 10)] {
+            let ranges = collect_coverage(len, nt, Policy::Dynamic { chunk });
+            assert_exact_cover(len, &ranges);
+        }
+    }
+
+    #[test]
+    fn guided_exact_cover_and_decreasing() {
+        let ranges = collect_coverage(10_000, 4, Policy::Guided { min_chunk: 16 });
+        assert_exact_cover(10_000, &ranges);
+        // first chunk should be the largest (remaining/2n)
+        let first = ranges[0].1 - ranges[0].0;
+        assert_eq!(first, 10_000 / 8);
+        let last = ranges.last().unwrap();
+        assert!(last.1 - last.0 <= first);
+    }
+
+    #[test]
+    fn dynamic_concurrent_exact_cover() {
+        let len = 100_000;
+        let src = std::sync::Arc::new(ChunkSource::new(len, 8, Policy::Dynamic { chunk: 37 }));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let src = src.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut total = 0usize;
+                for (s, e) in src.for_thread(t) {
+                    total += e - s;
+                }
+                total
+            }));
+        }
+        let sum: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(sum, len);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(Policy::parse("static").unwrap().name(), "static");
+        assert_eq!(
+            Policy::parse("dynamic:512").unwrap(),
+            Policy::Dynamic { chunk: 512 }
+        );
+        assert_eq!(
+            Policy::parse("guided:8").unwrap(),
+            Policy::Guided { min_chunk: 8 }
+        );
+        assert!(Policy::parse("fancy").is_err());
+        assert!(Policy::parse("dynamic:0").is_err());
+        assert!(Policy::parse("dynamic:x").is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Scoped worker pool running a chunked parallel loop.
+//!
+//! `run_partitioned` is the crate's `#pragma omp parallel for
+//! schedule(...)` equivalent: it spawns `nthreads` scoped workers, each
+//! draining chunks from a [`ChunkSource`](super::policy::ChunkSource)
+//! under the chosen policy, and returns one result per thread plus
+//! per-thread chunk statistics (used by the workload characterizer and
+//! the figures harness).
+
+use std::time::Instant;
+
+use super::policy::{ChunkSource, Policy};
+
+/// Per-thread execution statistics from one parallel loop.
+#[derive(Debug, Clone, Default)]
+pub struct ThreadPoolStats {
+    /// Chunks claimed per thread.
+    pub chunks: Vec<usize>,
+    /// Iterations executed per thread.
+    pub items: Vec<usize>,
+    /// Busy seconds per thread (sum of chunk processing times).
+    pub busy: Vec<f64>,
+    /// Wall-clock seconds of the whole loop.
+    pub wall: f64,
+}
+
+impl ThreadPoolStats {
+    /// Load imbalance: max busy time / mean busy time (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.busy.iter().cloned().fold(0.0, f64::max);
+        let mean = self.busy.iter().sum::<f64>() / self.busy.len().max(1) as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
+        }
+    }
+
+    /// Fraction of total thread-time spent busy (parallel efficiency
+    /// proxy on an unloaded machine).
+    pub fn utilization(&self) -> f64 {
+        let busy: f64 = self.busy.iter().sum();
+        let cap = self.wall * self.busy.len() as f64;
+        if cap > 0.0 {
+            busy / cap
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run `work(tid, start, end)` over `0..len` with `nthreads` workers
+/// under `policy`. Each thread folds its chunk results into a
+/// thread-local accumulator `A` (created by `init`), merged results are
+/// returned in thread order together with stats.
+///
+/// The closure is `Fn` + `Sync` — it must do its own interior
+/// accumulation via the `A` it is handed (this is what lets the census
+/// use either private vectors or the shared atomic bank).
+pub fn run_partitioned<A, I, W>(
+    len: usize,
+    nthreads: usize,
+    policy: Policy,
+    init: I,
+    work: W,
+) -> (Vec<A>, ThreadPoolStats)
+where
+    A: Send,
+    I: Fn(usize) -> A + Sync,
+    W: Fn(&mut A, usize, usize, usize) + Sync,
+{
+    let nthreads = nthreads.max(1);
+    let src = ChunkSource::new(len, nthreads, policy);
+    let t0 = Instant::now();
+    let mut results: Vec<Option<A>> = Vec::with_capacity(nthreads);
+    let mut stats = ThreadPoolStats {
+        chunks: vec![0; nthreads],
+        items: vec![0; nthreads],
+        busy: vec![0.0; nthreads],
+        wall: 0.0,
+    };
+
+    if nthreads == 1 {
+        // fast path: no spawn
+        let mut acc = init(0);
+        let tb = Instant::now();
+        for (s, e) in src.for_thread(0) {
+            work(&mut acc, 0, s, e);
+            stats.chunks[0] += 1;
+            stats.items[0] += e - s;
+        }
+        stats.busy[0] = tb.elapsed().as_secs_f64();
+        stats.wall = t0.elapsed().as_secs_f64();
+        return (vec![acc], stats);
+    }
+
+    let mut per_thread: Vec<(Option<A>, usize, usize, f64)> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nthreads);
+        for tid in 0..nthreads {
+            let src = &src;
+            let init = &init;
+            let work = &work;
+            handles.push(scope.spawn(move || {
+                let mut acc = init(tid);
+                let mut chunks = 0usize;
+                let mut items = 0usize;
+                let tb = Instant::now();
+                for (s, e) in src.for_thread(tid) {
+                    work(&mut acc, tid, s, e);
+                    chunks += 1;
+                    items += e - s;
+                }
+                (Some(acc), chunks, items, tb.elapsed().as_secs_f64())
+            }));
+        }
+        for h in handles {
+            per_thread.push(h.join().expect("worker panicked"));
+        }
+    });
+
+    for (tid, (acc, chunks, items, busy)) in per_thread.into_iter().enumerate() {
+        results.push(acc);
+        stats.chunks[tid] = chunks;
+        stats.items[tid] = items;
+        stats.busy[tid] = busy;
+    }
+    stats.wall = t0.elapsed().as_secs_f64();
+    (results.into_iter().map(Option::unwrap).collect(), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_match_serial_for_all_policies() {
+        let len = 50_000usize;
+        let expected: u64 = (0..len as u64).sum();
+        for policy in [
+            Policy::Static { chunk: 97 },
+            Policy::Dynamic { chunk: 53 },
+            Policy::Guided { min_chunk: 11 },
+        ] {
+            for nthreads in [1, 2, 4, 7] {
+                let (parts, stats) = run_partitioned(
+                    len,
+                    nthreads,
+                    policy,
+                    |_| 0u64,
+                    |acc, _tid, s, e| {
+                        for i in s..e {
+                            *acc += i as u64;
+                        }
+                    },
+                );
+                let total: u64 = parts.iter().sum();
+                assert_eq!(total, expected, "{policy:?} x{nthreads}");
+                assert_eq!(stats.items.iter().sum::<usize>(), len);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_length_loop() {
+        let (parts, stats) = run_partitioned(0, 4, Policy::dynamic_default(), |_| 0u32, |_, _, _, _| {});
+        assert_eq!(parts.len(), 4);
+        assert_eq!(stats.items.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn stats_track_threads() {
+        let (_, stats) = run_partitioned(
+            10_000,
+            3,
+            Policy::Static { chunk: 100 },
+            |_| (),
+            |_, _, _, _| {},
+        );
+        assert_eq!(stats.chunks.len(), 3);
+        // static block-cyclic: 100 chunks split 34/33/33
+        assert_eq!(stats.chunks.iter().sum::<usize>(), 100);
+        assert!(stats.imbalance() >= 1.0);
+        assert!(stats.utilization() >= 0.0 && stats.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn thread_ids_passed_correctly() {
+        let (parts, _) = run_partitioned(
+            1000,
+            4,
+            Policy::Dynamic { chunk: 10 },
+            |tid| (tid, 0usize),
+            |acc, tid, s, e| {
+                assert_eq!(acc.0, tid);
+                acc.1 += e - s;
+            },
+        );
+        assert_eq!(parts.iter().map(|p| p.1).sum::<usize>(), 1000);
+    }
+}

@@ -1,0 +1,247 @@
+//! The machine-model interface and the chunk-level scheduling
+//! simulation shared by all three architectures.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::trace::WorkloadProfile;
+use crate::sched::Policy;
+
+/// An analytic model of one shared-memory machine.
+///
+/// A machine exposes *workers* (XMT: hardware streams; NUMA/Superdome:
+/// cores) and a per-worker execution rate that may depend on the number
+/// of active processors (contention, locality) and on the workload's
+/// memory behaviour. The scheduling simulation in [`simulate`] does the
+/// rest.
+pub trait Machine {
+    /// Display name ("Cray XMT", ...).
+    fn name(&self) -> &'static str;
+
+    /// Largest processor count the configuration supports.
+    fn max_procs(&self) -> usize;
+
+    /// Number of schedulable workers at `p` processors (streams for the
+    /// XMT, cores elsewhere).
+    fn workers(&self, p: usize) -> usize;
+
+    /// Nanoseconds one *worker* needs per work unit when `p` processors
+    /// are active on this profile. Contention, bandwidth saturation and
+    /// locality penalties all live here.
+    fn per_unit_ns(&self, p: usize, profile: &WorkloadProfile) -> f64;
+
+    /// Per-chunk dispatch overhead in nanoseconds (claiming work from
+    /// the shared iteration counter).
+    fn dispatch_ns(&self, p: usize) -> f64;
+
+    /// One-time startup / fork-join / reduction overhead in seconds.
+    fn startup_seconds(&self, p: usize) -> f64;
+
+    /// Fraction of issue slots a *busy* worker fills on this workload —
+    /// scales the Fig 9 utilization timeline. Defaults to the share of
+    /// non-memory work (memory slots are stalls unless hidden).
+    fn issue_fraction(&self, _p: usize, profile: &WorkloadProfile) -> f64 {
+        1.0 - profile.memory_fraction
+    }
+
+    /// How the machine actually executes a requested schedule. The XMT
+    /// overrides this: its compiler + hardware dispatch loop iterations
+    /// at single-slot granularity regardless of any OpenMP-style chunk
+    /// hint (there is no software chunking on that machine).
+    fn effective_policy(&self, requested: Policy) -> Policy {
+        requested
+    }
+}
+
+/// Outcome of one simulated run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Predicted wall-clock seconds.
+    pub makespan: f64,
+    /// Per-worker finish times (seconds, excluding startup).
+    pub finish: Vec<f64>,
+    /// Chunks dispatched.
+    pub chunks: usize,
+    /// Seconds of startup included in `makespan`.
+    pub startup: f64,
+    /// Issue-slot fraction for the utilization timeline.
+    pub issue_fraction: f64,
+}
+
+impl SimResult {
+    /// Parallel-efficiency proxy: mean finish / max finish.
+    pub fn balance(&self) -> f64 {
+        let max = self.finish.iter().cloned().fold(0.0, f64::max);
+        if max == 0.0 {
+            return 1.0;
+        }
+        let mean = self.finish.iter().sum::<f64>() / self.finish.len() as f64;
+        mean / max
+    }
+
+    /// Utilization timeline for Fig 9: `samples` points of
+    /// `(seconds, fraction-of-peak-issue-rate)`. Workers are busy from
+    /// startup until their finish time; the startup window idles at a
+    /// small load (the single-threaded graph build).
+    pub fn utilization_timeline(&self, samples: usize) -> Vec<(f64, f64)> {
+        let mut out = Vec::with_capacity(samples);
+        let total = self.makespan.max(1e-12);
+        let nworkers = self.finish.len().max(1) as f64;
+        for i in 0..samples {
+            let t = total * (i as f64 + 0.5) / samples as f64;
+            let util = if t < self.startup {
+                0.04 // init phase: serial loader keeps one stream busy
+            } else {
+                let tw = t - self.startup;
+                let busy = self.finish.iter().filter(|&&f| f > tw).count() as f64;
+                (busy / nworkers) * self.issue_fraction
+            };
+            out.push((t, util));
+        }
+        out
+    }
+}
+
+/// Replay `policy` over the profile's slot stream onto the machine's
+/// workers and return the predicted timing.
+///
+/// Chunks are claimed exactly as the real scheduler claims them
+/// (block-cyclic for static, FCFS for dynamic, exponentially decaying
+/// for guided), each costing `range_cost / rate + dispatch`, and are
+/// list-scheduled onto the earliest-free worker (for the shared-counter
+/// policies) — the same greedy the real pool exhibits.
+pub fn simulate(m: &dyn Machine, profile: &WorkloadProfile, p: usize, policy: Policy) -> SimResult {
+    let p = p.clamp(1, m.max_procs());
+    let policy = m.effective_policy(policy);
+    let workers = m.workers(p).max(1);
+    let unit_ns = m.per_unit_ns(p, profile);
+    let dispatch_ns = m.dispatch_ns(p);
+    let len = profile.len();
+
+    // prefix sums for O(1) range costs
+    let mut prefix = Vec::with_capacity(len + 1);
+    prefix.push(0u64);
+    for &c in &profile.slot_costs {
+        prefix.push(prefix.last().unwrap() + c as u64);
+    }
+    let range_cost = |s: usize, e: usize| prefix[e] - prefix[s];
+
+    let mut finish = vec![0f64; workers];
+    let mut chunks = 0usize;
+
+    match policy {
+        Policy::Static { chunk } => {
+            let mut start = 0usize;
+            let mut i = 0usize;
+            while start < len {
+                let end = (start + chunk).min(len);
+                let w = i % workers;
+                finish[w] += (range_cost(start, end) as f64 * unit_ns + dispatch_ns) * 1e-9;
+                chunks += 1;
+                start = end;
+                i += 1;
+            }
+        }
+        Policy::Dynamic { chunk } => {
+            // earliest-free worker claims the next chunk
+            let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+                (0..workers).map(|w| Reverse((0u64, w))).collect();
+            let mut start = 0usize;
+            while start < len {
+                let end = (start + chunk).min(len);
+                let Reverse((t_pico, w)) = heap.pop().unwrap();
+                let dur = range_cost(start, end) as f64 * unit_ns + dispatch_ns;
+                let t_new = t_pico + (dur * 1e3) as u64; // picoseconds, integer heap keys
+                finish[w] = t_new as f64 * 1e-12;
+                heap.push(Reverse((t_new, w)));
+                chunks += 1;
+                start = end;
+            }
+        }
+        Policy::Guided { min_chunk } => {
+            let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+                (0..workers).map(|w| Reverse((0u64, w))).collect();
+            let mut start = 0usize;
+            while start < len {
+                let remaining = len - start;
+                let chunk = (remaining / (2 * workers)).max(min_chunk).min(remaining);
+                let end = start + chunk;
+                let Reverse((t_pico, w)) = heap.pop().unwrap();
+                let dur = range_cost(start, end) as f64 * unit_ns + dispatch_ns;
+                let t_new = t_pico + (dur * 1e3) as u64;
+                finish[w] = t_new as f64 * 1e-12;
+                heap.push(Reverse((t_new, w)));
+                chunks += 1;
+                start = end;
+            }
+        }
+    }
+
+    let startup = m.startup_seconds(p);
+    let makespan = finish.iter().cloned().fold(0.0, f64::max) + startup;
+    SimResult {
+        makespan,
+        finish,
+        chunks,
+        startup,
+        issue_fraction: m.issue_fraction(p, profile),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::power_law;
+    use crate::simulator::xmt::XmtMachine;
+
+    fn profile() -> WorkloadProfile {
+        WorkloadProfile::from_graph("t", &power_law(3000, 2.5, 6.0, 1))
+    }
+
+    #[test]
+    fn more_procs_never_slower_much_on_xmt() {
+        let m = XmtMachine::pnnl();
+        let prof = profile();
+        let t1 = simulate(&m, &prof, 1, Policy::dynamic_default()).makespan;
+        let t8 = simulate(&m, &prof, 8, Policy::dynamic_default()).makespan;
+        let t64 = simulate(&m, &prof, 64, Policy::dynamic_default()).makespan;
+        assert!(t8 < t1, "t1={t1} t8={t8}");
+        assert!(t64 <= t8);
+    }
+
+    #[test]
+    fn all_policies_cover_all_slots() {
+        let m = XmtMachine::pnnl();
+        let prof = profile();
+        for policy in [
+            Policy::Static { chunk: 100 },
+            Policy::Dynamic { chunk: 100 },
+            Policy::Guided { min_chunk: 10 },
+        ] {
+            let r = simulate(&m, &prof, 4, policy);
+            assert!(r.chunks > 0);
+            assert!(r.makespan > 0.0);
+        }
+    }
+
+    #[test]
+    fn timeline_has_init_then_steady_phase() {
+        let m = XmtMachine::pnnl();
+        let prof = profile();
+        let r = simulate(&m, &prof, 8, Policy::dynamic_default());
+        let tl = r.utilization_timeline(50);
+        assert_eq!(tl.len(), 50);
+        // monotone time axis, utilization in [0,1]
+        for w in tl.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        assert!(tl.iter().all(|&(_, u)| (0.0..=1.0).contains(&u)));
+    }
+
+    #[test]
+    fn balance_in_unit_range() {
+        let m = XmtMachine::pnnl();
+        let r = simulate(&m, &profile(), 16, Policy::dynamic_default());
+        assert!(r.balance() > 0.0 && r.balance() <= 1.0);
+    }
+}

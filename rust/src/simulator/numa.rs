@@ -1,0 +1,160 @@
+//! AMD Magny-Cours multi-core NUMA machine model (4 × Opteron 6176SE,
+//! 48 cores, ccNUMA HT3 interconnect).
+//!
+//! Mechanism: fast out-of-order cores with deep caches give an
+//! unmatched *zero-contention* rate, but every core shares four memory
+//! controllers; random-access traffic queues quadratically as cores are
+//! added, so per-core cost is
+//!
+//! ```text
+//! t(p) = t_cpu + t_mem · (1 + (p / p_c)²)
+//! ```
+//!
+//! giving a U-shaped execution-time curve with its minimum where the
+//! paper sees NUMA degrade (≈36 cores on patents, low-40s on Orkut —
+//! the difference comes in through the workload's `random_fraction`:
+//! denser graphs stream neighbor arrays and stress the controllers
+//! less). Beyond 48 threads the cores time-slice: aggregate throughput
+//! is flat while the contention term keeps growing — the paper's
+//! "overprovisioned virtual cores" regime (Fig 11 up to 64, Fig 12).
+
+use super::machine::Machine;
+use super::trace::WorkloadProfile;
+
+/// 48-core NUMA box configuration.
+#[derive(Debug, Clone)]
+pub struct NumaMachine {
+    /// Physical cores.
+    pub cores: usize,
+    /// Max schedulable (virtual) cores.
+    pub max_virtual: usize,
+    /// CPU-side nanoseconds per work unit (cache-resident part).
+    pub t_cpu_ns: f64,
+    /// Memory-side nanoseconds per unit at zero contention, for a fully
+    /// random workload (`random_fraction = 1`).
+    pub t_mem_ns: f64,
+    /// Contention knee: cores at which queueing doubles memory time.
+    pub knee: f64,
+    /// Per-chunk dispatch (atomic fetch-add on the loop counter).
+    pub dispatch_ns: f64,
+    /// Startup seconds (thread pool spin-up).
+    pub startup_base_s: f64,
+    pub startup_per_core_s: f64,
+}
+
+impl NumaMachine {
+    /// The paper's 4 × 2.3 GHz Opteron 6176SE (Magny-Cours) box.
+    pub fn magny_cours() -> NumaMachine {
+        NumaMachine {
+            cores: 48,
+            max_virtual: 64,
+            t_cpu_ns: 0.9,
+            t_mem_ns: 2.27,
+            knee: 35.0,
+            dispatch_ns: 80.0,
+            startup_base_s: 2e-4,
+            startup_per_core_s: 2e-6,
+        }
+    }
+
+    /// Workload-dependent memory weight: streaming-friendly graphs
+    /// (large `avg_degree`) keep the prefetchers fed.
+    fn mem_weight(&self, profile: &WorkloadProfile) -> f64 {
+        // map random_fraction (0.08..1) into a softened 0.35..1 band so
+        // even the densest graph pays some controller traffic
+        0.35 + 0.65 * profile.random_fraction
+    }
+}
+
+impl Machine for NumaMachine {
+    fn name(&self) -> &'static str {
+        "multi-core NUMA"
+    }
+
+    fn max_procs(&self) -> usize {
+        self.max_virtual
+    }
+
+    fn workers(&self, p: usize) -> usize {
+        p
+    }
+
+    fn per_unit_ns(&self, p: usize, profile: &WorkloadProfile) -> f64 {
+        let tm = self.t_mem_ns * self.mem_weight(profile);
+        // contention sees all issuing threads (virtual included)
+        let contended = self.t_cpu_ns + tm * (1.0 + (p as f64 / self.knee).powi(2));
+        if p <= self.cores {
+            contended
+        } else {
+            // time-slicing: each virtual core runs p/cores slower, but
+            // the extra outstanding misses buy a little latency overlap
+            let slice = p as f64 / self.cores as f64;
+            contended * slice * 0.97
+        }
+    }
+
+    fn dispatch_ns(&self, _p: usize) -> f64 {
+        self.dispatch_ns
+    }
+
+    fn startup_seconds(&self, p: usize) -> f64 {
+        self.startup_base_s + self.startup_per_core_s * p.min(self.cores) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::power_law;
+    use crate::sched::Policy;
+    use crate::simulator::machine::simulate;
+    use crate::simulator::trace::WorkloadProfile;
+
+    fn patents_like() -> WorkloadProfile {
+        WorkloadProfile::from_graph("patents", &power_law(100_000, 3.126, 4.4, 2))
+    }
+
+    fn orkut_like() -> WorkloadProfile {
+        WorkloadProfile::from_graph("orkut", &power_law(6_000, 2.127, 75.0, 3))
+    }
+
+    fn sweep_min(prof: &WorkloadProfile) -> usize {
+        let m = NumaMachine::magny_cours();
+        let mut best = (1usize, f64::MAX);
+        for p in 1..=64 {
+            let t = simulate(&m, prof, p, Policy::dynamic_default()).makespan;
+            if t < best.1 {
+                best = (p, t);
+            }
+        }
+        best.0
+    }
+
+    #[test]
+    fn patents_degrades_in_the_mid_thirties() {
+        let p = sweep_min(&patents_like());
+        assert!((30..=44).contains(&p), "patents NUMA minimum at {p}");
+    }
+
+    #[test]
+    fn orkut_degrades_later_than_patents() {
+        let p_orkut = sweep_min(&orkut_like());
+        let p_pat = sweep_min(&patents_like());
+        assert!(p_orkut > p_pat, "orkut min {p_orkut} <= patents min {p_pat}");
+        assert!((38..=60).contains(&p_orkut), "orkut NUMA minimum at {p_orkut}");
+    }
+
+    #[test]
+    fn efficiency_declines_through_32_to_48() {
+        // Fig 12 shape
+        let m = NumaMachine::magny_cours();
+        let prof = orkut_like();
+        let t1 = simulate(&m, &prof, 1, Policy::dynamic_default()).makespan;
+        let eff = |p: usize| {
+            let t = simulate(&m, &prof, p, Policy::dynamic_default()).makespan;
+            t1 / t / p as f64
+        };
+        assert!(eff(32) > eff(40));
+        assert!(eff(40) > eff(48));
+    }
+}

@@ -1,0 +1,197 @@
+//! HP Superdome SD64 machine model (2 cabinets × 8 cells × 8 cores,
+//! 1.6 GHz dual-core Itanium Montecito, crossbar-interconnected
+//! interleaved memory).
+//!
+//! Mechanism: memory is interleaved across the cells in use, so once the
+//! computation spans more than one cell, `1 - 1/cells` of all misses
+//! cross the crossbar (and, past one cabinet, half of those cross the
+//! cabinet link). The model charges
+//!
+//! ```text
+//! t(p) = t_cpu + rf · (local·s_l + crossbar·s_x + cabinet·s_c) · q(p)
+//! ```
+//!
+//! where the shares `s` follow the interleaving, `rf` is the workload's
+//! random-access weight and `q(p)` is a crossbar queueing factor. This
+//! reproduces the paper's inflection points: faster than the XMT inside
+//! a cell (≤ 8 cores), detrimental cell-boundary crossing on patents,
+//! lead retained to ~64 cores on Orkut, cabinet-boundary degradation at
+//! 64 (Fig 11).
+
+use super::machine::Machine;
+use super::trace::WorkloadProfile;
+
+/// Superdome configuration.
+#[derive(Debug, Clone)]
+pub struct SuperdomeMachine {
+    /// Cores per cell.
+    pub cell_cores: usize,
+    /// Cells per cabinet.
+    pub cells_per_cabinet: usize,
+    /// Total cores.
+    pub cores: usize,
+    /// CPU-side nanoseconds per unit.
+    pub t_cpu_ns: f64,
+    /// Cell-local memory nanoseconds per unit (random workload).
+    pub t_local_ns: f64,
+    /// Crossbar (remote-cell) multiplier.
+    pub crossbar_mult: f64,
+    /// Cross-cabinet multiplier.
+    pub cabinet_mult: f64,
+    /// Crossbar queueing knee (cores).
+    pub xbar_knee: f64,
+    /// Per-chunk dispatch overhead.
+    pub dispatch_ns: f64,
+    /// Startup.
+    pub startup_base_s: f64,
+    pub startup_per_core_s: f64,
+}
+
+impl SuperdomeMachine {
+    /// The paper's two-cabinet SD64 SX2000 (128 cores, 256 HW threads).
+    pub fn sd64() -> SuperdomeMachine {
+        SuperdomeMachine {
+            cell_cores: 8,
+            cells_per_cabinet: 8,
+            cores: 128,
+            t_cpu_ns: 1.1,
+            t_local_ns: 2.5,
+            crossbar_mult: 3.5,
+            cabinet_mult: 12.0,
+            xbar_knee: 110.0,
+            dispatch_ns: 120.0,
+            startup_base_s: 3e-4,
+            startup_per_core_s: 3e-6,
+        }
+    }
+
+    fn mem_weight(&self, profile: &WorkloadProfile) -> f64 {
+        // Itanium's in-order pipeline exposes more of the memory time
+        // than the Opterons' OoO window does, hence the higher floor.
+        0.5 + 0.5 * profile.random_fraction
+    }
+}
+
+impl Machine for SuperdomeMachine {
+    fn name(&self) -> &'static str {
+        "HP Superdome"
+    }
+
+    fn max_procs(&self) -> usize {
+        self.cores
+    }
+
+    fn workers(&self, p: usize) -> usize {
+        p
+    }
+
+    fn per_unit_ns(&self, p: usize, profile: &WorkloadProfile) -> f64 {
+        let cells = p.div_ceil(self.cell_cores).max(1);
+        let cabinet_cells = self.cells_per_cabinet;
+        // interleaved shares: 1/cells local; the rest remote, split
+        // within/across cabinets when more than one cabinet is in use
+        let s_local = 1.0 / cells as f64;
+        let (s_xbar, s_cab) = if cells <= cabinet_cells {
+            (1.0 - s_local, 0.0)
+        } else {
+            let far = (cells - cabinet_cells) as f64 / cells as f64;
+            (1.0 - s_local - far, far)
+        };
+        // crossbar queueing grows with the cores generating traffic
+        let q = 1.0 + (p as f64 / self.xbar_knee).powi(2);
+        // Remote *latency* amplification only punishes random accesses:
+        // streaming runs prefetch across the crossbar almost as well as
+        // locally. rf2 sharpens the workload's random share toward 1 for
+        // sparse graphs (patents) and toward 0 for dense ones (orkut).
+        let rf2 = (2.0 * profile.random_fraction).min(1.0);
+        let amp = s_local
+            + s_xbar * (1.0 + (self.crossbar_mult - 1.0) * rf2) * q
+            + s_cab * (1.0 + (self.cabinet_mult - 1.0) * rf2) * q;
+        let mem = self.mem_weight(profile) * self.t_local_ns * amp;
+        self.t_cpu_ns + mem
+    }
+
+    fn dispatch_ns(&self, _p: usize) -> f64 {
+        self.dispatch_ns
+    }
+
+    fn startup_seconds(&self, p: usize) -> f64 {
+        self.startup_base_s + self.startup_per_core_s * p as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::power_law;
+    use crate::sched::Policy;
+    use crate::simulator::machine::simulate;
+    use crate::simulator::trace::WorkloadProfile;
+    use crate::simulator::xmt::XmtMachine;
+
+    fn patents_like() -> WorkloadProfile {
+        WorkloadProfile::from_graph("patents", &power_law(100_000, 3.126, 4.4, 2))
+    }
+
+    fn orkut_like() -> WorkloadProfile {
+        WorkloadProfile::from_graph("orkut", &power_law(6_000, 2.127, 75.0, 3))
+    }
+
+    fn t(m: &dyn Machine, prof: &WorkloadProfile, p: usize) -> f64 {
+        simulate(m, prof, p, Policy::dynamic_default()).makespan
+    }
+
+    #[test]
+    fn beats_xmt_inside_a_cell_on_patents() {
+        let sd = SuperdomeMachine::sd64();
+        let xmt = XmtMachine::pnnl();
+        let prof = patents_like();
+        for p in [1, 2, 4, 8] {
+            assert!(
+                t(&sd, &prof, p) < t(&xmt, &prof, p),
+                "Superdome should lead XMT at {p} cores"
+            );
+        }
+    }
+
+    #[test]
+    fn xmt_overtakes_past_the_cell_boundary_on_patents() {
+        let sd = SuperdomeMachine::sd64();
+        let xmt = XmtMachine::pnnl();
+        let prof = patents_like();
+        assert!(
+            t(&xmt, &prof, 32) < t(&sd, &prof, 32),
+            "XMT should lead Superdome at 32 procs on patents"
+        );
+    }
+
+    #[test]
+    fn leads_xmt_to_64_on_orkut_then_degrades() {
+        let sd = SuperdomeMachine::sd64();
+        let xmt = XmtMachine::pnnl();
+        let prof = orkut_like();
+        assert!(
+            t(&sd, &prof, 64) < t(&xmt, &prof, 64),
+            "Superdome should still lead at 64 on orkut"
+        );
+        assert!(
+            t(&xmt, &prof, 128) < t(&sd, &prof, 128),
+            "XMT should lead past the cabinet boundary"
+        );
+    }
+
+    #[test]
+    fn cell_boundary_visible_in_the_curve() {
+        // within a cell, adding cores is near-linear; crossing to 2 cells
+        // gains far less per core
+        let sd = SuperdomeMachine::sd64();
+        let prof = patents_like();
+        let gain_in_cell = t(&sd, &prof, 4) / t(&sd, &prof, 8);
+        let gain_crossing = t(&sd, &prof, 8) / t(&sd, &prof, 16);
+        assert!(gain_in_cell > 1.6, "in-cell gain {gain_in_cell}");
+        assert!(
+            gain_crossing < gain_in_cell,
+            "crossing {gain_crossing} vs in-cell {gain_in_cell}"
+        );
+    }
+}

@@ -1,0 +1,143 @@
+//! Workload characterization: the measured cost structure of a census
+//! run over a concrete graph, consumed by the machine models.
+
+use crate::graph::CsrGraph;
+
+/// The per-chunk cost sequence and aggregate intensity of the collapsed
+/// census iteration space for one graph.
+#[derive(Debug, Clone)]
+pub struct WorkloadProfile {
+    /// Human-readable workload name (graph spec name).
+    pub name: String,
+    /// Cost (abstract work units ≈ packed-edge touches) of each
+    /// scheduling *slot* in collapsed-entry order. Entry `(u,v)` with
+    /// `u < v` costs `deg(u) + deg(v)` (merged traversal length); the
+    /// non-canonical mirror entries cost 1 (guard check only).
+    pub slot_costs: Vec<u32>,
+    /// Total work units.
+    pub total_cost: u64,
+    /// Nodes in the source graph.
+    pub nodes: usize,
+    /// Directed arcs in the source graph.
+    pub arcs: u64,
+    /// Fraction of work units that are memory touches rather than
+    /// register ops (census arithmetic) — drives the bandwidth-bound
+    /// machine models. Measured: each traversal step reads one packed
+    /// edge (4B) and does ~3 ALU ops on it.
+    pub memory_fraction: f64,
+    /// Fraction of memory touches that are *random* (cache/prefetch
+    /// hostile) rather than streaming. The merge traversal streams two
+    /// sorted neighbor arrays, so high-degree graphs run long sequential
+    /// bursts: `random ≈ 1 / (1 + avg_degree/8)`. This is the mechanism
+    /// behind the paper's observation that Orkut (dense) scales far
+    /// better on the cache machines than patents (sparse) does.
+    pub random_fraction: f64,
+    /// Cost of the most expensive single slot (a hub dyad): the serial
+    /// critical path no scheduler can split. On the XMT's slow
+    /// per-stream rate this is what levels patents off past ~32 procs.
+    pub max_slot_cost: u64,
+}
+
+impl WorkloadProfile {
+    /// Characterize a graph's census workload. `O(m)`.
+    pub fn from_graph(name: &str, g: &CsrGraph) -> WorkloadProfile {
+        let mut slot_costs = Vec::with_capacity(g.entry_count());
+        let mut total = 0u64;
+        for u in 0..g.node_count() as u32 {
+            let du = g.degree(u);
+            for e in g.row(u) {
+                let v = e.nbr();
+                let cost = if u < v {
+                    (du + g.degree(v)).max(1) as u32
+                } else {
+                    1
+                };
+                slot_costs.push(cost);
+                total += cost as u64;
+            }
+        }
+        let avg_degree = if g.node_count() > 0 {
+            g.entry_count() as f64 / g.node_count() as f64
+        } else {
+            0.0
+        };
+        let max_slot_cost = slot_costs.iter().map(|&c| c as u64).max().unwrap_or(0);
+        WorkloadProfile {
+            name: name.to_string(),
+            slot_costs,
+            total_cost: total,
+            nodes: g.node_count(),
+            arcs: g.arc_count(),
+            memory_fraction: 0.55,
+            random_fraction: (1.0 / (1.0 + avg_degree / 8.0)).clamp(0.08, 1.0),
+            max_slot_cost,
+        }
+    }
+
+    /// Number of scheduling slots (collapsed entries).
+    pub fn len(&self) -> usize {
+        self.slot_costs.len()
+    }
+
+    /// True if the workload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.slot_costs.is_empty()
+    }
+
+    /// Cost of the slot range `[s, e)`.
+    pub fn range_cost(&self, s: usize, e: usize) -> u64 {
+        self.slot_costs[s..e].iter().map(|&c| c as u64).sum()
+    }
+
+    /// Max single-slot cost / mean slot cost — the inner-loop imbalance
+    /// the paper blames for the patents network's poor low-count scaling.
+    pub fn imbalance(&self) -> f64 {
+        if self.slot_costs.is_empty() {
+            return 1.0;
+        }
+        let max = *self.slot_costs.iter().max().unwrap() as f64;
+        let mean = self.total_cost as f64 / self.slot_costs.len() as f64;
+        max / mean
+    }
+
+    /// Available parallelism: how many latency-tolerant hardware streams
+    /// this workload can keep busy (slots outstanding at once).
+    pub fn available_parallelism(&self) -> f64 {
+        self.slot_costs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{named, power_law};
+
+    #[test]
+    fn profile_of_cycle() {
+        let g = named::cycle3();
+        let p = WorkloadProfile::from_graph("cycle3", &g);
+        // 6 entries (3 dyads × 2 sides); canonical sides cost deg+deg = 4
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.total_cost, 3 * 4 + 3);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn power_law_profile_is_imbalanced() {
+        let g = power_law(2000, 2.0, 8.0, 3);
+        let p = WorkloadProfile::from_graph("pl", &g);
+        assert!(p.imbalance() > 5.0, "imbalance {}", p.imbalance());
+        assert_eq!(p.len(), g.entry_count());
+    }
+
+    #[test]
+    fn range_cost_sums() {
+        let g = power_law(100, 2.2, 4.0, 1);
+        let p = WorkloadProfile::from_graph("pl", &g);
+        let half = p.len() / 2;
+        assert_eq!(
+            p.range_cost(0, half) + p.range_cost(half, p.len()),
+            p.total_cost
+        );
+    }
+}

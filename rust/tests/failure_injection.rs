@@ -1,0 +1,119 @@
+//! Failure-injection tests: corrupted artifacts, malformed manifests,
+//! and degraded-mode behaviour of the coordinator.
+
+use std::path::PathBuf;
+
+use triadic::census::merged;
+use triadic::coordinator::{Coordinator, CoordinatorConfig, Route};
+use triadic::graph::generators;
+use triadic::runtime::DenseCensusRuntime;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("triadic_fail_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn corrupted_hlo_text_is_a_clean_error() {
+    let dir = tmp_dir("badhlo");
+    std::fs::write(dir.join("manifest.tsv"), "census_dense\t64\tbad.hlo.txt\n").unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule this is not hlo {{{").unwrap();
+    assert!(DenseCensusRuntime::load_dir(&dir).is_err());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn missing_artifact_file_is_a_clean_error() {
+    let dir = tmp_dir("missingfile");
+    std::fs::write(dir.join("manifest.tsv"), "census_dense\t64\tnope.hlo.txt\n").unwrap();
+    assert!(DenseCensusRuntime::load_dir(&dir).is_err());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn malformed_manifest_rows_rejected() {
+    let dir = tmp_dir("badmanifest");
+    std::fs::write(dir.join("manifest.tsv"), "census_dense\tonly-two-cols\n").unwrap();
+    assert!(DenseCensusRuntime::load_dir(&dir).is_err());
+
+    std::fs::write(dir.join("manifest.tsv"), "census_dense\tNaN\tx.hlo.txt\n").unwrap();
+    assert!(DenseCensusRuntime::load_dir(&dir).is_err());
+
+    // empty manifest (comments only): no artifacts is an error, not a hang
+    std::fs::write(dir.join("manifest.tsv"), "# empty\n").unwrap();
+    assert!(DenseCensusRuntime::load_dir(&dir).is_err());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn unknown_artifact_kinds_are_ignored_not_fatal() {
+    // future-proofing: a manifest listing an unknown kind plus a valid
+    // census artifact loads the valid one
+    let real = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !real.join("manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = tmp_dir("mixedkinds");
+    std::fs::copy(
+        real.join("census_dense_64.hlo.txt"),
+        dir.join("census_dense_64.hlo.txt"),
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("manifest.tsv"),
+        "frobnicator\t9\tnope.bin\ncensus_dense\t64\tcensus_dense_64.hlo.txt\n",
+    )
+    .unwrap();
+    let rt = DenseCensusRuntime::load_dir(&dir).unwrap();
+    assert_eq!(rt.sizes(), vec![64]);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn coordinator_degrades_to_sparse_when_artifacts_broken() {
+    // a coordinator pointed at a dir without a manifest starts sparse-only
+    let dir = tmp_dir("nomanifest");
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: Some(dir.clone()),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    assert!(!coord.dense_enabled());
+    let g = generators::erdos_renyi(40, 300, 1);
+    let out = coord.census(&g).unwrap();
+    assert_eq!(out.route, Route::Sparse);
+    assert_eq!(out.census, merged::census(&g));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn coordinator_startup_fails_loudly_on_poisoned_manifest() {
+    // manifest exists but every artifact is broken: startup must error,
+    // not silently serve wrong answers
+    let dir = tmp_dir("poisoned");
+    std::fs::write(dir.join("manifest.tsv"), "census_dense\t64\tbad.hlo.txt\n").unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "garbage").unwrap();
+    assert!(Coordinator::start(CoordinatorConfig {
+        artifacts_dir: Some(dir.clone()),
+        ..CoordinatorConfig::default()
+    })
+    .is_err());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn graph_too_big_for_dense_capacity_errors_cleanly() {
+    let real = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !real.join("manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = DenseCensusRuntime::load_dir(&real).unwrap();
+    let g = generators::erdos_renyi(1000, 2000, 1);
+    let err = rt.census(&g);
+    assert!(err.is_err());
+    assert!(format!("{:#}", err.err().unwrap()).contains("exceeds dense capacity"));
+}

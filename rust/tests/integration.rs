@@ -1,0 +1,192 @@
+//! Cross-module integration tests: the full stack wired together —
+//! generators → engines → coordinator (+ dense PJRT backend when
+//! artifacts exist) → windowed monitoring; plus simulator-versus-engine
+//! consistency and the figure harness.
+
+use std::path::PathBuf;
+
+use triadic::analysis::{builtin_patterns, census_series, MonitorConfig, TriadMonitor};
+use triadic::analysis::{TrafficGenerator, TrafficScenario};
+use triadic::census::{census_parallel, merged, Accumulation, ParallelConfig};
+use triadic::coordinator::{Coordinator, CoordinatorConfig, Route, RoutingPolicy};
+use triadic::graph::{generators, GraphSpec};
+use triadic::sched::Policy;
+use triadic::simulator::{simulate, WorkloadProfile, XmtMachine};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+#[test]
+fn workload_specs_have_paper_exponents() {
+    // FIG6 acceptance: fitted exponents ordered like the paper's
+    // (patents steepest, webgraph shallowest)
+    let specs = [
+        GraphSpec::patents(30_000),
+        GraphSpec::orkut(8_000),
+        GraphSpec::webgraph(30_000),
+    ];
+    let mut fitted = Vec::new();
+    for s in &specs {
+        let g = s.generate();
+        let gamma = triadic::graph::degree::fit_out_degree_exponent(&g).unwrap();
+        fitted.push((s.name, gamma));
+    }
+    assert!(
+        fitted[0].1 > fitted[1].1 && fitted[1].1 > fitted[2].1,
+        "exponent ordering broken: {fitted:?}"
+    );
+}
+
+#[test]
+fn full_pipeline_traffic_to_alerts() {
+    let gen = TrafficGenerator::background(300, 100.0, 77).with(TrafficScenario::PortScan {
+        start: 20.2,
+        end: 20.8,
+        attacker: 9,
+        targets: 50,
+    });
+    let events = gen.generate(30.0);
+    let cfg = ParallelConfig {
+        threads: 2,
+        policy: Policy::dynamic_default(),
+        accumulation: Accumulation::Bank { slots: 64 },
+    };
+    let series = census_series(&events, 1.0, |g| census_parallel(g, &cfg).census);
+    let mut mon = TriadMonitor::new(MonitorConfig::default(), builtin_patterns());
+    let alerts: Vec<_> = series.iter().flat_map(|w| mon.observe(w)).collect();
+    assert!(alerts.iter().any(|a| a.pattern == "port-scan"));
+}
+
+#[test]
+fn coordinator_round_trip_with_dense_backend() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: Some(dir),
+        routing: RoutingPolicy {
+            min_dense_density: 0.0,
+            ..Default::default()
+        },
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    assert!(coord.dense_enabled());
+
+    // mixed sizes spanning all three artifacts plus a sparse-only graph
+    for (n, arcs) in [(20usize, 60), (90, 800), (200, 3000), (500, 4000)] {
+        let g = generators::erdos_renyi(n, arcs, n as u64);
+        let out = coord.census(&g).unwrap();
+        assert_eq!(out.census, merged::census(&g), "n={n}");
+        if n <= 256 {
+            assert!(matches!(out.route, Route::Dense { .. }), "n={n} should go dense");
+        } else {
+            assert_eq!(out.route, Route::Sparse, "n={n} should go sparse");
+        }
+    }
+}
+
+#[test]
+fn simulator_consumes_real_engine_telemetry() {
+    // the same graph drives the real engine and the simulator; the
+    // simulator's slot count must equal the real collapsed space
+    let g = generators::power_law(2_000, 2.2, 8.0, 5);
+    let prof = WorkloadProfile::from_graph("t", &g);
+    assert_eq!(prof.len(), g.entry_count());
+
+    let run = census_parallel(
+        &g,
+        &ParallelConfig {
+            threads: 2,
+            policy: Policy::Dynamic { chunk: 64 },
+            accumulation: Accumulation::PerThread,
+        },
+    );
+    assert_eq!(run.stats.items.iter().sum::<usize>(), prof.len());
+
+    let sim = simulate(&XmtMachine::pnnl(), &prof, 8, Policy::Dynamic { chunk: 64 });
+    assert!(sim.makespan > 0.0);
+    assert_eq!(sim.chunks, prof.len().div_ceil(1)); // xmt forces chunk=1
+}
+
+#[test]
+fn figures_all_render_without_panicking() {
+    for (name, text) in triadic::figures::all_figures(triadic::figures::Scale::Small) {
+        assert!(
+            text.lines().count() > 5,
+            "figure {name} suspiciously short:\n{text}"
+        );
+        assert!(text.starts_with("# "), "figure {name} missing header");
+    }
+}
+
+#[test]
+fn cli_binary_smoke() {
+    // run the built binary end-to-end: generate -> census --input
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let dir = std::env::temp_dir().join("triadic_cli_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let graph_path = dir.join("g.txt");
+
+    let out = std::process::Command::new(exe)
+        .args([
+            "generate",
+            "--graph",
+            "patents",
+            "--nodes",
+            "2000",
+            "--out",
+            graph_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = std::process::Command::new(exe)
+        .args([
+            "census",
+            "--input",
+            graph_path.to_str().unwrap(),
+            "--backend",
+            "sparse",
+            "--threads",
+            "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("003"), "census table missing:\n{stdout}");
+
+    let out = std::process::Command::new(exe)
+        .args(["simulate", "--machine", "numa", "--graph", "orkut", "--nodes", "3000", "--procs", "1,8,48"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("procs"));
+
+    let out = std::process::Command::new(exe).args(["bogus"]).output().unwrap();
+    assert!(!out.status.success());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn readme_scale_claims_hold_end_to_end() {
+    // merged census is dramatically faster than naive and exactly equal
+    let g = generators::power_law(400, 2.3, 6.0, 123);
+    let t0 = std::time::Instant::now();
+    let a = triadic::census::naive::census(&g);
+    let t_naive = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let b = merged::census(&g);
+    let t_merged = t0.elapsed();
+    assert_eq!(a, b);
+    assert!(
+        t_naive > t_merged * 5,
+        "merged {t_merged:?} should beat naive {t_naive:?} by >5x at n=400"
+    );
+}

@@ -1,0 +1,191 @@
+//! Property-based tests over census invariants.
+//!
+//! The offline vendor set has no proptest, so properties are checked
+//! over seeded random-input sweeps (the generator space is explicit and
+//! every failure reports its seed, which is all we use proptest for).
+
+use triadic::census::{merged, naive, Census, TriadType};
+use triadic::graph::builder::GraphBuilder;
+use triadic::graph::{generators, CsrGraph};
+use triadic::rng::Rng;
+
+/// Random simple digraph with `n` nodes and ~`m` arcs.
+fn random_digraph(n: u32, m: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n as usize);
+    for _ in 0..m {
+        b.arc(rng.node(n), rng.node(n));
+    }
+    b.build()
+}
+
+const SWEEPS: u64 = 40;
+
+#[test]
+fn prop_census_total_is_choose_3() {
+    for seed in 0..SWEEPS {
+        let n = 10 + (seed % 40) as u32;
+        let g = random_digraph(n, (n as usize) * 3, seed);
+        let c = merged::census(&g);
+        assert_eq!(
+            c.total(),
+            Census::expected_total(n as usize),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_arc_triple_conservation() {
+    // every arc participates in exactly n-2 triads, so
+    // sum(class_arcs * count) == m * (n - 2)
+    for seed in 0..SWEEPS {
+        let n = 8 + (seed % 30) as u32;
+        let g = random_digraph(n, (n as usize) * 4, seed * 7 + 1);
+        let c = merged::census(&g);
+        assert_eq!(
+            c.implied_arc_triples(),
+            g.arc_count() as u128 * (n as u128 - 2),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_transpose_census_swaps_d_u() {
+    for seed in 0..SWEEPS {
+        let n = 8 + (seed % 25) as u32;
+        let g = random_digraph(n, (n as usize) * 3, seed * 13 + 5);
+        let c = merged::census(&g);
+        let ct = merged::census(&g.transpose());
+        assert_eq!(ct, c.reversed(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_census_invariant_under_relabeling() {
+    for seed in 0..SWEEPS / 2 {
+        let n = 8 + (seed % 20) as u32;
+        let g = random_digraph(n, (n as usize) * 3, seed * 3 + 2);
+        // random permutation of node ids
+        let mut rng = Rng::new(seed + 999);
+        let mut perm: Vec<u32> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let mut b = GraphBuilder::new(n as usize);
+        for (u, v) in g.arcs() {
+            b.arc(perm[u as usize], perm[v as usize]);
+        }
+        let h = b.build();
+        assert_eq!(merged::census(&g), merged::census(&h), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_adding_an_arc_only_moves_counts_up_the_lattice() {
+    // adding one arc changes exactly n-2 triads, each to a class with
+    // one more arc
+    for seed in 0..SWEEPS / 2 {
+        let n = 8 + (seed % 16) as u32;
+        let g = random_digraph(n, (n as usize) * 2, seed * 11 + 3);
+        let c1 = merged::census(&g);
+        // find a missing arc
+        let mut rng = Rng::new(seed);
+        let (mut u, mut v);
+        loop {
+            u = rng.node(n);
+            v = rng.node(n);
+            if u != v && !g.has_arc(u, v) {
+                break;
+            }
+        }
+        let mut b = GraphBuilder::new(n as usize);
+        b.extend(g.arcs());
+        b.arc(u, v);
+        let c2 = merged::census(&b.build());
+        let moved: i128 = TriadType::ALL
+            .iter()
+            .map(|&t| {
+                (c2[t] as i128 - c1[t] as i128) * t.arc_count() as i128
+            })
+            .sum();
+        assert_eq!(moved, (n as i128) - 2, "seed {seed}: arc mass must grow by n-2");
+        assert_eq!(c1.total(), c2.total(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_engines_agree_everywhere() {
+    // the full oracle chain on denser-than-usual graphs
+    for seed in 0..12 {
+        let n = 12 + (seed % 12) as u32;
+        let g = random_digraph(n, (n as usize) * (n as usize) / 3, seed * 17 + 4);
+        let a = naive::census(&g);
+        assert_eq!(a, triadic::census::batagelj_mrvar::census(&g), "bm seed {seed}");
+        assert_eq!(a, merged::census(&g), "merged seed {seed}");
+        assert_eq!(a, triadic::census::moody::census(&g), "moody seed {seed}");
+        let run = triadic::census::census_parallel(&g, &Default::default());
+        assert_eq!(a, run.census, "parallel seed {seed}");
+    }
+}
+
+#[test]
+fn prop_generator_determinism_across_kinds() {
+    for seed in 0..6 {
+        assert_eq!(
+            generators::power_law(500, 2.3, 6.0, seed),
+            generators::power_law(500, 2.3, 6.0, seed)
+        );
+        assert_eq!(
+            generators::barabasi_albert(300, 3, seed),
+            generators::barabasi_albert(300, 3, seed)
+        );
+        assert_eq!(
+            generators::erdos_renyi(300, 900, seed),
+            generators::erdos_renyi(300, 900, seed)
+        );
+    }
+}
+
+#[test]
+fn prop_csr_round_trips_through_io() {
+    for seed in 0..10 {
+        let g = random_digraph(60, 300, seed * 31 + 9);
+        let mut buf = Vec::new();
+        triadic::graph::io::write_binary(&g, &mut buf).unwrap();
+        assert_eq!(triadic::graph::io::read_binary(&buf[..]).unwrap(), g);
+        let mut txt = Vec::new();
+        triadic::graph::io::write_edge_list(&g, &mut txt).unwrap();
+        let g2 = triadic::graph::io::read_edge_list(std::io::BufReader::new(&txt[..])).unwrap();
+        // text round-trip may shrink n if trailing nodes are isolated;
+        // compare censuses of the common prefix instead when sizes match
+        if g2.node_count() == g.node_count() {
+            assert_eq!(g2, g, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_dyadic_counts_match_dyad_tallies() {
+    // 012 and 102 counts are determined by dyad tallies:
+    //   c[012] = asym_dyads * (n-2) - (012-violating placements)...
+    // the exact identity: sum over dyads of (n - 2) equals total
+    // dyad-placements: c[012] + c[102] counts only triads whose OTHER
+    // two dyads are null, so instead check the weaker conservation:
+    // mutual dyads * (n-2) = sum over classes of (mutual dyads in class) * count
+    for seed in 0..SWEEPS / 2 {
+        let n = 10 + (seed % 20) as u32;
+        let g = random_digraph(n, (n as usize) * 3, seed * 23 + 7);
+        let c = merged::census(&g);
+        let (mutual, asym) = triadic::runtime::dyad_tallies(&g);
+        let mutual_mass: u128 = TriadType::ALL
+            .iter()
+            .map(|&t| t.man().0 as u128 * c[t] as u128)
+            .sum();
+        let asym_mass: u128 = TriadType::ALL
+            .iter()
+            .map(|&t| t.man().1 as u128 * c[t] as u128)
+            .sum();
+        assert_eq!(mutual_mass, mutual as u128 * (n as u128 - 2), "seed {seed}");
+        assert_eq!(asym_mass, asym as u128 * (n as u128 - 2), "seed {seed}");
+    }
+}
