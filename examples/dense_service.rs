@@ -16,7 +16,7 @@ use triadic::census::merged;
 use triadic::coordinator::{Coordinator, CoordinatorConfig, Route};
 use triadic::graph::generators::erdos_renyi;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> triadic::error::Result<()> {
     let artifacts = ["artifacts", "../artifacts"]
         .iter()
         .map(PathBuf::from)
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         artifacts_dir: artifacts,
         ..CoordinatorConfig::default()
     })?;
-    anyhow::ensure!(coord.dense_enabled(), "dense backend failed to start");
+    triadic::ensure!(coord.dense_enabled(), "dense backend failed to start");
 
     // a mixed request stream: three window sizes, dense-routable
     let mut requests = Vec::new();
@@ -47,12 +47,12 @@ fn main() -> anyhow::Result<()> {
     for (i, g) in requests.iter().enumerate() {
         let out = coord.census(g)?;
         let Route::Dense { size } = out.route else {
-            anyhow::bail!("request {i} unexpectedly routed sparse");
+            triadic::bail!("request {i} unexpectedly routed sparse");
         };
         latencies.push((size, out.seconds));
         // spot-check exactness on every 10th request
         if i % 10 == 0 {
-            anyhow::ensure!(
+            triadic::ensure!(
                 out.census == merged::census(g),
                 "dense result mismatch on request {i}"
             );

@@ -23,7 +23,7 @@ use triadic::analysis::{
 use triadic::census::merged;
 use triadic::coordinator::{Coordinator, CoordinatorConfig, Route};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> triadic::error::Result<()> {
     // --- 1. Traffic: 90 s of background + the four Fig 3 activities ---
     let duration = 90.0;
     let gen = TrafficGenerator::background(400, 120.0, 2012)
@@ -141,7 +141,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\nmetrics:\n{}", coord.metrics().render());
     if missed > 0 {
-        anyhow::bail!("{missed} attacks missed");
+        triadic::bail!("{missed} attacks missed");
     }
     println!("security_monitor OK: all 4 attacks detected, dense path exact");
     Ok(())

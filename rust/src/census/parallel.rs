@@ -312,6 +312,20 @@ mod tests {
     }
 
     #[test]
+    fn mapped_and_owned_storage_yield_identical_census() {
+        // the engine walks storage-agnostic slice accessors: a graph
+        // served zero-copy from a mapped v2 file must census identically
+        let g = generators::power_law(700, 2.2, 7.0, 57);
+        let path = std::env::temp_dir().join("triadic_parallel_mmap.csr");
+        crate::graph::io::write_binary_v2_file(&g, &path).unwrap();
+        let mapped = crate::graph::io::load_mmap_file(&path).unwrap();
+        let want = census_parallel(&g, &ParallelConfig::default()).census;
+        let got = census_parallel(&mapped, &ParallelConfig::default()).census;
+        assert_eq!(got, want);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
     fn stats_cover_all_entries() {
         let g = generators::power_law(500, 2.2, 8.0, 2);
         let run = census_parallel(

@@ -1,16 +1,17 @@
-//! The coordinator service: request intake, backend dispatch, dense
-//! service thread, metrics.
+//! The coordinator service: request intake, graph loading (with an
+//! mmap-aware cache), backend dispatch, dense service thread, metrics.
 
-use std::path::PathBuf;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
-
-use anyhow::{Context, Result};
 
 use super::router::{Route, Router, RoutingPolicy};
 use crate::census::{census_parallel, Census, ParallelConfig};
-use crate::graph::CsrGraph;
+use crate::error::{Context, Result};
+use crate::graph::{io, CsrGraph};
 use crate::metrics::Metrics;
 use crate::runtime::DenseCensusRuntime;
 
@@ -25,6 +26,17 @@ pub struct CoordinatorConfig {
     pub routing: RoutingPolicy,
     /// Dense request queue depth (backpressure bound).
     pub dense_queue: usize,
+    /// Worker threads for edge-list ingestion on [`Coordinator::census_path`].
+    pub ingest_threads: usize,
+    /// Graphs kept resident by the path cache (FIFO eviction; 0
+    /// disables caching). Mapped v2 graphs cost almost no heap, so
+    /// serving the same converted graph across requests is free.
+    pub graph_cache: usize,
+    /// Trust `TRIADIC2` files on [`Coordinator::census_path`]: skip the
+    /// whole-file checksum scan and mmap in O(1) (header bounds checks
+    /// only). Enable when the coordinator serves files it converted
+    /// itself; leave off for files of unknown provenance.
+    pub trusted_mmap: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -34,7 +46,69 @@ impl Default for CoordinatorConfig {
             sparse: ParallelConfig::default(),
             routing: RoutingPolicy::default(),
             dense_queue: 64,
+            ingest_threads: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+            graph_cache: 8,
+            trusted_mmap: false,
         }
+    }
+}
+
+/// Path-keyed cache of loaded graphs with FIFO eviction.
+struct GraphStore {
+    capacity: usize,
+    ingest_threads: usize,
+    trusted_mmap: bool,
+    inner: Mutex<StoreInner>,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    map: HashMap<PathBuf, Arc<CsrGraph>>,
+    order: VecDeque<PathBuf>,
+}
+
+impl GraphStore {
+    fn new(capacity: usize, ingest_threads: usize, trusted_mmap: bool) -> GraphStore {
+        GraphStore {
+            capacity,
+            ingest_threads,
+            trusted_mmap,
+            inner: Mutex::new(StoreInner::default()),
+        }
+    }
+
+    /// Fetch a cached graph or load it (mmap for v2 files, parallel
+    /// parse for edge lists) and cache it.
+    fn get_or_load(&self, path: &Path, metrics: &Metrics) -> Result<Arc<CsrGraph>> {
+        if self.capacity > 0 {
+            let cache = self.inner.lock().unwrap();
+            if let Some(g) = cache.map.get(path) {
+                metrics.inc("graph_cache_hits_total", 1);
+                return Ok(g.clone());
+            }
+        }
+        metrics.inc("graph_cache_misses_total", 1);
+        let loaded = metrics
+            .time("graph_load", || {
+                io::load_auto_with(path, self.ingest_threads, !self.trusted_mmap)
+            })
+            .with_context(|| format!("loading graph {}", path.display()))?;
+        let g = Arc::new(loaded);
+        if self.capacity > 0 {
+            let mut cache = self.inner.lock().unwrap();
+            if !cache.map.contains_key(path) {
+                while cache.order.len() >= self.capacity {
+                    if let Some(old) = cache.order.pop_front() {
+                        cache.map.remove(&old);
+                    }
+                }
+                cache.map.insert(path.to_path_buf(), g.clone());
+                cache.order.push_back(path.to_path_buf());
+            }
+        }
+        Ok(g)
     }
 }
 
@@ -60,6 +134,7 @@ pub struct Coordinator {
     dense_tx: Option<mpsc::SyncSender<DenseRequest>>,
     dense_thread: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    graphs: GraphStore,
 }
 
 impl Coordinator {
@@ -97,6 +172,7 @@ impl Coordinator {
             dense_tx,
             dense_thread,
             metrics,
+            graphs: GraphStore::new(cfg.graph_cache, cfg.ingest_threads.max(1), cfg.trusted_mmap),
         })
     }
 
@@ -131,11 +207,9 @@ impl Coordinator {
                 })
                 .ok()
                 .context("dense service thread gone")?;
-                let res = self
-                    .metrics
+                self.metrics
                     .time("dense_census", || reply_rx.recv())
-                    .context("dense service dropped the request")??;
-                res
+                    .context("dense service dropped the request")??
             }
             _ => {
                 self.metrics.inc("census_sparse_total", 1);
@@ -149,6 +223,18 @@ impl Coordinator {
             route,
             seconds: t0.elapsed().as_secs_f64(),
         })
+    }
+
+    /// Serve a census for an on-disk graph through the path cache.
+    /// `TRIADIC2` files are memory-mapped — checksum-verified on first
+    /// touch by default (one sequential scan), or O(1) with
+    /// [`CoordinatorConfig::trusted_mmap`] — which is the workflow for
+    /// multi-GB graphs converted once and served across restarts;
+    /// legacy binaries and edge lists are parsed on first touch and
+    /// cached.
+    pub fn census_path<P: AsRef<Path>>(&self, path: P) -> Result<CensusOutcome> {
+        let g = self.graphs.get_or_load(path.as_ref(), &self.metrics)?;
+        self.census(&g)
     }
 
     /// Drain and stop the dense service thread.
@@ -201,12 +287,14 @@ mod tests {
     use crate::census::merged;
     use crate::graph::generators;
 
+    #[cfg(feature = "xla")]
     fn artifacts_available() -> bool {
         PathBuf::from(env!("CARGO_MANIFEST_DIR"))
             .join("artifacts/manifest.tsv")
             .exists()
     }
 
+    #[cfg(feature = "xla")]
     fn test_config() -> CoordinatorConfig {
         CoordinatorConfig {
             artifacts_dir: Some(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")),
@@ -228,6 +316,7 @@ mod tests {
         assert_eq!(out.census, merged::census(&g));
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn routes_and_answers_match_both_backends() {
         if !artifacts_available() {
@@ -254,6 +343,7 @@ mod tests {
         coord.shutdown();
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn many_requests_through_the_queue() {
         if !artifacts_available() {
@@ -267,5 +357,63 @@ mod tests {
             assert_eq!(out.census, merged::census(&g), "seed {seed}");
         }
         assert_eq!(coord.metrics().get("dense_executions_total"), 8);
+    }
+
+    #[test]
+    fn census_path_serves_mapped_v2_files_from_cache() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let g = generators::power_law(600, 2.2, 6.0, 41);
+        let want = merged::census(&g);
+        let path = std::env::temp_dir().join("triadic_coord_cache.csr");
+        crate::graph::io::write_binary_v2_file(&g, &path).unwrap();
+
+        let out = coord.census_path(&path).unwrap();
+        assert_eq!(out.census, want);
+        let out = coord.census_path(&path).unwrap();
+        assert_eq!(out.census, want);
+        assert_eq!(coord.metrics().get("graph_cache_misses_total"), 1);
+        assert_eq!(coord.metrics().get("graph_cache_hits_total"), 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn census_path_reports_load_errors() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let err = coord.census_path("/nonexistent/graph.csr").unwrap_err();
+        assert!(err.to_string().contains("loading graph"), "{err}");
+    }
+
+    #[test]
+    fn graph_cache_evicts_fifo() {
+        let store = GraphStore::new(2, 1, false);
+        let metrics = Metrics::new();
+        let dir = std::env::temp_dir();
+        let mut paths = Vec::new();
+        for i in 0..3u64 {
+            let g = generators::erdos_renyi(20, 40, i);
+            let p = dir.join(format!("triadic_store_{i}.csr"));
+            crate::graph::io::write_binary_v2_file(&g, &p).unwrap();
+            paths.push(p);
+        }
+        for p in &paths {
+            store.get_or_load(p, &metrics).unwrap();
+        }
+        // capacity 2: the first path was evicted, reloading it misses
+        store.get_or_load(&paths[0], &metrics).unwrap();
+        assert_eq!(metrics.get("graph_cache_misses_total"), 4);
+        // the most recent two still hit
+        store.get_or_load(&paths[2], &metrics).unwrap();
+        assert_eq!(metrics.get("graph_cache_hits_total"), 1);
+        for p in paths {
+            let _ = std::fs::remove_file(p);
+        }
     }
 }

@@ -1,0 +1,190 @@
+//! Minimal error-context machinery (the offline vendor set has no
+//! `anyhow`, so this provides the small subset the crate uses).
+//!
+//! [`Error`] is a flat context chain rendered as `outer: inner: root`,
+//! the [`Context`] extension trait adds `.context(..)` /
+//! `.with_context(..)` to `Result` and `Option`, and the [`bail!`] /
+//! [`ensure!`] macros build early returns. The API mirrors `anyhow`
+//! closely enough that swapping the real crate back in (in a networked
+//! build) is a one-line import change per module.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed-string error with a context chain, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Prepend a context layer (the anyhow `.context(..)` semantics).
+    pub fn push_context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context layers, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both render the full chain, like anyhow's
+        // alternate format; the crate only ever prints errors whole.
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error { chain: vec![s] }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result<_, impl Display>` and `Option<_>`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).push_context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn context_chains_render_outermost_first() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest: no such file");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+        assert_eq!(e.root_cause(), "no such file");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32> = std::result::Result::<u32, std::io::Error>::Ok(5)
+            .with_context(|| -> String { unreachable!("not evaluated on Ok") });
+        assert_eq!(ok.unwrap(), 5);
+        let err: std::result::Result<u32, &str> = Err("root");
+        let e = err.with_context(|| format!("layer {}", 1)).unwrap_err();
+        assert_eq!(e.to_string(), "layer 1: root");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing flag").unwrap_err().to_string(), "missing flag");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky 7");
+    }
+
+    #[test]
+    fn from_conversions() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("no such file"));
+        let e: Error = String::from("boom").into();
+        assert_eq!(e.to_string(), "boom");
+        let e: Error = "boom".into();
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn nested_contexts_stack() {
+        let r: Result<()> = Err(io_err())
+            .context("inner step")
+            .map_err(|e| e.push_context("outer step"));
+        assert_eq!(r.unwrap_err().to_string(), "outer step: inner step: no such file");
+    }
+}

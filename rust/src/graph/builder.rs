@@ -64,40 +64,141 @@ impl GraphBuilder {
     ///
     /// Runs in O(m log m) using a sort over the symmetrized arc list —
     /// this mirrors the paper's one-shot ingest (the edge array is
-    /// allocated exactly once).
+    /// allocated exactly once). Serial; see [`GraphBuilder::build_parallel`]
+    /// for the multi-threaded ingest path.
     pub fn build(self) -> CsrGraph {
+        self.build_parallel(1)
+    }
+
+    /// Build the CSR graph with up to `threads` worker threads.
+    ///
+    /// Symmetrization and the dominating O(m log m) sort are chunked
+    /// across scoped threads (chunk-sort + pairwise parallel merges);
+    /// the final linear dedup/offsets pass stays serial. Output is
+    /// bit-identical to [`GraphBuilder::build`] for any thread count —
+    /// equal `(u, v)` keys only ever OR their direction bits together,
+    /// so merge order between duplicates cannot matter.
+    pub fn build_parallel(self, threads: usize) -> CsrGraph {
         let n = self.n;
+        let arcs = self.arcs;
+        let threads = threads.max(1);
         // Symmetrize: every arc (u,v) contributes entry (u,v,out-bit) and
         // (v,u,in-bit). Sorting groups duplicates and both directions of a
         // dyad so a single linear merge pass assembles packed entries.
-        let mut sym: Vec<(u32, u32, u32)> = Vec::with_capacity(self.arcs.len() * 2);
-        for (u, v) in self.arcs {
-            sym.push((u, v, Dir::Out as u32));
-            sym.push((v, u, Dir::In as u32));
+        let mut sym: Vec<Sym> = vec![(0, 0, 0); arcs.len() * 2];
+        // below this, thread spawn + merge staging cost more than they save
+        const PAR_MIN_ARCS: usize = 1 << 15;
+        if threads > 1 && arcs.len() >= PAR_MIN_ARCS {
+            let chunk = arcs.len().div_ceil(threads);
+            std::thread::scope(|s| {
+                for (src, dst) in arcs.chunks(chunk).zip(sym.chunks_mut(2 * chunk)) {
+                    s.spawn(move || symmetrize_into(src, dst));
+                }
+            });
+            parallel_sort(&mut sym, threads);
+        } else {
+            symmetrize_into(&arcs, &mut sym);
+            sym.sort_unstable_by_key(sym_key);
         }
-        sym.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
-
-        let mut offsets = vec![0usize; n + 1];
-        let mut edges: Vec<PackedEdge> = Vec::with_capacity(sym.len());
-        let mut arc_count = 0u64;
-
-        let mut i = 0;
-        while i < sym.len() {
-            let (u, v, mut bits) = sym[i];
-            i += 1;
-            while i < sym.len() && sym[i].0 == u && sym[i].1 == v {
-                bits |= sym[i].2;
-                i += 1;
-            }
-            edges.push(PackedEdge::new(v, Dir::from_bits(bits)));
-            arc_count += (bits & 0b01 != 0) as u64;
-            offsets[u as usize + 1] += 1;
-        }
-        for u in 0..n {
-            offsets[u + 1] += offsets[u];
-        }
-        CsrGraph::from_parts(offsets, edges, arc_count)
+        assemble(n, &sym)
     }
+}
+
+/// One symmetrized half-arc: `(from, to, direction-bit)`.
+type Sym = (u32, u32, u32);
+
+#[inline]
+fn sym_key(t: &Sym) -> (u32, u32) {
+    (t.0, t.1)
+}
+
+/// Expand `arcs` into its symmetrized entries, writing exactly
+/// `2 * arcs.len()` slots of `out`.
+fn symmetrize_into(arcs: &[(u32, u32)], out: &mut [Sym]) {
+    debug_assert_eq!(out.len(), arcs.len() * 2);
+    for (i, &(u, v)) in arcs.iter().enumerate() {
+        out[2 * i] = (u, v, Dir::Out as u32);
+        out[2 * i + 1] = (v, u, Dir::In as u32);
+    }
+}
+
+/// Parallel merge sort by `(from, to)`: chunk-sort on scoped threads,
+/// then pairwise-merge runs (also in parallel) until one run remains.
+fn parallel_sort(data: &mut Vec<Sym>, threads: usize) {
+    let len = data.len();
+    let chunk = len.div_ceil(threads.max(1)).max(1);
+    std::thread::scope(|s| {
+        for part in data.chunks_mut(chunk) {
+            s.spawn(move || part.sort_unstable_by_key(sym_key));
+        }
+    });
+    if chunk >= len {
+        return; // single run — already sorted
+    }
+    let mut src = std::mem::take(data);
+    let mut dst: Vec<Sym> = vec![(0, 0, 0); len];
+    let mut width = chunk;
+    while width < len {
+        std::thread::scope(|s| {
+            let mut rest: &mut [Sym] = &mut dst;
+            let mut start = 0usize;
+            while start < len {
+                let mid = (start + width).min(len);
+                let end = (start + 2 * width).min(len);
+                let (out, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                rest = tail;
+                let a = &src[start..mid];
+                let b = &src[mid..end];
+                s.spawn(move || merge_runs(a, b, out));
+                start = end;
+            }
+        });
+        std::mem::swap(&mut src, &mut dst);
+        width *= 2;
+    }
+    *data = src;
+}
+
+/// Merge two sorted runs into `out` (`out.len() == a.len() + b.len()`).
+fn merge_runs(a: &[Sym], b: &[Sym], out: &mut [Sym]) {
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    for slot in out.iter_mut() {
+        let take_a = j >= b.len() || (i < a.len() && sym_key(&a[i]) <= sym_key(&b[j]));
+        if take_a {
+            *slot = a[i];
+            i += 1;
+        } else {
+            *slot = b[j];
+            j += 1;
+        }
+    }
+}
+
+/// The linear dedup/merge pass over the sorted symmetrized entries:
+/// OR direction bits of equal `(u, v)` groups, emit packed edges and
+/// per-node counts, prefix-sum into offsets.
+fn assemble(n: usize, sym: &[Sym]) -> CsrGraph {
+    let mut offsets = vec![0usize; n + 1];
+    let mut edges: Vec<PackedEdge> = Vec::with_capacity(sym.len());
+    let mut arc_count = 0u64;
+
+    let mut i = 0;
+    while i < sym.len() {
+        let (u, v, mut bits) = sym[i];
+        i += 1;
+        while i < sym.len() && sym[i].0 == u && sym[i].1 == v {
+            bits |= sym[i].2;
+            i += 1;
+        }
+        edges.push(PackedEdge::new(v, Dir::from_bits(bits)));
+        arc_count += (bits & 0b01 != 0) as u64;
+        offsets[u as usize + 1] += 1;
+    }
+    for u in 0..n {
+        offsets[u + 1] += offsets[u];
+    }
+    CsrGraph::from_parts(offsets, edges, arc_count)
 }
 
 /// Convenience: build a graph directly from an arc slice.
@@ -167,5 +268,53 @@ mod tests {
         }
         let g = b.build();
         assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_to_serial() {
+        use crate::rng::Rng;
+        // large enough to cross the parallel threshold (2^15 arcs)
+        let n = 2_000u32;
+        for seed in [1u64, 2, 3] {
+            let mut rng = Rng::new(seed);
+            let arcs: Vec<(u32, u32)> = (0..40_000).map(|_| (rng.node(n), rng.node(n))).collect();
+            let mut serial = GraphBuilder::new(n as usize);
+            serial.extend(arcs.iter().copied());
+            let want = serial.build();
+            for threads in [2usize, 3, 8] {
+                let mut par = GraphBuilder::new(n as usize);
+                par.extend(arcs.iter().copied());
+                let got = par.build_parallel(threads);
+                assert_eq!(got, want, "seed {seed} threads {threads}");
+                assert!(got.validate().is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_small_inputs_and_empty() {
+        let g = GraphBuilder::new(4).arcs(&[(0, 1), (1, 0), (2, 3)]);
+        let want = g.clone().build();
+        assert_eq!(g.build_parallel(8), want);
+        assert_eq!(
+            GraphBuilder::new(3).build_parallel(4),
+            GraphBuilder::new(3).build()
+        );
+    }
+
+    #[test]
+    fn parallel_sort_helper_sorts() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(7);
+        let mut data: Vec<Sym> = (0..100_000)
+            .map(|_| (rng.node(1000), rng.node(1000), 1 + (rng.node(3))))
+            .collect();
+        let mut want = data.clone();
+        want.sort_unstable_by_key(sym_key);
+        parallel_sort(&mut data, 7);
+        // keys must match exactly; payloads of equal keys may permute
+        let got_keys: Vec<_> = data.iter().map(sym_key).collect();
+        let want_keys: Vec<_> = want.iter().map(sym_key).collect();
+        assert_eq!(got_keys, want_keys);
     }
 }

@@ -17,6 +17,8 @@
 
 use std::fmt;
 
+use super::storage::CsrStorage;
+
 /// Direction of the edge(s) between a node and one of its neighbors, as
 /// encoded in the low two bits of a packed neighbor entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -123,14 +125,51 @@ impl fmt::Display for PackedEdge {
 /// compressed sparse row over *undirected adjacency* with per-entry
 /// direction bits. Symmetric: if `v` appears in `u`'s list, `u` appears
 /// in `v`'s list with the reversed direction.
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// The two hot arrays (`offsets[u]..offsets[u+1]` indexes the packed,
+/// per-node-sorted `edges` array) live behind [`CsrStorage`]: either
+/// heap-owned `Vec`s from the ingest pipeline or zero-copy windows into
+/// a memory-mapped v2 binary file (see [`crate::graph::io`]). Every
+/// engine goes through the same slice accessors, so a mapped multi-GB
+/// graph serves censuses with no load-time rebuild at all.
 pub struct CsrGraph {
-    /// `offsets[u]..offsets[u+1]` indexes `edges` for node `u`.
-    offsets: Vec<usize>,
-    /// Packed neighbor entries, sorted within each node's sub-array.
-    edges: Vec<PackedEdge>,
+    /// Backing storage for offsets + packed edges.
+    storage: CsrStorage,
     /// Number of directed arcs (a mutual dyad counts as two arcs).
     arc_count: u64,
+}
+
+impl Clone for CsrGraph {
+    /// Cloning materializes mapped storage into owned `Vec`s (a clone
+    /// must not extend the mapped file's lifetime invisibly).
+    fn clone(&self) -> CsrGraph {
+        CsrGraph {
+            storage: self.storage.to_owned_storage(),
+            arc_count: self.arc_count,
+        }
+    }
+}
+
+impl PartialEq for CsrGraph {
+    /// Structural equality — storage backend does not matter.
+    fn eq(&self, other: &CsrGraph) -> bool {
+        self.arc_count == other.arc_count
+            && self.offsets() == other.offsets()
+            && self.edges() == other.edges()
+    }
+}
+
+impl Eq for CsrGraph {}
+
+impl fmt::Debug for CsrGraph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CsrGraph")
+            .field("nodes", &self.node_count())
+            .field("entries", &self.entry_count())
+            .field("arcs", &self.arc_count)
+            .field("storage", &self.storage)
+            .finish()
+    }
 }
 
 impl CsrGraph {
@@ -145,19 +184,27 @@ impl CsrGraph {
     /// debug builds (and by [`CsrGraph::validate`]).
     pub fn from_parts(offsets: Vec<usize>, edges: Vec<PackedEdge>, arc_count: u64) -> CsrGraph {
         let g = CsrGraph {
-            offsets,
-            edges,
+            storage: CsrStorage::Owned { offsets, edges },
             arc_count,
         };
         debug_assert!(g.validate().is_ok(), "{:?}", g.validate());
         g
     }
 
+    /// Assemble from any storage backend without debug validation —
+    /// the mmap loader's entry point (it performs its own header and
+    /// checksum validation before construction).
+    pub(crate) fn from_storage_unchecked(storage: CsrStorage, arc_count: u64) -> CsrGraph {
+        CsrGraph { storage, arc_count }
+    }
+
     /// An empty graph with `n` isolated nodes.
     pub fn empty(n: usize) -> CsrGraph {
         CsrGraph {
-            offsets: vec![0; n + 1],
-            edges: Vec::new(),
+            storage: CsrStorage::Owned {
+                offsets: vec![0; n + 1],
+                edges: Vec::new(),
+            },
             arc_count: 0,
         }
     }
@@ -165,22 +212,24 @@ impl CsrGraph {
     /// Structural validation: returns a description of the first
     /// violated invariant, if any.
     pub fn validate(&self) -> Result<(), String> {
-        if self.offsets.is_empty() {
+        let offsets = self.offsets();
+        let edges = self.edges();
+        if offsets.is_empty() {
             return Err("offsets must have at least one entry".into());
         }
-        if self.offsets[0] != 0 {
+        if offsets[0] != 0 {
             return Err("offsets[0] != 0".into());
         }
-        if *self.offsets.last().unwrap() != self.edges.len() {
+        if *offsets.last().unwrap() != edges.len() {
             return Err("offsets[n] != edges.len()".into());
         }
         let n = self.node_count();
         let mut arcs = 0u64;
         for u in 0..n {
-            if self.offsets[u] > self.offsets[u + 1] {
+            if offsets[u] > offsets[u + 1] {
                 return Err(format!("offsets not monotone at node {u}"));
             }
-            let row = &self.edges[self.offsets[u]..self.offsets[u + 1]];
+            let row = &edges[offsets[u]..offsets[u + 1]];
             let mut prev: Option<u32> = None;
             for e in row {
                 let v = e.nbr();
@@ -224,7 +273,7 @@ impl CsrGraph {
     /// Number of nodes.
     #[inline]
     pub fn node_count(&self) -> usize {
-        self.offsets.len() - 1
+        self.offsets().len() - 1
     }
 
     /// Number of directed arcs (mutual dyads count twice).
@@ -237,32 +286,52 @@ impl CsrGraph {
     /// entries / 2.
     #[inline]
     pub fn dyad_count(&self) -> u64 {
-        (self.edges.len() / 2) as u64
+        (self.edges().len() / 2) as u64
     }
 
     /// Total packed entries (2× dyad count).
     #[inline]
     pub fn entry_count(&self) -> usize {
-        self.edges.len()
+        self.edges().len()
     }
 
     /// The sorted packed-neighbor row of `u`.
     #[inline]
     pub fn row(&self, u: u32) -> &[PackedEdge] {
-        &self.edges[self.offsets[u as usize]..self.offsets[u as usize + 1]]
+        let offsets = self.offsets();
+        &self.edges()[offsets[u as usize]..offsets[u as usize + 1]]
     }
 
     /// The CSR offsets array (`n + 1` entries). Exposed for the
     /// manhattan-collapsed flat iteration space of the parallel engine.
     #[inline]
     pub fn offsets(&self) -> &[usize] {
-        &self.offsets
+        self.storage.offsets()
+    }
+
+    /// The packed-edge array in flat (collapsed) index order.
+    #[inline]
+    pub fn edges(&self) -> &[PackedEdge] {
+        self.storage.edges()
+    }
+
+    /// The storage backend (diagnostics; engines use the slice
+    /// accessors and never branch on this).
+    #[inline]
+    pub fn storage(&self) -> &CsrStorage {
+        &self.storage
+    }
+
+    /// True if the hot arrays are served from a mapped file.
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        self.storage.is_mapped()
     }
 
     /// The packed edge at flat index `idx` (`0..entry_count()`).
     #[inline]
     pub fn entry(&self, idx: usize) -> PackedEdge {
-        self.edges[idx]
+        self.edges()[idx]
     }
 
     /// The node owning flat entry `idx` — the inverse of the offsets
@@ -271,15 +340,16 @@ impl CsrGraph {
     /// worker walks forward linearly.
     #[inline]
     pub fn owner_of_entry(&self, idx: usize) -> u32 {
-        debug_assert!(idx < self.edges.len());
+        debug_assert!(idx < self.entry_count());
         // partition_point: first u with offsets[u+1] > idx
-        (self.offsets.partition_point(|&o| o <= idx) - 1) as u32
+        (self.offsets().partition_point(|&o| o <= idx) - 1) as u32
     }
 
     /// Undirected degree (number of distinct neighbors).
     #[inline]
     pub fn degree(&self, u: u32) -> usize {
-        self.offsets[u as usize + 1] - self.offsets[u as usize]
+        let offsets = self.offsets();
+        offsets[u as usize + 1] - offsets[u as usize]
     }
 
     /// Out-degree (arcs leaving `u`).
@@ -305,7 +375,7 @@ impl CsrGraph {
     /// True if the arc `u -> v` exists.
     #[inline]
     pub fn has_arc(&self, u: u32, v: u32) -> bool {
-        self.find_entry(u, v).map_or(false, |e| e.dir().has_out())
+        self.find_entry(u, v).is_some_and(|e| e.dir().has_out())
     }
 
     /// True if `v` is a neighbor of `u` in either direction (the paper's
@@ -350,13 +420,15 @@ impl CsrGraph {
     /// unchanged; asymmetric entries flip direction. O(m).
     pub fn transpose(&self) -> CsrGraph {
         let edges = self
-            .edges
+            .edges()
             .iter()
             .map(|e| PackedEdge::new(e.nbr(), e.dir().reversed()))
             .collect();
         CsrGraph {
-            offsets: self.offsets.clone(),
-            edges,
+            storage: CsrStorage::Owned {
+                offsets: self.offsets().to_vec(),
+                edges,
+            },
             arc_count: self.arc_count,
         }
     }
@@ -372,10 +444,11 @@ impl CsrGraph {
         a
     }
 
-    /// Approximate resident memory of the structure in bytes.
+    /// Approximate resident *heap* memory of the structure in bytes
+    /// (mapped graphs report only their bookkeeping — file pages are
+    /// shared, evictable cache).
     pub fn memory_bytes(&self) -> usize {
-        self.offsets.len() * std::mem::size_of::<usize>()
-            + self.edges.len() * std::mem::size_of::<PackedEdge>()
+        self.storage.heap_bytes()
     }
 }
 
@@ -489,9 +562,9 @@ mod tests {
         let g = triangle();
         let a = g.to_dense_f32();
         assert_eq!(a.len(), 9);
-        assert_eq!(a[0 * 3 + 1], 1.0);
-        assert_eq!(a[1 * 3 + 2], 1.0);
-        assert_eq!(a[2 * 3 + 0], 1.0);
+        assert_eq!(a[1], 1.0); // 0 -> 1
+        assert_eq!(a[5], 1.0); // 1 -> 2
+        assert_eq!(a[6], 1.0); // 2 -> 0
         assert_eq!(a.iter().sum::<f32>(), 3.0);
     }
 
@@ -521,11 +594,22 @@ mod tests {
     #[test]
     fn validate_rejects_broken_symmetry() {
         // hand-build an asymmetric structure: 0 lists 1, but 1's row empty
-        let g = CsrGraph {
-            offsets: vec![0, 1, 1],
-            edges: vec![PackedEdge::new(1, Dir::Out)],
-            arc_count: 1,
-        };
+        let g = CsrGraph::from_storage_unchecked(
+            CsrStorage::Owned {
+                offsets: vec![0, 1, 1],
+                edges: vec![PackedEdge::new(1, Dir::Out)],
+            },
+            1,
+        );
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn clone_and_eq_are_structural() {
+        let g = triangle();
+        let h = g.clone();
+        assert_eq!(g, h);
+        assert!(!h.is_mapped());
+        assert_eq!(g.storage().offsets(), h.storage().offsets());
     }
 }

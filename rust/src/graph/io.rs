@@ -1,16 +1,57 @@
-//! Graph I/O: whitespace edge-list text (the format the paper's datasets
-//! ship in — SNAP/LAW style) and a compact binary format for fast reload
-//! of generated workloads.
+//! Graph I/O.
+//!
+//! Three on-disk representations, slowest to fastest to load:
+//!
+//! * **Edge-list text** (`u v` per line, `#`/`%` comments) — the format
+//!   the paper's datasets ship in (SNAP/LAW style). Parsed serially
+//!   ([`read_edge_list`]) or with a chunked parallel parser + parallel
+//!   CSR build ([`read_edge_list_parallel`]).
+//! * **v1 binary** (`TRIADIC1`) — the legacy streamed CSR dump; loads
+//!   without re-sorting but still allocates and copies everything.
+//! * **v2 binary** (`TRIADIC2`) — the zero-copy mmap layout: a 64-byte
+//!   header, then the offsets section (`n + 1` × `u64` LE) and the
+//!   packed-edge section (`m` × `u32` LE), each 64-byte aligned, with an
+//!   FNV-1a checksum over both sections. [`load_mmap_file`] maps the
+//!   file and serves the census engines directly from the page cache —
+//!   no parsing, no allocation proportional to the graph.
+//!
+//! ```text
+//! v2 header (64 bytes, little-endian):
+//!   0.. 8  magic "TRIADIC2"       32..40  arc_count u64
+//!   8..12  version u32 (= 1)      40..48  offsets section offset u64
+//!  12..16  flags u32 (reserved)   48..56  edges section offset u64
+//!  16..24  node count n u64       56..64  FNV-1a-64 of both sections
+//!  24..32  entry count m u64
+//! ```
+//!
+//! [`load_auto`] sniffs the magic and picks the right reader.
 
 use std::fs::File;
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::builder::GraphBuilder;
 use super::csr::{CsrGraph, PackedEdge};
+use super::mmap::MmapFile;
+use super::storage::{CsrStorage, MappedCsr};
 
-/// Magic + version for the binary format.
+/// Magic + version for the legacy (v1) binary format.
 const MAGIC: &[u8; 8] = b"TRIADIC1";
+
+/// Magic for the zero-copy (v2) binary format.
+pub const MAGIC_V2: &[u8; 8] = b"TRIADIC2";
+/// Current v2 layout version.
+const V2_VERSION: u32 = 1;
+/// Fixed v2 header size.
+const V2_HEADER_BYTES: usize = 64;
+/// Section alignment (cache-line) — the mmap base is page-aligned, so
+/// this guarantees every section pointer is at least 8-byte aligned.
+const V2_SECTION_ALIGN: u64 = 64;
+
+fn bad(m: impl std::fmt::Display) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, m.to_string())
+}
 
 /// Parse a whitespace/tab separated edge list (`u v` per line, `#`
 /// comments allowed, ids arbitrary u32 — the max id defines `n`).
@@ -56,6 +97,180 @@ pub fn read_edge_list_file<P: AsRef<Path>>(path: P) -> io::Result<CsrGraph> {
     read_edge_list(BufReader::new(File::open(path)?))
 }
 
+/// Per-worker accumulator of the parallel edge-list parser.
+#[derive(Default)]
+struct ParseAcc {
+    arcs: Vec<(u32, u32)>,
+    max_id: u32,
+    /// Earliest error seen, keyed by byte offset for determinism.
+    err: Option<(usize, String)>,
+}
+
+/// Parse an edge list held in memory with `threads` workers: the byte
+/// range is split at newline boundaries into dynamically claimed
+/// chunks, each parsed into thread-local arc vectors, then assembled
+/// with the parallel CSR builder. Produces the same graph as
+/// [`read_edge_list`] on the same ASCII bytes (arc order never matters
+/// — the builder sorts and OR-merges duplicates); the only divergence
+/// is that non-ASCII Unicode whitespace is not treated as a separator
+/// here.
+pub fn read_edge_list_parallel(bytes: &[u8], threads: usize) -> io::Result<CsrGraph> {
+    let threads = threads.max(1);
+    // below ~64 KiB the spawn + merge overhead dominates
+    if threads == 1 || bytes.len() < (1 << 16) {
+        return read_edge_list(bytes);
+    }
+
+    // chunk boundaries snapped forward to newline edges
+    let nchunks = threads * 4;
+    let mut bounds: Vec<usize> = Vec::with_capacity(nchunks + 1);
+    bounds.push(0);
+    for i in 1..nchunks {
+        let guess = bytes.len() * i / nchunks;
+        let snapped = match bytes[guess..].iter().position(|&b| b == b'\n') {
+            Some(p) => guess + p + 1,
+            None => bytes.len(),
+        };
+        if snapped > *bounds.last().unwrap() && snapped < bytes.len() {
+            bounds.push(snapped);
+        }
+    }
+    bounds.push(bytes.len());
+
+    let cursor = AtomicUsize::new(0);
+    let mut parts: Vec<ParseAcc> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let cursor = &cursor;
+            let bounds = &bounds;
+            handles.push(s.spawn(move || {
+                let mut acc = ParseAcc::default();
+                loop {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    if k + 1 >= bounds.len() {
+                        break;
+                    }
+                    parse_chunk(&bytes[bounds[k]..bounds[k + 1]], bounds[k], &mut acc);
+                }
+                acc
+            }));
+        }
+        for h in handles {
+            parts.push(h.join().expect("edge-list parser thread panicked"));
+        }
+    });
+
+    // surface the earliest parse error (byte offset keeps it stable
+    // across thread schedules)
+    let mut first_err: Option<(usize, String)> = None;
+    for p in &parts {
+        if let Some((off, msg)) = &p.err {
+            let better = match &first_err {
+                None => true,
+                Some((o, _)) => off < o,
+            };
+            if better {
+                first_err = Some((*off, msg.clone()));
+            }
+        }
+    }
+    if let Some((off, msg)) = first_err {
+        return Err(bad(format!("byte offset {off}: {msg}")));
+    }
+
+    let total: usize = parts.iter().map(|p| p.arcs.len()).sum();
+    let max_id = parts.iter().map(|p| p.max_id).max().unwrap_or(0);
+    let n = if total == 0 { 0 } else { max_id as usize + 1 };
+    let mut b = GraphBuilder::new(n);
+    for p in parts {
+        b.extend(p.arcs);
+    }
+    Ok(b.build_parallel(threads))
+}
+
+/// Read an edge-list file with the parallel parser.
+pub fn read_edge_list_file_parallel<P: AsRef<Path>>(
+    path: P,
+    threads: usize,
+) -> io::Result<CsrGraph> {
+    let bytes = std::fs::read(path)?;
+    read_edge_list_parallel(&bytes, threads)
+}
+
+/// Parse one newline-delimited chunk; `base` is the chunk's byte offset
+/// in the whole input (error reporting only).
+fn parse_chunk(chunk: &[u8], base: usize, acc: &mut ParseAcc) {
+    let mut line_start = 0usize;
+    while line_start < chunk.len() {
+        let line_end = chunk[line_start..]
+            .iter()
+            .position(|&b| b == b'\n')
+            .map(|p| line_start + p)
+            .unwrap_or(chunk.len());
+        if let Err(msg) = parse_line(&chunk[line_start..line_end], acc) {
+            let better = match &acc.err {
+                None => true,
+                Some((o, _)) => base + line_start < *o,
+            };
+            if better {
+                acc.err = Some((base + line_start, msg));
+            }
+        }
+        line_start = line_end + 1;
+    }
+}
+
+/// Parse one text line into `acc` (same grammar as [`read_edge_list`]:
+/// two u32 tokens, trailing tokens ignored, `#`/`%` comments skipped).
+fn parse_line(line: &[u8], acc: &mut ParseAcc) -> Result<(), String> {
+    let t = line.trim_ascii();
+    if t.is_empty() || t[0] == b'#' || t[0] == b'%' {
+        return Ok(());
+    }
+    let (u, rest) = parse_u32_token(t)?;
+    let rest = skip_ascii_ws(rest);
+    let (v, _) = parse_u32_token(rest)?;
+    acc.arcs.push((u, v));
+    acc.max_id = acc.max_id.max(u).max(v);
+    Ok(())
+}
+
+#[inline]
+fn skip_ascii_ws(b: &[u8]) -> &[u8] {
+    let mut i = 0;
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    &b[i..]
+}
+
+/// Parse a decimal u32 token (optional leading `+`, matching
+/// `str::parse::<u32>`) that must terminate at whitespace or the end of
+/// the slice; returns the value and the remaining bytes.
+fn parse_u32_token(b: &[u8]) -> Result<(u32, &[u8]), String> {
+    let mut i = 0usize;
+    if i < b.len() && b[i] == b'+' {
+        i += 1;
+    }
+    let digits_start = i;
+    let mut val: u64 = 0;
+    while i < b.len() && b[i].is_ascii_digit() {
+        val = val * 10 + (b[i] - b'0') as u64;
+        if val > u32::MAX as u64 {
+            return Err("id exceeds u32".to_string());
+        }
+        i += 1;
+    }
+    if i == digits_start {
+        return Err("expected two ids".to_string());
+    }
+    if i < b.len() && !b[i].is_ascii_whitespace() {
+        return Err(format!("bad id: trailing byte {:?}", b[i] as char));
+    }
+    Ok((val as u32, &b[i..]))
+}
+
 /// Write a graph as a directed edge list (one arc per line).
 pub fn write_edge_list<W: Write>(g: &CsrGraph, mut w: W) -> io::Result<()> {
     writeln!(w, "# triadic edge list: {} nodes {} arcs", g.node_count(), g.arc_count())?;
@@ -70,8 +285,8 @@ pub fn write_edge_list_file<P: AsRef<Path>>(g: &CsrGraph, path: P) -> io::Result
     write_edge_list(g, BufWriter::new(File::create(path)?))
 }
 
-/// Serialize the CSR structure verbatim (offsets + packed edges) —
-/// loads back without rebuilding/sorting.
+/// Serialize the CSR structure verbatim (offsets + packed edges) in the
+/// legacy v1 stream — loads back without rebuilding/sorting.
 pub fn write_binary<W: Write>(g: &CsrGraph, mut w: W) -> io::Result<()> {
     w.write_all(MAGIC)?;
     let n = g.node_count() as u64;
@@ -90,9 +305,8 @@ pub fn write_binary<W: Write>(g: &CsrGraph, mut w: W) -> io::Result<()> {
     Ok(())
 }
 
-/// Deserialize the binary format.
+/// Deserialize the v1 binary format.
 pub fn read_binary<R: Read>(mut r: R) -> io::Result<CsrGraph> {
-    let bad = |m: &str| io::Error::new(io::ErrorKind::InvalidData, m.to_string());
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -123,18 +337,321 @@ pub fn read_binary<R: Read>(mut r: R) -> io::Result<CsrGraph> {
     }
     let g = CsrGraph::from_parts(offsets, edges, arc_count);
     g.validate()
-        .map_err(|e| bad(&format!("invalid graph: {e}")))?;
+        .map_err(|e| bad(format!("invalid graph: {e}")))?;
     Ok(g)
 }
 
-/// Write the binary format to a file.
+/// Write the v1 binary format to a file.
 pub fn write_binary_file<P: AsRef<Path>>(g: &CsrGraph, path: P) -> io::Result<()> {
-    write_binary(g, BufWriter::new(File::create(path)?))
+    let mut w = BufWriter::new(File::create(path)?);
+    write_binary(g, &mut w)?;
+    w.flush()
 }
 
-/// Read the binary format from a file.
+/// Read the v1 binary format from a file.
 pub fn read_binary_file<P: AsRef<Path>>(path: P) -> io::Result<CsrGraph> {
     read_binary(BufReader::new(File::open(path)?))
+}
+
+// ---------------------------------------------------------------------
+// v2: the zero-copy mmap layout
+// ---------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streamable FNV-1a-64 step over a byte chunk.
+fn fnv1a64(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[inline]
+fn align_up(x: u64, align: u64) -> u64 {
+    x.div_ceil(align) * align
+}
+
+/// Parsed + bounds-checked v2 header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct V2Header {
+    pub n: usize,
+    pub m: usize,
+    pub arc_count: u64,
+    pub offsets_off: usize,
+    pub edges_off: usize,
+    pub checksum: u64,
+}
+
+/// Section placement for a graph of `n` nodes / `m` entries.
+fn v2_layout(n: u64, m: u64) -> (u64, u64, u64) {
+    let offsets_off = V2_HEADER_BYTES as u64;
+    let edges_off = align_up(offsets_off + (n + 1) * 8, V2_SECTION_ALIGN);
+    let file_len = edges_off + m * 4;
+    (offsets_off, edges_off, file_len)
+}
+
+/// Serialize a graph in the v2 zero-copy layout.
+///
+/// The checksum covers header bytes `0..56` (everything but the
+/// checksum field itself) plus every byte from the header's end to the
+/// end of the edges section — so any flipped bit in metadata, offsets,
+/// alignment padding or edges fails verification.
+pub fn write_binary_v2<W: Write>(g: &CsrGraph, mut w: W) -> io::Result<()> {
+    const CHUNK: usize = 1 << 16;
+    let n = g.node_count() as u64;
+    let m = g.entry_count() as u64;
+    let (offsets_off, edges_off, _) = v2_layout(n, m);
+    let pad = (edges_off - (offsets_off + (n + 1) * 8)) as usize;
+
+    // header (checksum filled below)
+    let mut header = [0u8; V2_HEADER_BYTES];
+    header[0..8].copy_from_slice(MAGIC_V2);
+    header[8..12].copy_from_slice(&V2_VERSION.to_le_bytes());
+    // 12..16: flags, reserved zero
+    header[16..24].copy_from_slice(&n.to_le_bytes());
+    header[24..32].copy_from_slice(&m.to_le_bytes());
+    header[32..40].copy_from_slice(&g.arc_count().to_le_bytes());
+    header[40..48].copy_from_slice(&offsets_off.to_le_bytes());
+    header[48..56].copy_from_slice(&edges_off.to_le_bytes());
+
+    // pass 1: checksum (header prefix, offsets, padding, edges)
+    let mut h = fnv1a64(FNV_OFFSET, &header[0..56]);
+    let mut buf: Vec<u8> = Vec::with_capacity(CHUNK + 8);
+    for &o in g.offsets() {
+        buf.extend_from_slice(&(o as u64).to_le_bytes());
+        if buf.len() >= CHUNK {
+            h = fnv1a64(h, &buf);
+            buf.clear();
+        }
+    }
+    h = fnv1a64(h, &buf);
+    buf.clear();
+    h = fnv1a64(h, &vec![0u8; pad]);
+    for e in g.edges() {
+        buf.extend_from_slice(&e.0.to_le_bytes());
+        if buf.len() >= CHUNK {
+            h = fnv1a64(h, &buf);
+            buf.clear();
+        }
+    }
+    h = fnv1a64(h, &buf);
+    buf.clear();
+    header[56..64].copy_from_slice(&h.to_le_bytes());
+    w.write_all(&header)?;
+
+    // pass 2: offsets section, alignment padding, edges section
+    for &o in g.offsets() {
+        buf.extend_from_slice(&(o as u64).to_le_bytes());
+        if buf.len() >= CHUNK {
+            w.write_all(&buf)?;
+            buf.clear();
+        }
+    }
+    w.write_all(&buf)?;
+    buf.clear();
+    w.write_all(&vec![0u8; pad])?;
+    for e in g.edges() {
+        buf.extend_from_slice(&e.0.to_le_bytes());
+        if buf.len() >= CHUNK {
+            w.write_all(&buf)?;
+            buf.clear();
+        }
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Write the v2 format to a file.
+pub fn write_binary_v2_file<P: AsRef<Path>>(g: &CsrGraph, path: P) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    write_binary_v2(g, &mut w)?;
+    w.flush()
+}
+
+/// Parse and bounds-check the v2 header against the file bytes.
+pub fn parse_v2_header(bytes: &[u8]) -> io::Result<V2Header> {
+    if bytes.len() < V2_HEADER_BYTES {
+        return Err(bad("file shorter than the v2 header"));
+    }
+    if &bytes[0..8] != MAGIC_V2 {
+        return Err(bad("bad magic (not a TRIADIC2 file)"));
+    }
+    let u32_at = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    let version = u32_at(8);
+    if version != V2_VERSION {
+        return Err(bad(format!("unsupported v2 version {version}")));
+    }
+    let flags = u32_at(12);
+    if flags != 0 {
+        return Err(bad(format!("unknown v2 flags {flags:#x} (reserved, must be zero)")));
+    }
+    let n = u64_at(16);
+    let m = u64_at(24);
+    let arc_count = u64_at(32);
+    let offsets_off = u64_at(40);
+    let edges_off = u64_at(48);
+    let checksum = u64_at(56);
+
+    if n > CsrGraph::MAX_NODE_ID as u64 + 1 {
+        return Err(bad(format!("node count {n} exceeds the 30-bit id space")));
+    }
+    let file_len = bytes.len() as u64;
+    let offsets_bytes = (n + 1)
+        .checked_mul(8)
+        .ok_or_else(|| bad("offsets section size overflow"))?;
+    let edges_bytes = m
+        .checked_mul(4)
+        .ok_or_else(|| bad("edges section size overflow"))?;
+    let offsets_end = offsets_off
+        .checked_add(offsets_bytes)
+        .ok_or_else(|| bad("offsets section offset overflow"))?;
+    let edges_end = edges_off
+        .checked_add(edges_bytes)
+        .ok_or_else(|| bad("edges section offset overflow"))?;
+    if offsets_off < V2_HEADER_BYTES as u64 || offsets_off % 8 != 0 {
+        return Err(bad(format!("misaligned offsets section at {offsets_off}")));
+    }
+    if edges_off % 4 != 0 {
+        return Err(bad(format!("misaligned edges section at {edges_off}")));
+    }
+    if offsets_end > edges_off || edges_end > file_len {
+        return Err(bad(format!(
+            "sections exceed file bounds: offsets {offsets_off}..{offsets_end}, \
+             edges {edges_off}..{edges_end}, file {file_len} bytes"
+        )));
+    }
+    Ok(V2Header {
+        n: n as usize,
+        m: m as usize,
+        arc_count,
+        offsets_off: offsets_off as usize,
+        edges_off: edges_off as usize,
+        checksum,
+    })
+}
+
+/// Recompute the checksum (header prefix + everything between the
+/// header's end and the end of the edges section) and compare with the
+/// header's.
+fn verify_v2_checksum(bytes: &[u8], hdr: &V2Header) -> io::Result<()> {
+    let edges_end = hdr.edges_off + hdr.m * 4;
+    let h = fnv1a64(
+        fnv1a64(FNV_OFFSET, &bytes[0..56]),
+        &bytes[V2_HEADER_BYTES..edges_end],
+    );
+    if h != hdr.checksum {
+        return Err(bad(format!(
+            "checksum mismatch: header {:#018x}, computed {h:#018x}",
+            hdr.checksum
+        )));
+    }
+    Ok(())
+}
+
+/// O(n) structural sanity of an offsets slice against `m`.
+fn check_offsets(offsets: &[usize], m: usize) -> io::Result<()> {
+    if offsets.first() != Some(&0) {
+        return Err(bad("offsets[0] != 0"));
+    }
+    if offsets.last() != Some(&m) {
+        return Err(bad("offsets[n] != entry count"));
+    }
+    for w in offsets.windows(2) {
+        if w[0] > w[1] {
+            return Err(bad("offsets not monotone"));
+        }
+    }
+    Ok(())
+}
+
+/// Map a v2 file and serve the graph zero-copy (checksum + O(n)
+/// structure verification; see [`load_mmap_file_unverified`] for the
+/// trusted O(1) path).
+pub fn load_mmap_file<P: AsRef<Path>>(path: P) -> io::Result<CsrGraph> {
+    load_mmap_file_with(path, true)
+}
+
+/// Map a v2 file with header bounds checks only — O(1) regardless of
+/// graph size. For files this process (or another trusted run of it)
+/// wrote; a corrupted edge section will surface as wrong census output
+/// or an index panic, never undefined behaviour.
+pub fn load_mmap_file_unverified<P: AsRef<Path>>(path: P) -> io::Result<CsrGraph> {
+    load_mmap_file_with(path, false)
+}
+
+fn load_mmap_file_with<P: AsRef<Path>>(path: P, verify: bool) -> io::Result<CsrGraph> {
+    let map = MmapFile::open(path)?;
+    let hdr = parse_v2_header(map.bytes())?;
+    if verify {
+        verify_v2_checksum(map.bytes(), &hdr)?;
+    }
+    if cfg!(all(target_endian = "little", target_pointer_width = "64")) {
+        let mapped = MappedCsr::new(map, hdr.offsets_off, hdr.n, hdr.edges_off, hdr.m);
+        if verify {
+            check_offsets(mapped.offsets(), hdr.m)?;
+        }
+        Ok(CsrGraph::from_storage_unchecked(
+            CsrStorage::Mapped(mapped),
+            hdr.arc_count,
+        ))
+    } else {
+        // big-endian / 32-bit fallback: decode into owned storage
+        let bytes = map.bytes();
+        let mut offsets = Vec::with_capacity(hdr.n + 1);
+        for i in 0..=hdr.n {
+            let off = hdr.offsets_off + i * 8;
+            let v = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+            let v =
+                usize::try_from(v).map_err(|_| bad("offset exceeds this address space"))?;
+            offsets.push(v);
+        }
+        check_offsets(&offsets, hdr.m)?;
+        let mut edges = Vec::with_capacity(hdr.m);
+        for i in 0..hdr.m {
+            let off = hdr.edges_off + i * 4;
+            edges.push(PackedEdge(u32::from_le_bytes(
+                bytes[off..off + 4].try_into().unwrap(),
+            )));
+        }
+        Ok(CsrGraph::from_storage_unchecked(
+            CsrStorage::Owned { offsets, edges },
+            hdr.arc_count,
+        ))
+    }
+}
+
+/// Load a graph from any supported format, sniffing the magic bytes:
+/// `TRIADIC2` → zero-copy mmap (checksum-verified), `TRIADIC1` →
+/// legacy binary, anything else → edge-list text (parsed with
+/// `threads` workers).
+pub fn load_auto<P: AsRef<Path>>(path: P, threads: usize) -> io::Result<CsrGraph> {
+    load_auto_with(path, threads, true)
+}
+
+/// [`load_auto`] with the v2 verification policy explicit: pass
+/// `verify_v2 = false` to mmap trusted `TRIADIC2` files in O(1)
+/// (header bounds checks only, no whole-file checksum scan).
+pub fn load_auto_with<P: AsRef<Path>>(
+    path: P,
+    threads: usize,
+    verify_v2: bool,
+) -> io::Result<CsrGraph> {
+    let mut magic = [0u8; 8];
+    let sniffed = {
+        let mut f = File::open(&path)?;
+        f.read_exact(&mut magic).is_ok()
+    };
+    if sniffed && &magic == MAGIC_V2 {
+        load_mmap_file_with(path, verify_v2)
+    } else if sniffed && &magic == MAGIC {
+        read_binary_file(path)
+    } else {
+        read_edge_list_file_parallel(path, threads)
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +680,66 @@ mod tests {
     fn edge_list_rejects_garbage() {
         assert!(read_edge_list(BufReader::new("0 x\n".as_bytes())).is_err());
         assert!(read_edge_list(BufReader::new("0\n".as_bytes())).is_err());
+    }
+
+    #[test]
+    fn parallel_edge_list_matches_serial() {
+        let g = power_law(2_000, 2.2, 8.0, 9);
+        let mut buf = Vec::new();
+        write_edge_list(&g, &mut buf).unwrap();
+        let serial = read_edge_list(&buf[..]).unwrap();
+        for threads in [1usize, 2, 5, 8] {
+            let par = read_edge_list_parallel(&buf, threads).unwrap();
+            assert_eq!(par, serial, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_edge_list_rejects_garbage_anywhere() {
+        // force the parallel path with >64 KiB of valid lines plus one
+        // bad line in the middle
+        let mut buf = Vec::new();
+        for i in 0..20_000u32 {
+            buf.extend_from_slice(format!("{} {}\n", i % 97, (i + 1) % 97).as_bytes());
+        }
+        buf.extend_from_slice(b"12 oops\n");
+        for i in 0..20_000u32 {
+            buf.extend_from_slice(format!("{} {}\n", i % 89, (i + 2) % 89).as_bytes());
+        }
+        assert!(buf.len() > (1 << 16));
+        assert!(read_edge_list_parallel(&buf, 4).is_err());
+    }
+
+    #[test]
+    fn parallel_parser_grammar_matches_serial_quirks() {
+        // leading '+' (str::parse accepts it) and assorted ASCII
+        // whitespace separators must parse identically on both paths;
+        // pad with valid lines to force the parallel code path
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"+3 4\n0\x0c1\n7   8\n");
+        for i in 0..20_000u32 {
+            buf.extend_from_slice(format!("{} {}\n", i % 50, (i + 1) % 50).as_bytes());
+        }
+        assert!(buf.len() > (1 << 16));
+        let serial = read_edge_list(&buf[..]).unwrap();
+        let par = read_edge_list_parallel(&buf, 4).unwrap();
+        assert_eq!(par, serial);
+        assert!(par.has_arc(3, 4) && par.has_arc(0, 1) && par.has_arc(7, 8));
+    }
+
+    #[test]
+    fn parallel_edge_list_handles_comments_and_crlf() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"# header comment\r\n");
+        for i in 0..30_000u32 {
+            buf.extend_from_slice(format!("{}\t{}\r\n", i % 300, (i + 7) % 300).as_bytes());
+            if i % 1000 == 0 {
+                buf.extend_from_slice(b"% interleaved comment\n\n");
+            }
+        }
+        let serial = read_edge_list(&buf[..]).unwrap();
+        let par = read_edge_list_parallel(&buf, 3).unwrap();
+        assert_eq!(par, serial);
     }
 
     #[test]
@@ -199,5 +776,132 @@ mod tests {
         assert_eq!(read_binary_file(&p2).unwrap(), g);
         let _ = std::fs::remove_file(p1);
         let _ = std::fs::remove_file(p2);
+    }
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("triadic_io_v2_{name}.csr"))
+    }
+
+    #[test]
+    fn v2_round_trip_through_mmap() {
+        let g = power_law(800, 2.2, 7.0, 31);
+        let path = tmp_path("roundtrip");
+        write_binary_v2_file(&g, &path).unwrap();
+        let m = load_mmap_file(&path).unwrap();
+        assert_eq!(m, g);
+        assert!(m.validate().is_ok());
+        if cfg!(all(target_endian = "little", target_pointer_width = "64")) {
+            assert!(m.is_mapped());
+        }
+        let fast = load_mmap_file_unverified(&path).unwrap();
+        assert_eq!(fast, g);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn v2_layout_is_aligned() {
+        let g = power_law(100, 2.0, 4.0, 3);
+        let mut buf = Vec::new();
+        write_binary_v2(&g, &mut buf).unwrap();
+        let hdr = parse_v2_header(&buf).unwrap();
+        assert_eq!(hdr.offsets_off % 8, 0);
+        assert_eq!(hdr.edges_off % 64, 0);
+        assert_eq!(hdr.n, 100);
+        assert_eq!(buf.len(), hdr.edges_off + hdr.m * 4);
+    }
+
+    #[test]
+    fn v2_empty_graph_round_trips() {
+        for g in [CsrGraph::empty(0), CsrGraph::empty(17)] {
+            let path = tmp_path(&format!("empty{}", g.node_count()));
+            write_binary_v2_file(&g, &path).unwrap();
+            let m = load_mmap_file(&path).unwrap();
+            assert_eq!(m, g);
+            assert_eq!(m.entry_count(), 0);
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn v2_rejects_bad_magic_and_version() {
+        let g = named::cycle5();
+        let mut buf = Vec::new();
+        write_binary_v2(&g, &mut buf).unwrap();
+        let path = tmp_path("badmagic");
+
+        let mut broken = buf.clone();
+        broken[0] ^= 0xff;
+        std::fs::write(&path, &broken).unwrap();
+        assert!(load_mmap_file(&path).is_err());
+
+        let mut broken = buf.clone();
+        broken[8] = 0x7f; // absurd version
+        std::fs::write(&path, &broken).unwrap();
+        assert!(load_mmap_file(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn v2_rejects_truncation_and_corruption() {
+        let g = power_law(300, 2.1, 6.0, 8);
+        let mut buf = Vec::new();
+        write_binary_v2(&g, &mut buf).unwrap();
+        let path = tmp_path("corrupt");
+
+        // truncated mid-edges
+        std::fs::write(&path, &buf[..buf.len() - 5]).unwrap();
+        assert!(load_mmap_file(&path).is_err());
+
+        // truncated inside the header
+        std::fs::write(&path, &buf[..40]).unwrap();
+        assert!(load_mmap_file(&path).is_err());
+
+        // flipped byte inside the edge section → checksum mismatch
+        let mut broken = buf.clone();
+        let last = broken.len() - 3;
+        broken[last] ^= 0x55;
+        std::fs::write(&path, &broken).unwrap();
+        let err = load_mmap_file(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // flipped byte inside the offsets section
+        let mut broken = buf.clone();
+        broken[70] ^= 0x55;
+        std::fs::write(&path, &broken).unwrap();
+        assert!(load_mmap_file(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn v2_rejects_out_of_bounds_sections() {
+        let g = named::cycle5();
+        let mut buf = Vec::new();
+        write_binary_v2(&g, &mut buf).unwrap();
+        // claim far more entries than the file holds
+        let mut broken = buf.clone();
+        broken[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        let path = tmp_path("oob");
+        std::fs::write(&path, &broken).unwrap();
+        assert!(load_mmap_file(&path).is_err());
+        assert!(load_mmap_file_unverified(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn load_auto_sniffs_all_three_formats() {
+        let g = power_law(400, 2.3, 5.0, 12);
+        let dir = std::env::temp_dir();
+        let pt = dir.join("triadic_auto.txt");
+        let p1 = dir.join("triadic_auto.bin");
+        let p2 = dir.join("triadic_auto.csr");
+        write_edge_list_file(&g, &pt).unwrap();
+        write_binary_file(&g, &p1).unwrap();
+        write_binary_v2_file(&g, &p2).unwrap();
+        assert_eq!(load_auto(&pt, 2).unwrap(), g);
+        assert_eq!(load_auto(&p1, 2).unwrap(), g);
+        assert_eq!(load_auto(&p2, 2).unwrap(), g);
+        for p in [pt, p1, p2] {
+            let _ = std::fs::remove_file(p);
+        }
     }
 }

@@ -1,0 +1,234 @@
+//! Read-only memory-mapped file view (no external crates).
+//!
+//! The offline vendor set has no `memmap2`, so [`MmapFile`] talks to the
+//! platform `mmap`/`munmap` directly through a two-symbol FFI block on
+//! 64-bit Unix, and falls back to reading the file into an 8-byte
+//! aligned heap buffer everywhere else. Either way the bytes are exposed
+//! as one immutable `&[u8]` whose base pointer is at least 8-byte
+//! aligned, which is what the zero-copy CSR views require.
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// How the bytes of an [`MmapFile`] are backed.
+enum Backing {
+    /// A live `mmap(2)` mapping, unmapped on drop.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped { ptr: *const u8, len: usize },
+    /// Heap fallback: the file copied into an 8-byte aligned buffer.
+    /// `len` is the true byte length (the `Vec<u64>` is padded).
+    Heap { buf: Vec<u64>, len: usize },
+}
+
+/// An immutable byte view of a whole file.
+///
+/// The mapping is read-only and never resized, so sharing the view
+/// across threads is sound.
+pub struct MmapFile {
+    backing: Backing,
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE (or an owned heap
+// buffer) and is never mutated after construction.
+unsafe impl Send for MmapFile {}
+unsafe impl Sync for MmapFile {}
+
+impl MmapFile {
+    /// Map (or read) `path` in its entirety. Zero-length files are
+    /// rejected — every format served through this type has a non-empty
+    /// fixed header.
+    pub fn open<P: AsRef<Path>>(path: P) -> io::Result<MmapFile> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "cannot map an empty file",
+            ));
+        }
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "file too large for this address space",
+            ));
+        }
+        MmapFile::from_file(&file, len as usize)
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn from_file(file: &File, len: usize) -> io::Result<MmapFile> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr.is_null() || ptr as usize == usize::MAX {
+            // e.g. a filesystem without mmap support: degrade to a copy
+            return Self::read_to_heap(file, len);
+        }
+        Ok(MmapFile {
+            backing: Backing::Mapped {
+                ptr: ptr as *const u8,
+                len,
+            },
+        })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    fn from_file(file: &File, len: usize) -> io::Result<MmapFile> {
+        Self::read_to_heap(file, len)
+    }
+
+    /// Portable fallback: copy the file into an aligned heap buffer.
+    fn read_to_heap(file: &File, len: usize) -> io::Result<MmapFile> {
+        use std::io::Read;
+        let words = len.div_ceil(8);
+        let mut buf = vec![0u64; words];
+        // view the u64 buffer as bytes for the read
+        let bytes = unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+        let mut reader = io::BufReader::new(file);
+        reader.read_exact(bytes)?;
+        Ok(MmapFile {
+            backing: Backing::Heap { buf, len },
+        })
+    }
+
+    /// Base pointer of the view (at least 8-byte aligned).
+    #[inline]
+    pub fn as_ptr(&self) -> *const u8 {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { ptr, .. } => *ptr,
+            Backing::Heap { buf, .. } => buf.as_ptr() as *const u8,
+        }
+    }
+
+    /// Byte length of the view.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { len, .. } => *len,
+            Backing::Heap { len, .. } => *len,
+        }
+    }
+
+    /// True if the view is empty (never: `open` rejects empty files).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The whole view as a byte slice.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.as_ptr(), self.len()) }
+    }
+
+    /// True if this view is an OS mapping (false: heap fallback copy).
+    pub fn is_os_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { .. } => true,
+            Backing::Heap { .. } => false,
+        }
+    }
+}
+
+impl Drop for MmapFile {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Backing::Mapped { ptr, len } = &self.backing {
+            unsafe {
+                sys::munmap(*ptr as *mut std::ffi::c_void, *len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MmapFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapFile")
+            .field("len", &self.len())
+            .field("os_mapped", &self.is_os_mapped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!("triadic_mmap_{name}"));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
+        let path = tmp("contents", &data);
+        let map = MmapFile::open(&path).unwrap();
+        assert_eq!(map.len(), 5000);
+        assert_eq!(map.bytes(), &data[..]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn base_pointer_is_aligned() {
+        let path = tmp("align", &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let map = MmapFile::open(&path).unwrap();
+        assert_eq!(map.as_ptr() as usize % 8, 0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_empty_and_missing() {
+        let path = tmp("empty", &[]);
+        assert!(MmapFile::open(&path).is_err());
+        let _ = std::fs::remove_file(path);
+        assert!(MmapFile::open("/nonexistent/triadic").is_err());
+    }
+
+    #[test]
+    fn heap_fallback_matches() {
+        let data = b"zero-copy csr sections".repeat(100);
+        let path = tmp("heap", &data);
+        let file = File::open(&path).unwrap();
+        let map = MmapFile::read_to_heap(&file, data.len()).unwrap();
+        assert!(!map.is_os_mapped());
+        assert_eq!(map.bytes(), &data[..]);
+        assert_eq!(map.as_ptr() as usize % 8, 0);
+        let _ = std::fs::remove_file(path);
+    }
+}

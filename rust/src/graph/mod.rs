@@ -8,8 +8,12 @@ pub mod csr;
 pub mod degree;
 pub mod generators;
 pub mod io;
+pub mod mmap;
+pub mod storage;
 
 pub use builder::GraphBuilder;
 pub use csr::{CsrGraph, Dir, DyadType, PackedEdge};
 pub use degree::{DegreeStats, OutDegreeHistogram};
 pub use generators::{named, GraphSpec};
+pub use mmap::MmapFile;
+pub use storage::{CsrStorage, MappedCsr};

@@ -1,0 +1,199 @@
+//! Storage backends for the CSR hot arrays.
+//!
+//! The census engines only ever see two slices — the offsets array and
+//! the packed-edge array — so [`CsrStorage`] abstracts where those
+//! slices live:
+//!
+//! * [`CsrStorage::Owned`] — freshly built `Vec`s (the ingest path);
+//! * [`CsrStorage::Mapped`] — windows into a memory-mapped v2 binary
+//!   file ([`crate::graph::io`]'s `TRIADIC2` layout), giving O(1) load
+//!   of multi-GB graphs with zero parsing and zero copying.
+//!
+//! Zero-copy mapping reinterprets the on-disk little-endian `u64`
+//! offsets / `u32` packed edges in place, so it is only constructed on
+//! little-endian 64-bit targets (the loader falls back to an owned
+//! decode elsewhere). Section alignment is guaranteed by the format
+//! (64-byte aligned sections over an 8-byte aligned base).
+
+use super::csr::PackedEdge;
+use super::mmap::MmapFile;
+
+/// Where a graph's offsets and packed edges live.
+pub enum CsrStorage {
+    /// Heap-owned arrays (built by the ingest pipeline).
+    Owned {
+        offsets: Vec<usize>,
+        edges: Vec<PackedEdge>,
+    },
+    /// Zero-copy windows into a mapped v2 binary file.
+    Mapped(MappedCsr),
+}
+
+impl CsrStorage {
+    /// The offsets slice (`n + 1` entries).
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        match self {
+            CsrStorage::Owned { offsets, .. } => offsets,
+            CsrStorage::Mapped(m) => m.offsets(),
+        }
+    }
+
+    /// The packed-edge slice (`m` entries).
+    #[inline]
+    pub fn edges(&self) -> &[PackedEdge] {
+        match self {
+            CsrStorage::Owned { edges, .. } => edges,
+            CsrStorage::Mapped(m) => m.edges(),
+        }
+    }
+
+    /// True for file-mapped storage.
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, CsrStorage::Mapped(_))
+    }
+
+    /// Heap bytes owned by this storage (a mapped graph owns almost
+    /// nothing — the file pages are shared, evictable cache).
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            CsrStorage::Owned { offsets, edges } => {
+                offsets.len() * std::mem::size_of::<usize>()
+                    + edges.len() * std::mem::size_of::<PackedEdge>()
+            }
+            CsrStorage::Mapped(_) => std::mem::size_of::<MappedCsr>(),
+        }
+    }
+
+    /// Deep-copy into owned storage (mapped graphs materialize).
+    pub fn to_owned_storage(&self) -> CsrStorage {
+        CsrStorage::Owned {
+            offsets: self.offsets().to_vec(),
+            edges: self.edges().to_vec(),
+        }
+    }
+}
+
+/// Zero-copy CSR windows over a mapped v2 file.
+///
+/// Invariants (established by the loader, which validates the header
+/// before construction):
+///
+/// * `offsets_off` and `edges_off` are in-bounds, 8-byte aligned
+///   section offsets with room for `nodes + 1` `u64`s and `entries`
+///   `u32`s respectively;
+/// * the base pointer of `map` is at least 8-byte aligned.
+pub struct MappedCsr {
+    map: MmapFile,
+    offsets_off: usize,
+    nodes: usize,
+    edges_off: usize,
+    entries: usize,
+}
+
+impl MappedCsr {
+    /// Wrap validated section windows of a mapped file.
+    ///
+    /// Callers (the v2 loader) must have bounds- and alignment-checked
+    /// the sections; this re-asserts the cheap invariants.
+    pub(crate) fn new(
+        map: MmapFile,
+        offsets_off: usize,
+        nodes: usize,
+        edges_off: usize,
+        entries: usize,
+    ) -> MappedCsr {
+        assert!(
+            cfg!(all(target_endian = "little", target_pointer_width = "64")),
+            "zero-copy CSR mapping requires a little-endian 64-bit target"
+        );
+        assert!(offsets_off % 8 == 0 && edges_off % 4 == 0, "misaligned sections");
+        assert!(
+            offsets_off + (nodes + 1) * 8 <= map.len() && edges_off + entries * 4 <= map.len(),
+            "sections out of bounds"
+        );
+        MappedCsr {
+            map,
+            offsets_off,
+            nodes,
+            edges_off,
+            entries,
+        }
+    }
+
+    /// The offsets section viewed as `&[usize]` (valid: LE 64-bit
+    /// target, 8-byte aligned base + 8-byte aligned section offset).
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.as_ptr().add(self.offsets_off) as *const usize,
+                self.nodes + 1,
+            )
+        }
+    }
+
+    /// The edges section viewed as `&[PackedEdge]` (`repr(transparent)`
+    /// over `u32`).
+    #[inline]
+    pub fn edges(&self) -> &[PackedEdge] {
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.as_ptr().add(self.edges_off) as *const PackedEdge,
+                self.entries,
+            )
+        }
+    }
+
+    /// Whether the backing view is a real OS mapping.
+    pub fn is_os_mapped(&self) -> bool {
+        self.map.is_os_mapped()
+    }
+}
+
+impl std::fmt::Debug for CsrStorage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CsrStorage::Owned { offsets, edges } => f
+                .debug_struct("Owned")
+                .field("nodes", &offsets.len().saturating_sub(1))
+                .field("entries", &edges.len())
+                .finish(),
+            CsrStorage::Mapped(m) => f
+                .debug_struct("Mapped")
+                .field("nodes", &m.nodes)
+                .field("entries", &m.entries)
+                .field("os_mapped", &m.is_os_mapped())
+                .finish(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_accessors_round_trip() {
+        let s = CsrStorage::Owned {
+            offsets: vec![0, 1, 2],
+            edges: vec![PackedEdge(0b101), PackedEdge(0b110)],
+        };
+        assert_eq!(s.offsets(), &[0, 1, 2]);
+        assert_eq!(s.edges().len(), 2);
+        assert!(!s.is_mapped());
+        assert!(s.heap_bytes() > 0);
+    }
+
+    #[test]
+    fn to_owned_copies() {
+        let s = CsrStorage::Owned {
+            offsets: vec![0, 2],
+            edges: vec![PackedEdge(0b101), PackedEdge(0b111)],
+        };
+        let t = s.to_owned_storage();
+        assert_eq!(s.offsets(), t.offsets());
+        assert_eq!(s.edges(), t.edges());
+    }
+}

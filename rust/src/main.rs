@@ -6,23 +6,29 @@
 //!                through the coordinator (sparse engine or dense AOT
 //!                backend, routed automatically).
 //! * `generate` — write a synthetic workload graph to disk.
+//! * `convert`  — re-encode a graph file (edge list / v1 binary) into the
+//!                zero-copy v2 mmap format.
+//! * `smoke`    — CI perf smoke: generate a power-law graph, run the
+//!                parallel census, cross-check against the merged serial
+//!                engine and the mmap round-trip, print timings.
 //! * `figures`  — regenerate the paper's evaluation figures (Figs 6–13 +
 //!                the scheduling study) as TSV tables.
 //! * `simulate` — sweep one machine model over processor counts.
 //! * `monitor`  — run the Fig 3/4 security monitor on synthetic traffic.
 //! * `serve`    — start the coordinator and serve census requests from
-//!                stdin (one edge-list file path per line).
+//!                stdin (one graph file path per line; v2 files are
+//!                memory-mapped and cached).
 
 use std::io::BufRead;
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
-
 use triadic::analysis::{builtin_patterns, census_series, MonitorConfig, TriadMonitor};
 use triadic::analysis::{TrafficGenerator, TrafficScenario};
-use triadic::census::{census_parallel, Accumulation, ParallelConfig};
+use triadic::bail;
+use triadic::census::{census_parallel, merged, Accumulation, ParallelConfig};
 use triadic::config::{graph_spec_from, Args};
 use triadic::coordinator::{Coordinator, CoordinatorConfig};
+use triadic::error::{Context, Error, Result};
 use triadic::figures::{self, Scale};
 use triadic::graph::{degree, io};
 use triadic::sched::Policy;
@@ -38,13 +44,15 @@ USAGE: repro <command> [flags]
 COMMANDS
   census    --graph patents|orkut|web [--nodes N] [--seed S] [--input FILE]
             [--threads T] [--policy static|dynamic|guided[:chunk]]
-            [--backend auto|sparse] [--artifacts DIR]
-  generate  --graph ... --out FILE [--format txt|bin]
+            [--backend auto|sparse] [--artifacts DIR] [--mmap]
+  generate  --graph ... --out FILE [--format txt|bin|v2]
+  convert   --input FILE --out FILE [--threads T] [--verify]
+  smoke     [--nodes N] [--threads T] [--seed S]
   figures   [--fig 6|9|10|11|12|13|sched|all] [--scale small|full] [--out DIR]
   simulate  --machine xmt|xmt512|numa|superdome --graph ... [--procs 1,2,...]
   monitor   [--hosts N] [--rate EPS] [--duration S] [--window S]
             [--attack scan|ddos|relay|botnet|all]
-  serve     [--artifacts DIR] [--threads T]
+  serve     [--artifacts DIR] [--threads T] [--trusted]
 ";
 
 fn main() {
@@ -59,10 +67,12 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let args = Args::from_env().map_err(Error::msg)?;
     match args.command.as_deref() {
         Some("census") => cmd_census(&args),
         Some("generate") => cmd_generate(&args),
+        Some("convert") => cmd_convert(&args),
+        Some("smoke") => cmd_smoke(&args),
         Some("figures") => cmd_figures(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("monitor") => cmd_monitor(&args),
@@ -75,16 +85,33 @@ fn run() -> Result<()> {
     }
 }
 
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+}
+
 fn load_or_generate(args: &Args) -> Result<(String, triadic::graph::CsrGraph)> {
     if let Some(path) = args.opt_str("input") {
-        let g = if path.ends_with(".bin") {
-            io::read_binary_file(&path)?
+        let t0 = std::time::Instant::now();
+        // `--mmap` demands the O(1) zero-copy path (v2 files only);
+        // otherwise sniff the magic and use the fastest reader that fits.
+        let g = if args.flag("mmap") {
+            io::load_mmap_file_unverified(&path)
+                .with_context(|| format!("--mmap requires a v2 file (repro convert): {path}"))?
         } else {
-            io::read_edge_list_file(&path)?
+            io::load_auto(&path, default_threads())?
         };
+        eprintln!(
+            "loaded {path}: n={} arcs={} mapped={} in {:.3}s",
+            g.node_count(),
+            g.arc_count(),
+            g.is_mapped(),
+            t0.elapsed().as_secs_f64()
+        );
         Ok((path, g))
     } else {
-        let spec = graph_spec_from(args).map_err(anyhow::Error::msg)?;
+        let spec = graph_spec_from(args).map_err(Error::msg)?;
         eprintln!(
             "generating {} graph: n={} gamma={} avg_deg={}",
             spec.name, spec.n, spec.gamma, spec.avg_out_degree
@@ -95,16 +122,11 @@ fn load_or_generate(args: &Args) -> Result<(String, triadic::graph::CsrGraph)> {
 
 fn cmd_census(args: &Args) -> Result<()> {
     let (name, g) = load_or_generate(args)?;
-    let threads = args
-        .get_or(
-            "threads",
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
-        )
-        .map_err(anyhow::Error::msg)?;
-    let policy = Policy::parse(&args.str_or("policy", "dynamic")).map_err(anyhow::Error::msg)?;
+    let threads = args.get_or("threads", default_threads()).map_err(Error::msg)?;
+    let policy = Policy::parse(&args.str_or("policy", "dynamic")).map_err(Error::msg)?;
     let backend = args.str_or("backend", "auto");
     let artifacts = args.str_or("artifacts", "artifacts");
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
 
     let sparse = ParallelConfig {
         threads,
@@ -149,16 +171,17 @@ fn cmd_census(args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let spec = graph_spec_from(args).map_err(anyhow::Error::msg)?;
+    let spec = graph_spec_from(args).map_err(Error::msg)?;
     let out = args.opt_str("out").context("--out FILE required")?;
     let format = args.str_or("format", "txt");
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
 
     let g = spec.generate();
     match format.as_str() {
         "txt" => io::write_edge_list_file(&g, &out)?,
         "bin" => io::write_binary_file(&g, &out)?,
-        other => bail!("unknown format {other:?} (txt|bin)"),
+        "v2" | "csr" => io::write_binary_v2_file(&g, &out)?,
+        other => bail!("unknown format {other:?} (txt|bin|v2)"),
     }
     let gamma = degree::fit_out_degree_exponent(&g).unwrap_or(f64::NAN);
     println!(
@@ -171,11 +194,125 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Re-encode any readable graph file into the zero-copy v2 layout and
+/// prove the round trip: the written file is mapped back and compared
+/// structurally before reporting success.
+fn cmd_convert(args: &Args) -> Result<()> {
+    let input = args.opt_str("input").context("--input FILE required")?;
+    let out = args.opt_str("out").context("--out FILE required")?;
+    let threads = args.get_or("threads", default_threads()).map_err(Error::msg)?;
+    let verify = args.flag("verify");
+    args.reject_unknown().map_err(Error::msg)?;
+
+    let t0 = std::time::Instant::now();
+    let g = io::load_auto(&input, threads)?;
+    let t_load = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    io::write_binary_v2_file(&g, &out)?;
+    let t_write = t1.elapsed().as_secs_f64();
+
+    let t2 = std::time::Instant::now();
+    let mapped = io::load_mmap_file(&out)?;
+    let t_map = t2.elapsed().as_secs_f64();
+    if mapped.node_count() != g.node_count()
+        || mapped.entry_count() != g.entry_count()
+        || mapped.arc_count() != g.arc_count()
+    {
+        bail!("round-trip mismatch after convert — file {out} is not trustworthy");
+    }
+    if verify {
+        mapped.validate().map_err(Error::msg)?;
+        ensure_census_matches(&g, &mapped)?;
+    }
+    println!(
+        "converted {input} -> {out}: n={} arcs={} parse={t_load:.3}s write={t_write:.3}s \
+         mmap_load={t_map:.3}s",
+        g.node_count(),
+        g.arc_count()
+    );
+    Ok(())
+}
+
+fn ensure_census_matches(a: &triadic::graph::CsrGraph, b: &triadic::graph::CsrGraph) -> Result<()> {
+    let ca = merged::census(a);
+    let cb = merged::census(b);
+    if ca != cb {
+        bail!("census mismatch between in-memory and mapped graphs");
+    }
+    Ok(())
+}
+
+/// CI perf smoke: generate a power-law graph, census it on every path
+/// (parallel engine, serial merged oracle, mmap-loaded copy), assert
+/// exact agreement, and print timings so regressions show in job logs.
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let nodes = args.get_or("nodes", 100_000usize).map_err(Error::msg)?;
+    let threads = args.get_or("threads", default_threads()).map_err(Error::msg)?;
+    let seed = args.get_or("seed", 2012u64).map_err(Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
+
+    let t0 = std::time::Instant::now();
+    let g = triadic::graph::generators::power_law(nodes, 2.2, 8.0, seed);
+    let t_gen = t0.elapsed().as_secs_f64();
+    println!(
+        "smoke: n={} arcs={} dyads={} gen={t_gen:.3}s threads={threads}",
+        g.node_count(),
+        g.arc_count(),
+        g.dyad_count()
+    );
+
+    let cfg = ParallelConfig {
+        threads,
+        policy: Policy::dynamic_default(),
+        accumulation: Accumulation::Bank { slots: 64 },
+    };
+    let t1 = std::time::Instant::now();
+    let run = census_parallel(&g, &cfg);
+    let t_par = t1.elapsed().as_secs_f64();
+
+    let t2 = std::time::Instant::now();
+    let want = merged::census(&g);
+    let t_serial = t2.elapsed().as_secs_f64();
+    if run.census != want {
+        bail!("parallel census disagrees with merged serial census");
+    }
+
+    // mmap round trip: convert once, map, census again from the map
+    let path = std::env::temp_dir().join(format!("triadic_smoke_{seed}.csr"));
+    let t3 = std::time::Instant::now();
+    io::write_binary_v2_file(&g, &path)?;
+    let t_write = t3.elapsed().as_secs_f64();
+    let t4 = std::time::Instant::now();
+    let mapped = io::load_mmap_file_unverified(&path)?;
+    let t_map = t4.elapsed().as_secs_f64();
+    let t5 = std::time::Instant::now();
+    let mapped_run = census_parallel(&mapped, &cfg);
+    let t_mapped = t5.elapsed().as_secs_f64();
+    let _ = std::fs::remove_file(&path);
+    if mapped_run.census != want {
+        bail!("census over the mmap-loaded graph disagrees with the in-memory census");
+    }
+
+    println!(
+        "smoke timings: parallel={t_par:.3}s serial_merged={t_serial:.3}s \
+         v2_write={t_write:.3}s mmap_load={t_map:.6}s parallel_mapped={t_mapped:.3}s"
+    );
+    println!(
+        "smoke: imbalance={:.2} utilization={:.2} speedup_vs_serial={:.2}x",
+        run.stats.imbalance(),
+        run.stats.utilization(),
+        t_serial / t_par.max(1e-9)
+    );
+    println!("smoke OK: all census paths agree");
+    Ok(())
+}
+
 fn cmd_figures(args: &Args) -> Result<()> {
     let which = args.str_or("fig", "all");
-    let scale = Scale::parse(&args.str_or("scale", "small")).map_err(anyhow::Error::msg)?;
+    let scale = Scale::parse(&args.str_or("scale", "small")).map_err(Error::msg)?;
     let out_dir = args.opt_str("out");
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
 
     let figs: Vec<(&str, String)> = match which.as_str() {
         "all" => figures::all_figures(scale),
@@ -203,12 +340,12 @@ fn cmd_figures(args: &Args) -> Result<()> {
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let machine = args.str_or("machine", "xmt");
-    let spec = graph_spec_from(args).map_err(anyhow::Error::msg)?;
+    let spec = graph_spec_from(args).map_err(Error::msg)?;
     let procs = args
         .list_or("procs", &[1usize, 2, 4, 8, 16, 32, 64, 128])
-        .map_err(anyhow::Error::msg)?;
-    let policy = Policy::parse(&args.str_or("policy", "dynamic")).map_err(anyhow::Error::msg)?;
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+        .map_err(Error::msg)?;
+    let policy = Policy::parse(&args.str_or("policy", "dynamic")).map_err(Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
 
     let m: Box<dyn Machine> = match machine.as_str() {
         "xmt" => Box::new(XmtMachine::pnnl()),
@@ -237,12 +374,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_monitor(args: &Args) -> Result<()> {
-    let hosts = args.get_or("hosts", 400u64).map_err(anyhow::Error::msg)?;
-    let rate = args.get_or("rate", 120.0f64).map_err(anyhow::Error::msg)?;
-    let duration = args.get_or("duration", 60.0f64).map_err(anyhow::Error::msg)?;
-    let window = args.get_or("window", 1.0f64).map_err(anyhow::Error::msg)?;
+    let hosts = args.get_or("hosts", 400u64).map_err(Error::msg)?;
+    let rate = args.get_or("rate", 120.0f64).map_err(Error::msg)?;
+    let duration = args.get_or("duration", 60.0f64).map_err(Error::msg)?;
+    let window = args.get_or("window", 1.0f64).map_err(Error::msg)?;
     let attack = args.str_or("attack", "all");
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
 
     let mut gen = TrafficGenerator::background(hosts, rate, 2012);
     let quarter = duration / 4.0;
@@ -316,13 +453,9 @@ fn cmd_monitor(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
-    let threads = args
-        .get_or(
-            "threads",
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
-        )
-        .map_err(anyhow::Error::msg)?;
-    args.reject_unknown().map_err(anyhow::Error::msg)?;
+    let threads = args.get_or("threads", default_threads()).map_err(Error::msg)?;
+    let trusted = args.flag("trusted");
+    args.reject_unknown().map_err(Error::msg)?;
 
     let coord = Coordinator::start(CoordinatorConfig {
         artifacts_dir: Some(PathBuf::from(artifacts)),
@@ -330,10 +463,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             threads,
             ..ParallelConfig::default()
         },
+        trusted_mmap: trusted,
         ..CoordinatorConfig::default()
     })?;
     eprintln!(
-        "coordinator up (dense={}): send one edge-list path per line on stdin",
+        "coordinator up (dense={}): send one graph path per line on stdin \
+         (edge list, TRIADIC1 or mmap-served TRIADIC2)",
         coord.dense_enabled()
     );
     let stdin = std::io::stdin();
@@ -343,10 +478,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if path.is_empty() {
             continue;
         }
-        match io::read_edge_list_file(path)
-            .map_err(anyhow::Error::from)
-            .and_then(|g| coord.census(&g))
-        {
+        match coord.census_path(path) {
             Ok(out) => {
                 println!("# {path} route={:?} {:.3}s", out.route, out.seconds);
                 print!("{}", out.census.table());

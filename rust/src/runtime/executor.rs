@@ -1,15 +1,19 @@
 //! The PJRT executor: artifact discovery, one-time compilation, and the
 //! execute path used by the coordinator's dense backend.
+//!
+//! The PJRT bindings (`xla` crate) are not in the offline vendor set,
+//! so the real executor is feature-gated behind `xla` (off by default).
+//! The default build ships a stub with the identical API whose
+//! `load_dir` performs full manifest/artifact validation — preserving
+//! every failure mode the coordinator and the failure-injection tests
+//! depend on — and then reports that the dense backend is unavailable.
+//! The coordinator treats that as "run sparse-only" when no manifest
+//! exists, and as a loud startup error when artifacts are present but
+//! cannot be served.
 
-use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-
-use super::{dyad_tallies, padding_correction};
-use crate::census::{Census, TriadType};
-use crate::graph::CsrGraph;
+use crate::error::{Context, Result};
 
 /// Cumulative execution statistics of the dense backend.
 #[derive(Debug, Clone, Copy, Default)]
@@ -24,205 +28,282 @@ pub struct RuntimeStats {
     pub staging_seconds: f64,
 }
 
-/// A compiled dense-census executable for one fixed adjacency size.
-struct SizedExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    size: usize,
+/// Whether this build can actually execute dense artifacts.
+pub const DENSE_AVAILABLE: bool = cfg!(feature = "xla");
+
+/// Parse `<dir>/manifest.tsv` into `(size, artifact path)` rows,
+/// skipping unknown artifact kinds. Shared between the real executor
+/// and the stub so error behaviour is identical.
+fn read_manifest(dir: &Path) -> Result<Vec<(usize, PathBuf)>> {
+    let manifest = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&manifest)
+        .with_context(|| format!("reading {}; run `make artifacts` first", manifest.display()))?;
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut cols = line.split('\t');
+        let (kind, size, file) = match (cols.next(), cols.next(), cols.next()) {
+            (Some(k), Some(s), Some(f)) => (k, s, f),
+            _ => crate::bail!("malformed manifest row: {line:?}"),
+        };
+        if kind != "census_dense" {
+            continue; // future artifact kinds are ignored, not fatal
+        }
+        let size: usize = size
+            .parse()
+            .with_context(|| format!("bad size in {line:?}"))?;
+        rows.push((size, dir.join(file)));
+    }
+    if rows.is_empty() {
+        crate::bail!(
+            "manifest {} lists no census_dense artifacts",
+            manifest.display()
+        );
+    }
+    Ok(rows)
 }
 
-/// The dense census backend: a PJRT CPU client plus one compiled
-/// executable per artifact size. Construction compiles everything once;
-/// execution is allocation-light and Python-free.
-pub struct DenseCensusRuntime {
-    client: xla::PjRtClient,
-    by_size: BTreeMap<usize, SizedExecutable>,
-    stats: RuntimeStats,
-    dir: PathBuf,
+#[cfg(feature = "xla")]
+mod enabled {
+    //! Real PJRT path. Compiling this module requires vendoring the
+    //! `xla` crate (not in the offline set) and enabling the `xla`
+    //! feature.
+
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
+    use std::time::Instant;
+
+    use super::RuntimeStats;
+    use crate::bail;
+    use crate::error::{Context, Result};
+    use crate::census::{Census, TriadType};
+    use crate::graph::CsrGraph;
+    use crate::runtime::{dyad_tallies, padding_correction};
+
+    /// A compiled dense-census executable for one fixed adjacency size.
+    struct SizedExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        size: usize,
+    }
+
+    /// The dense census backend: a PJRT CPU client plus one compiled
+    /// executable per artifact size. Construction compiles everything
+    /// once; execution is allocation-light and Python-free.
+    pub struct DenseCensusRuntime {
+        client: xla::PjRtClient,
+        by_size: BTreeMap<usize, SizedExecutable>,
+        stats: RuntimeStats,
+        dir: PathBuf,
+    }
+
+    impl DenseCensusRuntime {
+        /// Load every artifact listed in `<dir>/manifest.tsv` and
+        /// compile it on a fresh PJRT CPU client.
+        pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<DenseCensusRuntime> {
+            let dir = dir.as_ref().to_path_buf();
+            let rows = super::read_manifest(&dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let mut by_size = BTreeMap::new();
+            for (size, path) in rows {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 artifact path")?,
+                )
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", path.display()))?;
+                by_size.insert(size, SizedExecutable { exe, size });
+            }
+            let compiled = by_size.len();
+            Ok(DenseCensusRuntime {
+                client,
+                by_size,
+                stats: RuntimeStats {
+                    compiled,
+                    ..RuntimeStats::default()
+                },
+                dir,
+            })
+        }
+
+        /// Artifact directory this runtime was loaded from.
+        pub fn artifact_dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// Available dense sizes, ascending.
+        pub fn sizes(&self) -> Vec<usize> {
+            self.by_size.keys().copied().collect()
+        }
+
+        /// Largest size this runtime can serve.
+        pub fn max_size(&self) -> usize {
+            *self.by_size.keys().last().unwrap()
+        }
+
+        /// The smallest artifact size that fits a graph of `n` nodes.
+        pub fn size_for(&self, n: usize) -> Option<usize> {
+            self.by_size.range(n..).next().map(|(&s, _)| s)
+        }
+
+        /// PJRT platform string (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Cumulative stats.
+        pub fn stats(&self) -> RuntimeStats {
+            self.stats
+        }
+
+        /// Compute the exact triad census of `g` on the dense AOT path:
+        /// pad the adjacency to the best-fitting artifact size, execute,
+        /// round to integers and undo the padding contribution.
+        pub fn census(&mut self, g: &CsrGraph) -> Result<Census> {
+            let n = g.node_count();
+            let size = self.size_for(n).with_context(|| {
+                format!("graph ({n} nodes) exceeds dense capacity {}", self.max_size())
+            })?;
+
+            let t0 = Instant::now();
+            // stage the padded adjacency
+            let mut a = vec![0f32; size * size];
+            for (u, v) in g.arcs() {
+                a[u as usize * size + v as usize] = 1.0;
+            }
+            let lit = xla::Literal::vec1(&a)
+                .reshape(&[size as i64, size as i64])
+                .context("reshaping adjacency literal")?;
+            self.stats.staging_seconds += t0.elapsed().as_secs_f64();
+
+            let t1 = Instant::now();
+            let sized = &self.by_size[&size];
+            debug_assert_eq!(sized.size, size);
+            let result = sized
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .context("PJRT execute")?[0][0]
+                .to_literal_sync()
+                .context("device->host literal")?;
+            self.stats.execute_seconds += t1.elapsed().as_secs_f64();
+            self.stats.executions += 1;
+
+            // lowered with return_tuple=True: unwrap the 1-tuple
+            let out = result.to_tuple1().context("unwrapping result tuple")?;
+            let values = out.to_vec::<f32>().context("reading census vector")?;
+            if values.len() != 16 {
+                bail!("artifact returned {} values, expected 16", values.len());
+            }
+
+            let mut padded = Census::zero();
+            for (i, &v) in values.iter().enumerate() {
+                let r = v.round();
+                if (v - r).abs() > 1e-3 || r < 0.0 {
+                    bail!("non-integral census component {i}: {v}");
+                }
+                padded.add_count(TriadType::from_index(i + 1), r as u64);
+            }
+
+            let (mutual, asym) = dyad_tallies(g);
+            Ok(padding_correction(&padded, n, size - n, mutual, asym))
+        }
+    }
+
+    // PjRtLoadedExecutable and PjRtClient wrap C++ objects behind
+    // pointers; the xla crate does not mark them Send. The coordinator
+    // confines the runtime to a dedicated service thread (see
+    // coordinator::service), so no cross-thread sharing happens
+    // through this type.
 }
 
-impl DenseCensusRuntime {
-    /// Load every artifact listed in `<dir>/manifest.tsv` and compile it
-    /// on a fresh PJRT CPU client.
-    pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<DenseCensusRuntime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {}; run `make artifacts` first", manifest.display()))?;
+#[cfg(feature = "xla")]
+pub use enabled::DenseCensusRuntime;
 
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut by_size = BTreeMap::new();
-        for line in text.lines() {
-            let line = line.trim();
-            if line.is_empty() || line.starts_with('#') {
-                continue;
+#[cfg(not(feature = "xla"))]
+mod disabled {
+    //! API-identical stub used when the `xla` feature is off. It can
+    //! never be constructed: `load_dir` validates the manifest and
+    //! artifacts exactly like the real path, then reports the backend
+    //! unavailable.
+
+    use std::path::Path;
+
+    use super::RuntimeStats;
+    use crate::census::Census;
+    use crate::error::{Context, Result};
+    use crate::graph::CsrGraph;
+
+    /// Uninhabited stand-in for the PJRT runtime.
+    pub struct DenseCensusRuntime {
+        never: std::convert::Infallible,
+    }
+
+    impl DenseCensusRuntime {
+        /// Validate `<dir>/manifest.tsv` and its artifacts, then fail:
+        /// this build cannot execute dense artifacts.
+        pub fn load_dir<P: AsRef<Path>>(dir: P) -> Result<DenseCensusRuntime> {
+            let dir = dir.as_ref();
+            let rows = super::read_manifest(dir)?;
+            for (size, path) in &rows {
+                std::fs::metadata(path).with_context(|| {
+                    format!("artifact for size {size} missing: {}", path.display())
+                })?;
             }
-            let mut cols = line.split('\t');
-            let (kind, size, file) = match (cols.next(), cols.next(), cols.next()) {
-                (Some(k), Some(s), Some(f)) => (k, s, f),
-                _ => bail!("malformed manifest row: {line:?}"),
-            };
-            if kind != "census_dense" {
-                continue; // future artifact kinds are ignored, not fatal
-            }
-            let size: usize = size.parse().with_context(|| format!("bad size in {line:?}"))?;
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
+            crate::bail!(
+                "dense backend unavailable: built without the `xla` feature \
+                 ({} artifacts found in {} but PJRT is not compiled in)",
+                rows.len(),
+                dir.display()
             )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))?;
-            by_size.insert(size, SizedExecutable { exe, size });
-        }
-        if by_size.is_empty() {
-            bail!("manifest {} lists no census_dense artifacts", manifest.display());
-        }
-        let compiled = by_size.len();
-        Ok(DenseCensusRuntime {
-            client,
-            by_size,
-            stats: RuntimeStats {
-                compiled,
-                ..RuntimeStats::default()
-            },
-            dir,
-        })
-    }
-
-    /// Artifact directory this runtime was loaded from.
-    pub fn artifact_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Available dense sizes, ascending.
-    pub fn sizes(&self) -> Vec<usize> {
-        self.by_size.keys().copied().collect()
-    }
-
-    /// Largest size this runtime can serve.
-    pub fn max_size(&self) -> usize {
-        *self.by_size.keys().last().unwrap()
-    }
-
-    /// The smallest artifact size that fits a graph of `n` nodes.
-    pub fn size_for(&self, n: usize) -> Option<usize> {
-        self.by_size.range(n..).next().map(|(&s, _)| s)
-    }
-
-    /// PJRT platform string (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Cumulative stats.
-    pub fn stats(&self) -> RuntimeStats {
-        self.stats
-    }
-
-    /// Compute the exact triad census of `g` on the dense AOT path:
-    /// pad the adjacency to the best-fitting artifact size, execute,
-    /// round to integers and undo the padding contribution.
-    pub fn census(&mut self, g: &CsrGraph) -> Result<Census> {
-        let n = g.node_count();
-        let size = self
-            .size_for(n)
-            .with_context(|| format!("graph ({n} nodes) exceeds dense capacity {}", self.max_size()))?;
-
-        let t0 = Instant::now();
-        // stage the padded adjacency
-        let mut a = vec![0f32; size * size];
-        for (u, v) in g.arcs() {
-            a[u as usize * size + v as usize] = 1.0;
-        }
-        let lit = xla::Literal::vec1(&a)
-            .reshape(&[size as i64, size as i64])
-            .context("reshaping adjacency literal")?;
-        self.stats.staging_seconds += t0.elapsed().as_secs_f64();
-
-        let t1 = Instant::now();
-        let sized = &self.by_size[&size];
-        debug_assert_eq!(sized.size, size);
-        let result = sized
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .context("PJRT execute")?[0][0]
-            .to_literal_sync()
-            .context("device->host literal")?;
-        self.stats.execute_seconds += t1.elapsed().as_secs_f64();
-        self.stats.executions += 1;
-
-        // lowered with return_tuple=True: unwrap the 1-tuple
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        let values = out.to_vec::<f32>().context("reading census vector")?;
-        if values.len() != 16 {
-            bail!("artifact returned {} values, expected 16", values.len());
         }
 
-        let mut padded = Census::zero();
-        for (i, &v) in values.iter().enumerate() {
-            let r = v.round();
-            if (v - r).abs() > 1e-3 || r < 0.0 {
-                bail!("non-integral census component {i}: {v}");
-            }
-            padded.add_count(TriadType::from_index(i + 1), r as u64);
+        /// Artifact directory (unreachable: construction always fails).
+        pub fn artifact_dir(&self) -> &Path {
+            match self.never {}
         }
 
-        let (mutual, asym) = dyad_tallies(g);
-        Ok(padding_correction(&padded, n, size - n, mutual, asym))
+        /// Available dense sizes (unreachable).
+        pub fn sizes(&self) -> Vec<usize> {
+            match self.never {}
+        }
+
+        /// Largest servable size (unreachable).
+        pub fn max_size(&self) -> usize {
+            match self.never {}
+        }
+
+        /// Best-fitting artifact size (unreachable).
+        pub fn size_for(&self, _n: usize) -> Option<usize> {
+            match self.never {}
+        }
+
+        /// Platform string (unreachable).
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        /// Cumulative stats (unreachable).
+        pub fn stats(&self) -> RuntimeStats {
+            match self.never {}
+        }
+
+        /// Dense census (unreachable).
+        pub fn census(&mut self, _g: &CsrGraph) -> Result<Census> {
+            match self.never {}
+        }
     }
 }
 
-// PjRtLoadedExecutable and PjRtClient wrap C++ objects behind pointers;
-// the xla crate does not mark them Send. The coordinator confines the
-// runtime to a dedicated service thread (see coordinator::service), so
-// no cross-thread sharing happens through this type.
+#[cfg(not(feature = "xla"))]
+pub use disabled::DenseCensusRuntime;
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::census::merged;
-    use crate::graph::generators;
-
-    fn artifacts_dir() -> Option<PathBuf> {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        dir.join("manifest.tsv").exists().then_some(dir)
-    }
-
-    #[test]
-    fn runtime_census_matches_sparse_engines() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built (`make artifacts`)");
-            return;
-        };
-        let mut rt = DenseCensusRuntime::load_dir(dir).unwrap();
-        assert!(rt.sizes().contains(&64));
-        for seed in 0..3 {
-            let g = generators::power_law(50, 2.2, 5.0, seed);
-            let want = merged::census(&g);
-            let got = rt.census(&g).unwrap();
-            assert_eq!(got, want, "seed {seed}");
-        }
-        // exact-size (no padding) path
-        let g = generators::power_law(64, 2.0, 6.0, 7);
-        assert_eq!(rt.census(&g).unwrap(), merged::census(&g));
-        assert!(rt.stats().executions >= 4);
-    }
-
-    #[test]
-    fn size_routing() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built (`make artifacts`)");
-            return;
-        };
-        let rt = DenseCensusRuntime::load_dir(dir).unwrap();
-        assert_eq!(rt.size_for(10), Some(64));
-        assert_eq!(rt.size_for(64), Some(64));
-        assert_eq!(rt.size_for(65), Some(128));
-        assert_eq!(rt.size_for(200), Some(256));
-        assert_eq!(rt.size_for(257), None);
-    }
 
     #[test]
     fn missing_dir_is_informative() {
@@ -231,5 +312,92 @@ mod tests {
             Err(e) => e,
         };
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_parser_skips_unknown_kinds_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join("triadic_exec_manifest");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# comment\nfrobnicator\t9\tx.bin\ncensus_dense\t64\ta.hlo.txt\n",
+        )
+        .unwrap();
+        let rows = read_manifest(&dir).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, 64);
+
+        std::fs::write(dir.join("manifest.tsv"), "census_dense\tonly-two\n").unwrap();
+        assert!(read_manifest(&dir).is_err());
+
+        std::fs::write(dir.join("manifest.tsv"), "census_dense\tNaN\tx.hlo.txt\n").unwrap();
+        assert!(read_manifest(&dir).is_err());
+
+        std::fs::write(dir.join("manifest.tsv"), "# empty\n").unwrap();
+        assert!(read_manifest(&dir).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_reports_unavailable_after_validation() {
+        let dir = std::env::temp_dir().join("triadic_exec_stub");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), "census_dense\t64\ta.hlo.txt\n").unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule placeholder").unwrap();
+        let err = DenseCensusRuntime::load_dir(&dir).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+        assert!(!DENSE_AVAILABLE);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[cfg(feature = "xla")]
+    mod with_artifacts {
+        use super::super::*;
+        use crate::census::merged;
+        use crate::graph::generators;
+        use std::path::PathBuf;
+
+        fn artifacts_dir() -> Option<PathBuf> {
+            let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            dir.join("manifest.tsv").exists().then_some(dir)
+        }
+
+        #[test]
+        fn runtime_census_matches_sparse_engines() {
+            let Some(dir) = artifacts_dir() else {
+                eprintln!("skipping: artifacts not built (`make artifacts`)");
+                return;
+            };
+            let mut rt = DenseCensusRuntime::load_dir(dir).unwrap();
+            assert!(rt.sizes().contains(&64));
+            for seed in 0..3 {
+                let g = generators::power_law(50, 2.2, 5.0, seed);
+                let want = merged::census(&g);
+                let got = rt.census(&g).unwrap();
+                assert_eq!(got, want, "seed {seed}");
+            }
+            // exact-size (no padding) path
+            let g = generators::power_law(64, 2.0, 6.0, 7);
+            assert_eq!(rt.census(&g).unwrap(), merged::census(&g));
+            assert!(rt.stats().executions >= 4);
+        }
+
+        #[test]
+        fn size_routing() {
+            let Some(dir) = artifacts_dir() else {
+                eprintln!("skipping: artifacts not built (`make artifacts`)");
+                return;
+            };
+            let rt = DenseCensusRuntime::load_dir(dir).unwrap();
+            assert_eq!(rt.size_for(10), Some(64));
+            assert_eq!(rt.size_for(64), Some(64));
+            assert_eq!(rt.size_for(65), Some(128));
+            assert_eq!(rt.size_for(200), Some(256));
+            assert_eq!(rt.size_for(257), None);
+        }
     }
 }

@@ -16,7 +16,7 @@
 
 pub mod executor;
 
-pub use executor::{DenseCensusRuntime, RuntimeStats};
+pub use executor::{DenseCensusRuntime, RuntimeStats, DENSE_AVAILABLE};
 
 use crate::census::{Census, TriadType};
 use crate::graph::CsrGraph;

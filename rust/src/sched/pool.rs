@@ -163,7 +163,8 @@ mod tests {
 
     #[test]
     fn zero_length_loop() {
-        let (parts, stats) = run_partitioned(0, 4, Policy::dynamic_default(), |_| 0u32, |_, _, _, _| {});
+        let (parts, stats) =
+            run_partitioned(0, 4, Policy::dynamic_default(), |_| 0u32, |_, _, _, _| {});
         assert_eq!(parts.len(), 4);
         assert_eq!(stats.items.iter().sum::<usize>(), 0);
     }

@@ -3,20 +3,12 @@
 //! artifacts exist) → windowed monitoring; plus simulator-versus-engine
 //! consistency and the figure harness.
 
-use std::path::PathBuf;
-
 use triadic::analysis::{builtin_patterns, census_series, MonitorConfig, TriadMonitor};
 use triadic::analysis::{TrafficGenerator, TrafficScenario};
 use triadic::census::{census_parallel, merged, Accumulation, ParallelConfig};
-use triadic::coordinator::{Coordinator, CoordinatorConfig, Route, RoutingPolicy};
 use triadic::graph::{generators, GraphSpec};
 use triadic::sched::Policy;
 use triadic::simulator::{simulate, WorkloadProfile, XmtMachine};
-
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.tsv").exists().then_some(dir)
-}
 
 #[test]
 fn workload_specs_have_paper_exponents() {
@@ -59,32 +51,48 @@ fn full_pipeline_traffic_to_alerts() {
     assert!(alerts.iter().any(|a| a.pattern == "port-scan"));
 }
 
-#[test]
-fn coordinator_round_trip_with_dense_backend() {
-    let Some(dir) = artifacts_dir() else {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    };
-    let coord = Coordinator::start(CoordinatorConfig {
-        artifacts_dir: Some(dir),
-        routing: RoutingPolicy {
-            min_dense_density: 0.0,
-            ..Default::default()
-        },
-        ..CoordinatorConfig::default()
-    })
-    .unwrap();
-    assert!(coord.dense_enabled());
+// The default build's stub executor cannot serve artifacts, so the
+// dense round trip only exists with the `xla` feature.
+#[cfg(feature = "xla")]
+mod dense {
+    use std::path::PathBuf;
 
-    // mixed sizes spanning all three artifacts plus a sparse-only graph
-    for (n, arcs) in [(20usize, 60), (90, 800), (200, 3000), (500, 4000)] {
-        let g = generators::erdos_renyi(n, arcs, n as u64);
-        let out = coord.census(&g).unwrap();
-        assert_eq!(out.census, merged::census(&g), "n={n}");
-        if n <= 256 {
-            assert!(matches!(out.route, Route::Dense { .. }), "n={n} should go dense");
-        } else {
-            assert_eq!(out.route, Route::Sparse, "n={n} should go sparse");
+    use triadic::census::merged;
+    use triadic::coordinator::{Coordinator, CoordinatorConfig, Route, RoutingPolicy};
+    use triadic::graph::generators;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.tsv").exists().then_some(dir)
+    }
+
+    #[test]
+    fn coordinator_round_trip_with_dense_backend() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: Some(dir),
+            routing: RoutingPolicy {
+                min_dense_density: 0.0,
+                ..Default::default()
+            },
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        assert!(coord.dense_enabled());
+
+        // mixed sizes spanning all three artifacts plus a sparse-only graph
+        for (n, arcs) in [(20usize, 60), (90, 800), (200, 3000), (500, 4000)] {
+            let g = generators::erdos_renyi(n, arcs, n as u64);
+            let out = coord.census(&g).unwrap();
+            assert_eq!(out.census, merged::census(&g), "n={n}");
+            if n <= 256 {
+                assert!(matches!(out.route, Route::Dense { .. }), "n={n} should go dense");
+            } else {
+                assert_eq!(out.route, Route::Sparse, "n={n} should go sparse");
+            }
         }
     }
 }
@@ -162,7 +170,10 @@ fn cli_binary_smoke() {
     assert!(stdout.contains("003"), "census table missing:\n{stdout}");
 
     let out = std::process::Command::new(exe)
-        .args(["simulate", "--machine", "numa", "--graph", "orkut", "--nodes", "3000", "--procs", "1,8,48"])
+        .args([
+            "simulate", "--machine", "numa", "--graph", "orkut", "--nodes", "3000", "--procs",
+            "1,8,48",
+        ])
         .output()
         .unwrap();
     assert!(out.status.success());
