@@ -1,15 +1,18 @@
 //! Core census micro/meso benchmarks: the algorithm ladder (naive ->
 //! Batagelj-Mrvar -> merged traversal) and the parallel engine's
-//! policy x accumulation matrix. This is the harness behind the §Perf
-//! numbers in EXPERIMENTS.md.
+//! policy x accumulation matrix, scheduled on one persistent executor.
+//! This is the harness behind the §Perf numbers in EXPERIMENTS.md.
 
 use triadic::bench::Bench;
-use triadic::census::{batagelj_mrvar, census_parallel, merged, naive, Accumulation, ParallelConfig};
+use triadic::census::{
+    batagelj_mrvar, census_parallel_on, merged, naive, Accumulation, ParallelConfig,
+};
 use triadic::graph::generators::power_law;
-use triadic::sched::Policy;
+use triadic::sched::{Executor, Policy};
 
 fn main() {
     let mut b = Bench::from_env(10);
+    let exec = Executor::with_workers(4);
 
     // algorithm ladder on a mid-size scale-free graph
     let g = power_law(5_000, 2.2, 10.0, 42);
@@ -35,7 +38,8 @@ fn main() {
         });
     }
 
-    // parallel engine: policies x accumulation (ablation)
+    // parallel engine: policies x accumulation (ablation) on the
+    // persistent pool
     for policy in [
         Policy::Static { chunk: 1024 },
         Policy::Dynamic { chunk: 256 },
@@ -51,7 +55,7 @@ fn main() {
                 accumulation: acc,
             };
             b.run(&format!("parallel_{}_{}_t4", policy.name(), acc_name), || {
-                census_parallel(&g, &cfg)
+                census_parallel_on(&g, &cfg, &exec)
             });
         }
     }
@@ -63,6 +67,10 @@ fn main() {
             policy: Policy::dynamic_default(),
             accumulation: Accumulation::Bank { slots },
         };
-        b.run(&format!("bank_slots_{slots}_t4"), || census_parallel(&g, &cfg));
+        b.run(&format!("bank_slots_{slots}_t4"), || {
+            census_parallel_on(&g, &cfg, &exec)
+        });
     }
+
+    println!("# executor: {:?}", exec.stats());
 }

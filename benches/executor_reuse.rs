@@ -1,0 +1,43 @@
+//! Pool-reuse ablation: the persistent shared executor versus the old
+//! per-call scoped thread spawn, on repeated small-graph censuses — the
+//! coordinator's serving-path pattern, where a request stream of many
+//! small jobs pays thread spawn/teardown on every call without a
+//! persistent pool. Acceptance target: >= 2x on 1k-node graphs.
+
+use triadic::bench::Bench;
+use triadic::census::{census_parallel_on, census_parallel_scoped, Accumulation, ParallelConfig};
+use triadic::graph::generators::power_law;
+use triadic::sched::{Executor, Policy};
+
+fn main() {
+    let mut b = Bench::from_env(40);
+    let threads = 4;
+    let exec = Executor::with_workers(threads);
+
+    for &n in &[1_000usize, 4_000, 16_000] {
+        let g = power_law(n, 2.2, 8.0, 42);
+        let cfg = ParallelConfig {
+            threads,
+            policy: Policy::dynamic_default(),
+            accumulation: Accumulation::PerThread,
+        };
+        let persistent = b
+            .run(&format!("census_n{n}_persistent_pool_t{threads}"), || {
+                census_parallel_on(&g, &cfg, &exec)
+            })
+            .mean_s;
+        let scoped = b
+            .run(&format!("census_n{n}_scoped_spawn_t{threads}"), || {
+                census_parallel_scoped(&g, &cfg)
+            })
+            .mean_s;
+        println!(
+            "# n={n}: persistent pool is {:.2}x the per-call spawn baseline \
+             (spawn {:.1} us vs pool {:.1} us)",
+            scoped / persistent.max(1e-12),
+            scoped * 1e6,
+            persistent * 1e6
+        );
+    }
+    println!("# executor: {:?}", exec.stats());
+}

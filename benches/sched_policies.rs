@@ -1,11 +1,36 @@
-//! SCHED bench: the scheduling-policy study (static/dynamic/guided),
-//! simulated on the paper's machines and measured on this host.
+//! SCHED bench: the scheduling-policy study (static/dynamic/guided) —
+//! measured on this host over the persistent executor, and simulated on
+//! the paper's machines.
 
 use triadic::bench::Bench;
+use triadic::census::{census_parallel_on, Accumulation, ParallelConfig};
 use triadic::figures::{fig_sched, Scale};
+use triadic::graph::generators::power_law;
+use triadic::sched::{Executor, Policy};
 
 fn main() {
     let mut b = Bench::from_env(2);
+
+    // measured: each policy schedules the same power-law census over
+    // the shared pool; dynamic should win, guided underperform
+    let exec = Executor::with_workers(4);
+    let g = power_law(20_000, 2.2, 10.0, 42);
+    for policy in [
+        Policy::static_default(),
+        Policy::dynamic_default(),
+        Policy::guided_default(),
+    ] {
+        let cfg = ParallelConfig {
+            threads: 4,
+            policy,
+            accumulation: Accumulation::PerThread,
+        };
+        let name = format!("census_20k_{}_t4_executor", policy.name());
+        b.run(&name, || census_parallel_on(&g, &cfg, &exec));
+    }
+    println!("# executor: {:?}", exec.stats());
+
+    // simulated: the paper's three machines
     b.run("sched_policies_small", || fig_sched(Scale::Small));
     println!("\n{}", fig_sched(Scale::Small));
 }

@@ -1,0 +1,219 @@
+//! Unified census engine interface and registry.
+//!
+//! Every census implementation in the crate — the `O(n^3)` naive
+//! oracle, Batagelj–Mrvar, the merged-traversal serial variant, the
+//! scheduled parallel engine and Moody's dense matrix method — is
+//! reachable behind one [`CensusEngine`] trait, so the coordinator, the
+//! CLI (`--engine <name>`) and the benches select implementations by
+//! name instead of hard-wiring call sites. Engines receive the shared
+//! [`Executor`] and must schedule any parallel work on it; serial
+//! engines simply ignore it. Results come back as a [`ParallelRun`]
+//! (census + per-seat telemetry) regardless of engine, so callers get
+//! uniform per-job stats.
+
+use std::time::Instant;
+
+use super::parallel::{census_parallel_on, ParallelConfig, ParallelRun};
+use super::types::Census;
+use super::{batagelj_mrvar, merged, moody, naive};
+use crate::graph::csr::CsrGraph;
+use crate::sched::{Executor, ThreadPoolStats};
+
+/// A named triad-census implementation.
+pub trait CensusEngine: Send + Sync {
+    /// Registry key and display name.
+    fn name(&self) -> &str;
+
+    /// Compute the triad census of `g`, scheduling any parallel work on
+    /// `exec`.
+    fn census(&self, g: &CsrGraph, exec: &Executor) -> ParallelRun;
+}
+
+/// Wrap a serial engine's result in the uniform telemetry shape: one
+/// seat, busy == wall, `items` = the collapsed slot count walked.
+fn serial_run<F: FnOnce() -> Census>(items: usize, f: F) -> ParallelRun {
+    let t0 = Instant::now();
+    let census = f();
+    let wall = t0.elapsed().as_secs_f64();
+    ParallelRun {
+        census,
+        stats: ThreadPoolStats {
+            chunks: vec![1],
+            items: vec![items],
+            busy: vec![wall],
+            wall,
+        },
+    }
+}
+
+/// The `O(n^3)` all-triples oracle (tiny graphs only).
+pub struct NaiveEngine;
+
+impl CensusEngine for NaiveEngine {
+    fn name(&self) -> &str {
+        "naive"
+    }
+    fn census(&self, g: &CsrGraph, _exec: &Executor) -> ParallelRun {
+        serial_run(g.entry_count(), || naive::census(g))
+    }
+}
+
+/// The literal Batagelj–Mrvar subquadratic census (paper Fig 5).
+pub struct BatageljMrvarEngine;
+
+impl CensusEngine for BatageljMrvarEngine {
+    fn name(&self) -> &str {
+        "batagelj-mrvar"
+    }
+    fn census(&self, g: &CsrGraph, _exec: &Executor) -> ParallelRun {
+        serial_run(g.entry_count(), || batagelj_mrvar::census(g))
+    }
+}
+
+/// The optimized serial merged-traversal census (paper Fig 8).
+pub struct MergedEngine;
+
+impl CensusEngine for MergedEngine {
+    fn name(&self) -> &str {
+        "merged"
+    }
+    fn census(&self, g: &CsrGraph, _exec: &Executor) -> ParallelRun {
+        serial_run(g.entry_count(), || merged::census(g))
+    }
+}
+
+/// Moody's dense matrix-method census (`O(n^2)` memory — small graphs).
+pub struct MoodyEngine;
+
+impl CensusEngine for MoodyEngine {
+    fn name(&self) -> &str {
+        "moody"
+    }
+    fn census(&self, g: &CsrGraph, _exec: &Executor) -> ParallelRun {
+        serial_run(g.entry_count(), || moody::census(g))
+    }
+}
+
+/// The paper's parallel engine, scheduled on the shared executor.
+pub struct ParallelEngine {
+    pub cfg: ParallelConfig,
+}
+
+impl CensusEngine for ParallelEngine {
+    fn name(&self) -> &str {
+        "parallel"
+    }
+    fn census(&self, g: &CsrGraph, exec: &Executor) -> ParallelRun {
+        census_parallel_on(g, &self.cfg, exec)
+    }
+}
+
+/// Name-indexed set of engines.
+pub struct EngineRegistry {
+    engines: Vec<Box<dyn CensusEngine>>,
+}
+
+impl EngineRegistry {
+    /// An empty registry.
+    pub fn new() -> EngineRegistry {
+        EngineRegistry {
+            engines: Vec::new(),
+        }
+    }
+
+    /// All five built-in engines; `cfg` parameterizes the parallel one.
+    pub fn builtin(cfg: ParallelConfig) -> EngineRegistry {
+        let mut r = EngineRegistry::new();
+        r.register(Box::new(NaiveEngine));
+        r.register(Box::new(BatageljMrvarEngine));
+        r.register(Box::new(MergedEngine));
+        r.register(Box::new(ParallelEngine { cfg }));
+        r.register(Box::new(MoodyEngine));
+        r
+    }
+
+    /// Add an engine, replacing any existing engine of the same name.
+    pub fn register(&mut self, engine: Box<dyn CensusEngine>) {
+        self.engines.retain(|e| e.name() != engine.name());
+        self.engines.push(engine);
+    }
+
+    /// Look up an engine by name (`bm` / `batagelj_mrvar` alias the
+    /// Batagelj–Mrvar engine).
+    pub fn get(&self, name: &str) -> Option<&dyn CensusEngine> {
+        let canonical = match name {
+            "bm" | "batagelj_mrvar" => "batagelj-mrvar",
+            other => other,
+        };
+        self.engines
+            .iter()
+            .find(|e| e.name() == canonical)
+            .map(|e| e.as_ref())
+    }
+
+    /// Registered engine names, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.engines.iter().map(|e| e.name()).collect()
+    }
+
+    /// [`EngineRegistry::get`] with a caller-ready error message listing
+    /// the available engines — the single source of the "unknown engine"
+    /// wording used by the coordinator and the CLI.
+    pub fn get_or_err(&self, name: &str) -> Result<&dyn CensusEngine, String> {
+        self.get(name).ok_or_else(|| {
+            format!(
+                "unknown census engine {name:?} (available: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+}
+
+impl Default for EngineRegistry {
+    fn default() -> Self {
+        EngineRegistry::builtin(ParallelConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn all_five_builtin_engines_are_registered() {
+        let r = EngineRegistry::default();
+        assert_eq!(
+            r.names(),
+            vec!["naive", "batagelj-mrvar", "merged", "parallel", "moody"]
+        );
+        for name in ["naive", "bm", "batagelj_mrvar", "merged", "parallel", "moody"] {
+            assert!(r.get(name).is_some(), "{name} missing");
+        }
+        assert!(r.get("fancy").is_none());
+    }
+
+    #[test]
+    fn engines_agree_through_the_registry() {
+        let exec = Executor::with_workers(2);
+        let r = EngineRegistry::builtin(ParallelConfig {
+            threads: 3,
+            ..ParallelConfig::default()
+        });
+        let g = generators::power_law(70, 2.2, 5.0, 11);
+        let want = naive::census(&g);
+        for name in r.names() {
+            let run = r.get(name).unwrap().census(&g, &exec);
+            assert_eq!(run.census, want, "{name}");
+            assert_eq!(run.stats.busy.len(), run.stats.chunks.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        let mut r = EngineRegistry::default();
+        let before = r.names().len();
+        r.register(Box::new(MergedEngine));
+        assert_eq!(r.names().len(), before, "same-name registration replaces");
+    }
+}

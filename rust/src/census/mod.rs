@@ -20,8 +20,13 @@
 //!   scheduling and hash-distributed local census vectors.
 //! * [`moody::census`] — Moody's dense matrix-method census, the
 //!   baseline the dense (JAX/Pallas AOT) path mirrors.
+//!
+//! All five are reachable behind the [`engine::CensusEngine`] trait via
+//! [`engine::EngineRegistry`] — the by-name selection surface of the
+//! coordinator and the `--engine` CLI flag.
 
 pub mod batagelj_mrvar;
+pub mod engine;
 pub mod isotricode;
 pub mod merged;
 pub mod moody;
@@ -29,6 +34,10 @@ pub mod naive;
 pub mod parallel;
 pub mod types;
 
+pub use engine::{CensusEngine, EngineRegistry};
 pub use isotricode::{classify_tricode, tricode_of, TRICODE_TABLE};
-pub use parallel::{census_parallel, Accumulation, ParallelConfig};
+pub use parallel::{
+    census_parallel, census_parallel_on, census_parallel_scoped, Accumulation, ParallelConfig,
+    ParallelRun,
+};
 pub use types::{Census, TriadType};

@@ -24,7 +24,7 @@ use super::merged::dyad_task;
 use super::types::{Census, CensusSink, TriadType};
 use crate::graph::csr::CsrGraph;
 use crate::rng::splitmix64;
-use crate::sched::{run_partitioned, Policy, ThreadPoolStats};
+use crate::sched::{run_partitioned_scoped, Executor, Policy, ThreadPoolStats};
 
 /// How triad increments are accumulated across threads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,15 +138,44 @@ pub struct ParallelRun {
     pub stats: ThreadPoolStats,
 }
 
-/// Parallel triad census over the collapsed entry space.
-pub fn census_parallel(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
+/// Which driver executes the collapsed iteration space.
+enum LoopRunner<'e> {
+    /// A persistent shared executor (the serving path).
+    Pool(&'e Executor),
+    /// Per-call scoped thread spawn (the pre-executor behavior; kept as
+    /// the pool-reuse ablation baseline).
+    Scoped,
+}
+
+impl LoopRunner<'_> {
+    fn run<A, I, W>(
+        &self,
+        len: usize,
+        nthreads: usize,
+        policy: Policy,
+        init: I,
+        work: W,
+    ) -> (Vec<A>, ThreadPoolStats)
+    where
+        A: Send,
+        I: Fn(usize) -> A + Sync,
+        W: Fn(&mut A, usize, usize, usize) + Sync,
+    {
+        match self {
+            LoopRunner::Pool(exec) => exec.run(len, nthreads, policy, init, work),
+            LoopRunner::Scoped => run_partitioned_scoped(len, nthreads, policy, init, work),
+        }
+    }
+}
+
+fn census_with(g: &CsrGraph, cfg: &ParallelConfig, runner: LoopRunner<'_>) -> ParallelRun {
     let len = g.entry_count();
     let n = g.node_count();
 
     let (census, stats) = match cfg.accumulation {
         Accumulation::Bank { slots } => {
             let bank = CensusBank::new(slots);
-            let (_, stats) = run_partitioned(
+            let (_, stats) = runner.run(
                 len,
                 cfg.threads,
                 cfg.policy,
@@ -163,7 +192,7 @@ pub fn census_parallel(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
             (bank.reduce(), stats)
         }
         Accumulation::PerThread => {
-            let (parts, stats) = run_partitioned(
+            let (parts, stats) = runner.run(
                 len,
                 cfg.threads,
                 cfg.policy,
@@ -184,6 +213,25 @@ pub fn census_parallel(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
     let mut census = census;
     census.close_with_null(n);
     ParallelRun { census, stats }
+}
+
+/// Parallel triad census over the collapsed entry space, on the shared
+/// process-wide executor.
+pub fn census_parallel(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
+    census_with(g, cfg, LoopRunner::Pool(Executor::global()))
+}
+
+/// Parallel triad census on an explicit [`Executor`] — the coordinator's
+/// serving path: every request interleaves chunks on the same pool.
+pub fn census_parallel_on(g: &CsrGraph, cfg: &ParallelConfig, exec: &Executor) -> ParallelRun {
+    census_with(g, cfg, LoopRunner::Pool(exec))
+}
+
+/// Parallel triad census spawning scoped threads for this one call (the
+/// pre-executor behavior). Baseline of `benches/executor_reuse.rs`; not
+/// for new code.
+pub fn census_parallel_scoped(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
+    census_with(g, cfg, LoopRunner::Scoped)
 }
 
 /// Walk the collapsed entry range `[s, e)`, invoking `f(u, v, dir)` for
@@ -323,6 +371,21 @@ mod tests {
         let got = census_parallel(&mapped, &ParallelConfig::default()).census;
         assert_eq!(got, want);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn scoped_and_executor_paths_agree() {
+        let g = generators::power_law(400, 2.2, 6.0, 33);
+        let exec = Executor::with_workers(2);
+        for acc in [Accumulation::Bank { slots: 16 }, Accumulation::PerThread] {
+            let c = cfg(3, Policy::Dynamic { chunk: 32 }, acc);
+            let on_pool = census_parallel_on(&g, &c, &exec);
+            let scoped = census_parallel_scoped(&g, &c);
+            let global = census_parallel(&g, &c);
+            assert_eq!(on_pool.census, scoped.census, "{acc:?}");
+            assert_eq!(on_pool.census, global.census, "{acc:?}");
+        }
+        assert!(exec.stats().jobs >= 2);
     }
 
     #[test]

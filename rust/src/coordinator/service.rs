@@ -5,15 +5,16 @@ use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::router::{Route, Router, RoutingPolicy};
-use crate::census::{census_parallel, Census, ParallelConfig};
-use crate::error::{Context, Result};
+use crate::census::{Census, EngineRegistry, ParallelConfig};
+use crate::error::{Context, Error, Result};
 use crate::graph::{io, CsrGraph};
 use crate::metrics::Metrics;
 use crate::runtime::DenseCensusRuntime;
+use crate::sched::{Executor, ExecutorConfig, ThreadPoolStats};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -37,6 +38,18 @@ pub struct CoordinatorConfig {
     /// only). Enable when the coordinator serves files it converted
     /// itself; leave off for files of unknown provenance.
     pub trusted_mmap: bool,
+    /// Sparse census engine, resolved by name from the
+    /// [`EngineRegistry`] (`naive`, `batagelj-mrvar`, `merged`,
+    /// `parallel`, `moody`).
+    pub engine: String,
+    /// Worker threads of the shared executor (`0` = host parallelism).
+    /// This caps the pool for the whole process lifetime: K concurrent
+    /// requests interleave chunks on these workers instead of holding
+    /// K × `sparse.threads` OS threads.
+    pub pool_threads: usize,
+    /// Census jobs admitted to the executor at once (`0` = unlimited);
+    /// excess requests queue at the admission gate.
+    pub max_concurrent_jobs: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -51,22 +64,46 @@ impl Default for CoordinatorConfig {
                 .unwrap_or(1),
             graph_cache: 8,
             trusted_mmap: false,
+            engine: "parallel".to_string(),
+            pool_threads: 0,
+            max_concurrent_jobs: 0,
         }
     }
 }
 
-/// Path-keyed cache of loaded graphs with FIFO eviction.
+/// Path-keyed cache of loaded graphs with FIFO eviction, freshness
+/// validation and single-flight loading.
 struct GraphStore {
     capacity: usize,
     ingest_threads: usize,
     trusted_mmap: bool,
     inner: Mutex<StoreInner>,
+    /// Signalled when an in-flight load finishes (single-flight wakeup).
+    loaded_cv: Condvar,
+}
+
+/// A cached graph plus the file identity it was loaded from, so a
+/// rewritten file invalidates the entry instead of serving stale data.
+struct CachedGraph {
+    graph: Arc<CsrGraph>,
+    len: u64,
+    modified: Option<std::time::SystemTime>,
 }
 
 #[derive(Default)]
 struct StoreInner {
-    map: HashMap<PathBuf, Arc<CsrGraph>>,
+    map: HashMap<PathBuf, CachedGraph>,
     order: VecDeque<PathBuf>,
+    /// Paths currently being loaded by some thread (single-flight: a
+    /// concurrent first request for the same multi-GB file waits for
+    /// the loader instead of parsing it again).
+    loading: std::collections::HashSet<PathBuf>,
+}
+
+/// The (length, mtime) identity of a file, for staleness checks.
+fn file_identity(path: &Path) -> Option<(u64, Option<std::time::SystemTime>)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.len(), meta.modified().ok()))
 }
 
 impl GraphStore {
@@ -76,17 +113,42 @@ impl GraphStore {
             ingest_threads,
             trusted_mmap,
             inner: Mutex::new(StoreInner::default()),
+            loaded_cv: Condvar::new(),
         }
     }
 
     /// Fetch a cached graph or load it (mmap for v2 files, parallel
     /// parse for edge lists) and cache it.
+    ///
+    /// A hit re-checks the file's (length, mtime) identity and reloads
+    /// on mismatch, so converting a new graph over a served path takes
+    /// effect on the next request. (Note that rewriting a file *while*
+    /// it is memory-mapped is still an OS-level hazard — prefer
+    /// write-to-temp + rename for files a live coordinator serves.)
     fn get_or_load(&self, path: &Path, metrics: &Metrics) -> Result<Arc<CsrGraph>> {
+        let identity = file_identity(path);
         if self.capacity > 0 {
-            let cache = self.inner.lock().unwrap();
-            if let Some(g) = cache.map.get(path) {
-                metrics.inc("graph_cache_hits_total", 1);
-                return Ok(g.clone());
+            let mut cache = self.inner.lock().unwrap();
+            loop {
+                match cache.map.get(path) {
+                    Some(c) if identity == Some((c.len, c.modified)) => {
+                        metrics.inc("graph_cache_hits_total", 1);
+                        return Ok(c.graph.clone());
+                    }
+                    Some(_) => {
+                        // stale: the file changed since it was cached
+                        metrics.inc("graph_cache_stale_total", 1);
+                        cache.map.remove(path);
+                        cache.order.retain(|p| p != path);
+                    }
+                    None => {}
+                }
+                if !cache.loading.contains(path) {
+                    cache.loading.insert(path.to_path_buf());
+                    break;
+                }
+                // another thread is loading this path: wait and re-check
+                cache = self.loaded_cv.wait(cache).unwrap();
             }
         }
         metrics.inc("graph_cache_misses_total", 1);
@@ -94,30 +156,56 @@ impl GraphStore {
             .time("graph_load", || {
                 io::load_auto_with(path, self.ingest_threads, !self.trusted_mmap)
             })
-            .with_context(|| format!("loading graph {}", path.display()))?;
-        let g = Arc::new(loaded);
-        if self.capacity > 0 {
-            let mut cache = self.inner.lock().unwrap();
-            if !cache.map.contains_key(path) {
-                while cache.order.len() >= self.capacity {
-                    if let Some(old) = cache.order.pop_front() {
-                        cache.map.remove(&old);
+            .with_context(|| format!("loading graph {}", path.display()));
+        match loaded {
+            Ok(graph) => {
+                let g = Arc::new(graph);
+                if self.capacity > 0 {
+                    let mut cache = self.inner.lock().unwrap();
+                    cache.loading.remove(path);
+                    while cache.order.len() >= self.capacity {
+                        if let Some(old) = cache.order.pop_front() {
+                            cache.map.remove(&old);
+                        }
                     }
+                    let (len, modified) = identity.unwrap_or((0, None));
+                    cache.map.insert(
+                        path.to_path_buf(),
+                        CachedGraph {
+                            graph: g.clone(),
+                            len,
+                            modified,
+                        },
+                    );
+                    cache.order.push_back(path.to_path_buf());
+                    drop(cache);
+                    self.loaded_cv.notify_all();
                 }
-                cache.map.insert(path.to_path_buf(), g.clone());
-                cache.order.push_back(path.to_path_buf());
+                Ok(g)
+            }
+            Err(e) => {
+                if self.capacity > 0 {
+                    let mut cache = self.inner.lock().unwrap();
+                    cache.loading.remove(path);
+                    drop(cache);
+                    self.loaded_cv.notify_all();
+                }
+                Err(e)
             }
         }
-        Ok(g)
     }
 }
 
-/// A served census with provenance and timing.
+/// A served census with provenance, timing and (for sparse jobs) the
+/// per-seat scheduler telemetry of the executor job that computed it.
 #[derive(Debug, Clone)]
 pub struct CensusOutcome {
     pub census: Census,
     pub route: Route,
     pub seconds: f64,
+    /// Per-job stats from the shared executor; `None` for dense routes
+    /// (the dense service thread has no chunk scheduler).
+    pub stats: Option<ThreadPoolStats>,
 }
 
 /// Request envelope for the dense service thread.
@@ -126,11 +214,14 @@ struct DenseRequest {
     reply: mpsc::Sender<Result<Census>>,
 }
 
-/// The coordinator: owns the router, the sparse engine configuration and
-/// (if artifacts are present) the dense service thread.
+/// The coordinator: owns the router, the engine registry, one shared
+/// process-lifetime [`Executor`] for all sparse census traffic, and (if
+/// artifacts are present) the dense service thread.
 pub struct Coordinator {
     router: Router,
-    sparse: ParallelConfig,
+    engines: EngineRegistry,
+    engine: String,
+    executor: Arc<Executor>,
     dense_tx: Option<mpsc::SyncSender<DenseRequest>>,
     dense_thread: Option<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
@@ -138,10 +229,30 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the coordinator. Compiles all dense artifacts up front (on
-    /// the service thread) if an artifact directory is configured and
-    /// readable; otherwise runs sparse-only.
+    /// Start the coordinator on its own executor sized per
+    /// `cfg.pool_threads` / `cfg.max_concurrent_jobs`. Compiles all
+    /// dense artifacts up front (on the service thread) if an artifact
+    /// directory is configured and readable; otherwise runs sparse-only.
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let executor = Arc::new(Executor::new(ExecutorConfig {
+            workers: cfg.pool_threads,
+            max_concurrent_jobs: cfg.max_concurrent_jobs,
+        }));
+        Coordinator::start_with_executor(cfg, executor)
+    }
+
+    /// Start on an existing shared pool — several coordinators (or a
+    /// coordinator plus other parallel subsystems) can interleave jobs
+    /// on one executor. `cfg.pool_threads` / `cfg.max_concurrent_jobs`
+    /// are ignored here; the executor's own configuration governs.
+    pub fn start_with_executor(
+        cfg: CoordinatorConfig,
+        executor: Arc<Executor>,
+    ) -> Result<Coordinator> {
+        let engines = EngineRegistry::builtin(cfg.sparse);
+        if let Err(e) = engines.get_or_err(&cfg.engine) {
+            return Err(Error::msg(e));
+        }
         let metrics = Arc::new(Metrics::new());
         let mut routing = cfg.routing.clone();
 
@@ -168,7 +279,9 @@ impl Coordinator {
 
         Ok(Coordinator {
             router: Router::new(routing),
-            sparse: cfg.sparse,
+            engines,
+            engine: cfg.engine,
+            executor,
             dense_tx,
             dense_thread,
             metrics,
@@ -191,13 +304,26 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Serve one census request synchronously (the monitor and the CLI
-    /// drive this; concurrent callers are fine — the sparse engine is
-    /// reentrant and the dense service serializes behind its queue).
+    /// The shared executor serving all sparse census jobs.
+    pub fn executor(&self) -> &Arc<Executor> {
+        &self.executor
+    }
+
+    /// Name of the sparse engine in force.
+    pub fn engine_name(&self) -> &str {
+        &self.engine
+    }
+
+    /// Serve one census request synchronously. Concurrent callers are
+    /// the intended workload: every sparse request is submitted as one
+    /// job to the shared executor, so K simultaneous clients interleave
+    /// chunks on the same worker pool (bounded by `pool_threads` and the
+    /// admission gate) instead of oversubscribing K × threads; the dense
+    /// service serializes behind its queue.
     pub fn census(&self, g: &CsrGraph) -> Result<CensusOutcome> {
         let t0 = Instant::now();
         let route = self.router.route(g);
-        let census = match (route, &self.dense_tx) {
+        let (census, stats) = match (route, &self.dense_tx) {
             (Route::Dense { .. }, Some(tx)) => {
                 self.metrics.inc("census_dense_total", 1);
                 let (reply_tx, reply_rx) = mpsc::channel();
@@ -207,21 +333,36 @@ impl Coordinator {
                 })
                 .ok()
                 .context("dense service thread gone")?;
-                self.metrics
+                let census = self
+                    .metrics
                     .time("dense_census", || reply_rx.recv())
-                    .context("dense service dropped the request")??
+                    .context("dense service dropped the request")??;
+                (census, None)
             }
             _ => {
                 self.metrics.inc("census_sparse_total", 1);
-                self.metrics
-                    .time("sparse_census", || census_parallel(g, &self.sparse))
-                    .census
+                let engine = self
+                    .engines
+                    .get(&self.engine)
+                    .expect("engine name validated at startup");
+                let run = self
+                    .metrics
+                    .time("sparse_census", || engine.census(g, &self.executor));
+                // per-job telemetry: slots walked by this job (executor
+                // job counts live in Executor::stats, not here — serial
+                // engines never submit one)
+                self.metrics.inc(
+                    "census_slots_total",
+                    run.stats.items.iter().sum::<usize>() as u64,
+                );
+                (run.census, Some(run.stats))
             }
         };
         Ok(CensusOutcome {
             census,
             route,
             seconds: t0.elapsed().as_secs_f64(),
+            stats,
         })
     }
 
@@ -314,6 +455,64 @@ mod tests {
         let out = coord.census(&g).unwrap();
         assert_eq!(out.route, Route::Sparse);
         assert_eq!(out.census, merged::census(&g));
+        // sparse requests carry per-job executor telemetry
+        let stats = out.stats.expect("sparse route returns job stats");
+        assert_eq!(stats.items.iter().sum::<usize>(), g.entry_count());
+        assert_eq!(
+            coord.metrics().get("census_slots_total"),
+            g.entry_count() as u64
+        );
+        assert_eq!(coord.executor().stats().jobs, 1);
+    }
+
+    #[test]
+    fn engine_is_selected_by_name() {
+        for engine in ["naive", "bm", "merged", "parallel", "moody"] {
+            let coord = Coordinator::start(CoordinatorConfig {
+                artifacts_dir: None,
+                engine: engine.to_string(),
+                pool_threads: 2,
+                ..CoordinatorConfig::default()
+            })
+            .unwrap();
+            let g = generators::erdos_renyi(30, 150, 7);
+            let out = coord.census(&g).unwrap();
+            assert_eq!(out.census, merged::census(&g), "engine {engine}");
+        }
+    }
+
+    #[test]
+    fn unknown_engine_is_rejected_at_startup() {
+        let err = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            engine: "quantum".to_string(),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown census engine"), "{msg}");
+        assert!(msg.contains("parallel"), "should list available: {msg}");
+    }
+
+    #[test]
+    fn coordinators_can_share_one_executor() {
+        let exec = std::sync::Arc::new(crate::sched::Executor::with_workers(2));
+        let mk = || {
+            Coordinator::start_with_executor(
+                CoordinatorConfig {
+                    artifacts_dir: None,
+                    ..CoordinatorConfig::default()
+                },
+                exec.clone(),
+            )
+            .unwrap()
+        };
+        let (a, b) = (mk(), mk());
+        let g = generators::power_law(300, 2.2, 6.0, 9);
+        let want = merged::census(&g);
+        assert_eq!(a.census(&g).unwrap().census, want);
+        assert_eq!(b.census(&g).unwrap().census, want);
+        assert!(exec.stats().jobs >= 2, "both coordinators used the pool");
     }
 
     #[cfg(feature = "xla")]
@@ -377,6 +576,28 @@ mod tests {
         assert_eq!(out.census, want);
         assert_eq!(coord.metrics().get("graph_cache_misses_total"), 1);
         assert_eq!(coord.metrics().get("graph_cache_hits_total"), 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn graph_cache_invalidates_rewritten_files() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let dir = std::env::temp_dir();
+        let path = dir.join("triadic_stale_cache.csr");
+        let g1 = generators::power_law(300, 2.2, 6.0, 1);
+        crate::graph::io::write_binary_v2_file(&g1, &path).unwrap();
+        assert_eq!(coord.census_path(&path).unwrap().census, merged::census(&g1));
+        // replace atomically (write-to-temp + rename) with a new graph
+        let g2 = generators::power_law(450, 2.2, 6.0, 2);
+        let tmp = dir.join("triadic_stale_cache.csr.tmp");
+        crate::graph::io::write_binary_v2_file(&g2, &tmp).unwrap();
+        std::fs::rename(&tmp, &path).unwrap();
+        assert_eq!(coord.census_path(&path).unwrap().census, merged::census(&g2));
+        assert_eq!(coord.metrics().get("graph_cache_stale_total"), 1);
         let _ = std::fs::remove_file(path);
     }
 

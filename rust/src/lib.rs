@@ -13,9 +13,12 @@
 //!   classes), a naive `O(n^3)` oracle, Batagelj–Mrvar's `O(m)` census
 //!   (Fig 5), the merged-traversal optimized variant (Fig 8), Moody's
 //!   dense matrix-method census, and the parallel engine with
-//!   hash-distributed local census vectors.
+//!   hash-distributed local census vectors — all behind the
+//!   [`census::CensusEngine`] trait and its by-name registry.
 //! * [`sched`] — an OpenMP-like scheduler (static / dynamic / guided)
-//!   over a manhattan-collapsed iteration space, on a custom thread pool.
+//!   over a manhattan-collapsed iteration space, on a persistent
+//!   work-stealing executor (spawn once, park workers, per-seat chunk
+//!   deques) shared by every parallel loop in the process.
 //! * [`simulator`] — analytic machine models of the paper's three
 //!   testbeds (Cray XMT, HP Superdome, AMD Magny-Cours NUMA) driven by a
 //!   measured workload characterization; regenerates Figs 9–13.
@@ -25,8 +28,9 @@
 //! * [`runtime`] — a PJRT (XLA) runtime that loads AOT-compiled HLO
 //!   artifacts (the JAX/Pallas dense census) and executes them from Rust.
 //! * [`coordinator`] — the service layer: routes census jobs between the
-//!   sparse parallel engine and the dense AOT backend, batches windowed
-//!   requests, and exposes metrics.
+//!   sparse engines and the dense AOT backend, submits all sparse work
+//!   to one shared process-lifetime executor (so concurrent clients
+//!   interleave on a bounded pool), and exposes metrics.
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts`
 //! lowers Moody's matrix census to HLO text which [`runtime`] loads; no

@@ -25,13 +25,13 @@ use std::path::PathBuf;
 use triadic::analysis::{builtin_patterns, census_series, MonitorConfig, TriadMonitor};
 use triadic::analysis::{TrafficGenerator, TrafficScenario};
 use triadic::bail;
-use triadic::census::{census_parallel, merged, Accumulation, ParallelConfig};
+use triadic::census::{census_parallel, merged, Accumulation, EngineRegistry, ParallelConfig};
 use triadic::config::{graph_spec_from, Args};
 use triadic::coordinator::{Coordinator, CoordinatorConfig};
 use triadic::error::{Context, Error, Result};
 use triadic::figures::{self, Scale};
 use triadic::graph::{degree, io};
-use triadic::sched::Policy;
+use triadic::sched::{Executor, ExecutorConfig, Policy};
 use triadic::simulator::{
     simulate, Machine, NumaMachine, SuperdomeMachine, WorkloadProfile, XmtMachine,
 };
@@ -44,15 +44,18 @@ USAGE: repro <command> [flags]
 COMMANDS
   census    --graph patents|orkut|web [--nodes N] [--seed S] [--input FILE]
             [--threads T] [--policy static|dynamic|guided[:chunk]]
+            [--engine naive|bm|merged|parallel|moody] [--pool-threads W]
             [--backend auto|sparse] [--artifacts DIR] [--mmap]
   generate  --graph ... --out FILE [--format txt|bin|v2]
   convert   --input FILE --out FILE [--threads T] [--verify]
-  smoke     [--nodes N] [--threads T] [--seed S]
+  smoke     [--nodes N] [--threads T] [--seed S] [--engine E]
+            [--pool-threads W] [--json FILE]
   figures   [--fig 6|9|10|11|12|13|sched|all] [--scale small|full] [--out DIR]
   simulate  --machine xmt|xmt512|numa|superdome --graph ... [--procs 1,2,...]
   monitor   [--hosts N] [--rate EPS] [--duration S] [--window S]
             [--attack scan|ddos|relay|botnet|all]
-  serve     [--artifacts DIR] [--threads T] [--trusted]
+  serve     [--artifacts DIR] [--threads T] [--trusted] [--engine E]
+            [--pool-threads W] [--max-jobs K]
 ";
 
 fn main() {
@@ -124,6 +127,8 @@ fn cmd_census(args: &Args) -> Result<()> {
     let (name, g) = load_or_generate(args)?;
     let threads = args.get_or("threads", default_threads()).map_err(Error::msg)?;
     let policy = Policy::parse(&args.str_or("policy", "dynamic")).map_err(Error::msg)?;
+    let engine_name = args.str_or("engine", "parallel");
+    let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
     let backend = args.str_or("backend", "auto");
     let artifacts = args.str_or("artifacts", "artifacts");
     args.reject_unknown().map_err(Error::msg)?;
@@ -136,24 +141,37 @@ fn cmd_census(args: &Args) -> Result<()> {
 
     let t0 = std::time::Instant::now();
     let census = if backend == "sparse" {
-        let run = census_parallel(&g, &sparse);
+        let exec = Executor::new(ExecutorConfig {
+            workers: pool_threads,
+            max_concurrent_jobs: 0,
+        });
+        let registry = EngineRegistry::builtin(sparse);
+        let engine = registry.get_or_err(&engine_name).map_err(Error::msg)?;
+        let run = engine.census(&g, &exec);
         println!(
-            "# backend=sparse threads={threads} policy={} wall={:.3}s imbalance={:.2}",
+            "# backend=sparse engine={} threads={threads} pool_workers={} policy={} \
+             wall={:.3}s imbalance={:.2} steals={}",
+            engine.name(),
+            exec.worker_count(),
             policy.name(),
             run.stats.wall,
-            run.stats.imbalance()
+            run.stats.imbalance(),
+            exec.stats().steals
         );
         run.census
     } else {
         let coord = Coordinator::start(CoordinatorConfig {
             artifacts_dir: Some(PathBuf::from(artifacts)),
             sparse,
+            engine: engine_name,
+            pool_threads,
             ..CoordinatorConfig::default()
         })?;
         let out = coord.census(&g)?;
         println!(
-            "# backend={:?} dense_enabled={} wall={:.3}s",
+            "# backend={:?} engine={} dense_enabled={} wall={:.3}s",
             out.route,
+            coord.engine_name(),
             coord.dense_enabled(),
             out.seconds
         );
@@ -244,19 +262,24 @@ fn ensure_census_matches(a: &triadic::graph::CsrGraph, b: &triadic::graph::CsrGr
 }
 
 /// CI perf smoke: generate a power-law graph, census it on every path
-/// (parallel engine, serial merged oracle, mmap-loaded copy), assert
-/// exact agreement, and print timings so regressions show in job logs.
+/// (selected engine on the persistent executor, serial merged oracle,
+/// mmap-loaded copy), assert exact agreement, print timings so
+/// regressions show in job logs, and optionally emit a machine-readable
+/// result file (`--json`) for the bench-trajectory artifact.
 fn cmd_smoke(args: &Args) -> Result<()> {
     let nodes = args.get_or("nodes", 100_000usize).map_err(Error::msg)?;
     let threads = args.get_or("threads", default_threads()).map_err(Error::msg)?;
     let seed = args.get_or("seed", 2012u64).map_err(Error::msg)?;
+    let engine_name = args.str_or("engine", "parallel");
+    let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
+    let json_path = args.opt_str("json");
     args.reject_unknown().map_err(Error::msg)?;
 
     let t0 = std::time::Instant::now();
     let g = triadic::graph::generators::power_law(nodes, 2.2, 8.0, seed);
     let t_gen = t0.elapsed().as_secs_f64();
     println!(
-        "smoke: n={} arcs={} dyads={} gen={t_gen:.3}s threads={threads}",
+        "smoke: n={} arcs={} dyads={} gen={t_gen:.3}s threads={threads} engine={engine_name}",
         g.node_count(),
         g.arc_count(),
         g.dyad_count()
@@ -267,15 +290,22 @@ fn cmd_smoke(args: &Args) -> Result<()> {
         policy: Policy::dynamic_default(),
         accumulation: Accumulation::Bank { slots: 64 },
     };
+    let exec = Executor::new(ExecutorConfig {
+        workers: pool_threads,
+        max_concurrent_jobs: 0,
+    });
+    let registry = EngineRegistry::builtin(cfg);
+    let engine = registry.get_or_err(&engine_name).map_err(Error::msg)?;
+
     let t1 = std::time::Instant::now();
-    let run = census_parallel(&g, &cfg);
+    let run = engine.census(&g, &exec);
     let t_par = t1.elapsed().as_secs_f64();
 
     let t2 = std::time::Instant::now();
     let want = merged::census(&g);
     let t_serial = t2.elapsed().as_secs_f64();
     if run.census != want {
-        bail!("parallel census disagrees with merged serial census");
+        bail!("{} census disagrees with merged serial census", engine.name());
     }
 
     // mmap round trip: convert once, map, census again from the map
@@ -287,7 +317,7 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     let mapped = io::load_mmap_file_unverified(&path)?;
     let t_map = t4.elapsed().as_secs_f64();
     let t5 = std::time::Instant::now();
-    let mapped_run = census_parallel(&mapped, &cfg);
+    let mapped_run = engine.census(&mapped, &exec);
     let t_mapped = t5.elapsed().as_secs_f64();
     let _ = std::fs::remove_file(&path);
     if mapped_run.census != want {
@@ -304,6 +334,40 @@ fn cmd_smoke(args: &Args) -> Result<()> {
         run.stats.utilization(),
         t_serial / t_par.max(1e-9)
     );
+    if let Some(path) = json_path {
+        let estats = exec.stats();
+        let json = format!(
+            concat!(
+                "{{\"bench\":\"smoke\",\"nodes\":{},\"arcs\":{},\"dyads\":{},",
+                "\"threads\":{},\"pool_workers\":{},\"engine\":\"{}\",\"policy\":\"{}\",",
+                "\"gen_seconds\":{:.6},\"census_seconds\":{:.6},",
+                "\"serial_merged_seconds\":{:.6},\"v2_write_seconds\":{:.6},",
+                "\"mmap_load_seconds\":{:.6},\"census_mapped_seconds\":{:.6},",
+                "\"imbalance\":{:.4},\"utilization\":{:.4},\"speedup_vs_serial\":{:.4},",
+                "\"executor_jobs\":{},\"executor_steals\":{}}}\n"
+            ),
+            g.node_count(),
+            g.arc_count(),
+            g.dyad_count(),
+            threads,
+            exec.worker_count(),
+            engine.name(),
+            Policy::dynamic_default().name(),
+            t_gen,
+            t_par,
+            t_serial,
+            t_write,
+            t_map,
+            t_mapped,
+            run.stats.imbalance(),
+            run.stats.utilization(),
+            t_serial / t_par.max(1e-9),
+            estats.jobs,
+            estats.steals,
+        );
+        std::fs::write(&path, json)?;
+        println!("smoke: wrote machine-readable results to {path}");
+    }
     println!("smoke OK: all census paths agree");
     Ok(())
 }
@@ -455,6 +519,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts");
     let threads = args.get_or("threads", default_threads()).map_err(Error::msg)?;
     let trusted = args.flag("trusted");
+    let engine = args.str_or("engine", "parallel");
+    let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
+    let max_jobs = args.get_or("max-jobs", 0usize).map_err(Error::msg)?;
     args.reject_unknown().map_err(Error::msg)?;
 
     let coord = Coordinator::start(CoordinatorConfig {
@@ -464,12 +531,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ..ParallelConfig::default()
         },
         trusted_mmap: trusted,
+        engine,
+        pool_threads,
+        max_concurrent_jobs: max_jobs,
         ..CoordinatorConfig::default()
     })?;
     eprintln!(
-        "coordinator up (dense={}): send one graph path per line on stdin \
-         (edge list, TRIADIC1 or mmap-served TRIADIC2)",
-        coord.dense_enabled()
+        "coordinator up (dense={} engine={} pool_workers={} max_jobs={}): send one graph \
+         path per line on stdin (edge list, TRIADIC1 or mmap-served TRIADIC2)",
+        coord.dense_enabled(),
+        coord.engine_name(),
+        coord.executor().worker_count(),
+        if max_jobs == 0 {
+            "unlimited".to_string()
+        } else {
+            max_jobs.to_string()
+        }
     );
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {

@@ -1,16 +1,23 @@
 //! OpenMP-like work scheduling over a flat (manhattan-collapsed)
-//! iteration space.
+//! iteration space, on a persistent work-stealing executor.
 //!
 //! The paper ports the XMT code to OpenMP for the Superdome and NUMA
 //! machines and finds that (a) the imperfectly nested `(u, v)` loops must
 //! be manually collapsed to balance power-law workloads, and (b) the
 //! *dynamic* schedule wins, *guided* "severely underperforms", and
 //! *static* sits in between. This module reimplements those three
-//! policies over a custom scoped-thread pool so the same study can be
-//! run (and the claim benchmarked) without an OpenMP runtime.
+//! policies — and, since the coordinator now serves census traffic as a
+//! stream of jobs, runs them on a long-lived [`Executor`] (spawn once,
+//! park workers, per-seat chunk deques with stealing) instead of
+//! spawning scoped threads per loop. [`run_partitioned`] survives as a
+//! compatibility shim over the shared pool; the old scoped-spawn
+//! implementation is kept as [`run_partitioned_scoped`] for the
+//! pool-reuse ablation bench.
 
+pub mod executor;
 pub mod policy;
 pub mod pool;
 
+pub use executor::{Executor, ExecutorConfig, ExecutorStats};
 pub use policy::{ChunkIter, Policy};
-pub use pool::{run_partitioned, ThreadPoolStats};
+pub use pool::{run_partitioned, run_partitioned_scoped, ThreadPoolStats};

@@ -71,6 +71,23 @@ impl Policy {
             Policy::Guided { .. } => "guided",
         }
     }
+
+    /// Check the chunk parameter. A zero chunk would make every
+    /// dispenser spin without advancing (`dynamic:0` claims the empty
+    /// range `[s, s)` forever), so `parse` rejects it and every
+    /// construction site ([`ChunkSource::new`], the executor's chunk
+    /// queues) re-validates before building a dispenser.
+    pub fn validate(&self) -> Result<(), String> {
+        let chunk = match self {
+            Policy::Static { chunk } | Policy::Dynamic { chunk } => *chunk,
+            Policy::Guided { min_chunk } => *min_chunk,
+        };
+        if chunk == 0 {
+            Err(format!("{} chunk must be >= 1", self.name()))
+        } else {
+            Ok(())
+        }
+    }
 }
 
 /// Shared chunk dispenser for one parallel loop execution.
@@ -82,7 +99,13 @@ pub struct ChunkSource {
 }
 
 impl ChunkSource {
+    /// Build a dispenser. Panics on a zero chunk (see
+    /// [`Policy::validate`]) — a zero-chunk source would never advance
+    /// its cursor and spin every claimant forever.
     pub fn new(len: usize, nthreads: usize, policy: Policy) -> ChunkSource {
+        if let Err(e) = policy.validate() {
+            panic!("invalid policy: {e}");
+        }
         ChunkSource {
             len,
             nthreads: nthreads.max(1),
@@ -98,6 +121,13 @@ impl ChunkSource {
             tid,
             next_static: tid,
         }
+    }
+
+    /// Claim the next chunk off the shared dispenser. Dynamic / guided
+    /// only — the executor's static and dynamic schedules use per-seat
+    /// deques and route here just for guided.
+    pub(crate) fn claim(&self) -> Option<(usize, usize)> {
+        self.claim_shared()
     }
 
     /// Claim the next chunk for a shared-counter policy.
@@ -249,6 +279,24 @@ mod tests {
         );
         assert!(Policy::parse("fancy").is_err());
         assert!(Policy::parse("dynamic:0").is_err());
+        assert!(Policy::parse("static:0").is_err());
+        assert!(Policy::parse("guided:0").is_err());
         assert!(Policy::parse("dynamic:x").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_chunk() {
+        assert!(Policy::Static { chunk: 0 }.validate().is_err());
+        assert!(Policy::Dynamic { chunk: 0 }.validate().is_err());
+        assert!(Policy::Guided { min_chunk: 0 }.validate().is_err());
+        assert!(Policy::Static { chunk: 1 }.validate().is_ok());
+        assert!(Policy::Dynamic { chunk: 1 }.validate().is_ok());
+        assert!(Policy::Guided { min_chunk: 1 }.validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk must be >= 1")]
+    fn chunk_source_rejects_zero_chunk_at_construction() {
+        let _ = ChunkSource::new(10, 2, Policy::Dynamic { chunk: 0 });
     }
 }

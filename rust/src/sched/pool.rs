@@ -1,14 +1,19 @@
-//! Scoped worker pool running a chunked parallel loop.
+//! Chunked parallel loops: the compatibility shim over the persistent
+//! executor, plus the original scoped-spawn baseline.
 //!
-//! `run_partitioned` is the crate's `#pragma omp parallel for
-//! schedule(...)` equivalent: it spawns `nthreads` scoped workers, each
-//! draining chunks from a [`ChunkSource`](super::policy::ChunkSource)
-//! under the chosen policy, and returns one result per thread plus
-//! per-thread chunk statistics (used by the workload characterizer and
-//! the figures harness).
+//! [`run_partitioned`] is the crate's `#pragma omp parallel for
+//! schedule(...)` equivalent. It used to spawn `nthreads` scoped workers
+//! per call; it is now a thin shim that submits one job to the shared
+//! process-wide [`Executor`](super::Executor), so repeated loops reuse
+//! one parked worker pool instead of paying thread spawn/teardown on
+//! every call. The original per-call scoped-spawn implementation
+//! survives as [`run_partitioned_scoped`] — it is the measured baseline
+//! of the pool-reuse ablation (`benches/executor_reuse.rs`), not an API
+//! for new code.
 
 use std::time::Instant;
 
+use super::executor::Executor;
 use super::policy::{ChunkSource, Policy};
 
 /// Per-thread execution statistics from one parallel loop.
@@ -57,7 +62,30 @@ impl ThreadPoolStats {
 /// The closure is `Fn` + `Sync` — it must do its own interior
 /// accumulation via the `A` it is handed (this is what lets the census
 /// use either private vectors or the shared atomic bank).
+///
+/// Compatibility shim: submits one job with `nthreads` seats to the
+/// process-wide [`Executor`]. Result and stats shape are identical to
+/// the old scoped implementation.
 pub fn run_partitioned<A, I, W>(
+    len: usize,
+    nthreads: usize,
+    policy: Policy,
+    init: I,
+    work: W,
+) -> (Vec<A>, ThreadPoolStats)
+where
+    A: Send,
+    I: Fn(usize) -> A + Sync,
+    W: Fn(&mut A, usize, usize, usize) + Sync,
+{
+    Executor::global().run(len, nthreads, policy, init, work)
+}
+
+/// The pre-executor baseline: spawn `nthreads` scoped OS threads for
+/// this one loop and tear them down afterwards. Kept for the measured
+/// pool-reuse ablation; new code should use [`run_partitioned`] or an
+/// explicit [`Executor`].
+pub fn run_partitioned_scoped<A, I, W>(
     len: usize,
     nthreads: usize,
     policy: Policy,
@@ -198,5 +226,28 @@ mod tests {
             },
         );
         assert_eq!(parts.iter().map(|p| p.1).sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn scoped_baseline_matches_executor_shim() {
+        let len = 30_000usize;
+        let expected: u64 = (0..len as u64).sum();
+        let work = |acc: &mut u64, _tid: usize, s: usize, e: usize| {
+            for i in s..e {
+                *acc += i as u64;
+            }
+        };
+        for policy in [
+            Policy::Static { chunk: 64 },
+            Policy::Dynamic { chunk: 32 },
+            Policy::Guided { min_chunk: 8 },
+        ] {
+            let (shim, shim_stats) = run_partitioned(len, 4, policy, |_| 0u64, work);
+            let (scoped, scoped_stats) = run_partitioned_scoped(len, 4, policy, |_| 0u64, work);
+            assert_eq!(shim.iter().sum::<u64>(), expected, "{policy:?} shim");
+            assert_eq!(scoped.iter().sum::<u64>(), expected, "{policy:?} scoped");
+            assert_eq!(shim_stats.items.iter().sum::<usize>(), len);
+            assert_eq!(scoped_stats.items.iter().sum::<usize>(), len);
+        }
     }
 }

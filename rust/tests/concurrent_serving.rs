@@ -1,0 +1,123 @@
+//! Concurrent-serving stress tests: N client threads hammer one
+//! coordinator whose census jobs all land on a single shared executor.
+//! Every result must equal the serial merged oracle, and the pool must
+//! never hold more worker threads than configured — the whole point of
+//! the persistent executor is that K concurrent requests interleave
+//! chunks on W workers instead of holding K × T scoped threads.
+
+use std::sync::Arc;
+
+use triadic::census::{merged, Accumulation, ParallelConfig};
+use triadic::coordinator::{Coordinator, CoordinatorConfig};
+use triadic::graph::generators;
+use triadic::sched::Policy;
+
+#[test]
+fn concurrent_clients_share_one_bounded_pool() {
+    const CLIENTS: usize = 8;
+    const POOL_CAP: usize = 4;
+    const MAX_JOBS: usize = 3;
+
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            sparse: ParallelConfig {
+                threads: 4,
+                policy: Policy::Dynamic { chunk: 64 },
+                accumulation: Accumulation::Bank { slots: 64 },
+            },
+            pool_threads: POOL_CAP,
+            max_concurrent_jobs: MAX_JOBS,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    assert_eq!(coord.executor().worker_count(), POOL_CAP);
+
+    // a mixed bag of power-law graphs, each with its serial oracle
+    let graphs: Vec<_> = (0..6u64)
+        .map(|seed| generators::power_law(400 + (seed as usize) * 50, 2.2, 6.0, seed))
+        .collect();
+    let wants: Vec<_> = graphs.iter().map(merged::census).collect();
+    let graphs = Arc::new(graphs);
+    let wants = Arc::new(wants);
+
+    let mut handles = Vec::new();
+    for client in 0..CLIENTS {
+        let coord = coord.clone();
+        let graphs = graphs.clone();
+        let wants = wants.clone();
+        handles.push(std::thread::spawn(move || {
+            for (i, g) in graphs.iter().enumerate() {
+                let out = coord.census(g).unwrap();
+                assert_eq!(out.census, wants[i], "client {client} graph {i}");
+                let stats = out.stats.expect("sparse route returns stats");
+                assert_eq!(
+                    stats.items.iter().sum::<usize>(),
+                    g.entry_count(),
+                    "client {client} graph {i}: job covered every slot"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let stats = coord.executor().stats();
+    assert_eq!(stats.workers, POOL_CAP, "pool size is fixed at the cap");
+    assert!(
+        stats.peak_workers_busy <= POOL_CAP,
+        "pool threads exceeded the cap: {stats:?}"
+    );
+    assert!(
+        stats.peak_admitted <= MAX_JOBS,
+        "admission gate breached: {stats:?}"
+    );
+    assert_eq!(
+        stats.jobs,
+        (CLIENTS * graphs.len()) as u64,
+        "every request became exactly one executor job"
+    );
+    assert_eq!(
+        coord.metrics().get("census_sparse_total"),
+        (CLIENTS * graphs.len()) as u64
+    );
+}
+
+#[test]
+fn concurrent_path_requests_share_cache_and_pool() {
+    // the serve-subcommand workload: concurrent census_path calls on the
+    // same converted v2 file must all agree and hit the graph cache
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            pool_threads: 2,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    let g = generators::power_law(500, 2.2, 6.0, 77);
+    let want = merged::census(&g);
+    let path = std::env::temp_dir().join("triadic_concurrent_serving.csr");
+    triadic::graph::io::write_binary_v2_file(&g, &path).unwrap();
+
+    let mut handles = Vec::new();
+    for _ in 0..6 {
+        let coord = coord.clone();
+        let path = path.clone();
+        handles.push(std::thread::spawn(move || {
+            coord.census_path(&path).unwrap().census
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), want);
+    }
+    let _ = std::fs::remove_file(&path);
+
+    let m = coord.metrics();
+    // single-flight loading: exactly one thread parses the file, the
+    // other five wait for it and then hit the cache
+    assert_eq!(m.get("graph_cache_misses_total"), 1, "no cache stampede");
+    assert_eq!(m.get("graph_cache_hits_total"), 5);
+}

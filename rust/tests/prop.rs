@@ -129,6 +129,31 @@ fn prop_engines_agree_everywhere() {
 }
 
 #[test]
+fn prop_registry_engines_identical_on_power_law() {
+    // acceptance: all five engines reachable through the CensusEngine
+    // registry produce identical censuses on power-law graphs
+    use triadic::census::{EngineRegistry, ParallelConfig};
+    use triadic::sched::Executor;
+
+    let exec = Executor::with_workers(2);
+    let registry = EngineRegistry::builtin(ParallelConfig {
+        threads: 3,
+        ..ParallelConfig::default()
+    });
+    let names = registry.names();
+    assert_eq!(names.len(), 5, "five engines registered: {names:?}");
+    for seed in 0..8 {
+        let g = generators::power_law(60 + (seed as usize) * 10, 2.2, 5.0, seed);
+        let want = naive::census(&g);
+        for &name in &names {
+            let engine = registry.get(name).expect("registered engine resolves");
+            let run = engine.census(&g, &exec);
+            assert_eq!(run.census, want, "engine {name} seed {seed}");
+        }
+    }
+}
+
+#[test]
 fn prop_generator_determinism_across_kinds() {
     for seed in 0..6 {
         assert_eq!(
