@@ -1,0 +1,93 @@
+//! The job-oriented census API, in-process and over the wire.
+//!
+//! ```sh
+//! cargo run --release --example job_api
+//! ```
+//!
+//! Starts a coordinator, submits a batch of census jobs (generator,
+//! inline and per-request-tuned sources), polls the handles while they
+//! run, then does the same round trip through a loopback TCP server
+//! with the `TriadicClient` — the exact path `repro serve` / `repro
+//! client` use.
+
+use std::sync::Arc;
+
+use triadic::census::TriadType;
+use triadic::coordinator::{
+    CensusRequest, CensusServer, Coordinator, CoordinatorConfig, JobStatus, TriadicClient,
+};
+use triadic::sched::Policy;
+
+fn main() {
+    // 1. A sparse-only coordinator: 4 executor workers shared by every
+    //    job, 2 job runners draining the submit queue.
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            pool_threads: 4,
+            job_workers: 2,
+            ..CoordinatorConfig::default()
+        })
+        .expect("coordinator starts"),
+    );
+
+    // 2. Submit a batch: three sources, three engines, one request with
+    //    its own thread count and schedule policy.
+    let handles = coord.submit_batch(vec![
+        CensusRequest::generator("patents", 20_000).seed(7),
+        CensusRequest::inline(4, vec![(0, 1), (1, 2), (2, 0), (2, 3)]).engine("merged"),
+        CensusRequest::generator("orkut", 5_000)
+            .seed(9)
+            .engine("parallel")
+            .threads(2)
+            .policy(Policy::Dynamic { chunk: 128 })
+            .classes(vec![TriadType::T030T, TriadType::T030C]),
+    ]);
+
+    // 3. Poll the handles like a dashboard would (non-blocking)...
+    loop {
+        let states: Vec<_> = handles.iter().map(|h| h.poll().kind().as_str()).collect();
+        println!("jobs: {states:?}");
+        if handles.iter().all(|h| h.poll().is_terminal()) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    // 4. ...then collect the typed responses.
+    for handle in &handles {
+        match handle.poll() {
+            JobStatus::Done(resp) => println!(
+                "job {}: engine={} route={} nodes={} {:.3}s, {} classes returned",
+                resp.job,
+                resp.provenance.engine,
+                resp.provenance.route,
+                resp.provenance.nodes,
+                resp.seconds,
+                resp.selected_counts().len(),
+            ),
+            other => println!("job {}: {:?}", handle.id(), other.kind()),
+        }
+    }
+
+    // 5. The same API over TCP: serve on a loopback port, drive it with
+    //    the library client, shut it down over the protocol.
+    let server = CensusServer::bind(coord.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let server_thread = std::thread::spawn(move || server.run().expect("serve"));
+
+    let mut client = TriadicClient::connect(addr).expect("connect");
+    let response = client
+        .census(&CensusRequest::generator("web", 10_000).seed(3))
+        .expect("remote census");
+    println!(
+        "over the wire: job {} census total {} ({} nodes) in {:.3}s",
+        response.job,
+        response.census.total(),
+        response.provenance.nodes,
+        response.seconds
+    );
+    println!("server status: {}", client.status().expect("status"));
+    client.shutdown().expect("shutdown");
+    server_thread.join().expect("server thread");
+}

@@ -13,11 +13,13 @@
 
 use std::time::Instant;
 
-use super::parallel::{census_parallel_on, ParallelConfig, ParallelRun};
+use super::parallel::{
+    census_parallel_cancellable, census_parallel_on, ParallelConfig, ParallelRun,
+};
 use super::types::Census;
 use super::{batagelj_mrvar, merged, moody, naive};
 use crate::graph::csr::CsrGraph;
-use crate::sched::{Executor, ThreadPoolStats};
+use crate::sched::{CancelToken, Executor, ThreadPoolStats};
 
 /// A named triad-census implementation.
 pub trait CensusEngine: Send + Sync {
@@ -27,6 +29,23 @@ pub trait CensusEngine: Send + Sync {
     /// Compute the triad census of `g`, scheduling any parallel work on
     /// `exec`.
     fn census(&self, g: &CsrGraph, exec: &Executor) -> ParallelRun;
+
+    /// [`CensusEngine::census`] with a cooperative cancellation hook:
+    /// returns `None` when the job was cancelled before completing.
+    /// Serial engines only honor pre-run cancellation (their sweep is
+    /// one uninterruptible call); the parallel engine checks the token
+    /// between scheduler chunks.
+    fn census_cancellable(
+        &self,
+        g: &CsrGraph,
+        exec: &Executor,
+        cancel: &CancelToken,
+    ) -> Option<ParallelRun> {
+        if cancel.is_cancelled() {
+            return None;
+        }
+        Some(self.census(g, exec))
+    }
 }
 
 /// Wrap a serial engine's result in the uniform telemetry shape: one
@@ -105,6 +124,14 @@ impl CensusEngine for ParallelEngine {
     }
     fn census(&self, g: &CsrGraph, exec: &Executor) -> ParallelRun {
         census_parallel_on(g, &self.cfg, exec)
+    }
+    fn census_cancellable(
+        &self,
+        g: &CsrGraph,
+        exec: &Executor,
+        cancel: &CancelToken,
+    ) -> Option<ParallelRun> {
+        census_parallel_cancellable(g, &self.cfg, exec, cancel)
     }
 }
 
@@ -206,6 +233,27 @@ mod tests {
             let run = r.get(name).unwrap().census(&g, &exec);
             assert_eq!(run.census, want, "{name}");
             assert_eq!(run.stats.busy.len(), run.stats.chunks.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn cancellation_discards_the_run() {
+        let exec = Executor::with_workers(2);
+        let r = EngineRegistry::default();
+        let g = generators::power_law(60, 2.2, 5.0, 3);
+        let cancelled = CancelToken::new();
+        cancelled.cancel();
+        for name in r.names() {
+            let engine = r.get(name).unwrap();
+            assert!(
+                engine.census_cancellable(&g, &exec, &cancelled).is_none(),
+                "{name}: pre-cancelled job must not return a census"
+            );
+            let live = CancelToken::new();
+            let run = engine
+                .census_cancellable(&g, &exec, &live)
+                .expect("un-cancelled job completes");
+            assert_eq!(run.census, naive::census(&g), "{name}");
         }
     }
 

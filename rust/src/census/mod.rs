@@ -37,7 +37,7 @@ pub mod types;
 pub use engine::{CensusEngine, EngineRegistry};
 pub use isotricode::{classify_tricode, tricode_of, TRICODE_TABLE};
 pub use parallel::{
-    census_parallel, census_parallel_on, census_parallel_scoped, Accumulation, ParallelConfig,
-    ParallelRun,
+    census_parallel, census_parallel_cancellable, census_parallel_on, census_parallel_scoped,
+    Accumulation, ParallelConfig, ParallelRun,
 };
 pub use types::{Census, TriadType};

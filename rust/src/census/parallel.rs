@@ -24,7 +24,7 @@ use super::merged::dyad_task;
 use super::types::{Census, CensusSink, TriadType};
 use crate::graph::csr::CsrGraph;
 use crate::rng::splitmix64;
-use crate::sched::{run_partitioned_scoped, Executor, Policy, ThreadPoolStats};
+use crate::sched::{run_partitioned_scoped, CancelToken, Executor, Policy, ThreadPoolStats};
 
 /// How triad increments are accumulated across threads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,32 +153,50 @@ impl LoopRunner<'_> {
         len: usize,
         nthreads: usize,
         policy: Policy,
+        cancel: &CancelToken,
         init: I,
         work: W,
-    ) -> (Vec<A>, ThreadPoolStats)
+    ) -> (Vec<A>, ThreadPoolStats, bool)
     where
         A: Send,
         I: Fn(usize) -> A + Sync,
         W: Fn(&mut A, usize, usize, usize) + Sync,
     {
         match self {
-            LoopRunner::Pool(exec) => exec.run(len, nthreads, policy, init, work),
-            LoopRunner::Scoped => run_partitioned_scoped(len, nthreads, policy, init, work),
+            LoopRunner::Pool(exec) => {
+                exec.run_cancellable(len, nthreads, policy, cancel, init, work)
+            }
+            LoopRunner::Scoped => {
+                // The scoped ablation baseline predates the executor's
+                // cancellation hook; it only honors pre-run cancellation.
+                if cancel.is_cancelled() {
+                    let accs = (0..nthreads.max(1)).map(&init).collect();
+                    return (accs, ThreadPoolStats::default(), true);
+                }
+                let (accs, stats) = run_partitioned_scoped(len, nthreads, policy, init, work);
+                (accs, stats, false)
+            }
         }
     }
 }
 
-fn census_with(g: &CsrGraph, cfg: &ParallelConfig, runner: LoopRunner<'_>) -> ParallelRun {
+fn census_with(
+    g: &CsrGraph,
+    cfg: &ParallelConfig,
+    runner: LoopRunner<'_>,
+    cancel: &CancelToken,
+) -> Option<ParallelRun> {
     let len = g.entry_count();
     let n = g.node_count();
 
-    let (census, stats) = match cfg.accumulation {
+    let (census, stats, cancelled) = match cfg.accumulation {
         Accumulation::Bank { slots } => {
             let bank = CensusBank::new(slots);
-            let (_, stats) = runner.run(
+            let (_, stats, cancelled) = runner.run(
                 len,
                 cfg.threads,
                 cfg.policy,
+                cancel,
                 |_tid| (),
                 |_acc, _tid, s, e| {
                     walk_chunk(g, s, e, |u, v, dir| {
@@ -189,13 +207,14 @@ fn census_with(g: &CsrGraph, cfg: &ParallelConfig, runner: LoopRunner<'_>) -> Pa
                     });
                 },
             );
-            (bank.reduce(), stats)
+            (bank.reduce(), stats, cancelled)
         }
         Accumulation::PerThread => {
-            let (parts, stats) = runner.run(
+            let (parts, stats, cancelled) = runner.run(
                 len,
                 cfg.threads,
                 cfg.policy,
+                cancel,
                 |_tid| Census::zero(),
                 |acc, _tid, s, e| {
                     walk_chunk(g, s, e, |u, v, dir| {
@@ -206,32 +225,54 @@ fn census_with(g: &CsrGraph, cfg: &ParallelConfig, runner: LoopRunner<'_>) -> Pa
             (
                 parts.into_iter().fold(Census::zero(), |a, b| a + b),
                 stats,
+                cancelled,
             )
         }
     };
+    if cancelled {
+        // a partially swept census is a wrong census — discard it
+        return None;
+    }
 
     let mut census = census;
     census.close_with_null(n);
-    ParallelRun { census, stats }
+    Some(ParallelRun { census, stats })
 }
 
 /// Parallel triad census over the collapsed entry space, on the shared
 /// process-wide executor.
 pub fn census_parallel(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
-    census_with(g, cfg, LoopRunner::Pool(Executor::global()))
+    census_with(g, cfg, LoopRunner::Pool(Executor::global()), &CancelToken::new())
+        .expect("fresh token never cancels")
 }
 
 /// Parallel triad census on an explicit [`Executor`] — the coordinator's
 /// serving path: every request interleaves chunks on the same pool.
 pub fn census_parallel_on(g: &CsrGraph, cfg: &ParallelConfig, exec: &Executor) -> ParallelRun {
-    census_with(g, cfg, LoopRunner::Pool(exec))
+    census_with(g, cfg, LoopRunner::Pool(exec), &CancelToken::new())
+        .expect("fresh token never cancels")
+}
+
+/// [`census_parallel_on`] with a cooperative cancellation hook: returns
+/// `None` (discarding the partial sweep) when `cancel` fires before the
+/// census covers the whole entry space. This is the coordinator's
+/// job-cancellation path — a `JobHandle::cancel` on a running sparse job
+/// trips the token and the seats stop claiming chunks.
+pub fn census_parallel_cancellable(
+    g: &CsrGraph,
+    cfg: &ParallelConfig,
+    exec: &Executor,
+    cancel: &CancelToken,
+) -> Option<ParallelRun> {
+    census_with(g, cfg, LoopRunner::Pool(exec), cancel)
 }
 
 /// Parallel triad census spawning scoped threads for this one call (the
 /// pre-executor behavior). Baseline of `benches/executor_reuse.rs`; not
 /// for new code.
 pub fn census_parallel_scoped(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
-    census_with(g, cfg, LoopRunner::Scoped)
+    census_with(g, cfg, LoopRunner::Scoped, &CancelToken::new())
+        .expect("fresh token never cancels")
 }
 
 /// Walk the collapsed entry range `[s, e)`, invoking `f(u, v, dir)` for

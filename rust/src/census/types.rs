@@ -104,6 +104,13 @@ impl TriadType {
         }
     }
 
+    /// From the standard M-A-N label (`"021D"`, `"300"`, …) — the
+    /// inverse of [`TriadType::label`], used by the wire protocol's
+    /// triad-class subset selection. Case-sensitive.
+    pub fn from_label(label: &str) -> Option<TriadType> {
+        TriadType::ALL.iter().copied().find(|t| t.label() == label)
+    }
+
     /// Counts of (mutual, asymmetric, null) dyads in this class.
     pub fn man(self) -> (u8, u8, u8) {
         match self {
@@ -346,6 +353,15 @@ mod tests {
         }
         assert_eq!(TriadType::T003.index(), 1);
         assert_eq!(TriadType::T300.index(), 16);
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        for t in TriadType::ALL {
+            assert_eq!(TriadType::from_label(t.label()), Some(t));
+        }
+        assert_eq!(TriadType::from_label("nope"), None);
+        assert_eq!(TriadType::from_label("021d"), None, "case-sensitive");
     }
 
     #[test]

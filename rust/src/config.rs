@@ -125,16 +125,11 @@ pub fn graph_spec_from(args: &Args) -> Result<crate::graph::GraphSpec, String> {
         _ => 0,
     };
     let nodes = args.get_or("nodes", default_nodes)?;
-    let mut spec = match name.as_str() {
-        "patents" => crate::graph::GraphSpec::patents(nodes),
-        "orkut" => crate::graph::GraphSpec::orkut(nodes),
-        "web" | "webgraph" => crate::graph::GraphSpec::webgraph(nodes),
-        other => return Err(format!("unknown graph {other:?} (patents|orkut|web)")),
+    let seed = match args.opt_str("seed") {
+        Some(s) => Some(s.parse().map_err(|e| format!("bad --seed: {e}"))?),
+        None => None,
     };
-    if let Some(seed) = args.opt_str("seed") {
-        spec.seed = seed.parse().map_err(|e| format!("bad --seed: {e}"))?;
-    }
-    Ok(spec)
+    crate::graph::generators::spec_by_name(&name, nodes, seed)
 }
 
 #[cfg(test)]

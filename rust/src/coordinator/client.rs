@@ -1,0 +1,165 @@
+//! `TriadicClient` — the library client for the census wire protocol.
+//!
+//! A thin, synchronous transport over one TCP connection: every method
+//! writes one request frame, reads one response frame and decodes it
+//! through [`super::protocol`]. Transport failures and server-side
+//! errors both surface as structured [`WireError`]s, so callers switch
+//! on [`ErrorCode`] regardless of where the failure happened.
+//!
+//! ```ignore
+//! let mut client = TriadicClient::connect("127.0.0.1:7333")?;
+//! let job = client.submit(&CensusRequest::generator("patents", 10_000))?.job;
+//! loop {
+//!     let report = client.poll(job)?;
+//!     if report.state.is_terminal() {
+//!         break;
+//!     }
+//!     std::thread::sleep(std::time::Duration::from_millis(20));
+//! }
+//! let response = client.wait(job)?; // terminal: returns immediately
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::protocol::{
+    CensusRequest, CensusResponse, ErrorCode, Json, JobReport, JobStateKind, RequestFrame,
+    ResponseFrame, Verb, WireError,
+};
+
+/// Synchronous client for one server connection.
+pub struct TriadicClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+fn transport_error(e: std::io::Error) -> WireError {
+    WireError::new(ErrorCode::Internal, format!("transport: {e}"))
+}
+
+impl TriadicClient {
+    /// Connect to a running `repro serve --listen` endpoint.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<TriadicClient, WireError> {
+        let stream = TcpStream::connect(addr).map_err(transport_error)?;
+        let reader = BufReader::new(stream.try_clone().map_err(transport_error)?);
+        Ok(TriadicClient {
+            reader,
+            writer: stream,
+            next_id: 0,
+        })
+    }
+
+    /// One request/response round trip; returns the `result` payload.
+    fn call(&mut self, mut frame: RequestFrame) -> Result<Json, WireError> {
+        self.next_id += 1;
+        frame.id = self.next_id;
+        let mut line = frame.encode();
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.flush())
+            .map_err(transport_error)?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).map_err(transport_error)?;
+        if n == 0 {
+            return Err(WireError::new(
+                ErrorCode::Internal,
+                "server closed the connection",
+            ));
+        }
+        let response = ResponseFrame::decode(reply.trim_end())?;
+        // id 0 marks an unkeyed server-side error (the frame was too
+        // broken to echo an id) — surface the structured error itself
+        // rather than a misleading mismatch report
+        if response.id != frame.id && !(response.id == 0 && response.result.is_err()) {
+            return Err(WireError::new(
+                ErrorCode::BadFrame,
+                format!("correlation id mismatch: sent {} got {}", frame.id, response.id),
+            ));
+        }
+        response.result
+    }
+
+    /// Submit a census request; the returned report is the job's intake
+    /// state (`queued`, or already `failed` for a rejected request).
+    pub fn submit(&mut self, request: &CensusRequest) -> Result<JobReport, WireError> {
+        let mut frame = RequestFrame::new(0, Verb::Submit);
+        frame.request = Some(request.clone());
+        JobReport::from_json(&self.call(frame)?)
+    }
+
+    /// Non-blocking job status.
+    pub fn poll(&mut self, job: u64) -> Result<JobReport, WireError> {
+        let mut frame = RequestFrame::new(0, Verb::Poll);
+        frame.job = Some(job);
+        JobReport::from_json(&self.call(frame)?)
+    }
+
+    /// Block until the job is terminal and return its census; a failed
+    /// or cancelled job comes back as its structured error.
+    pub fn wait(&mut self, job: u64) -> Result<CensusResponse, WireError> {
+        let mut frame = RequestFrame::new(0, Verb::Wait);
+        frame.job = Some(job);
+        let report = JobReport::from_json(&self.call(frame)?)?;
+        report_into_response(report)
+    }
+
+    /// Request cancellation; `true` when the job was still cancellable.
+    pub fn cancel(&mut self, job: u64) -> Result<bool, WireError> {
+        let mut frame = RequestFrame::new(0, Verb::Cancel);
+        frame.job = Some(job);
+        let result = self.call(frame)?;
+        Ok(result.get("cancelled").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    /// Convenience: submit and block until done.
+    pub fn census(&mut self, request: &CensusRequest) -> Result<CensusResponse, WireError> {
+        let report = self.submit(request)?;
+        if report.state.is_terminal() {
+            return report_into_response(report);
+        }
+        self.wait(report.job)
+    }
+
+    /// Server identity and job counters (the `status` verb payload).
+    pub fn status(&mut self) -> Result<Json, WireError> {
+        self.call(RequestFrame::new(0, Verb::Status))
+    }
+
+    /// Metrics text exposition of the server's coordinator.
+    pub fn metrics_text(&mut self) -> Result<String, WireError> {
+        let result = self.call(RequestFrame::new(0, Verb::Metrics))?;
+        Ok(result
+            .get("text")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string())
+    }
+
+    /// Ask the server to stop accepting connections and exit its accept
+    /// loop. The ack is written before the server begins stopping;
+    /// already-admitted jobs are drained by the serving process before
+    /// it exits (`repro serve` waits on the in-flight gauge).
+    pub fn shutdown(&mut self) -> Result<(), WireError> {
+        self.call(RequestFrame::new(0, Verb::Shutdown)).map(|_| ())
+    }
+}
+
+/// Collapse a terminal report into the response / structured error the
+/// blocking client methods return.
+fn report_into_response(report: JobReport) -> Result<CensusResponse, WireError> {
+    match report.state {
+        JobStateKind::Done => report.response.ok_or_else(|| {
+            WireError::new(ErrorCode::BadFrame, "done report without a response body")
+        }),
+        JobStateKind::Failed => Err(report
+            .error
+            .unwrap_or_else(|| WireError::new(ErrorCode::Internal, "job failed"))),
+        JobStateKind::Cancelled => Err(WireError::new(ErrorCode::Cancelled, "job cancelled")),
+        state => Err(WireError::new(
+            ErrorCode::Internal,
+            format!("job still {} after wait", state.as_str()),
+        )),
+    }
+}

@@ -1,32 +1,70 @@
-//! The coordinator: the service layer that owns both census backends
-//! and routes work between them.
+//! The coordinator: the job-oriented service layer that owns both
+//! census backends, routes work between them, and speaks a versioned
+//! wire protocol to remote clients.
 //!
 //! Architecture (Python never appears at runtime):
 //!
 //! ```text
-//!            submit(graph)                 ┌──────────────────────┐
-//!  client ────────────────▶  Router ─────▶ │ sparse engine        │
-//!                              │           │ (parallel BM census) │
-//!                              │           └──────────────────────┘
-//!                              │   dense   ┌──────────────────────┐
-//!                              └─────────▶ │ dense service thread │
-//!                                          │ owns PJRT runtime,   │
-//!                                          │ drains request queue │
-//!                                          └──────────────────────┘
+//!  repro client / TriadicClient           in-process callers
+//!        │  newline-delimited JSON              │ census() / census_path()
+//!        ▼  (v1 frames, TCP)                    │ (compatibility shims)
+//!  ┌───────────────┐  submit/poll/wait/cancel   │
+//!  │ CensusServer  │────────────┐               │
+//!  └───────────────┘            ▼               ▼
+//!                      ┌──────────────────────────────┐
+//!                      │ Coordinator                  │
+//!                      │  submit(CensusRequest)       │
+//!                      │    → JobHandle               │
+//!                      │  job queue + runner threads  │
+//!                      └───────┬──────────────────────┘
+//!              resolve source  │  (path cache / inline / generator)
+//!                              ▼
+//!                           Router ──────────┬───────────────┐
+//!                              │ sparse      │ dense         │
+//!                              ▼             ▼               │
+//!              ┌────────────────────┐  ┌──────────────────┐  │
+//!              │ EngineRegistry     │  │ dense service    │  │
+//!              │ (naive/bm/merged/  │  │ thread (PJRT,    │  │
+//!              │  parallel/moody)   │  │ request queue)   │  │
+//!              └─────────┬──────────┘  └──────────────────┘  │
+//!                        ▼                                   │
+//!              shared Executor (persistent work-stealing     │
+//!              pool; CancelToken checked between chunks) ◀───┘
 //! ```
 //!
+//! * **Protocol** ([`protocol`]): the versioned request/response model —
+//!   [`CensusRequest`] (graph source = path | inline edges | generator;
+//!   per-request engine / threads / policy / triad-class subset),
+//!   [`CensusResponse`] (census + provenance + scheduler stats +
+//!   timing), structured [`ErrorCode`]s, and the newline-delimited JSON
+//!   frames both sides exchange.
+//! * **Jobs** ([`service`]): [`Coordinator::submit`] returns a
+//!   [`JobHandle`] with non-blocking `poll()`, blocking `wait()` and
+//!   cooperative `cancel()`; a bounded pool of job-runner threads drains
+//!   the queue. The blocking `census`/`census_path` calls are shims over
+//!   the same pipeline.
 //! * **Routing** ([`router`]): small graphs that fit an AOT artifact go
 //!   to the dense PJRT backend (one matmul-census execution, ideal for
 //!   the monitoring application's windowed subgraphs); everything else
-//!   runs on the sparse parallel engine.
-//! * **Dense service** ([`service`]): `PjRtLoadedExecutable` is not
-//!   `Send`, so a dedicated thread owns the [`DenseCensusRuntime`]
-//!   (compile-once) and serves a bounded request queue — the same
-//!   confine-and-batch pattern a GPU serving router uses.
-//! * **Metrics**: counters + latency histograms per backend.
+//!   runs on the sparse engines. Naming an engine in a request forces
+//!   the sparse path.
+//! * **Transport** ([`server`], [`client`]): `repro serve --listen`
+//!   accepts TCP connections, one thread each; [`TriadicClient`] is the
+//!   library-side counterpart the `repro client` subcommand wraps.
+//! * **Metrics**: counters + gauges + latency histograms per backend,
+//!   job lifecycle counters, served by the `metrics` verb.
 
+pub mod client;
+pub mod protocol;
 pub mod router;
+pub mod server;
 pub mod service;
 
+pub use client::TriadicClient;
+pub use protocol::{
+    CensusRequest, CensusResponse, ErrorCode, GraphSource, JobReport, JobStateKind, Provenance,
+    SchedStats, WireError, PROTOCOL_VERSION,
+};
 pub use router::{Route, Router, RoutingPolicy};
-pub use service::{Coordinator, CoordinatorConfig, CensusOutcome};
+pub use server::CensusServer;
+pub use service::{CensusOutcome, Coordinator, CoordinatorConfig, JobHandle, JobStatus};

@@ -1,0 +1,1501 @@
+//! The versioned census wire protocol: request/response model types and
+//! their newline-delimited JSON encoding.
+//!
+//! Every frame on the wire is one JSON object on one line and carries a
+//! `"v"` protocol-version field; peers reject frames whose version they
+//! do not speak with a structured [`ErrorCode::BadVersion`] error
+//! instead of guessing. The offline vendor set has no serde, so this
+//! module also carries a small, strict JSON value type ([`Json`]) with a
+//! recursive-descent parser and serializer — integers are kept exact in
+//! `i128` (census counts are `u64` and `C(n,3)` totals can exceed the
+//! `f64` integer range), floats stay `f64`.
+//!
+//! Layering: this module owns *all* encode/decode; the TCP server
+//! ([`super::server`]) and the client ([`super::client`]) are pure
+//! transports moving encoded lines.
+//!
+//! ## Frames
+//!
+//! Request (client → server), one per line:
+//!
+//! ```json
+//! {"v":1,"id":7,"verb":"submit","request":{"source":{"kind":"path","path":"g.csr"}}}
+//! {"v":1,"id":8,"verb":"poll","job":3}
+//! {"v":1,"id":9,"verb":"status"}
+//! ```
+//!
+//! Response (server → client), one per request, echoing `id`:
+//!
+//! ```json
+//! {"v":1,"id":7,"ok":true,"result":{"job":3,"state":"queued"}}
+//! {"v":1,"id":8,"ok":false,"error":{"code":"unknown_job","message":"no job 99"}}
+//! ```
+
+use std::fmt;
+
+use crate::census::{Census, TriadType};
+use crate::sched::{Policy, ThreadPoolStats};
+
+/// The wire protocol version spoken by this build. Bumped on any
+/// incompatible frame change; every frame carries it.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// JSON value
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Integers are kept exact (`i128` covers the full
+/// `u64` census-count range); anything with a fraction or exponent
+/// becomes `Num`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Int(i128),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered key/value pairs (duplicate keys: first wins on
+    /// lookup).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object member lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Int(i) => u64::try_from(*i).ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Int(i) => usize::try_from(*i).ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Int(i) => Some(*i as f64),
+            Json::Num(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Parse one JSON document (surrounding whitespace allowed, nothing
+    /// after it).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = JsonParser {
+            b: text.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.b.len() {
+            return Err(format!("trailing garbage at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Int(v as i128)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Int(v as i128)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Int(i) => write!(f, "{i}"),
+            Json::Num(n) if n.is_finite() => write!(f, "{n}"),
+            Json::Num(_) => f.write_str("null"), // NaN / inf have no JSON form
+            Json::Str(s) => write_json_string(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(pairs) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_json_string(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_json_string(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&c) = self.b.get(self.pos) {
+            if c == b' ' || c == b'\t' || c == b'\n' || c == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.pos,
+                self.peek().map(|b| b as char)
+            ))
+        }
+    }
+
+    fn eat_keyword(&mut self, kw: &str) -> Result<(), String> {
+        if self.b[self.pos..].starts_with(kw.as_bytes()) {
+            self.pos += kw.len();
+            Ok(())
+        } else {
+            Err(format!("expected {kw:?} at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.eat_keyword("null").map(|_| Json::Null),
+            Some(b't') => self.eat_keyword("true").map(|_| Json::Bool(true)),
+            Some(b'f') => self.eat_keyword("false").map(|_| Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!(
+                "unexpected {:?} at byte {}",
+                other.map(|b| b as char),
+                self.pos
+            )),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xd800..0xdc00).contains(&hi) {
+                                // surrogate pair: expect \uDC00..\uDFFF next
+                                self.eat(b'\\')?;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xdc00..0xe000).contains(&lo) {
+                                    return Err("invalid low surrogate".to_string());
+                                }
+                                0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(cp)
+                                    .ok_or_else(|| format!("invalid code point {cp:#x}"))?,
+                            );
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar (input is &str, so valid)
+                    let rest = &self.b[self.pos..];
+                    let s = std::str::from_utf8(rest).map_err(|e| e.to_string())?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.b.len() {
+            return Err("truncated \\u escape".to_string());
+        }
+        let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
+            .map_err(|e| e.to_string())?;
+        self.pos += 4;
+        u32::from_str_radix(hex, 16).map_err(|e| format!("bad \\u escape {hex:?}: {e}"))
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos]).map_err(|e| e.to_string())?;
+        if is_float {
+            text.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|e| format!("bad number {text:?}: {e}"))
+        } else {
+            text.parse::<i128>()
+                .map(Json::Int)
+                .map_err(|e| format!("bad integer {text:?}: {e}"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structured errors
+// ---------------------------------------------------------------------------
+
+/// Structured error codes carried in every error frame. Stable strings —
+/// clients switch on the code, not the message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Frame carried a missing or unsupported protocol version.
+    BadVersion,
+    /// Frame was not a parseable protocol frame.
+    BadFrame,
+    /// Request was structurally valid but semantically broken
+    /// (unknown generator, inline arc out of range, bad policy…).
+    BadRequest,
+    /// Verb not recognized by this server.
+    UnknownVerb,
+    /// Engine name not in the registry.
+    UnknownEngine,
+    /// Job id not known to this server.
+    UnknownJob,
+    /// Graph source could not be loaded.
+    GraphLoad,
+    /// The job was cancelled before completing.
+    Cancelled,
+    /// Server is shutting down and not accepting work.
+    ShuttingDown,
+    /// Anything else.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadVersion => "bad_version",
+            ErrorCode::BadFrame => "bad_frame",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownVerb => "unknown_verb",
+            ErrorCode::UnknownEngine => "unknown_engine",
+            ErrorCode::UnknownJob => "unknown_job",
+            ErrorCode::GraphLoad => "graph_load",
+            ErrorCode::Cancelled => "cancelled",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Inverse of [`ErrorCode::as_str`]; unknown codes (from a newer
+    /// peer) collapse to [`ErrorCode::Internal`].
+    pub fn parse(s: &str) -> ErrorCode {
+        match s {
+            "bad_version" => ErrorCode::BadVersion,
+            "bad_frame" => ErrorCode::BadFrame,
+            "bad_request" => ErrorCode::BadRequest,
+            "unknown_verb" => ErrorCode::UnknownVerb,
+            "unknown_engine" => ErrorCode::UnknownEngine,
+            "unknown_job" => ErrorCode::UnknownJob,
+            "graph_load" => ErrorCode::GraphLoad,
+            "cancelled" => ErrorCode::Cancelled,
+            "shutting_down" => ErrorCode::ShuttingDown,
+            _ => ErrorCode::Internal,
+        }
+    }
+}
+
+/// A structured protocol error: stable code + human message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new<M: fmt::Display>(code: ErrorCode, message: M) -> WireError {
+        WireError {
+            code,
+            message: message.to_string(),
+        }
+    }
+
+    /// The `{"code":...,"message":...}` object embedded in error frames
+    /// (and reusable by anything logging structured errors).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("code".into(), Json::from(self.code.as_str())),
+            ("message".into(), Json::from(self.message.clone())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> WireError {
+        WireError {
+            code: ErrorCode::parse(v.get("code").and_then(Json::as_str).unwrap_or("")),
+            message: v
+                .get("message")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+        }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.code.as_str(), self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// Where the graph of a census request comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphSource {
+    /// A file path readable by the *server* (edge list, `TRIADIC1` or
+    /// mmap-served `TRIADIC2`), cached across requests.
+    Path(String),
+    /// An inline directed edge list over nodes `0..nodes` — the
+    /// monitoring application's windowed subgraphs travel this way.
+    Inline { nodes: usize, arcs: Vec<(u32, u32)> },
+    /// A named synthetic workload (`patents`, `orkut`, `web`), generated
+    /// server-side at the given node count.
+    Generator {
+        name: String,
+        nodes: usize,
+        seed: Option<u64>,
+    },
+}
+
+impl GraphSource {
+    /// Short provenance string recorded in responses.
+    pub fn describe(&self) -> String {
+        match self {
+            GraphSource::Path(p) => format!("path:{p}"),
+            GraphSource::Inline { nodes, arcs } => {
+                format!("inline:n={nodes},arcs={}", arcs.len())
+            }
+            GraphSource::Generator { name, nodes, seed } => match seed {
+                Some(s) => format!("generator:{name},n={nodes},seed={s}"),
+                None => format!("generator:{name},n={nodes}"),
+            },
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            GraphSource::Path(p) => Json::Obj(vec![
+                ("kind".into(), Json::from("path")),
+                ("path".into(), Json::from(p.clone())),
+            ]),
+            GraphSource::Inline { nodes, arcs } => Json::Obj(vec![
+                ("kind".into(), Json::from("inline")),
+                ("nodes".into(), Json::from(*nodes)),
+                (
+                    "arcs".into(),
+                    Json::Arr(
+                        arcs.iter()
+                            .map(|&(u, v)| {
+                                Json::Arr(vec![Json::from(u as u64), Json::from(v as u64)])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            GraphSource::Generator { name, nodes, seed } => {
+                let mut pairs = vec![
+                    ("kind".into(), Json::from("generator")),
+                    ("name".into(), Json::from(name.clone())),
+                    ("nodes".into(), Json::from(*nodes)),
+                ];
+                if let Some(s) = seed {
+                    pairs.push(("seed".into(), Json::from(*s)));
+                }
+                Json::Obj(pairs)
+            }
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<GraphSource, WireError> {
+        let bad = |m: String| WireError::new(ErrorCode::BadRequest, m);
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("source.kind missing".into()))?;
+        match kind {
+            "path" => {
+                let p = v
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("source.path missing".into()))?;
+                Ok(GraphSource::Path(p.to_string()))
+            }
+            "inline" => {
+                let nodes = v
+                    .get("nodes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| bad("source.nodes missing".into()))?;
+                let arcs_json = v
+                    .get("arcs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| bad("source.arcs missing".into()))?;
+                let mut arcs = Vec::with_capacity(arcs_json.len());
+                for a in arcs_json {
+                    let pair = a.as_arr().filter(|p| p.len() == 2);
+                    let (u, v) = match pair {
+                        Some(p) => (p[0].as_u64(), p[1].as_u64()),
+                        None => (None, None),
+                    };
+                    match (u, v) {
+                        (Some(u), Some(v)) if u < nodes as u64 && v < nodes as u64 => {
+                            arcs.push((u as u32, v as u32));
+                        }
+                        _ => {
+                            return Err(bad(format!(
+                                "inline arc {a} is not a [u, v] pair inside 0..{nodes}"
+                            )))
+                        }
+                    }
+                }
+                Ok(GraphSource::Inline { nodes, arcs })
+            }
+            "generator" => {
+                let name = v
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| bad("source.name missing".into()))?;
+                let nodes = v
+                    .get("nodes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| bad("source.nodes missing".into()))?;
+                let seed = v.get("seed").and_then(Json::as_u64);
+                Ok(GraphSource::Generator {
+                    name: name.to_string(),
+                    nodes,
+                    seed,
+                })
+            }
+            other => Err(bad(format!(
+                "unknown source kind {other:?} (path|inline|generator)"
+            ))),
+        }
+    }
+}
+
+/// A census request: graph source plus per-request execution options.
+/// Build with the constructors + chained setters:
+///
+/// ```ignore
+/// let req = CensusRequest::generator("patents", 50_000)
+///     .seed(7)
+///     .engine("parallel")
+///     .threads(8)
+///     .policy(Policy::Dynamic { chunk: 256 })
+///     .classes(vec![TriadType::T030T, TriadType::T030C]);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct CensusRequest {
+    pub source: GraphSource,
+    /// Engine override. `None` routes normally (dense backend eligible);
+    /// naming an engine forces the sparse path through that engine.
+    pub engine: Option<String>,
+    /// Seat count override for the parallel engine.
+    pub threads: Option<usize>,
+    /// Schedule-policy override for the parallel engine.
+    pub policy: Option<Policy>,
+    /// Triad-class subset to return; `None` = the full 16-class census.
+    pub classes: Option<Vec<TriadType>>,
+}
+
+impl CensusRequest {
+    pub fn from_source(source: GraphSource) -> CensusRequest {
+        CensusRequest {
+            source,
+            engine: None,
+            threads: None,
+            policy: None,
+            classes: None,
+        }
+    }
+
+    /// Census of a server-side graph file.
+    pub fn path<P: Into<String>>(path: P) -> CensusRequest {
+        CensusRequest::from_source(GraphSource::Path(path.into()))
+    }
+
+    /// Census of an inline edge list over nodes `0..nodes`.
+    pub fn inline(nodes: usize, arcs: Vec<(u32, u32)>) -> CensusRequest {
+        CensusRequest::from_source(GraphSource::Inline { nodes, arcs })
+    }
+
+    /// Census of a named synthetic workload generated server-side.
+    pub fn generator<N: Into<String>>(name: N, nodes: usize) -> CensusRequest {
+        CensusRequest::from_source(GraphSource::Generator {
+            name: name.into(),
+            nodes,
+            seed: None,
+        })
+    }
+
+    /// Generator seed (no effect on path / inline sources).
+    pub fn seed(mut self, seed: u64) -> CensusRequest {
+        if let GraphSource::Generator { seed: s, .. } = &mut self.source {
+            *s = Some(seed);
+        }
+        self
+    }
+
+    /// Force a named engine (sparse path).
+    pub fn engine<E: Into<String>>(mut self, engine: E) -> CensusRequest {
+        self.engine = Some(engine.into());
+        self
+    }
+
+    /// Seat count for the parallel engine.
+    pub fn threads(mut self, threads: usize) -> CensusRequest {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Schedule policy for the parallel engine.
+    pub fn policy(mut self, policy: Policy) -> CensusRequest {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Return only these triad classes.
+    pub fn classes(mut self, classes: Vec<TriadType>) -> CensusRequest {
+        self.classes = Some(classes);
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("source".into(), self.source.to_json())];
+        if let Some(e) = &self.engine {
+            pairs.push(("engine".into(), Json::from(e.clone())));
+        }
+        if let Some(t) = self.threads {
+            pairs.push(("threads".into(), Json::from(t)));
+        }
+        if let Some(p) = &self.policy {
+            pairs.push(("policy".into(), Json::from(policy_to_wire(p))));
+        }
+        if let Some(classes) = &self.classes {
+            pairs.push((
+                "classes".into(),
+                Json::Arr(classes.iter().map(|t| Json::from(t.label())).collect()),
+            ));
+        }
+        Json::Obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<CensusRequest, WireError> {
+        let bad = |m: String| WireError::new(ErrorCode::BadRequest, m);
+        let source = GraphSource::from_json(
+            v.get("source")
+                .ok_or_else(|| bad("request.source missing".into()))?,
+        )?;
+        let engine = v.get("engine").and_then(Json::as_str).map(str::to_string);
+        let threads = v.get("threads").and_then(Json::as_usize);
+        let policy = match v.get("policy").and_then(Json::as_str) {
+            Some(s) => Some(Policy::parse(s).map_err(|e| bad(format!("bad policy: {e}")))?),
+            None => None,
+        };
+        let classes = match v.get("classes").and_then(Json::as_arr) {
+            Some(items) => {
+                let mut out = Vec::with_capacity(items.len());
+                for item in items {
+                    let label = item
+                        .as_str()
+                        .ok_or_else(|| bad(format!("class {item} is not a label string")))?;
+                    out.push(
+                        TriadType::from_label(label)
+                            .ok_or_else(|| bad(format!("unknown triad class {label:?}")))?,
+                    );
+                }
+                Some(out)
+            }
+            None => None,
+        };
+        Ok(CensusRequest {
+            source,
+            engine,
+            threads,
+            policy,
+            classes,
+        })
+    }
+}
+
+/// Wire form of a [`Policy`]: the CLI syntax `name:chunk`, accepted back
+/// by [`Policy::parse`].
+pub fn policy_to_wire(p: &Policy) -> String {
+    match p {
+        Policy::Static { chunk } => format!("static:{chunk}"),
+        Policy::Dynamic { chunk } => format!("dynamic:{chunk}"),
+        Policy::Guided { min_chunk } => format!("guided:{min_chunk}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// Where a served census came from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// [`GraphSource::describe`] of the request's source.
+    pub source: String,
+    /// Engine that computed the census (`dense` for the AOT backend).
+    pub engine: String,
+    /// `sparse` or `dense:SIZE` (artifact size routed to).
+    pub route: String,
+    pub nodes: u64,
+    pub arcs: u64,
+}
+
+/// Flattened per-job scheduler telemetry (from [`ThreadPoolStats`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedStats {
+    /// Virtual seats the job ran with.
+    pub seats: usize,
+    /// Chunks claimed across all seats.
+    pub chunks: u64,
+    /// Iteration slots covered across all seats.
+    pub items: u64,
+    /// Busy seconds summed over seats.
+    pub busy_seconds: f64,
+    /// Wall-clock seconds of the parallel region.
+    pub wall_seconds: f64,
+    /// Max/mean busy ratio (1.0 = perfectly balanced).
+    pub imbalance: f64,
+}
+
+impl SchedStats {
+    pub fn from_pool(stats: &ThreadPoolStats) -> SchedStats {
+        SchedStats {
+            seats: stats.items.len(),
+            chunks: stats.chunks.iter().map(|&c| c as u64).sum(),
+            items: stats.items.iter().map(|&i| i as u64).sum(),
+            busy_seconds: stats.busy.iter().sum(),
+            wall_seconds: stats.wall,
+            imbalance: stats.imbalance(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("seats".into(), Json::from(self.seats)),
+            ("chunks".into(), Json::from(self.chunks)),
+            ("items".into(), Json::from(self.items)),
+            ("busy_seconds".into(), Json::Num(self.busy_seconds)),
+            ("wall_seconds".into(), Json::Num(self.wall_seconds)),
+            ("imbalance".into(), Json::Num(self.imbalance)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> SchedStats {
+        SchedStats {
+            seats: v.get("seats").and_then(Json::as_usize).unwrap_or(0),
+            chunks: v.get("chunks").and_then(Json::as_u64).unwrap_or(0),
+            items: v.get("items").and_then(Json::as_u64).unwrap_or(0),
+            busy_seconds: v.get("busy_seconds").and_then(Json::as_f64).unwrap_or(0.0),
+            wall_seconds: v.get("wall_seconds").and_then(Json::as_f64).unwrap_or(0.0),
+            imbalance: v.get("imbalance").and_then(Json::as_f64).unwrap_or(0.0),
+        }
+    }
+}
+
+/// A served census with provenance, timing and scheduler telemetry.
+///
+/// When `classes` is set, only those classes were requested: the wire
+/// carries just the selected counts and every other slot of `census` is
+/// zero on the receiving side.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CensusResponse {
+    pub protocol_version: u64,
+    /// Coordinator-assigned job id.
+    pub job: u64,
+    pub census: Census,
+    pub classes: Option<Vec<TriadType>>,
+    pub provenance: Provenance,
+    /// `None` for dense routes (no chunk scheduler ran).
+    pub stats: Option<SchedStats>,
+    /// End-to-end seconds (load + route + census).
+    pub seconds: f64,
+}
+
+impl CensusResponse {
+    /// The counts this response carries, in census-index order —
+    /// the requested subset, or all 16 classes.
+    pub fn selected_counts(&self) -> Vec<(TriadType, u64)> {
+        match &self.classes {
+            Some(classes) => classes.iter().map(|&t| (t, self.census[t])).collect(),
+            None => TriadType::ALL.iter().map(|&t| (t, self.census[t])).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counts = Json::Obj(
+            self.selected_counts()
+                .into_iter()
+                .map(|(t, c)| (t.label().to_string(), Json::from(c)))
+                .collect(),
+        );
+        let mut pairs = vec![
+            ("v".into(), Json::from(self.protocol_version)),
+            ("job".into(), Json::from(self.job)),
+            ("counts".into(), counts),
+        ];
+        if let Some(classes) = &self.classes {
+            pairs.push((
+                "classes".into(),
+                Json::Arr(classes.iter().map(|t| Json::from(t.label())).collect()),
+            ));
+        }
+        pairs.push((
+            "provenance".into(),
+            Json::Obj(vec![
+                ("source".into(), Json::from(self.provenance.source.clone())),
+                ("engine".into(), Json::from(self.provenance.engine.clone())),
+                ("route".into(), Json::from(self.provenance.route.clone())),
+                ("nodes".into(), Json::from(self.provenance.nodes)),
+                ("arcs".into(), Json::from(self.provenance.arcs)),
+            ]),
+        ));
+        if let Some(stats) = &self.stats {
+            pairs.push(("stats".into(), stats.to_json()));
+        }
+        pairs.push(("seconds".into(), Json::Num(self.seconds)));
+        Json::Obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<CensusResponse, WireError> {
+        let bad = |m: String| WireError::new(ErrorCode::BadFrame, m);
+        let counts_json = v
+            .get("counts")
+            .ok_or_else(|| bad("response.counts missing".into()))?;
+        let pairs = match counts_json {
+            Json::Obj(pairs) => pairs,
+            _ => return Err(bad("response.counts is not an object".into())),
+        };
+        let mut census = Census::zero();
+        for (label, count) in pairs {
+            let t = TriadType::from_label(label)
+                .ok_or_else(|| bad(format!("unknown triad class {label:?}")))?;
+            let c = count
+                .as_u64()
+                .ok_or_else(|| bad(format!("count for {label} is not a u64")))?;
+            census.add_count(t, c);
+        }
+        let classes = match v.get("classes").and_then(Json::as_arr) {
+            Some(items) => Some(
+                items
+                    .iter()
+                    .map(|item| {
+                        item.as_str()
+                            .and_then(TriadType::from_label)
+                            .ok_or_else(|| bad(format!("bad class entry {item}")))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+            ),
+            None => None,
+        };
+        let prov = v
+            .get("provenance")
+            .ok_or_else(|| bad("response.provenance missing".into()))?;
+        let getstr = |obj: &Json, key: &str| {
+            obj.get(key)
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string()
+        };
+        Ok(CensusResponse {
+            protocol_version: v.get("v").and_then(Json::as_u64).unwrap_or(0),
+            job: v.get("job").and_then(Json::as_u64).unwrap_or(0),
+            census,
+            classes,
+            provenance: Provenance {
+                source: getstr(prov, "source"),
+                engine: getstr(prov, "engine"),
+                route: getstr(prov, "route"),
+                nodes: prov.get("nodes").and_then(Json::as_u64).unwrap_or(0),
+                arcs: prov.get("arcs").and_then(Json::as_u64).unwrap_or(0),
+            },
+            stats: v.get("stats").map(SchedStats::from_json),
+            seconds: v.get("seconds").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Job reports
+// ---------------------------------------------------------------------------
+
+/// Lifecycle states a job can be observed in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStateKind {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobStateKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobStateKind::Queued => "queued",
+            JobStateKind::Running => "running",
+            JobStateKind::Done => "done",
+            JobStateKind::Failed => "failed",
+            JobStateKind::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobStateKind> {
+        match s {
+            "queued" => Some(JobStateKind::Queued),
+            "running" => Some(JobStateKind::Running),
+            "done" => Some(JobStateKind::Done),
+            "failed" => Some(JobStateKind::Failed),
+            "cancelled" => Some(JobStateKind::Cancelled),
+            _ => None,
+        }
+    }
+
+    /// Whether this state is terminal (the job will never change again).
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            JobStateKind::Done | JobStateKind::Failed | JobStateKind::Cancelled
+        )
+    }
+}
+
+/// Point-in-time view of one job, as served by `poll` / `wait`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobReport {
+    pub job: u64,
+    pub state: JobStateKind,
+    /// Present iff `state == Done`.
+    pub response: Option<CensusResponse>,
+    /// Present iff `state == Failed`.
+    pub error: Option<WireError>,
+}
+
+impl JobReport {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("job".into(), Json::from(self.job)),
+            ("state".into(), Json::from(self.state.as_str())),
+        ];
+        if let Some(r) = &self.response {
+            pairs.push(("response".into(), r.to_json()));
+        }
+        if let Some(e) = &self.error {
+            pairs.push(("error".into(), e.to_json()));
+        }
+        Json::Obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobReport, WireError> {
+        let bad = |m: String| WireError::new(ErrorCode::BadFrame, m);
+        let state = v
+            .get("state")
+            .and_then(Json::as_str)
+            .and_then(JobStateKind::parse)
+            .ok_or_else(|| bad("job report state missing or unknown".into()))?;
+        Ok(JobReport {
+            job: v
+                .get("job")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| bad("job report id missing".into()))?,
+            state,
+            response: match v.get("response") {
+                Some(r) => Some(CensusResponse::from_json(r)?),
+                None => None,
+            },
+            error: v.get("error").map(WireError::from_json),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+/// Protocol verbs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verb {
+    /// Submit a census request; result is a queued [`JobReport`].
+    Submit,
+    /// Non-blocking job status.
+    Poll,
+    /// Block until the job is terminal; result is its final report.
+    Wait,
+    /// Request job cancellation.
+    Cancel,
+    /// Server health/identity summary.
+    Status,
+    /// Metrics text exposition.
+    Metrics,
+    /// Stop accepting connections and exit the serve loop.
+    Shutdown,
+}
+
+impl Verb {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Verb::Submit => "submit",
+            Verb::Poll => "poll",
+            Verb::Wait => "wait",
+            Verb::Cancel => "cancel",
+            Verb::Status => "status",
+            Verb::Metrics => "metrics",
+            Verb::Shutdown => "shutdown",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Verb> {
+        match s {
+            "submit" => Some(Verb::Submit),
+            "poll" => Some(Verb::Poll),
+            "wait" => Some(Verb::Wait),
+            "cancel" => Some(Verb::Cancel),
+            "status" => Some(Verb::Status),
+            "metrics" => Some(Verb::Metrics),
+            "shutdown" => Some(Verb::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// One client → server frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    /// Protocol version (always [`PROTOCOL_VERSION`] when built here).
+    pub v: u64,
+    /// Client correlation id, echoed in the response frame.
+    pub id: u64,
+    pub verb: Verb,
+    /// Payload for [`Verb::Submit`].
+    pub request: Option<CensusRequest>,
+    /// Target for [`Verb::Poll`] / [`Verb::Wait`] / [`Verb::Cancel`].
+    pub job: Option<u64>,
+}
+
+impl RequestFrame {
+    pub fn new(id: u64, verb: Verb) -> RequestFrame {
+        RequestFrame {
+            v: PROTOCOL_VERSION,
+            id,
+            verb,
+            request: None,
+            job: None,
+        }
+    }
+
+    /// Serialize to one line (no trailing newline).
+    pub fn encode(&self) -> String {
+        let mut pairs = vec![
+            ("v".into(), Json::from(self.v)),
+            ("id".into(), Json::from(self.id)),
+            ("verb".into(), Json::from(self.verb.as_str())),
+        ];
+        if let Some(r) = &self.request {
+            pairs.push(("request".into(), r.to_json()));
+        }
+        if let Some(j) = self.job {
+            pairs.push(("job".into(), Json::from(j)));
+        }
+        Json::Obj(pairs).to_string()
+    }
+
+    /// Parse and validate one frame line. Version and verb problems come
+    /// back as structured errors so the server can answer them.
+    pub fn decode(line: &str) -> Result<RequestFrame, WireError> {
+        let v = Json::parse(line)
+            .map_err(|e| WireError::new(ErrorCode::BadFrame, format!("unparseable frame: {e}")))?;
+        let version = v.get("v").and_then(Json::as_u64).ok_or_else(|| {
+            WireError::new(ErrorCode::BadVersion, "frame carries no \"v\" version field")
+        })?;
+        if version != PROTOCOL_VERSION {
+            return Err(WireError::new(
+                ErrorCode::BadVersion,
+                format!("protocol version {version} unsupported (speaking {PROTOCOL_VERSION})"),
+            ));
+        }
+        let verb_str = v
+            .get("verb")
+            .and_then(Json::as_str)
+            .ok_or_else(|| WireError::new(ErrorCode::BadFrame, "frame carries no verb"))?;
+        let verb = Verb::parse(verb_str)
+            .ok_or_else(|| WireError::new(ErrorCode::UnknownVerb, format!("verb {verb_str:?}")))?;
+        let request = match v.get("request") {
+            Some(r) => Some(CensusRequest::from_json(r)?),
+            None => None,
+        };
+        Ok(RequestFrame {
+            v: version,
+            id: v.get("id").and_then(Json::as_u64).unwrap_or(0),
+            verb,
+            request,
+            job: v.get("job").and_then(Json::as_u64),
+        })
+    }
+}
+
+/// One server → client frame: `Ok` payload or structured error, tagged
+/// with the client's correlation id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseFrame {
+    pub v: u64,
+    pub id: u64,
+    pub result: Result<Json, WireError>,
+}
+
+impl ResponseFrame {
+    pub fn ok(id: u64, result: Json) -> ResponseFrame {
+        ResponseFrame {
+            v: PROTOCOL_VERSION,
+            id,
+            result: Ok(result),
+        }
+    }
+
+    pub fn err(id: u64, error: WireError) -> ResponseFrame {
+        ResponseFrame {
+            v: PROTOCOL_VERSION,
+            id,
+            result: Err(error),
+        }
+    }
+
+    /// Serialize to one line (no trailing newline).
+    pub fn encode(&self) -> String {
+        let mut pairs = vec![
+            ("v".into(), Json::from(self.v)),
+            ("id".into(), Json::from(self.id)),
+        ];
+        match &self.result {
+            Ok(result) => {
+                pairs.push(("ok".into(), Json::Bool(true)));
+                pairs.push(("result".into(), result.clone()));
+            }
+            Err(e) => {
+                pairs.push(("ok".into(), Json::Bool(false)));
+                pairs.push(("error".into(), e.to_json()));
+            }
+        }
+        Json::Obj(pairs).to_string()
+    }
+
+    pub fn decode(line: &str) -> Result<ResponseFrame, WireError> {
+        let v = Json::parse(line)
+            .map_err(|e| WireError::new(ErrorCode::BadFrame, format!("unparseable frame: {e}")))?;
+        let version = v
+            .get("v")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| WireError::new(ErrorCode::BadVersion, "response carries no version"))?;
+        if version != PROTOCOL_VERSION {
+            return Err(WireError::new(
+                ErrorCode::BadVersion,
+                format!("protocol version {version} unsupported (speaking {PROTOCOL_VERSION})"),
+            ));
+        }
+        let id = v.get("id").and_then(Json::as_u64).unwrap_or(0);
+        let ok = v.get("ok").and_then(Json::as_bool).unwrap_or(false);
+        if ok {
+            let result = v
+                .get("result")
+                .cloned()
+                .ok_or_else(|| WireError::new(ErrorCode::BadFrame, "ok frame without result"))?;
+            Ok(ResponseFrame {
+                v: version,
+                id,
+                result: Ok(result),
+            })
+        } else {
+            let error = v
+                .get("error")
+                .map(WireError::from_json)
+                .unwrap_or_else(|| {
+                    WireError::new(ErrorCode::Internal, "error frame without error body")
+                });
+            Ok(ResponseFrame {
+                v: version,
+                id,
+                result: Err(error),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trips() {
+        let cases = [
+            r#"null"#,
+            r#"true"#,
+            r#"[1,2,3]"#,
+            r#"{"a":1,"b":[{"c":"d"}],"e":-2.5}"#,
+            r#""he said \"hi\"\n""#,
+        ];
+        for case in cases {
+            let v = Json::parse(case).unwrap();
+            let reparsed = Json::parse(&v.to_string()).unwrap();
+            assert_eq!(v, reparsed, "{case}");
+        }
+    }
+
+    #[test]
+    fn json_big_integers_stay_exact() {
+        let big = u64::MAX;
+        let v = Json::parse(&format!("{{\"c\":{big}}}")).unwrap();
+        assert_eq!(v.get("c").and_then(Json::as_u64), Some(big));
+        assert_eq!(v.to_string(), format!("{{\"c\":{big}}}"));
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        for bad in ["", "{", "[1,]", "{\"a\"}", "tru", "1 2", "\"\\q\""] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        let v = Json::parse(r#""tab\t nl\n uni\u0041 pair\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str(), Some("tab\t nl\n uniA pair😀"));
+    }
+
+    #[test]
+    fn request_round_trips_all_sources() {
+        let reqs = [
+            CensusRequest::path("/data/g.csr"),
+            CensusRequest::inline(4, vec![(0, 1), (1, 2), (3, 0)])
+                .engine("merged")
+                .classes(vec![TriadType::T030T, TriadType::T030C]),
+            CensusRequest::generator("patents", 5_000)
+                .seed(7)
+                .engine("parallel")
+                .threads(8)
+                .policy(Policy::Dynamic { chunk: 128 }),
+        ];
+        for req in reqs {
+            let line = req.to_json().to_string();
+            let back = CensusRequest::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(back, req, "{line}");
+        }
+    }
+
+    #[test]
+    fn inline_arcs_are_bounds_checked() {
+        let json = Json::parse(
+            r#"{"source":{"kind":"inline","nodes":3,"arcs":[[0,1],[5,1]]}}"#,
+        )
+        .unwrap();
+        let err = CensusRequest::from_json(&json).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn response_round_trips_full_and_subset() {
+        let mut census = Census::zero();
+        census.add_count(TriadType::T030T, 41);
+        census.add_count(TriadType::T003, 1_000_000);
+        let full = CensusResponse {
+            protocol_version: PROTOCOL_VERSION,
+            job: 9,
+            census,
+            classes: None,
+            provenance: Provenance {
+                source: "generator:patents,n=100".to_string(),
+                engine: "parallel".to_string(),
+                route: "sparse".to_string(),
+                nodes: 100,
+                arcs: 440,
+            },
+            stats: Some(SchedStats {
+                seats: 4,
+                chunks: 12,
+                items: 900,
+                busy_seconds: 0.01,
+                wall_seconds: 0.004,
+                imbalance: 1.2,
+            }),
+            seconds: 0.005,
+        };
+        let back =
+            CensusResponse::from_json(&Json::parse(&full.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, full);
+
+        let subset = CensusResponse {
+            classes: Some(vec![TriadType::T030T]),
+            ..full.clone()
+        };
+        let line = subset.to_json().to_string();
+        let back = CensusResponse::from_json(&Json::parse(&line).unwrap()).unwrap();
+        // only the selected class travels: T003 does not survive the wire
+        assert_eq!(back.census[TriadType::T030T], 41);
+        assert_eq!(back.census[TriadType::T003], 0);
+        assert_eq!(back.classes, Some(vec![TriadType::T030T]));
+        assert_eq!(back.selected_counts(), vec![(TriadType::T030T, 41)]);
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let mut f = RequestFrame::new(3, Verb::Submit);
+        f.request = Some(CensusRequest::path("x.csr"));
+        let back = RequestFrame::decode(&f.encode()).unwrap();
+        assert_eq!(back, f);
+
+        let mut p = RequestFrame::new(4, Verb::Poll);
+        p.job = Some(17);
+        assert_eq!(RequestFrame::decode(&p.encode()).unwrap(), p);
+
+        let ok = ResponseFrame::ok(3, Json::from("fine"));
+        assert_eq!(ResponseFrame::decode(&ok.encode()).unwrap(), ok);
+        let err = ResponseFrame::err(4, WireError::new(ErrorCode::UnknownJob, "no job 17"));
+        let back = ResponseFrame::decode(&err.encode()).unwrap();
+        assert_eq!(back.result.unwrap_err().code, ErrorCode::UnknownJob);
+    }
+
+    #[test]
+    fn version_mismatch_is_a_structured_error() {
+        let err = RequestFrame::decode(r#"{"v":99,"id":1,"verb":"status"}"#).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadVersion);
+        let err = RequestFrame::decode(r#"{"id":1,"verb":"status"}"#).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadVersion);
+        let err = RequestFrame::decode(r#"{"v":1,"id":1,"verb":"dance"}"#).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownVerb);
+        let err = RequestFrame::decode("not json").unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadFrame);
+    }
+
+    #[test]
+    fn job_reports_round_trip() {
+        let report = JobReport {
+            job: 5,
+            state: JobStateKind::Failed,
+            response: None,
+            error: Some(WireError::new(ErrorCode::GraphLoad, "no such file")),
+        };
+        let back = JobReport::from_json(&Json::parse(&report.to_json().to_string()).unwrap());
+        assert_eq!(back.unwrap(), report);
+        assert!(JobStateKind::Done.is_terminal());
+        assert!(!JobStateKind::Running.is_terminal());
+    }
+
+    #[test]
+    fn error_codes_round_trip() {
+        for code in [
+            ErrorCode::BadVersion,
+            ErrorCode::BadFrame,
+            ErrorCode::BadRequest,
+            ErrorCode::UnknownVerb,
+            ErrorCode::UnknownEngine,
+            ErrorCode::UnknownJob,
+            ErrorCode::GraphLoad,
+            ErrorCode::Cancelled,
+            ErrorCode::ShuttingDown,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), code);
+        }
+        assert_eq!(ErrorCode::parse("novel_code"), ErrorCode::Internal);
+    }
+
+    #[test]
+    fn policy_wire_round_trips() {
+        for p in [
+            Policy::Static { chunk: 7 },
+            Policy::Dynamic { chunk: 256 },
+            Policy::Guided { min_chunk: 64 },
+        ] {
+            assert_eq!(Policy::parse(&policy_to_wire(&p)).unwrap(), p);
+        }
+    }
+}

@@ -124,5 +124,80 @@ mod tests {
     fn empty_graph_routes_sparse() {
         let r = router();
         assert_eq!(r.route(&crate::graph::CsrGraph::empty(0)), Route::Sparse);
+        // nodes but no arcs: density 0 < any positive threshold
+        assert_eq!(r.route(&crate::graph::CsrGraph::empty(10)), Route::Sparse);
+    }
+
+    #[test]
+    fn dense_max_nodes_boundary_is_inclusive() {
+        // complete mutual graphs (density 1.0) isolate the node bound
+        let r = Router::new(RoutingPolicy {
+            dense_sizes: vec![64],
+            dense_max_nodes: 50,
+            min_dense_density: 0.02,
+        });
+        assert_eq!(
+            r.route(&named::complete_mutual(50)),
+            Route::Dense { size: 64 },
+            "exactly at the bound stays dense"
+        );
+        assert_eq!(
+            r.route(&named::complete_mutual(51)),
+            Route::Sparse,
+            "one past the bound routes sparse"
+        );
+    }
+
+    #[test]
+    fn graphs_larger_than_every_artifact_route_sparse() {
+        // under dense_max_nodes, dense enough, but no artifact fits
+        let r = Router::new(RoutingPolicy {
+            dense_sizes: vec![16],
+            dense_max_nodes: 256,
+            min_dense_density: 0.02,
+        });
+        assert_eq!(r.route(&named::complete_mutual(20)), Route::Sparse);
+        // and the smallest artifact >= n is chosen, not the largest
+        let r = Router::new(RoutingPolicy {
+            dense_sizes: vec![16, 64, 256],
+            dense_max_nodes: 256,
+            min_dense_density: 0.02,
+        });
+        assert_eq!(r.route(&named::complete_mutual(20)), Route::Dense { size: 64 });
+    }
+
+    #[test]
+    fn min_dense_density_threshold_on_either_side() {
+        // n = 10 → 45 possible dyads. With the threshold at exactly
+        // 5/45, 5 connected dyads are dense (>=) and 4 are sparse.
+        let r = Router::new(RoutingPolicy {
+            dense_sizes: vec![16],
+            dense_max_nodes: 256,
+            min_dense_density: 5.0 / 45.0,
+        });
+        let five = crate::graph::builder::from_arcs(
+            10,
+            &[(0, 1), (2, 3), (4, 5), (6, 7), (8, 9)],
+        );
+        assert_eq!(five.dyad_count(), 5);
+        assert_eq!(
+            r.route(&five),
+            Route::Dense { size: 16 },
+            "density exactly at the threshold is dense (inclusive)"
+        );
+        let four = crate::graph::builder::from_arcs(10, &[(0, 1), (2, 3), (4, 5), (6, 7)]);
+        assert_eq!(four.dyad_count(), 4);
+        assert_eq!(r.route(&four), Route::Sparse, "just under the threshold");
+    }
+
+    #[test]
+    fn zero_density_threshold_admits_any_connected_graph() {
+        let r = Router::new(RoutingPolicy {
+            dense_sizes: vec![16],
+            dense_max_nodes: 256,
+            min_dense_density: 0.0,
+        });
+        let g = crate::graph::builder::from_arcs(10, &[(0, 1)]);
+        assert_eq!(r.route(&g), Route::Dense { size: 16 });
     }
 }

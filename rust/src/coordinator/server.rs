@@ -1,0 +1,271 @@
+//! Dependency-free TCP census server speaking the newline-delimited
+//! JSON protocol of [`super::protocol`].
+//!
+//! One thread per connection; frames are processed strictly in order
+//! per connection, and job state is shared across connections (submit
+//! on one, poll on another). The server is a pure transport: every
+//! frame decodes, dispatches to the [`Coordinator`] job API, and
+//! encodes — all payload shapes live in the protocol module.
+//!
+//! Control verbs: `status` (identity + job counters), `metrics` (text
+//! exposition of the coordinator registry), `shutdown` (stop accepting
+//! and return from [`CensusServer::run`]).
+//!
+//! Completed jobs stay resolvable until the server exits — a polling
+//! client may fetch a terminal report any number of times. Bound the
+//! process by restarting the server, not by racing clients to observe
+//! results exactly once.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::protocol::{
+    ErrorCode, Json, RequestFrame, ResponseFrame, Verb, WireError, PROTOCOL_VERSION,
+};
+use super::service::{Coordinator, JobHandle};
+use crate::error::{Context, Result};
+
+/// Shared server state: the coordinator, the cross-connection job table
+/// and the shutdown latch.
+struct ServerState {
+    coordinator: Arc<Coordinator>,
+    jobs: Mutex<HashMap<u64, JobHandle>>,
+    shutdown: AtomicBool,
+    started: Instant,
+    addr: SocketAddr,
+}
+
+impl ServerState {
+    /// Flip the shutdown latch and wake the blocking accept loop with a
+    /// throwaway connection. Called *after* the shutdown ack has been
+    /// flushed to the requesting client, so the ack is never raced by
+    /// process teardown.
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// The census TCP server. Bind, read the OS-assigned address, then
+/// [`CensusServer::run`] the accept loop (usually on its own thread).
+pub struct CensusServer {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl CensusServer {
+    /// Bind to `addr` (e.g. `127.0.0.1:0` for an OS-assigned port).
+    pub fn bind<A: ToSocketAddrs + std::fmt::Debug>(
+        coordinator: Arc<Coordinator>,
+        addr: A,
+    ) -> Result<CensusServer> {
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("binding census server {addr:?}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        Ok(CensusServer {
+            listener,
+            state: Arc::new(ServerState {
+                coordinator,
+                jobs: Mutex::new(HashMap::new()),
+                shutdown: AtomicBool::new(false),
+                started: Instant::now(),
+                addr: local,
+            }),
+        })
+    }
+
+    /// The actually-bound address (resolves `:0` to the assigned port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Accept loop: one handler thread per connection, until a client
+    /// sends `shutdown`. Handler threads are detached — in-flight
+    /// requests on other connections finish on their own; new frames
+    /// after shutdown are answered with `shutting_down`.
+    pub fn run(self) -> Result<()> {
+        let CensusServer { listener, state } = self;
+        for conn in listener.incoming() {
+            if state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let state = state.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name("census-conn".into())
+                        .spawn(move || handle_connection(&state, stream));
+                    if let Err(e) = spawned {
+                        eprintln!("serve: failed to spawn connection thread: {e}");
+                    }
+                }
+                Err(e) => {
+                    if state.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    eprintln!("serve: accept error: {e}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Serve one connection: read frames line by line, answer each in
+/// order, stop on disconnect or after shutdown is requested.
+fn handle_connection(state: &ServerState, stream: TcpStream) {
+    let metrics = state.coordinator.metrics();
+    metrics.inc("server_connections_total", 1);
+    metrics.add_gauge("server_connections_open", 1);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("serve: connection clone failed: {e}");
+            metrics.add_gauge("server_connections_open", -1);
+            return;
+        }
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // peer vanished mid-frame
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply, stop_after_reply) = process_frame(state, &line);
+        let mut out = reply.encode();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).and_then(|_| writer.flush()).is_err() {
+            break;
+        }
+        if stop_after_reply {
+            // shutdown verb: the ack is on the wire, now stop accepting
+            state.begin_shutdown();
+            break;
+        }
+    }
+    metrics.add_gauge("server_connections_open", -1);
+}
+
+/// Decode, dispatch, encode one frame. Never panics the connection:
+/// every failure becomes a structured error frame. The second element
+/// is `true` when the server should begin shutdown *after* the reply
+/// has been written (the `shutdown` verb's ack-first contract).
+fn process_frame(state: &ServerState, line: &str) -> (ResponseFrame, bool) {
+    let metrics = state.coordinator.metrics();
+    metrics.inc("server_frames_total", 1);
+    let frame = match RequestFrame::decode(line) {
+        Ok(f) => f,
+        Err(e) => {
+            // the frame failed validation (version, verb, request body)
+            // but the correlation id may still be salvageable from the
+            // raw JSON so the client can key the error; 0 marks a frame
+            // too broken even for that
+            metrics.inc("server_errors_total", 1);
+            let id = Json::parse(line)
+                .ok()
+                .and_then(|v| v.get("id").and_then(Json::as_u64))
+                .unwrap_or(0);
+            return (ResponseFrame::err(id, e), false);
+        }
+    };
+    match execute(state, &frame) {
+        Ok(result) => {
+            let stop = frame.verb == Verb::Shutdown;
+            (ResponseFrame::ok(frame.id, result), stop)
+        }
+        Err(e) => {
+            metrics.inc("server_errors_total", 1);
+            (ResponseFrame::err(frame.id, e), false)
+        }
+    }
+}
+
+/// Look a frame's job up in the cross-connection table.
+fn lookup_job(state: &ServerState, frame: &RequestFrame) -> Result<JobHandle, WireError> {
+    let id = frame
+        .job
+        .ok_or_else(|| WireError::new(ErrorCode::BadRequest, "frame carries no job id"))?;
+    state
+        .jobs
+        .lock()
+        .unwrap()
+        .get(&id)
+        .cloned()
+        .ok_or_else(|| WireError::new(ErrorCode::UnknownJob, format!("no job {id}")))
+}
+
+fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError> {
+    match frame.verb {
+        Verb::Submit => {
+            if state.shutdown.load(Ordering::SeqCst) {
+                return Err(WireError::new(
+                    ErrorCode::ShuttingDown,
+                    "server is shutting down",
+                ));
+            }
+            let request = frame.request.clone().ok_or_else(|| {
+                WireError::new(ErrorCode::BadRequest, "submit frame carries no request")
+            })?;
+            let handle = state.coordinator.submit(request);
+            let report = handle.report();
+            state.jobs.lock().unwrap().insert(handle.id(), handle);
+            Ok(report.to_json())
+        }
+        Verb::Poll => Ok(lookup_job(state, frame)?.report().to_json()),
+        Verb::Wait => {
+            let handle = lookup_job(state, frame)?;
+            // block this connection until terminal; job-level failure
+            // travels inside the report, not as a frame error
+            let _ = handle.wait();
+            Ok(handle.report().to_json())
+        }
+        Verb::Cancel => {
+            let handle = lookup_job(state, frame)?;
+            let had_effect = handle.cancel();
+            Ok(Json::Obj(vec![
+                ("job".into(), Json::from(handle.id())),
+                ("cancelled".into(), Json::Bool(had_effect)),
+            ]))
+        }
+        Verb::Status => {
+            let coord = &state.coordinator;
+            let metrics = coord.metrics();
+            Ok(Json::Obj(vec![
+                ("protocol".into(), Json::from(PROTOCOL_VERSION)),
+                ("engine".into(), Json::from(coord.engine_name())),
+                ("pool_workers".into(), Json::from(coord.executor().worker_count())),
+                ("job_workers".into(), Json::from(coord.job_worker_count())),
+                ("dense_enabled".into(), Json::Bool(coord.dense_enabled())),
+                (
+                    "jobs_submitted".into(),
+                    Json::from(metrics.get("jobs_submitted_total")),
+                ),
+                ("jobs_done".into(), Json::from(metrics.get("jobs_done_total"))),
+                (
+                    "jobs_inflight".into(),
+                    Json::Int(metrics.gauge("jobs_inflight") as i128),
+                ),
+                (
+                    "uptime_seconds".into(),
+                    Json::Num(state.started.elapsed().as_secs_f64()),
+                ),
+            ]))
+        }
+        Verb::Metrics => Ok(Json::Obj(vec![(
+            "text".into(),
+            Json::from(state.coordinator.metrics().render()),
+        )])),
+        Verb::Shutdown => {
+            // side-effect free: handle_connection flips the latch after
+            // the ack is flushed (see process_frame's second element)
+            Ok(Json::Obj(vec![("stopping".into(), Json::Bool(true))]))
+        }
+    }
+}

@@ -1,27 +1,44 @@
-//! The coordinator service: request intake, graph loading (with an
+//! The coordinator service: job-oriented request intake
+//! ([`Coordinator::submit`] → [`JobHandle`]), graph loading (with an
 //! mmap-aware cache), backend dispatch, dense service thread, metrics.
+//!
+//! The serving pipeline is job-first: every request — local
+//! [`Coordinator::submit`], the TCP protocol, or the blocking
+//! [`Coordinator::census`] / [`Coordinator::census_path`] compatibility
+//! shims — lands in one internal [`Core::serve`] path that resolves the
+//! graph source, routes, runs the engine (with a cooperative
+//! [`CancelToken`]) and assembles a versioned
+//! [`CensusResponse`](super::protocol::CensusResponse).
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use super::protocol::{
+    CensusRequest, CensusResponse, ErrorCode, GraphSource, JobReport, JobStateKind, Provenance,
+    SchedStats, WireError, PROTOCOL_VERSION,
+};
 use super::router::{Route, Router, RoutingPolicy};
-use crate::census::{Census, EngineRegistry, ParallelConfig};
+use crate::census::engine::ParallelEngine;
+use crate::census::{Census, CensusEngine, EngineRegistry, ParallelConfig};
 use crate::error::{Context, Error, Result};
-use crate::graph::{io, CsrGraph};
+use crate::graph::{generators, io, CsrGraph, GraphBuilder};
 use crate::metrics::Metrics;
 use crate::runtime::DenseCensusRuntime;
-use crate::sched::{Executor, ExecutorConfig, ThreadPoolStats};
+use crate::sched::{CancelToken, Executor, ExecutorConfig, Policy, ThreadPoolStats};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// Artifact directory for the dense backend; `None` disables it.
     pub artifacts_dir: Option<PathBuf>,
-    /// Sparse engine configuration.
+    /// Sparse engine configuration (the base that per-request
+    /// `threads` / `policy` overrides are applied to).
     pub sparse: ParallelConfig,
     /// Routing overrides (dense sizes are filled from the manifest).
     pub routing: RoutingPolicy,
@@ -40,7 +57,7 @@ pub struct CoordinatorConfig {
     pub trusted_mmap: bool,
     /// Sparse census engine, resolved by name from the
     /// [`EngineRegistry`] (`naive`, `batagelj-mrvar`, `merged`,
-    /// `parallel`, `moody`).
+    /// `parallel`, `moody`). Requests may override per-job.
     pub engine: String,
     /// Worker threads of the shared executor (`0` = host parallelism).
     /// This caps the pool for the whole process lifetime: K concurrent
@@ -50,6 +67,17 @@ pub struct CoordinatorConfig {
     /// Census jobs admitted to the executor at once (`0` = unlimited);
     /// excess requests queue at the admission gate.
     pub max_concurrent_jobs: usize,
+    /// Job-runner threads draining the submit queue (`0` = min(4, host
+    /// parallelism)). Each runner serves one job at a time; the census
+    /// itself still parallelizes on the shared executor, so this bounds
+    /// *concurrent jobs in flight*, not CPU use.
+    pub job_workers: usize,
+    /// Largest node count a request may *materialize* server-side
+    /// (inline and generator sources; `0` = unlimited). Without a bound
+    /// one ~60-byte frame could ask for a terabyte-sized generator and
+    /// abort the whole process on allocation failure. Path sources are
+    /// exempt — the operator controls what is on disk.
+    pub max_request_nodes: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -67,6 +95,8 @@ impl Default for CoordinatorConfig {
             engine: "parallel".to_string(),
             pool_threads: 0,
             max_concurrent_jobs: 0,
+            job_workers: 0,
+            max_request_nodes: 10_000_000,
         }
     }
 }
@@ -198,6 +228,9 @@ impl GraphStore {
 
 /// A served census with provenance, timing and (for sparse jobs) the
 /// per-seat scheduler telemetry of the executor job that computed it.
+/// This is the *in-process* result shape of the [`Coordinator::census`]
+/// shim; the job API returns the richer, wire-encodable
+/// [`CensusResponse`].
 #[derive(Debug, Clone)]
 pub struct CensusOutcome {
     pub census: Census,
@@ -214,18 +247,462 @@ struct DenseRequest {
     reply: mpsc::Sender<Result<Census>>,
 }
 
-/// The coordinator: owns the router, the engine registry, one shared
-/// process-lifetime [`Executor`] for all sparse census traffic, and (if
-/// artifacts are present) the dense service thread.
-pub struct Coordinator {
+// ---------------------------------------------------------------------------
+// Jobs
+// ---------------------------------------------------------------------------
+
+/// Internal job lifecycle record (behind the handle's mutex).
+enum JobProgress {
+    Queued,
+    Running,
+    Done(Box<CensusResponse>),
+    Failed(WireError),
+    Cancelled,
+}
+
+impl JobProgress {
+    fn kind(&self) -> JobStateKind {
+        match self {
+            JobProgress::Queued => JobStateKind::Queued,
+            JobProgress::Running => JobStateKind::Running,
+            JobProgress::Done(_) => JobStateKind::Done,
+            JobProgress::Failed(_) => JobStateKind::Failed,
+            JobProgress::Cancelled => JobStateKind::Cancelled,
+        }
+    }
+}
+
+/// State shared between a [`JobHandle`], the submit queue and the job
+/// runner executing it.
+struct JobShared {
+    id: u64,
+    state: Mutex<JobProgress>,
+    cv: Condvar,
+    cancel: CancelToken,
+    metrics: Arc<Metrics>,
+}
+
+impl JobShared {
+    fn new(id: u64, metrics: Arc<Metrics>) -> Arc<JobShared> {
+        Arc::new(JobShared {
+            id,
+            state: Mutex::new(JobProgress::Queued),
+            cv: Condvar::new(),
+            cancel: CancelToken::new(),
+            metrics,
+        })
+    }
+
+    /// Terminal transition (first one wins); wakes waiters and keeps the
+    /// job counters/gauge consistent.
+    fn finish(&self, progress: JobProgress) {
+        debug_assert!(progress.kind().is_terminal());
+        let mut s = self.state.lock().unwrap();
+        if s.kind().is_terminal() {
+            return;
+        }
+        let metric = match progress.kind() {
+            JobStateKind::Done => "jobs_done_total",
+            JobStateKind::Failed => "jobs_failed_total",
+            _ => "jobs_cancelled_total",
+        };
+        *s = progress;
+        drop(s);
+        self.metrics.inc(metric, 1);
+        self.metrics.add_gauge("jobs_inflight", -1);
+        self.cv.notify_all();
+    }
+
+    /// Queued → Running, unless a cancel already landed.
+    fn set_running(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if matches!(*s, JobProgress::Queued) {
+            *s = JobProgress::Running;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Point-in-time snapshot of a job, from [`JobHandle::poll`].
+#[derive(Debug, Clone)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done(Box<CensusResponse>),
+    Failed(WireError),
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn kind(&self) -> JobStateKind {
+        match self {
+            JobStatus::Queued => JobStateKind::Queued,
+            JobStatus::Running => JobStateKind::Running,
+            JobStatus::Done(_) => JobStateKind::Done,
+            JobStatus::Failed(_) => JobStateKind::Failed,
+            JobStatus::Cancelled => JobStateKind::Cancelled,
+        }
+    }
+
+    /// Whether the job will never change state again.
+    pub fn is_terminal(&self) -> bool {
+        self.kind().is_terminal()
+    }
+}
+
+/// Handle to an asynchronously running census job. Clone-able; all
+/// clones observe the same job.
+#[derive(Clone)]
+pub struct JobHandle {
+    shared: Arc<JobShared>,
+}
+
+impl JobHandle {
+    /// Coordinator-assigned job id (also carried in the response).
+    pub fn id(&self) -> u64 {
+        self.shared.id
+    }
+
+    /// Non-blocking state snapshot.
+    pub fn poll(&self) -> JobStatus {
+        let s = self.shared.state.lock().unwrap();
+        match &*s {
+            JobProgress::Queued => JobStatus::Queued,
+            JobProgress::Running => JobStatus::Running,
+            JobProgress::Done(r) => JobStatus::Done(r.clone()),
+            JobProgress::Failed(e) => JobStatus::Failed(e.clone()),
+            JobProgress::Cancelled => JobStatus::Cancelled,
+        }
+    }
+
+    /// Block until the job is terminal; `Ok` carries the response,
+    /// failures and cancellation come back as structured [`WireError`]s.
+    pub fn wait(&self) -> std::result::Result<CensusResponse, WireError> {
+        let mut s = self.shared.state.lock().unwrap();
+        loop {
+            match &*s {
+                JobProgress::Done(r) => return Ok((**r).clone()),
+                JobProgress::Failed(e) => return Err(e.clone()),
+                JobProgress::Cancelled => {
+                    return Err(WireError::new(ErrorCode::Cancelled, "job cancelled"))
+                }
+                _ => s = self.shared.cv.wait(s).unwrap(),
+            }
+        }
+    }
+
+    /// Request cancellation. A queued job cancels immediately; a running
+    /// job stops cooperatively (the engine checks the token between
+    /// scheduler chunks), which is best-effort — a job within its final
+    /// chunk may still complete `Done`. Returns `false` when the job was
+    /// already terminal.
+    pub fn cancel(&self) -> bool {
+        self.shared.cancel.cancel();
+        let queued = {
+            let s = self.shared.state.lock().unwrap();
+            match &*s {
+                JobProgress::Queued => true,
+                JobProgress::Running => return true,
+                _ => return false,
+            }
+        };
+        if queued {
+            self.shared.finish(JobProgress::Cancelled);
+        }
+        true
+    }
+
+    /// Wire-encodable report of the current state (the `poll` verb's
+    /// payload).
+    pub fn report(&self) -> JobReport {
+        let (state, response, error) = match self.poll() {
+            JobStatus::Queued => (JobStateKind::Queued, None, None),
+            JobStatus::Running => (JobStateKind::Running, None, None),
+            JobStatus::Done(r) => (JobStateKind::Done, Some(*r), None),
+            JobStatus::Failed(e) => (JobStateKind::Failed, None, Some(e)),
+            JobStatus::Cancelled => (JobStateKind::Cancelled, None, None),
+        };
+        JobReport {
+            job: self.id(),
+            state,
+            response,
+            error,
+        }
+    }
+}
+
+/// One queued unit of work.
+struct QueuedJob {
+    shared: Arc<JobShared>,
+    request: CensusRequest,
+}
+
+#[derive(Default)]
+struct JobQueueInner {
+    queue: VecDeque<QueuedJob>,
+    shutdown: bool,
+}
+
+/// The submit queue drained by the job-runner threads.
+#[derive(Default)]
+struct JobQueue {
+    inner: Mutex<JobQueueInner>,
+    cv: Condvar,
+}
+
+/// Body of one job-runner thread: pop, mark running, serve, finish.
+fn job_worker(core: &Core, queue: &JobQueue) {
+    loop {
+        let job = {
+            let mut q = queue.inner.lock().unwrap();
+            loop {
+                if let Some(job) = q.queue.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = queue.cv.wait(q).unwrap();
+            }
+        };
+        if !job.shared.set_running() {
+            // cancelled while queued; already terminal
+            continue;
+        }
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            core.serve(&job.request, &job.shared.cancel, job.shared.id)
+        }));
+        let progress = match result {
+            Ok(Ok(response)) => JobProgress::Done(Box::new(response)),
+            Ok(Err(e)) if e.code == ErrorCode::Cancelled => JobProgress::Cancelled,
+            Ok(Err(e)) => JobProgress::Failed(e),
+            Err(_) => JobProgress::Failed(WireError::new(
+                ErrorCode::Internal,
+                "census job panicked (see server log)",
+            )),
+        };
+        job.shared.finish(progress);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// The shared serving internals: router, engine registry, executor,
+/// dense queue, metrics and the graph cache. Job-runner threads and the
+/// public [`Coordinator`] facade both hold an `Arc<Core>`.
+struct Core {
     router: Router,
     engines: EngineRegistry,
     engine: String,
+    default_sparse: ParallelConfig,
     executor: Arc<Executor>,
-    dense_tx: Option<mpsc::SyncSender<DenseRequest>>,
-    dense_thread: Option<std::thread::JoinHandle<()>>,
+    /// Behind a mutex so shutdown can close the channel while runners
+    /// still hold the `Arc<Core>`.
+    dense_tx: Mutex<Option<mpsc::SyncSender<DenseRequest>>>,
     metrics: Arc<Metrics>,
     graphs: GraphStore,
+    max_request_nodes: usize,
+}
+
+fn cancelled_error() -> WireError {
+    WireError::new(ErrorCode::Cancelled, "job cancelled")
+}
+
+impl Core {
+    /// Serve one request end to end: resolve the source, route, run,
+    /// assemble the versioned response. All intake paths land here.
+    fn serve(
+        &self,
+        req: &CensusRequest,
+        cancel: &CancelToken,
+        job: u64,
+    ) -> std::result::Result<CensusResponse, WireError> {
+        let t0 = Instant::now();
+        if cancel.is_cancelled() {
+            return Err(cancelled_error());
+        }
+        let g = self.resolve_graph(&req.source)?;
+        if cancel.is_cancelled() {
+            return Err(cancelled_error());
+        }
+        let (census, route, stats, engine) =
+            self.run_route(&g, req.engine.as_deref(), req.threads, req.policy, cancel)?;
+        Ok(CensusResponse {
+            protocol_version: PROTOCOL_VERSION,
+            job,
+            census,
+            classes: req.classes.clone(),
+            provenance: Provenance {
+                source: req.source.describe(),
+                engine,
+                route: match route {
+                    Route::Sparse => "sparse".to_string(),
+                    Route::Dense { size } => format!("dense:{size}"),
+                },
+                nodes: g.node_count() as u64,
+                arcs: g.arc_count(),
+            },
+            stats: stats.map(|s| SchedStats::from_pool(&s)),
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Reject inline/generator sizes the operator has not allowed this
+    /// coordinator to materialize.
+    fn check_request_nodes(&self, nodes: usize) -> std::result::Result<(), WireError> {
+        if self.max_request_nodes > 0 && nodes > self.max_request_nodes {
+            return Err(WireError::new(
+                ErrorCode::BadRequest,
+                format!(
+                    "requested {nodes} nodes exceeds this server's limit of {} \
+                     (CoordinatorConfig::max_request_nodes)",
+                    self.max_request_nodes
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Materialize a request's graph source.
+    fn resolve_graph(
+        &self,
+        source: &GraphSource,
+    ) -> std::result::Result<Arc<CsrGraph>, WireError> {
+        match source {
+            GraphSource::Path(p) => self
+                .graphs
+                .get_or_load(Path::new(p), &self.metrics)
+                .map_err(|e| WireError::new(ErrorCode::GraphLoad, e)),
+            GraphSource::Inline { nodes, arcs } => {
+                self.check_request_nodes(*nodes)?;
+                if *nodes as u64 > CsrGraph::MAX_NODE_ID as u64 + 1 {
+                    return Err(WireError::new(
+                        ErrorCode::BadRequest,
+                        format!("inline node count {nodes} exceeds the 30-bit id space"),
+                    ));
+                }
+                if let Some(&(u, v)) =
+                    arcs.iter().find(|&&(u, v)| {
+                        u as usize >= *nodes || v as usize >= *nodes
+                    })
+                {
+                    return Err(WireError::new(
+                        ErrorCode::BadRequest,
+                        format!("inline arc ({u},{v}) outside 0..{nodes}"),
+                    ));
+                }
+                let mut b = GraphBuilder::new(*nodes);
+                b.extend(arcs.iter().copied());
+                Ok(Arc::new(b.build()))
+            }
+            GraphSource::Generator { name, nodes, seed } => {
+                self.check_request_nodes(*nodes)?;
+                if *nodes < 2 {
+                    return Err(WireError::new(
+                        ErrorCode::BadRequest,
+                        "generator sources need at least 2 nodes",
+                    ));
+                }
+                let spec = generators::spec_by_name(name, *nodes, *seed)
+                    .map_err(|e| WireError::new(ErrorCode::BadRequest, e))?;
+                Ok(Arc::new(
+                    self.metrics.time("graph_generate", || spec.generate()),
+                ))
+            }
+        }
+    }
+
+    /// Route and run one in-memory graph. Naming an engine forces the
+    /// sparse path through it; otherwise the router may pick the dense
+    /// backend. Returns `(census, route, sparse stats, engine name)`.
+    fn run_route(
+        &self,
+        g: &CsrGraph,
+        engine_override: Option<&str>,
+        threads: Option<usize>,
+        policy: Option<Policy>,
+        cancel: &CancelToken,
+    ) -> std::result::Result<(Census, Route, Option<ThreadPoolStats>, String), WireError> {
+        if let Some(p) = &policy {
+            p.validate()
+                .map_err(|e| WireError::new(ErrorCode::BadRequest, e))?;
+        }
+        let route = match engine_override {
+            Some(_) => Route::Sparse,
+            None => self.router.route(g),
+        };
+        let dense_tx = self.dense_tx.lock().unwrap().clone();
+        if let (Route::Dense { .. }, Some(tx)) = (route, dense_tx) {
+            self.metrics.inc("census_dense_total", 1);
+            let (reply_tx, reply_rx) = mpsc::channel();
+            tx.send(DenseRequest {
+                graph: g.clone(),
+                reply: reply_tx,
+            })
+            .map_err(|_| WireError::new(ErrorCode::Internal, "dense service thread gone"))?;
+            let census = self
+                .metrics
+                .time("dense_census", || reply_rx.recv())
+                .map_err(|_| {
+                    WireError::new(ErrorCode::Internal, "dense service dropped the request")
+                })?
+                .map_err(|e| WireError::new(ErrorCode::Internal, e))?;
+            return Ok((census, route, None, "dense".to_string()));
+        }
+        self.metrics.inc("census_sparse_total", 1);
+        let name = engine_override.unwrap_or(&self.engine);
+        let engine = self
+            .engines
+            .get_or_err(name)
+            .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
+        // per-request seat/policy overrides build a one-off parallel
+        // engine over the configured base (serial engines ignore them)
+        let custom = if engine.name() == "parallel" && (threads.is_some() || policy.is_some()) {
+            Some(ParallelEngine {
+                cfg: ParallelConfig {
+                    threads: threads.unwrap_or(self.default_sparse.threads),
+                    policy: policy.unwrap_or(self.default_sparse.policy),
+                    accumulation: self.default_sparse.accumulation,
+                },
+            })
+        } else {
+            None
+        };
+        let engine: &dyn CensusEngine = match &custom {
+            Some(e) => e,
+            None => engine,
+        };
+        let run = self
+            .metrics
+            .time("sparse_census", || {
+                engine.census_cancellable(g, &self.executor, cancel)
+            })
+            .ok_or_else(cancelled_error)?;
+        // per-job telemetry: slots walked by this job (executor job
+        // counts live in Executor::stats, not here — serial engines
+        // never submit one)
+        self.metrics.inc(
+            "census_slots_total",
+            run.stats.items.iter().sum::<usize>() as u64,
+        );
+        Ok((run.census, route, Some(run.stats), engine.name().to_string()))
+    }
+}
+
+/// The coordinator: owns the router, the engine registry, one shared
+/// process-lifetime [`Executor`] for all sparse census traffic, the
+/// job-runner pool draining [`Coordinator::submit`], and (if artifacts
+/// are present) the dense service thread.
+pub struct Coordinator {
+    core: Arc<Core>,
+    dense_thread: Option<std::thread::JoinHandle<()>>,
+    job_queue: Arc<JobQueue>,
+    job_threads: Vec<std::thread::JoinHandle<()>>,
+    job_seq: AtomicU64,
 }
 
 impl Coordinator {
@@ -277,87 +754,135 @@ impl Coordinator {
             _ => (None, None),
         };
 
-        Ok(Coordinator {
+        let core = Arc::new(Core {
             router: Router::new(routing),
             engines,
             engine: cfg.engine,
+            default_sparse: cfg.sparse,
             executor,
-            dense_tx,
-            dense_thread,
+            dense_tx: Mutex::new(dense_tx),
             metrics,
             graphs: GraphStore::new(cfg.graph_cache, cfg.ingest_threads.max(1), cfg.trusted_mmap),
+            max_request_nodes: cfg.max_request_nodes,
+        });
+
+        let job_workers = if cfg.job_workers == 0 {
+            std::thread::available_parallelism()
+                .map(|p| p.get().min(4))
+                .unwrap_or(2)
+        } else {
+            cfg.job_workers
+        };
+        let job_queue = Arc::new(JobQueue::default());
+        let mut job_threads = Vec::with_capacity(job_workers);
+        for i in 0..job_workers {
+            let core = core.clone();
+            let queue = job_queue.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("census-job-{i}"))
+                .spawn(move || job_worker(&core, &queue))
+                .context("spawning job runner thread")?;
+            job_threads.push(handle);
+        }
+
+        Ok(Coordinator {
+            core,
+            dense_thread,
+            job_queue,
+            job_threads,
+            job_seq: AtomicU64::new(0),
         })
     }
 
     /// Whether the dense backend is live.
     pub fn dense_enabled(&self) -> bool {
-        self.dense_tx.is_some()
+        self.core.dense_tx.lock().unwrap().is_some()
     }
 
     /// The routing table in force.
     pub fn router(&self) -> &Router {
-        &self.router
+        &self.core.router
     }
 
     /// Shared metrics registry.
     pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+        &self.core.metrics
     }
 
     /// The shared executor serving all sparse census jobs.
     pub fn executor(&self) -> &Arc<Executor> {
-        &self.executor
+        &self.core.executor
     }
 
-    /// Name of the sparse engine in force.
+    /// Name of the default sparse engine (requests may override).
     pub fn engine_name(&self) -> &str {
-        &self.engine
+        &self.core.engine
     }
 
-    /// Serve one census request synchronously. Concurrent callers are
-    /// the intended workload: every sparse request is submitted as one
-    /// job to the shared executor, so K simultaneous clients interleave
-    /// chunks on the same worker pool (bounded by `pool_threads` and the
-    /// admission gate) instead of oversubscribing K × threads; the dense
-    /// service serializes behind its queue.
+    /// Job-runner threads draining the submit queue.
+    pub fn job_worker_count(&self) -> usize {
+        self.job_threads.len()
+    }
+
+    /// Submit a census request for asynchronous execution. Always
+    /// returns a handle: structurally broken requests (unknown engine,
+    /// bad source) surface as an immediately-`Failed` job, which keeps
+    /// local and remote error handling on one path.
+    pub fn submit(&self, request: CensusRequest) -> JobHandle {
+        let id = self.job_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let shared = JobShared::new(id, self.core.metrics.clone());
+        self.core.metrics.inc("jobs_submitted_total", 1);
+        self.core.metrics.add_gauge("jobs_inflight", 1);
+        let handle = JobHandle {
+            shared: shared.clone(),
+        };
+        // fast-fail: validate the engine name before queueing so a typo
+        // is observable on the very first poll
+        if let Some(name) = &request.engine {
+            if let Err(e) = self.core.engines.get_or_err(name) {
+                shared.finish(JobProgress::Failed(WireError::new(
+                    ErrorCode::UnknownEngine,
+                    e,
+                )));
+                return handle;
+            }
+        }
+        {
+            let mut q = self.job_queue.inner.lock().unwrap();
+            if q.shutdown {
+                drop(q);
+                shared.finish(JobProgress::Failed(WireError::new(
+                    ErrorCode::ShuttingDown,
+                    "coordinator is shutting down",
+                )));
+                return handle;
+            }
+            q.queue.push_back(QueuedJob { shared, request });
+        }
+        self.job_queue.cv.notify_one();
+        handle
+    }
+
+    /// Submit a batch of requests in order; handles come back in the
+    /// same order. Jobs run concurrently up to the job-runner count.
+    pub fn submit_batch<I>(&self, requests: I) -> Vec<JobHandle>
+    where
+        I: IntoIterator<Item = CensusRequest>,
+    {
+        requests.into_iter().map(|r| self.submit(r)).collect()
+    }
+
+    /// Serve one census request synchronously — a thin compatibility
+    /// shim over the job pipeline's serving core (same routing, engine
+    /// dispatch and metrics; no queue hop). Concurrent callers remain
+    /// the intended workload: every sparse request is one job on the
+    /// shared executor.
     pub fn census(&self, g: &CsrGraph) -> Result<CensusOutcome> {
         let t0 = Instant::now();
-        let route = self.router.route(g);
-        let (census, stats) = match (route, &self.dense_tx) {
-            (Route::Dense { .. }, Some(tx)) => {
-                self.metrics.inc("census_dense_total", 1);
-                let (reply_tx, reply_rx) = mpsc::channel();
-                tx.send(DenseRequest {
-                    graph: g.clone(),
-                    reply: reply_tx,
-                })
-                .ok()
-                .context("dense service thread gone")?;
-                let census = self
-                    .metrics
-                    .time("dense_census", || reply_rx.recv())
-                    .context("dense service dropped the request")??;
-                (census, None)
-            }
-            _ => {
-                self.metrics.inc("census_sparse_total", 1);
-                let engine = self
-                    .engines
-                    .get(&self.engine)
-                    .expect("engine name validated at startup");
-                let run = self
-                    .metrics
-                    .time("sparse_census", || engine.census(g, &self.executor));
-                // per-job telemetry: slots walked by this job (executor
-                // job counts live in Executor::stats, not here — serial
-                // engines never submit one)
-                self.metrics.inc(
-                    "census_slots_total",
-                    run.stats.items.iter().sum::<usize>() as u64,
-                );
-                (run.census, Some(run.stats))
-            }
-        };
+        let (census, route, stats, _engine) = self
+            .core
+            .run_route(g, None, None, None, &CancelToken::new())
+            .map_err(Error::msg)?;
         Ok(CensusOutcome {
             census,
             route,
@@ -366,21 +891,40 @@ impl Coordinator {
         })
     }
 
-    /// Serve a census for an on-disk graph through the path cache.
-    /// `TRIADIC2` files are memory-mapped — checksum-verified on first
-    /// touch by default (one sequential scan), or O(1) with
-    /// [`CoordinatorConfig::trusted_mmap`] — which is the workflow for
-    /// multi-GB graphs converted once and served across restarts;
-    /// legacy binaries and edge lists are parsed on first touch and
-    /// cached.
+    /// Serve a census for an on-disk graph through the path cache —
+    /// the second compatibility shim ([`GraphSource::Path`] requests use
+    /// the same cache). `TRIADIC2` files are memory-mapped —
+    /// checksum-verified on first touch by default (one sequential
+    /// scan), or O(1) with [`CoordinatorConfig::trusted_mmap`] — which
+    /// is the workflow for multi-GB graphs converted once and served
+    /// across restarts; legacy binaries and edge lists are parsed on
+    /// first touch and cached.
     pub fn census_path<P: AsRef<Path>>(&self, path: P) -> Result<CensusOutcome> {
-        let g = self.graphs.get_or_load(path.as_ref(), &self.metrics)?;
+        let g = self.core.graphs.get_or_load(path.as_ref(), &self.core.metrics)?;
         self.census(&g)
     }
 
-    /// Drain and stop the dense service thread.
+    /// Drain and stop the job runners and the dense service thread.
     pub fn shutdown(mut self) {
-        self.dense_tx.take(); // close the channel; service loop exits
+        self.stop_workers();
+    }
+
+    fn stop_workers(&mut self) {
+        // 1. close the submit queue; cancel whatever never started
+        let drained: Vec<QueuedJob> = {
+            let mut q = self.job_queue.inner.lock().unwrap();
+            q.shutdown = true;
+            q.queue.drain(..).collect()
+        };
+        self.job_queue.cv.notify_all();
+        for job in drained {
+            job.shared.finish(JobProgress::Cancelled);
+        }
+        for h in self.job_threads.drain(..) {
+            let _ = h.join();
+        }
+        // 2. close the dense channel; the service loop exits on recv Err
+        self.core.dense_tx.lock().unwrap().take();
         if let Some(h) = self.dense_thread.take() {
             let _ = h.join();
         }
@@ -389,10 +933,7 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.dense_tx.take();
-        if let Some(h) = self.dense_thread.take() {
-            let _ = h.join();
-        }
+        self.stop_workers();
     }
 }
 
@@ -441,6 +982,14 @@ mod tests {
             artifacts_dir: Some(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")),
             ..CoordinatorConfig::default()
         }
+    }
+
+    fn sparse_coordinator() -> Coordinator {
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap()
     }
 
     #[test]
@@ -560,11 +1109,7 @@ mod tests {
 
     #[test]
     fn census_path_serves_mapped_v2_files_from_cache() {
-        let coord = Coordinator::start(CoordinatorConfig {
-            artifacts_dir: None,
-            ..CoordinatorConfig::default()
-        })
-        .unwrap();
+        let coord = sparse_coordinator();
         let g = generators::power_law(600, 2.2, 6.0, 41);
         let want = merged::census(&g);
         let path = std::env::temp_dir().join("triadic_coord_cache.csr");
@@ -581,11 +1126,7 @@ mod tests {
 
     #[test]
     fn graph_cache_invalidates_rewritten_files() {
-        let coord = Coordinator::start(CoordinatorConfig {
-            artifacts_dir: None,
-            ..CoordinatorConfig::default()
-        })
-        .unwrap();
+        let coord = sparse_coordinator();
         let dir = std::env::temp_dir();
         let path = dir.join("triadic_stale_cache.csr");
         let g1 = generators::power_law(300, 2.2, 6.0, 1);
@@ -603,11 +1144,7 @@ mod tests {
 
     #[test]
     fn census_path_reports_load_errors() {
-        let coord = Coordinator::start(CoordinatorConfig {
-            artifacts_dir: None,
-            ..CoordinatorConfig::default()
-        })
-        .unwrap();
+        let coord = sparse_coordinator();
         let err = coord.census_path("/nonexistent/graph.csr").unwrap_err();
         assert!(err.to_string().contains("loading graph"), "{err}");
     }
@@ -636,5 +1173,211 @@ mod tests {
         for p in paths {
             let _ = std::fs::remove_file(p);
         }
+    }
+
+    // --- job API ---
+
+    #[test]
+    fn submit_wait_returns_a_versioned_response() {
+        let coord = sparse_coordinator();
+        let handle = coord.submit(CensusRequest::generator("patents", 300).seed(5));
+        let response = handle.wait().unwrap();
+        let want = merged::census(
+            &generators::spec_by_name("patents", 300, Some(5))
+                .unwrap()
+                .generate(),
+        );
+        assert_eq!(response.census, want);
+        assert_eq!(response.protocol_version, PROTOCOL_VERSION);
+        assert_eq!(response.job, handle.id());
+        assert_eq!(response.provenance.route, "sparse");
+        assert_eq!(response.provenance.engine, "parallel");
+        assert!(response.provenance.source.starts_with("generator:patents"));
+        assert_eq!(response.provenance.nodes, 300);
+        assert!(response.stats.is_some());
+        assert!(matches!(handle.poll(), JobStatus::Done(_)));
+        assert_eq!(coord.metrics().get("jobs_submitted_total"), 1);
+        assert_eq!(coord.metrics().get("jobs_done_total"), 1);
+        assert_eq!(coord.metrics().gauge("jobs_inflight"), 0);
+    }
+
+    #[test]
+    fn submit_batch_runs_mixed_sources_and_engines() {
+        let coord = sparse_coordinator();
+        let inline_arcs = vec![(0u32, 1u32), (1, 2), (2, 0), (2, 3)];
+        let path = std::env::temp_dir().join("triadic_job_batch.csr");
+        let path_graph = generators::power_law(250, 2.2, 6.0, 8);
+        crate::graph::io::write_binary_v2_file(&path_graph, &path).unwrap();
+
+        let handles = coord.submit_batch(vec![
+            CensusRequest::path(path.to_str().unwrap()),
+            CensusRequest::inline(4, inline_arcs.clone()).engine("merged"),
+            CensusRequest::generator("orkut", 120).seed(3).engine("bm"),
+            CensusRequest::generator("web", 150)
+                .seed(4)
+                .engine("parallel")
+                .threads(3)
+                .policy(Policy::Static { chunk: 64 }),
+        ]);
+        assert_eq!(handles.len(), 4);
+
+        let wants = [
+            merged::census(&path_graph),
+            merged::census(&GraphBuilder::new(4).arcs(&inline_arcs).build()),
+            merged::census(
+                &generators::spec_by_name("orkut", 120, Some(3))
+                    .unwrap()
+                    .generate(),
+            ),
+            merged::census(
+                &generators::spec_by_name("web", 150, Some(4))
+                    .unwrap()
+                    .generate(),
+            ),
+        ];
+        for (handle, want) in handles.iter().zip(&wants) {
+            let response = handle.wait().unwrap();
+            assert_eq!(&response.census, want, "job {}", handle.id());
+        }
+        assert_eq!(coord.metrics().get("jobs_done_total"), 4);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn class_subset_requests_echo_their_selection() {
+        let coord = sparse_coordinator();
+        let g = generators::named::cycle3();
+        let handle = coord.submit(
+            CensusRequest::inline(3, vec![(0, 1), (1, 2), (2, 0)])
+                .engine("merged")
+                .classes(vec![crate::census::TriadType::T030C]),
+        );
+        let response = handle.wait().unwrap();
+        assert_eq!(response.census, merged::census(&g));
+        assert_eq!(
+            response.selected_counts(),
+            vec![(crate::census::TriadType::T030C, 1)]
+        );
+    }
+
+    #[test]
+    fn unknown_engine_fails_the_job_immediately() {
+        let coord = sparse_coordinator();
+        let handle = coord.submit(CensusRequest::generator("patents", 100).engine("quantum"));
+        match handle.poll() {
+            JobStatus::Failed(e) => {
+                assert_eq!(e.code, ErrorCode::UnknownEngine);
+                assert!(e.message.contains("quantum"), "{e}");
+            }
+            other => panic!("expected immediate failure, got {:?}", other.kind()),
+        }
+        assert!(handle.wait().is_err());
+        assert_eq!(coord.metrics().get("jobs_failed_total"), 1);
+    }
+
+    #[test]
+    fn bad_sources_fail_with_structured_codes() {
+        let coord = sparse_coordinator();
+        let cases = [
+            (
+                CensusRequest::path("/nonexistent/never.csr"),
+                ErrorCode::GraphLoad,
+            ),
+            (
+                CensusRequest::generator("martian", 100),
+                ErrorCode::BadRequest,
+            ),
+            (
+                CensusRequest::inline(2, vec![(0, 5)]),
+                ErrorCode::BadRequest,
+            ),
+        ];
+        for (req, want_code) in cases {
+            let err = coord.submit(req).wait().unwrap_err();
+            assert_eq!(err.code, want_code, "{err}");
+        }
+    }
+
+    #[test]
+    fn oversized_requests_are_rejected_not_materialized() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            max_request_nodes: 1_000,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        for req in [
+            CensusRequest::generator("patents", 1_001),
+            CensusRequest::inline(1_001, vec![]),
+        ] {
+            let err = coord.submit(req).wait().unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{err}");
+            assert!(err.message.contains("max_request_nodes"), "{err}");
+        }
+        // at the limit is fine
+        let ok = coord.submit(CensusRequest::generator("patents", 1_000).seed(1));
+        assert!(ok.wait().is_ok());
+    }
+
+    #[test]
+    fn queued_jobs_cancel_immediately() {
+        // one runner: occupy it, then cancel a job that is still queued
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            job_workers: 1,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let blocker = coord.submit(CensusRequest::generator("patents", 60_000).seed(1));
+        while !matches!(blocker.poll(), JobStatus::Running) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let queued = coord.submit(CensusRequest::generator("patents", 300).seed(2));
+        assert!(matches!(queued.poll(), JobStatus::Queued));
+        assert!(queued.cancel());
+        assert!(matches!(queued.poll(), JobStatus::Cancelled));
+        let err = queued.wait().unwrap_err();
+        assert_eq!(err.code, ErrorCode::Cancelled);
+        // the blocker is unaffected
+        assert!(blocker.wait().is_ok());
+        assert_eq!(coord.metrics().get("jobs_cancelled_total"), 1);
+        // cancelling a terminal job reports no effect
+        assert!(!queued.cancel());
+    }
+
+    #[test]
+    fn running_jobs_cancel_cooperatively() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            job_workers: 1,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        // big enough that generation + census outlive the cancel below
+        let handle = coord.submit(CensusRequest::generator("patents", 80_000).seed(9));
+        while !matches!(handle.poll(), JobStatus::Running) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(handle.cancel());
+        let err = handle.wait().unwrap_err();
+        assert_eq!(err.code, ErrorCode::Cancelled);
+        assert_eq!(coord.metrics().get("jobs_cancelled_total"), 1);
+    }
+
+    #[test]
+    fn shutdown_cancels_whatever_never_started() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            job_workers: 1,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let blocker = coord.submit(CensusRequest::generator("patents", 50_000).seed(1));
+        while !matches!(blocker.poll(), JobStatus::Running) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let queued = coord.submit(CensusRequest::generator("patents", 300).seed(2));
+        coord.shutdown();
+        assert!(matches!(queued.poll(), JobStatus::Cancelled));
     }
 }

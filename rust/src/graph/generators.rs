@@ -70,6 +70,23 @@ impl GraphSpec {
     }
 }
 
+/// Resolve a named synthetic workload at an explicit node count — the
+/// single source of the `patents` / `orkut` / `web` name mapping, shared
+/// by the CLI flags and the serving protocol's generator graph source.
+/// `seed` overrides the spec's default when given.
+pub fn spec_by_name(name: &str, nodes: usize, seed: Option<u64>) -> Result<GraphSpec, String> {
+    let mut spec = match name {
+        "patents" => GraphSpec::patents(nodes),
+        "orkut" => GraphSpec::orkut(nodes),
+        "web" | "webgraph" => GraphSpec::webgraph(nodes),
+        other => return Err(format!("unknown graph {other:?} (patents|orkut|web)")),
+    };
+    if let Some(s) = seed {
+        spec.seed = s;
+    }
+    Ok(spec)
+}
+
 /// Directed scale-free graph via the configuration model: outdegrees are
 /// drawn from a truncated discrete power law `P(k) ∝ k^(-gamma)`, scaled
 /// to hit `avg_out_degree`, then each arc's head is sampled uniformly.

@@ -27,10 +27,13 @@
 //!   and baseline/z-score anomaly detection.
 //! * [`runtime`] — a PJRT (XLA) runtime that loads AOT-compiled HLO
 //!   artifacts (the JAX/Pallas dense census) and executes them from Rust.
-//! * [`coordinator`] — the service layer: routes census jobs between the
-//!   sparse engines and the dense AOT backend, submits all sparse work
-//!   to one shared process-lifetime executor (so concurrent clients
-//!   interleave on a bounded pool), and exposes metrics.
+//! * [`coordinator`] — the job-oriented service layer: a versioned
+//!   request/response model (`CensusRequest` builder → `submit` →
+//!   `JobHandle` with poll/wait/cancel), routing between the sparse
+//!   engines and the dense AOT backend on one shared process-lifetime
+//!   executor, a newline-delimited-JSON TCP server + `TriadicClient`,
+//!   and metrics. The blocking `census`/`census_path` calls survive as
+//!   compatibility shims.
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts`
 //! lowers Moody's matrix census to HLO text which [`runtime`] loads; no

@@ -15,19 +15,30 @@
 //!                the scheduling study) as TSV tables.
 //! * `simulate` — sweep one machine model over processor counts.
 //! * `monitor`  — run the Fig 3/4 security monitor on synthetic traffic.
-//! * `serve`    — start the coordinator and serve census requests from
-//!                stdin (one graph file path per line; v2 files are
-//!                memory-mapped and cached).
+//! * `serve`    — start the coordinator and serve the versioned census
+//!                wire protocol over TCP (`--listen ADDR`; newline-
+//!                delimited JSON frames, see README "Serving API"), or
+//!                the legacy one-path-per-line stdin loop (`--stdin`).
+//! * `client`   — drive a running server: submit census jobs (path /
+//!                generator sources), poll them to completion, or issue
+//!                `status` / `metrics` / `shutdown` control verbs.
 
 use std::io::BufRead;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use triadic::analysis::{builtin_patterns, census_series, MonitorConfig, TriadMonitor};
 use triadic::analysis::{TrafficGenerator, TrafficScenario};
 use triadic::bail;
-use triadic::census::{census_parallel, merged, Accumulation, EngineRegistry, ParallelConfig};
+use triadic::census::{
+    census_parallel, merged, Accumulation, EngineRegistry, ParallelConfig, TriadType,
+};
 use triadic::config::{graph_spec_from, Args};
-use triadic::coordinator::{Coordinator, CoordinatorConfig};
+use triadic::coordinator::protocol::Json;
+use triadic::coordinator::{
+    CensusRequest, CensusResponse, CensusServer, Coordinator, CoordinatorConfig, ErrorCode,
+    JobStateKind, TriadicClient, WireError,
+};
 use triadic::error::{Context, Error, Result};
 use triadic::figures::{self, Scale};
 use triadic::graph::{degree, io};
@@ -54,8 +65,13 @@ COMMANDS
   simulate  --machine xmt|xmt512|numa|superdome --graph ... [--procs 1,2,...]
   monitor   [--hosts N] [--rate EPS] [--duration S] [--window S]
             [--attack scan|ddos|relay|botnet|all]
-  serve     [--artifacts DIR] [--threads T] [--trusted] [--engine E]
-            [--pool-threads W] [--max-jobs K]
+  serve     [--listen ADDR] [--stdin] [--artifacts DIR] [--threads T]
+            [--trusted] [--engine E] [--pool-threads W] [--max-jobs K]
+            [--job-workers J] [--max-request-nodes N]
+  client    [--addr HOST:PORT] [--verb census|status|metrics|poll|cancel|shutdown]
+            [--input FILE | --graph patents|orkut|web --nodes N [--seed S]]
+            [--engine E] [--threads T] [--policy P] [--classes 030T,030C]
+            [--job ID] [--raw]
 ";
 
 fn main() {
@@ -80,6 +96,7 @@ fn run() -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("monitor") => cmd_monitor(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -336,9 +353,12 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     );
     if let Some(path) = json_path {
         let estats = exec.stats();
+        // schema_version lets downstream perf-trajectory tooling evolve
+        // the format: bump it on any field rename/removal (additions are
+        // compatible). v2 = v1 + this field.
         let json = format!(
             concat!(
-                "{{\"bench\":\"smoke\",\"nodes\":{},\"arcs\":{},\"dyads\":{},",
+                "{{\"schema_version\":2,\"bench\":\"smoke\",\"nodes\":{},\"arcs\":{},\"dyads\":{},",
                 "\"threads\":{},\"pool_workers\":{},\"engine\":\"{}\",\"policy\":\"{}\",",
                 "\"gen_seconds\":{:.6},\"census_seconds\":{:.6},",
                 "\"serial_merged_seconds\":{:.6},\"v2_write_seconds\":{:.6},",
@@ -522,9 +542,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = args.str_or("engine", "parallel");
     let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
     let max_jobs = args.get_or("max-jobs", 0usize).map_err(Error::msg)?;
+    let job_workers = args.get_or("job-workers", 0usize).map_err(Error::msg)?;
+    let max_request_nodes = args
+        .get_or("max-request-nodes", CoordinatorConfig::default().max_request_nodes)
+        .map_err(Error::msg)?;
+    let listen = args.str_or("listen", "127.0.0.1:7333");
+    let stdin_mode = args.flag("stdin");
     args.reject_unknown().map_err(Error::msg)?;
 
-    let coord = Coordinator::start(CoordinatorConfig {
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
         artifacts_dir: Some(PathBuf::from(artifacts)),
         sparse: ParallelConfig {
             threads,
@@ -534,19 +560,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine,
         pool_threads,
         max_concurrent_jobs: max_jobs,
+        job_workers,
+        max_request_nodes,
         ..CoordinatorConfig::default()
-    })?;
+    })?);
     eprintln!(
-        "coordinator up (dense={} engine={} pool_workers={} max_jobs={}): send one graph \
-         path per line on stdin (edge list, TRIADIC1 or mmap-served TRIADIC2)",
+        "coordinator up: dense={} engine={} pool_workers={} job_workers={} max_jobs={}",
         coord.dense_enabled(),
         coord.engine_name(),
         coord.executor().worker_count(),
+        coord.job_worker_count(),
         if max_jobs == 0 {
             "unlimited".to_string()
         } else {
             max_jobs.to_string()
         }
+    );
+
+    if stdin_mode {
+        return serve_stdin(&coord);
+    }
+
+    let server = CensusServer::bind(coord.clone(), listen.as_str())?;
+    // machine-parseable: CI and scripts read the bound address off
+    // stdout (std's stdout is line-buffered, so this flushes even piped)
+    println!("listening on {}", server.local_addr());
+    server.run()?;
+    // shutdown received: new submissions are already rejected, so the
+    // in-flight gauge only drains — let admitted jobs finish before the
+    // process (and its job runners) goes away
+    while coord.metrics().gauge("jobs_inflight") > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    println!("{}", coord.metrics().render());
+    Ok(())
+}
+
+/// The legacy stdin loop (`serve --stdin`): one graph file path per
+/// line. A bad path logs one structured JSON error line on stderr and
+/// the loop continues — a malformed request must never take the server
+/// down.
+fn serve_stdin(coord: &Coordinator) -> Result<()> {
+    eprintln!(
+        "stdin mode: send one graph path per line (edge list, TRIADIC1 or mmap-served TRIADIC2)"
     );
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
@@ -560,9 +616,145 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 println!("# {path} route={:?} {:.3}s", out.route, out.seconds);
                 print!("{}", out.census.table());
             }
-            Err(e) => eprintln!("error on {path}: {e:#}"),
+            Err(e) => {
+                // the stdin loop only loads-and-runs, and the sparse run
+                // path is infallible, so load failures are what lands here
+                coord.metrics().inc("serve_stdin_errors_total", 1);
+                let err = WireError::new(ErrorCode::GraphLoad, format!("{e:#}"));
+                let report = Json::Obj(vec![
+                    ("path".into(), Json::from(path)),
+                    ("error".into(), err.to_json()),
+                ]);
+                eprintln!("{report}");
+            }
         }
     }
     println!("{}", coord.metrics().render());
+    Ok(())
+}
+
+/// Build a census request from `client` flags (path source via
+/// `--input`, generator source via `--graph`/`--nodes`/`--seed`).
+fn client_request(args: &Args) -> Result<CensusRequest> {
+    let mut req = if let Some(input) = args.opt_str("input") {
+        CensusRequest::path(input)
+    } else {
+        let name = args.str_or("graph", "patents");
+        let nodes = args.get_or("nodes", 10_000usize).map_err(Error::msg)?;
+        let mut r = CensusRequest::generator(name, nodes);
+        if let Some(seed) = args.opt_str("seed") {
+            r = r.seed(seed.parse().map_err(|e| Error::msg(format!("bad --seed: {e}")))?);
+        }
+        r
+    };
+    if let Some(engine) = args.opt_str("engine") {
+        req = req.engine(engine);
+    }
+    if let Some(threads) = args.opt_str("threads") {
+        let t = threads
+            .parse()
+            .map_err(|e| Error::msg(format!("bad --threads: {e}")))?;
+        req = req.threads(t);
+    }
+    if let Some(policy) = args.opt_str("policy") {
+        req = req.policy(Policy::parse(&policy).map_err(Error::msg)?);
+    }
+    if let Some(classes) = args.opt_str("classes") {
+        let mut parsed = Vec::new();
+        for label in classes.split(',').filter(|s| !s.is_empty()) {
+            parsed.push(
+                TriadType::from_label(label)
+                    .with_context(|| format!("unknown triad class {label:?}"))?,
+            );
+        }
+        req = req.classes(parsed);
+    }
+    Ok(req)
+}
+
+fn print_response(resp: &CensusResponse, raw: bool) {
+    if raw {
+        println!("{}", resp.to_json());
+        return;
+    }
+    println!(
+        "# job={} engine={} route={} source={} nodes={} arcs={} seconds={:.3}",
+        resp.job,
+        resp.provenance.engine,
+        resp.provenance.route,
+        resp.provenance.source,
+        resp.provenance.nodes,
+        resp.provenance.arcs,
+        resp.seconds
+    );
+    if let Some(s) = &resp.stats {
+        println!(
+            "# stats: seats={} chunks={} items={} wall={:.3}s imbalance={:.2}",
+            s.seats, s.chunks, s.items, s.wall_seconds, s.imbalance
+        );
+    }
+    for (t, c) in resp.selected_counts() {
+        println!("{:>5}  {:>16}", t.label(), c);
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7333");
+    let verb = args.str_or("verb", "census");
+    let raw = args.flag("raw");
+
+    let mut client = TriadicClient::connect(addr.as_str()).map_err(Error::msg)?;
+    match verb.as_str() {
+        "status" => {
+            args.reject_unknown().map_err(Error::msg)?;
+            println!("{}", client.status().map_err(Error::msg)?);
+        }
+        "metrics" => {
+            args.reject_unknown().map_err(Error::msg)?;
+            print!("{}", client.metrics_text().map_err(Error::msg)?);
+        }
+        "shutdown" => {
+            args.reject_unknown().map_err(Error::msg)?;
+            client.shutdown().map_err(Error::msg)?;
+            println!("server stopping");
+        }
+        "poll" => {
+            let job = args.get_or("job", 0u64).map_err(Error::msg)?;
+            args.reject_unknown().map_err(Error::msg)?;
+            println!("{}", client.poll(job).map_err(Error::msg)?.to_json());
+        }
+        "cancel" => {
+            let job = args.get_or("job", 0u64).map_err(Error::msg)?;
+            args.reject_unknown().map_err(Error::msg)?;
+            let cancelled = client.cancel(job).map_err(Error::msg)?;
+            println!("job {job} cancelled={cancelled}");
+        }
+        "census" => {
+            let req = client_request(args)?;
+            args.reject_unknown().map_err(Error::msg)?;
+            let report = client.submit(&req).map_err(Error::msg)?;
+            let job = report.job;
+            eprintln!("submitted job {job} ({})", report.state.as_str());
+            // poll to completion to exercise the job lifecycle end to
+            // end; the final wait returns immediately on a terminal job
+            let mut last = report.state;
+            while !last.is_terminal() {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+                let state = client.poll(job).map_err(Error::msg)?.state;
+                if state != last {
+                    eprintln!("job {job}: {}", state.as_str());
+                    last = state;
+                }
+            }
+            if last == JobStateKind::Cancelled {
+                bail!("job {job} was cancelled server-side");
+            }
+            let resp = client.wait(job).map_err(Error::msg)?;
+            print_response(&resp, raw);
+        }
+        other => {
+            bail!("unknown client verb {other:?} (census|status|metrics|poll|cancel|shutdown)")
+        }
+    }
     Ok(())
 }

@@ -67,6 +67,7 @@ impl Histogram {
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, i64>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
@@ -83,6 +84,22 @@ impl Metrics {
     /// Read a counter.
     pub fn get(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Move a named gauge by a (signed) delta — up-and-down quantities
+    /// like in-flight jobs or open connections; counters stay monotonic.
+    pub fn add_gauge(&self, name: &str, delta: i64) {
+        *self.gauges.lock().unwrap().entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set a named gauge to an absolute value.
+    pub fn set_gauge(&self, name: &str, value: i64) {
+        *self.gauges.lock().unwrap().entry(name.to_string()).or_insert(0) = value;
+    }
+
+    /// Read a gauge.
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
     /// Fetch (or create) a histogram handle.
@@ -108,6 +125,9 @@ impl Metrics {
     pub fn render(&self) -> String {
         let mut out = String::new();
         for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("{k} {v}\n"));
         }
         for (k, h) in self.histograms.lock().unwrap().iter() {
@@ -157,9 +177,22 @@ mod tests {
     fn render_contains_everything() {
         let m = Metrics::new();
         m.inc("a_total", 5);
+        m.add_gauge("inflight", 2);
         m.histogram("lat").observe(0.1);
         let text = m.render();
         assert!(text.contains("a_total 5"));
+        assert!(text.contains("inflight 2"));
         assert!(text.contains("lat_count 1"));
+    }
+
+    #[test]
+    fn gauges_move_both_ways() {
+        let m = Metrics::new();
+        m.add_gauge("inflight", 3);
+        m.add_gauge("inflight", -2);
+        assert_eq!(m.gauge("inflight"), 1);
+        m.set_gauge("inflight", 10);
+        assert_eq!(m.gauge("inflight"), 10);
+        assert_eq!(m.gauge("missing"), 0);
     }
 }

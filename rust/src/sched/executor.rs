@@ -49,6 +49,34 @@ fn host_parallelism() -> usize {
         .unwrap_or(1)
 }
 
+/// Cooperative cancellation flag shared between a job's submitter and
+/// every seat executing it. Cancelling does not interrupt a chunk in
+/// flight — seats observe the flag between chunk claims and stop
+/// claiming, so a cancelled job drains in at most one chunk per seat.
+/// Partial per-seat results are returned to the submitter, which is
+/// responsible for discarding them (a partial census is a wrong census).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; visible to every clone.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
 /// Executor sizing and admission configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecutorConfig {
@@ -460,6 +488,31 @@ impl Executor {
         I: Fn(usize) -> A + Sync,
         W: Fn(&mut A, usize, usize, usize) + Sync,
     {
+        let (results, stats, _) =
+            self.run_cancellable(len, nseats, policy, &CancelToken::new(), init, work);
+        (results, stats)
+    }
+
+    /// [`Executor::run`] with a cooperative cancellation hook: every seat
+    /// checks `cancel` before claiming its next chunk and stops claiming
+    /// once cancellation is requested, so the job drains in at most one
+    /// in-flight chunk per seat. Returns `true` as the third element when
+    /// the job was cancelled before covering the whole range — the
+    /// accumulators are then *partial* and the caller must discard them.
+    pub fn run_cancellable<A, I, W>(
+        &self,
+        len: usize,
+        nseats: usize,
+        policy: Policy,
+        cancel: &CancelToken,
+        init: I,
+        work: W,
+    ) -> (Vec<A>, ThreadPoolStats, bool)
+    where
+        A: Send,
+        I: Fn(usize) -> A + Sync,
+        W: Fn(&mut A, usize, usize, usize) + Sync,
+    {
         let nseats = nseats.max(1);
         self.inner.admit();
         let _permit = AdmitGuard(&self.inner);
@@ -477,7 +530,10 @@ impl Executor {
             // Serial fast path: no cross-thread hop, no pool touch.
             let mut acc = init(0);
             let tb = Instant::now();
-            while let Some((s, e)) = chunks.claim(0) {
+            while !cancel.is_cancelled() {
+                let Some((s, e)) = chunks.claim(0) else {
+                    break;
+                };
                 work(&mut acc, 0, s, e);
                 stats.chunks[0] += 1;
                 stats.items[0] += e - s;
@@ -486,7 +542,7 @@ impl Executor {
             stats.wall = t0.elapsed().as_secs_f64();
             self.inner.jobs.fetch_add(1, Ordering::Relaxed);
             self.inner.inline_seats.fetch_add(1, Ordering::Relaxed);
-            return (vec![acc], stats);
+            return (vec![acc], stats, cancel.is_cancelled());
         }
 
         let slots: Vec<Mutex<Option<SeatOutcome<A>>>> =
@@ -497,7 +553,10 @@ impl Executor {
                 let mut nchunks = 0usize;
                 let mut items = 0usize;
                 let tb = Instant::now();
-                while let Some((s, e)) = chunks.claim(seat) {
+                while !cancel.is_cancelled() {
+                    let Some((s, e)) = chunks.claim(seat) else {
+                        break;
+                    };
                     work(&mut acc, seat, s, e);
                     nchunks += 1;
                     items += e - s;
@@ -550,7 +609,7 @@ impl Executor {
             stats.busy[tid] = out.busy;
         }
         stats.wall = t0.elapsed().as_secs_f64();
-        (results, stats)
+        (results, stats, cancel.is_cancelled())
     }
 }
 
@@ -806,6 +865,73 @@ mod tests {
             |_| 0u64,
             |acc, _, s, e| *acc += (e - s) as u64,
         );
+        assert_eq!(parts.iter().sum::<u64>(), 1_000);
+    }
+
+    #[test]
+    fn pre_cancelled_job_does_no_work() {
+        let exec = Executor::with_workers(2);
+        let token = CancelToken::new();
+        token.cancel();
+        let (parts, stats, cancelled) = exec.run_cancellable(
+            10_000,
+            3,
+            Policy::Dynamic { chunk: 16 },
+            &token,
+            |_| 0u64,
+            |acc, _, s, e| *acc += (e - s) as u64,
+        );
+        assert!(cancelled);
+        assert_eq!(parts.iter().sum::<u64>(), 0, "no chunk claimed");
+        assert_eq!(stats.items.iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn mid_run_cancellation_stops_claiming() {
+        // cancel from inside the workload once some chunks have run: the
+        // job must report cancelled and cover strictly less than `len`.
+        let exec = Executor::with_workers(2);
+        let token = CancelToken::new();
+        let fired = {
+            let token = token.clone();
+            move |done: usize| {
+                if done > 200 {
+                    token.cancel();
+                }
+            }
+        };
+        let progress = AtomicUsize::new(0);
+        let (_, stats, cancelled) = exec.run_cancellable(
+            1_000_000,
+            2,
+            Policy::Dynamic { chunk: 64 },
+            &token,
+            |_| (),
+            |_, _, s, e| {
+                let done = progress.fetch_add(e - s, Ordering::Relaxed) + (e - s);
+                fired(done);
+            },
+        );
+        assert!(cancelled);
+        assert!(
+            stats.items.iter().sum::<usize>() < 1_000_000,
+            "cancellation should stop the sweep early"
+        );
+    }
+
+    #[test]
+    fn uncancelled_run_reports_not_cancelled() {
+        let exec = Executor::with_workers(2);
+        let token = CancelToken::new();
+        let (parts, _, cancelled) = exec.run_cancellable(
+            1_000,
+            2,
+            Policy::Dynamic { chunk: 10 },
+            &token,
+            |_| 0u64,
+            |acc, _, s, e| *acc += (e - s) as u64,
+        );
+        assert!(!cancelled);
         assert_eq!(parts.iter().sum::<u64>(), 1_000);
     }
 

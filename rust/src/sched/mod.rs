@@ -18,6 +18,6 @@ pub mod executor;
 pub mod policy;
 pub mod pool;
 
-pub use executor::{Executor, ExecutorConfig, ExecutorStats};
+pub use executor::{CancelToken, Executor, ExecutorConfig, ExecutorStats};
 pub use policy::{ChunkIter, Policy};
 pub use pool::{run_partitioned, run_partitioned_scoped, ThreadPoolStats};

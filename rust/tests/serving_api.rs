@@ -1,0 +1,248 @@
+//! End-to-end serving-API test: a real TCP server, a real
+//! [`TriadicClient`], a batch of mixed-source census jobs polled to
+//! completion, and every response checked against the merged-engine
+//! serial oracle computed locally.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use triadic::census::{merged, TriadType};
+use triadic::coordinator::protocol::{Json, ResponseFrame};
+use triadic::coordinator::{
+    CensusRequest, CensusServer, Coordinator, CoordinatorConfig, ErrorCode, JobStateKind,
+    TriadicClient,
+};
+use triadic::graph::{generators, GraphBuilder};
+use triadic::sched::Policy;
+
+/// Start a sparse-only coordinator + TCP server on an OS-assigned port.
+fn start_server() -> (
+    std::net::SocketAddr,
+    Arc<Coordinator>,
+    std::thread::JoinHandle<()>,
+) {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            pool_threads: 4,
+            job_workers: 2,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    let server = CensusServer::bind(coord.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (addr, coord, handle)
+}
+
+fn oracle_for(name: &str, nodes: usize, seed: u64) -> triadic::Census {
+    merged::census(
+        &generators::spec_by_name(name, nodes, Some(seed))
+            .unwrap()
+            .generate(),
+    )
+}
+
+#[test]
+fn batch_over_tcp_matches_the_merged_oracle() {
+    let (addr, coord, server_thread) = start_server();
+
+    // path-source fixture: a converted v2 file the server mmaps
+    let path_graph = generators::power_law(400, 2.2, 6.0, 77);
+    let path = std::env::temp_dir().join("triadic_serving_api.csr");
+    triadic::graph::io::write_binary_v2_file(&path_graph, &path).unwrap();
+
+    let inline_arcs = vec![(0u32, 1u32), (1, 2), (2, 0), (0, 3), (3, 4), (4, 0)];
+    // ≥ 4 requests, mixed path / inline / generator sources, four
+    // different engines, one with per-request threads + policy
+    let requests = vec![
+        CensusRequest::path(path.to_str().unwrap()),
+        CensusRequest::inline(5, inline_arcs.clone()).engine("merged"),
+        CensusRequest::generator("patents", 300).seed(11).engine("bm"),
+        CensusRequest::generator("orkut", 150)
+            .seed(12)
+            .engine("parallel")
+            .threads(3)
+            .policy(Policy::Dynamic { chunk: 32 }),
+        CensusRequest::generator("web", 200).seed(13).engine("moody"),
+    ];
+    let oracles = vec![
+        merged::census(&path_graph),
+        merged::census(&GraphBuilder::new(5).arcs(&inline_arcs).build()),
+        oracle_for("patents", 300, 11),
+        oracle_for("orkut", 150, 12),
+        oracle_for("web", 200, 13),
+    ];
+
+    let mut client = TriadicClient::connect(addr).unwrap();
+
+    // submit the whole batch up front (job-oriented: no blocking)
+    let mut jobs = Vec::new();
+    for req in &requests {
+        let report = client.submit(req).unwrap();
+        assert_ne!(report.state, JobStateKind::Failed, "intake rejected: {req:?}");
+        jobs.push(report.job);
+    }
+    assert_eq!(jobs.len(), 5);
+
+    // poll every handle to completion over the wire
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let mut pending: Vec<u64> = jobs.clone();
+    while !pending.is_empty() {
+        assert!(
+            Instant::now() < deadline,
+            "jobs {pending:?} did not finish in time"
+        );
+        pending.retain(|&job| !client.poll(job).unwrap().state.is_terminal());
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // every response equals the locally computed merged oracle
+    for (i, (&job, want)) in jobs.iter().zip(&oracles).enumerate() {
+        let resp = client.wait(job).unwrap();
+        assert_eq!(resp.census, *want, "request {i} (job {job})");
+        assert_eq!(resp.protocol_version, 1, "request {i}");
+        assert_eq!(resp.job, job);
+        assert_eq!(resp.provenance.nodes as usize, {
+            let expected = [400usize, 5, 300, 150, 200];
+            expected[i]
+        });
+    }
+
+    // the engines recorded in provenance really differ per request
+    assert_eq!(client.wait(jobs[0]).unwrap().provenance.engine, "parallel");
+    assert_eq!(client.wait(jobs[1]).unwrap().provenance.engine, "merged");
+    assert_eq!(
+        client.wait(jobs[2]).unwrap().provenance.engine,
+        "batagelj-mrvar"
+    );
+    assert_eq!(client.wait(jobs[4]).unwrap().provenance.engine, "moody");
+
+    // job state is shared across connections
+    let mut second = TriadicClient::connect(addr).unwrap();
+    assert_eq!(second.poll(jobs[0]).unwrap().state, JobStateKind::Done);
+
+    // control verbs: status + metrics
+    let status = client.status().unwrap();
+    assert_eq!(status.get("protocol").and_then(Json::as_u64), Some(1));
+    assert!(status.get("jobs_done").and_then(Json::as_u64).unwrap() >= 5);
+    assert_eq!(status.get("dense_enabled").and_then(Json::as_bool), Some(false));
+    let metrics = client.metrics_text().unwrap();
+    assert!(metrics.contains("jobs_submitted_total"), "{metrics}");
+    assert!(metrics.contains("census_sparse_total"), "{metrics}");
+
+    // structured errors travel as codes, not prose
+    let rejected = client
+        .submit(&CensusRequest::generator("patents", 300).engine("quantum"))
+        .unwrap();
+    assert_eq!(rejected.state, JobStateKind::Failed);
+    assert_eq!(rejected.error.unwrap().code, ErrorCode::UnknownEngine);
+    assert_eq!(client.poll(99_999).unwrap_err().code, ErrorCode::UnknownJob);
+    assert_eq!(
+        client
+            .census(&CensusRequest::path("/nonexistent/never.csr"))
+            .unwrap_err()
+            .code,
+        ErrorCode::GraphLoad
+    );
+
+    // triad-class subsets: only the selection comes back
+    let subset = client
+        .census(
+            &CensusRequest::inline(3, vec![(0, 1), (1, 2), (2, 0)])
+                .engine("merged")
+                .classes(vec![TriadType::T030C]),
+        )
+        .unwrap();
+    assert_eq!(subset.selected_counts(), vec![(TriadType::T030C, 1)]);
+
+    // the coordinator's metrics saw everything the server did
+    assert!(coord.metrics().get("server_frames_total") > 0);
+    assert!(coord.metrics().get("server_connections_total") >= 2);
+
+    // shutdown stops the accept loop and run() returns
+    client.shutdown().unwrap();
+    server_thread.join().unwrap();
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn malformed_and_mismatched_frames_get_structured_errors() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let (addr, _coord, server_thread) = start_server();
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    let mut send = |line: &str| {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        ResponseFrame::decode(reply.trim_end()).unwrap()
+    };
+
+    // not JSON at all
+    let resp = send("this is not a frame");
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadFrame);
+    // wrong protocol version
+    let resp = send(r#"{"v":99,"id":4,"verb":"status"}"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadVersion);
+    // missing version entirely
+    let resp = send(r#"{"id":5,"verb":"status"}"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadVersion);
+    // unknown verb, id still echoed
+    let resp = send(r#"{"v":1,"id":6,"verb":"dance"}"#);
+    assert_eq!(resp.id, 6);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::UnknownVerb);
+    // submit without a request body
+    let resp = send(r#"{"v":1,"id":7,"verb":"submit"}"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
+    // a good frame still works on the same connection afterwards
+    let resp = send(r#"{"v":1,"id":8,"verb":"status"}"#);
+    assert_eq!(resp.id, 8);
+    assert!(resp.result.is_ok());
+
+    let mut client = TriadicClient::connect(addr).unwrap();
+    client.shutdown().unwrap();
+    server_thread.join().unwrap();
+}
+
+#[test]
+fn cancellation_over_the_wire_is_best_effort() {
+    let (addr, _coord, server_thread) = start_server();
+    let mut client = TriadicClient::connect(addr).unwrap();
+
+    // big enough that cancel usually lands while running; the assertion
+    // tolerates the fast-completion race either way
+    let report = client
+        .submit(&CensusRequest::generator("patents", 40_000).seed(3))
+        .unwrap();
+    let job = report.job;
+    let had_effect = client.cancel(job).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let final_state = loop {
+        let state = client.poll(job).unwrap().state;
+        if state.is_terminal() {
+            break state;
+        }
+        assert!(Instant::now() < deadline, "job never settled");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    // cancel is best-effort: acknowledged cancellation of a *running*
+    // job can still lose to the job's final chunk, so the only invariant
+    // is the terminal-state pairing, not which side of the race won
+    match final_state {
+        JobStateKind::Cancelled => {
+            assert!(had_effect, "a job cannot end cancelled without a cancel");
+            assert_eq!(client.wait(job).unwrap_err().code, ErrorCode::Cancelled);
+        }
+        JobStateKind::Done => assert!(client.wait(job).is_ok()),
+        other => panic!("unexpected terminal state {other:?} (had_effect={had_effect})"),
+    }
+
+    client.shutdown().unwrap();
+    server_thread.join().unwrap();
+}
