@@ -1,0 +1,118 @@
+//! Streaming delta updates vs full census recompute.
+//!
+//! The streaming census exists because a small batch of edge mutations
+//! must not cost a full recompute on a serving graph. This bench pins
+//! that down on a 100k-node power-law graph: a 64-op mixed
+//! insert/delete batch applied through `StreamingCensus` is compared
+//! against recomputing the census from scratch (serial merged engine
+//! and the parallel engine — the speedup is measured against whichever
+//! recompute is *faster*). Acceptance target: >= 10x.
+//!
+//! Writes `BENCH_stream.json` (schema_version 1) for the CI bench
+//! trajectory and exits non-zero if the target is missed.
+
+use std::sync::Arc;
+
+use triadic::bench::Bench;
+use triadic::census::{census_parallel_on, merged, ParallelConfig, StreamingCensus};
+use triadic::graph::generators::power_law;
+use triadic::graph::EdgeOp;
+use triadic::rng::Rng;
+use triadic::sched::Executor;
+
+const NODES: usize = 100_000;
+const BATCH: usize = 64;
+
+fn main() {
+    let iters: usize = std::env::var("BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30);
+    let mut b = Bench::new(iters);
+    let threads = 4;
+    let exec = Executor::with_workers(threads);
+
+    eprintln!("# generating {NODES}-node power-law graph...");
+    let g = power_law(NODES, 2.2, 8.0, 7);
+    let arcs: Vec<(u32, u32)> = g.arcs().collect();
+    println!("# graph: n={} arcs={}", g.node_count(), g.arc_count());
+
+    // pre-generate enough mixed batches for warmup + iterations: 70%
+    // inserts of random pairs, 30% deletes of existing arcs
+    let mut rng = Rng::new(99);
+    let total_batches = 4 * iters + 8;
+    let batches: Vec<Vec<EdgeOp>> = (0..total_batches)
+        .map(|_| {
+            (0..BATCH)
+                .map(|_| {
+                    if rng.chance(0.3) {
+                        let (u, v) = arcs[rng.below(arcs.len() as u64) as usize];
+                        EdgeOp::Delete(u, v)
+                    } else {
+                        EdgeOp::Insert(rng.node(NODES as u32), rng.node(NODES as u32))
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    let t_seed = std::time::Instant::now();
+    let mut sc = StreamingCensus::new(Arc::new(g.clone()));
+    let seed_seconds = t_seed.elapsed().as_secs_f64();
+    println!("# seed census (merged, one-off): {seed_seconds:.3}s");
+
+    let mut next = 0usize;
+    let delta = b
+        .run(&format!("stream_delta_batch{BATCH}"), || {
+            let report = sc.apply_batch(&batches[next % batches.len()], &exec, threads);
+            next += 1;
+            report
+        })
+        .mean_s;
+
+    let full_merged = b.run("full_recompute_merged", || merged::census(&g)).mean_s;
+    let cfg = ParallelConfig {
+        threads,
+        ..ParallelConfig::default()
+    };
+    let full_parallel = b
+        .run(&format!("full_recompute_parallel_t{threads}"), || {
+            census_parallel_on(&g, &cfg, &exec)
+        })
+        .mean_s;
+
+    // measure against the *faster* recompute — the honest baseline
+    let full = full_merged.min(full_parallel);
+    let speedup = full / delta.max(1e-12);
+    let pass = speedup >= 10.0;
+    println!(
+        "# {BATCH}-op delta batch: {:.1} us vs full recompute {:.1} ms -> {speedup:.1}x \
+         (target >= 10x)",
+        delta * 1e6,
+        full * 1e3
+    );
+
+    let json = format!(
+        concat!(
+            "{{\"schema_version\":1,\"bench\":\"stream_updates\",\"nodes\":{},\"arcs\":{},",
+            "\"batch\":{},\"seed_seconds\":{:.6},\"delta_batch_seconds\":{:.9},",
+            "\"full_recompute_merged_seconds\":{:.6},\"full_recompute_parallel_seconds\":{:.6},",
+            "\"speedup_vs_recompute\":{:.2},\"pass\":{}}}\n"
+        ),
+        g.node_count(),
+        g.arc_count(),
+        BATCH,
+        seed_seconds,
+        delta,
+        full_merged,
+        full_parallel,
+        speedup,
+        pass,
+    );
+    std::fs::write("BENCH_stream.json", &json).expect("writing BENCH_stream.json");
+    println!("# wrote BENCH_stream.json");
+    if !pass {
+        eprintln!("FAIL: delta batch only {speedup:.1}x faster than full recompute (need 10x)");
+        std::process::exit(1);
+    }
+}

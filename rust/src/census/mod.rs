@@ -24,6 +24,12 @@
 //! All five are reachable behind the [`engine::CensusEngine`] trait via
 //! [`engine::EngineRegistry`] — the by-name selection surface of the
 //! coordinator and the `--engine` CLI flag.
+//!
+//! For graphs that change between requests, [`stream::StreamingCensus`]
+//! maintains a live census over a
+//! [`DeltaOverlay`](crate::graph::overlay::DeltaOverlay) by
+//! reclassifying only the O(deg(u) + deg(v)) triads touched by each
+//! edge mutation — no full recompute on the serving path.
 
 pub mod batagelj_mrvar;
 pub mod engine;
@@ -32,6 +38,7 @@ pub mod merged;
 pub mod moody;
 pub mod naive;
 pub mod parallel;
+pub mod stream;
 pub mod types;
 
 pub use engine::{CensusEngine, EngineRegistry};
@@ -40,4 +47,5 @@ pub use parallel::{
     census_parallel, census_parallel_cancellable, census_parallel_on, census_parallel_scoped,
     Accumulation, ParallelConfig, ParallelRun,
 };
+pub use stream::{BatchReport, StreamStats, StreamingCensus};
 pub use types::{Census, TriadType};

@@ -1,0 +1,472 @@
+//! Incrementally maintained triad census over a mutable edge stream.
+//!
+//! A full census recompute touches every connected dyad of the graph;
+//! an edge mutation `(u, v)`, however, can only change the class of the
+//! `n - 2` triads that contain *both* `u` and `v` — every other triad
+//! keeps all three of its dyads. [`StreamingCensus`] exploits this: each
+//! applied [`EdgeOp`] walks the merged effective neighborhoods of its
+//! endpoints once (O(deg(u) + deg(v))), moving each touched triad from
+//! its old class to its new one, and rebalances the remaining
+//! `n - 2 - |N(u) ∪ N(v)|` dyadic/null triads in O(1) bulk — the same
+//! per-edge delta structure that Tangwongsan et al. use for streaming
+//! triangle counts, generalized to all 16 classes via the tricode
+//! table.
+//!
+//! Batches are partitioned into contiguous *node-disjoint rounds*: no
+//! triad contains two dyads mutated in the same round, so the per-op
+//! census deltas are independent and a round's scans parallelize on the
+//! shared [`Executor`] with exact, order-insensitive results.
+//!
+//! Correctness is enforced adversarially by the differential harness in
+//! `rust/tests/stream_diff.rs`: after every randomized batch the live
+//! census must equal a fresh full recompute by the merged oracle.
+
+use std::sync::Arc;
+
+use super::isotricode::{tricode_from_dyads, TRICODE_TABLE};
+use super::merged;
+use super::types::Census;
+use crate::graph::overlay::{ApplyOutcome, DeltaOverlay, EdgeOp};
+use crate::graph::CsrGraph;
+use crate::sched::{Executor, Policy};
+
+/// Below this many changed ops a round's delta scans run inline — the
+/// executor dispatch costs more than the scans save.
+const PAR_MIN_OPS: usize = 32;
+
+/// Lifetime counters of one streaming session.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Ops that changed the graph (and census).
+    pub applied: u64,
+    /// Duplicate inserts / deletes of absent arcs.
+    pub no_ops: u64,
+    /// Self-loop or out-of-range ops.
+    pub rejected: u64,
+    /// Triads individually reclassified by neighborhood scans (the
+    /// O(deg) work; bulk dyadic/null rebalancing is O(1) and uncounted).
+    pub reclassified: u64,
+    /// Batches applied via [`StreamingCensus::apply_batch`].
+    pub batches: u64,
+    /// Node-disjoint parallel rounds those batches split into.
+    pub rounds: u64,
+    /// [`StreamingCensus::compact`] calls.
+    pub compactions: u64,
+}
+
+/// Outcome of one applied batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchReport {
+    pub applied: u64,
+    pub no_ops: u64,
+    pub rejected: u64,
+    pub reclassified: u64,
+    pub rounds: u64,
+}
+
+/// A live triad census over a [`DeltaOverlay`], updated per edge
+/// mutation instead of recomputed.
+pub struct StreamingCensus {
+    overlay: DeltaOverlay,
+    /// Live counts per class (census-index order), including `003`.
+    counts: [u64; 16],
+    stats: StreamStats,
+}
+
+impl StreamingCensus {
+    /// Open a stream over `base`, seeding the live census with a full
+    /// merged-engine recompute.
+    pub fn new(base: Arc<CsrGraph>) -> StreamingCensus {
+        let census = merged::census(&base);
+        StreamingCensus::with_initial(base, census)
+    }
+
+    /// Open a stream over `base` with a caller-computed initial census
+    /// (any engine; the coordinator seeds large graphs on its configured
+    /// engine). The census must be exact for `base` — every later delta
+    /// builds on it.
+    pub fn with_initial(base: Arc<CsrGraph>, census: Census) -> StreamingCensus {
+        StreamingCensus {
+            overlay: DeltaOverlay::new(base),
+            counts: *census.counts(),
+            stats: StreamStats::default(),
+        }
+    }
+
+    /// The current census.
+    #[inline]
+    pub fn census(&self) -> Census {
+        Census::from_counts(self.counts)
+    }
+
+    /// The overlay holding the effective graph.
+    #[inline]
+    pub fn overlay(&self) -> &DeltaOverlay {
+        &self.overlay
+    }
+
+    /// Session counters.
+    #[inline]
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+
+    /// Apply one mutation, updating the census in O(deg(u) + deg(v)).
+    pub fn apply(&mut self, op: EdgeOp) -> ApplyOutcome {
+        let outcome = self.overlay.apply(op);
+        match outcome {
+            ApplyOutcome::Changed { old, new } => {
+                let (u, v) = op.endpoints();
+                let mut delta = [0i64; 16];
+                let scanned = scan_dyad_change(&self.overlay, u, v, old, new, &mut delta);
+                apply_delta(&mut self.counts, &delta);
+                self.stats.applied += 1;
+                self.stats.reclassified += scanned;
+            }
+            ApplyOutcome::NoChange => self.stats.no_ops += 1,
+            ApplyOutcome::Rejected(_) => self.stats.rejected += 1,
+        }
+        outcome
+    }
+
+    /// Apply a batch of mutations in order, parallelizing the
+    /// neighborhood scans of node-disjoint runs on `exec` with `seats`
+    /// virtual seats. Exactly equivalent to applying the ops one by one.
+    pub fn apply_batch(&mut self, ops: &[EdgeOp], exec: &Executor, seats: usize) -> BatchReport {
+        let mut report = BatchReport::default();
+        let mut i = 0;
+        while i < ops.len() {
+            // maximal contiguous node-disjoint run: no triad sees two of
+            // its dyads change in one round, so per-op deltas compose
+            let mut used = std::collections::HashSet::new();
+            let mut j = i;
+            while j < ops.len() {
+                let (u, v) = ops[j].endpoints();
+                if used.contains(&u) || used.contains(&v) {
+                    break;
+                }
+                used.insert(u);
+                used.insert(v);
+                j += 1;
+            }
+            // mutate first (cheap, inherently serial), recording the
+            // dyad transitions the scans must account for
+            let mut changed: Vec<(u32, u32, u8, u8)> = Vec::with_capacity(j - i);
+            for &op in &ops[i..j] {
+                match self.overlay.apply(op) {
+                    ApplyOutcome::Changed { old, new } => {
+                        let (u, v) = op.endpoints();
+                        changed.push((u, v, old, new));
+                    }
+                    ApplyOutcome::NoChange => report.no_ops += 1,
+                    ApplyOutcome::Rejected(_) => report.rejected += 1,
+                }
+            }
+            report.applied += changed.len() as u64;
+            report.rounds += 1;
+            // scan phase: reads only dyads incident to this round's own
+            // endpoints, all settled above — safe to fan out
+            let overlay = &self.overlay;
+            let mut delta = [0i64; 16];
+            if changed.len() >= PAR_MIN_OPS && seats > 1 && exec.worker_count() > 1 {
+                let (parts, _stats) = exec.run(
+                    changed.len(),
+                    seats,
+                    Policy::Dynamic { chunk: 4 },
+                    |_seat| ([0i64; 16], 0u64),
+                    |acc, _seat, s, e| {
+                        for &(u, v, old, new) in &changed[s..e] {
+                            acc.1 += scan_dyad_change(overlay, u, v, old, new, &mut acc.0);
+                        }
+                    },
+                );
+                for (part, scanned) in parts {
+                    for k in 0..16 {
+                        delta[k] += part[k];
+                    }
+                    report.reclassified += scanned;
+                }
+            } else {
+                for &(u, v, old, new) in &changed {
+                    report.reclassified += scan_dyad_change(overlay, u, v, old, new, &mut delta);
+                }
+            }
+            apply_delta(&mut self.counts, &delta);
+            i = j;
+        }
+        self.stats.applied += report.applied;
+        self.stats.no_ops += report.no_ops;
+        self.stats.rejected += report.rejected;
+        self.stats.reclassified += report.reclassified;
+        self.stats.rounds += report.rounds;
+        self.stats.batches += 1;
+        report
+    }
+
+    /// Rebuild the base CSR from the effective graph and reset the
+    /// overlay. The census is invariant under compaction (it describes
+    /// the effective graph, which does not change).
+    pub fn compact(&mut self) {
+        self.compact_with(1);
+    }
+
+    /// [`StreamingCensus::compact`] with a parallel ingest sort.
+    pub fn compact_with(&mut self, threads: usize) {
+        let fresh = self.overlay.compact_with(threads);
+        debug_assert_eq!(fresh.arc_count(), self.overlay.arc_count());
+        self.overlay = DeltaOverlay::new(Arc::new(fresh));
+        self.stats.compactions += 1;
+    }
+}
+
+/// Fold a signed per-class delta into the live counts. Underflow means
+/// the delta logic lost track of a triad — fail loudly, never wrap.
+fn apply_delta(counts: &mut [u64; 16], delta: &[i64; 16]) {
+    for i in 0..16 {
+        let d = delta[i];
+        if d >= 0 {
+            counts[i] += d as u64;
+        } else {
+            counts[i] = counts[i]
+                .checked_sub(d.unsigned_abs())
+                .expect("streaming census underflow (delta accounting bug)");
+        }
+    }
+}
+
+/// Account one dyad transition `(u, v): old → new` into `delta`: every
+/// triad `{u, v, w}` moves from its class under `old` to its class
+/// under `new`. Third nodes adjacent to `u` or `v` are scanned with a
+/// merged two-pointer walk (their `(u, w)` / `(v, w)` dyads decide the
+/// class); the rest move between the null/dyadic classes in bulk.
+/// Returns the number of individually scanned third nodes.
+fn scan_dyad_change(
+    overlay: &DeltaOverlay,
+    u: u32,
+    v: u32,
+    old: u8,
+    new: u8,
+    delta: &mut [i64; 16],
+) -> u64 {
+    let mut ru = overlay.neighbors(u).peekable();
+    let mut rv = overlay.neighbors(v).peekable();
+    let mut union_size = 0usize;
+    loop {
+        let a = ru.peek().map(|&(w, _)| w);
+        let b = rv.peek().map(|&(w, _)| w);
+        let (w, uw, vw) = match (a, b) {
+            (None, None) => break,
+            (Some(wa), None) => {
+                let (_, bits) = ru.next().unwrap();
+                (wa, bits, 0)
+            }
+            (None, Some(wb)) => {
+                let (_, bits) = rv.next().unwrap();
+                (wb, 0, bits)
+            }
+            (Some(wa), Some(wb)) => {
+                if wa < wb {
+                    let (_, bits) = ru.next().unwrap();
+                    (wa, bits, 0)
+                } else if wb < wa {
+                    let (_, bits) = rv.next().unwrap();
+                    (wb, 0, bits)
+                } else {
+                    let (_, ub) = ru.next().unwrap();
+                    let (_, vb) = rv.next().unwrap();
+                    (wa, ub, vb)
+                }
+            }
+        };
+        if w == u || w == v {
+            continue;
+        }
+        union_size += 1;
+        let from = TRICODE_TABLE[tricode_from_dyads(old, uw, vw) as usize];
+        let to = TRICODE_TABLE[tricode_from_dyads(new, uw, vw) as usize];
+        if from != to {
+            delta[from.index() - 1] -= 1;
+            delta[to.index() - 1] += 1;
+        }
+    }
+    // third nodes adjacent to neither endpoint: null/dyadic bulk move
+    let rest = (overlay.node_count() - 2 - union_size) as i64;
+    if rest > 0 {
+        let from = TRICODE_TABLE[tricode_from_dyads(old, 0, 0) as usize];
+        let to = TRICODE_TABLE[tricode_from_dyads(new, 0, 0) as usize];
+        if from != to {
+            delta[from.index() - 1] -= rest;
+            delta[to.index() - 1] += rest;
+        }
+    }
+    union_size as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::census::types::TriadType;
+    use crate::graph::builder::from_arcs;
+    use crate::graph::generators;
+
+    fn oracle(sc: &StreamingCensus) -> Census {
+        merged::census(&sc.overlay().compact())
+    }
+
+    #[test]
+    fn single_inserts_track_the_oracle() {
+        let mut sc = StreamingCensus::new(Arc::new(CsrGraph::empty(5)));
+        assert_eq!(sc.census()[TriadType::T003], 10);
+        for op in [
+            EdgeOp::Insert(0, 1),
+            EdgeOp::Insert(1, 0),
+            EdgeOp::Insert(1, 2),
+            EdgeOp::Insert(2, 0),
+            EdgeOp::Insert(3, 4),
+        ] {
+            assert!(matches!(sc.apply(op), ApplyOutcome::Changed { .. }));
+            assert_eq!(sc.census(), oracle(&sc));
+        }
+        assert_eq!(sc.stats().applied, 5);
+    }
+
+    #[test]
+    fn deletes_track_the_oracle() {
+        let base = from_arcs(6, &[(0, 1), (1, 0), (1, 2), (2, 3), (3, 1), (4, 5)]);
+        let mut sc = StreamingCensus::new(Arc::new(base));
+        for op in [
+            EdgeOp::Delete(1, 0),
+            EdgeOp::Delete(2, 3),
+            EdgeOp::Delete(4, 5),
+            EdgeOp::Delete(0, 1),
+        ] {
+            assert!(matches!(sc.apply(op), ApplyOutcome::Changed { .. }));
+            assert_eq!(sc.census(), oracle(&sc));
+        }
+        assert_eq!(sc.overlay().arc_count(), 2);
+    }
+
+    #[test]
+    fn noops_and_rejects_leave_the_census_alone() {
+        let mut sc = StreamingCensus::new(Arc::new(from_arcs(4, &[(0, 1)])));
+        let before = sc.census();
+        assert_eq!(sc.apply(EdgeOp::Insert(0, 1)), ApplyOutcome::NoChange);
+        assert_eq!(sc.apply(EdgeOp::Delete(2, 3)), ApplyOutcome::NoChange);
+        assert!(matches!(
+            sc.apply(EdgeOp::Insert(2, 2)),
+            ApplyOutcome::Rejected(_)
+        ));
+        assert!(matches!(
+            sc.apply(EdgeOp::Insert(0, 9)),
+            ApplyOutcome::Rejected(_)
+        ));
+        assert_eq!(sc.census(), before);
+        let s = sc.stats();
+        assert_eq!((s.applied, s.no_ops, s.rejected), (0, 2, 2));
+    }
+
+    #[test]
+    fn census_total_is_invariant() {
+        let mut sc = StreamingCensus::new(Arc::new(generators::erdos_renyi(30, 60, 4)));
+        let want = Census::expected_total(30);
+        assert_eq!(sc.census().total(), want);
+        for k in 0..40u32 {
+            sc.apply(EdgeOp::Insert(k % 30, (k * 7 + 1) % 30));
+            sc.apply(EdgeOp::Delete((k * 3) % 30, (k * 5 + 2) % 30));
+            assert_eq!(sc.census().total(), want);
+        }
+        assert_eq!(sc.census(), oracle(&sc));
+    }
+
+    #[test]
+    fn batch_apply_equals_one_by_one() {
+        let exec = Executor::with_workers(3);
+        let base = generators::erdos_renyi(40, 100, 9);
+        let mut serial = StreamingCensus::new(Arc::new(base.clone()));
+        let mut batched = StreamingCensus::new(Arc::new(base));
+        let mut rng = crate::rng::Rng::new(17);
+        let ops: Vec<EdgeOp> = (0..400)
+            .map(|_| {
+                let (u, v) = (rng.node(40), rng.node(40));
+                if rng.chance(0.35) {
+                    EdgeOp::Delete(u, v)
+                } else {
+                    EdgeOp::Insert(u, v)
+                }
+            })
+            .collect();
+        for op in &ops {
+            serial.apply(*op);
+        }
+        for chunk in ops.chunks(64) {
+            batched.apply_batch(chunk, &exec, 4);
+        }
+        assert_eq!(batched.census(), serial.census());
+        assert_eq!(batched.census(), oracle(&serial));
+        assert_eq!(batched.overlay().compact(), serial.overlay().compact());
+        let s = batched.stats();
+        assert_eq!(s.applied + s.no_ops + s.rejected, 400);
+        assert!(s.rounds >= s.batches);
+    }
+
+    #[test]
+    fn parallel_round_scans_match_the_oracle() {
+        // node-disjoint on a graph big enough that whole batches stay in
+        // one round and cross PAR_MIN_OPS — the executor path runs
+        let exec = Executor::with_workers(4);
+        let base = generators::power_law(600, 2.2, 6.0, 21);
+        let mut sc = StreamingCensus::new(Arc::new(base));
+        for round in 0..4 {
+            let ops: Vec<EdgeOp> = (0..120u32)
+                .map(|k| {
+                    // distinct endpoint pairs: one long disjoint round
+                    let (u, v) = (2 * k, 2 * k + 1);
+                    if round % 2 == 0 {
+                        EdgeOp::Insert(u, v)
+                    } else {
+                        EdgeOp::Delete(u, v)
+                    }
+                })
+                .collect();
+            let report = sc.apply_batch(&ops, &exec, 4);
+            assert_eq!(report.rounds, 1, "disjoint ops stay in one round");
+            assert_eq!(sc.census(), oracle(&sc), "round {round}");
+        }
+    }
+
+    #[test]
+    fn compaction_preserves_census_and_resets_overlay() {
+        let mut sc = StreamingCensus::new(Arc::new(generators::erdos_renyi(25, 50, 2)));
+        for k in 0..30u32 {
+            sc.apply(EdgeOp::Insert((k * 3) % 25, (k * 11 + 1) % 25));
+        }
+        let before = sc.census();
+        let arcs = sc.overlay().arc_count();
+        assert!(sc.overlay().is_dirty());
+        sc.compact();
+        assert_eq!(sc.census(), before);
+        assert_eq!(sc.overlay().arc_count(), arcs);
+        assert!(!sc.overlay().is_dirty());
+        assert_eq!(sc.stats().compactions, 1);
+        // mutations keep tracking after the rebase
+        sc.apply(EdgeOp::Insert(0, 24));
+        sc.apply(EdgeOp::Delete(3, 1));
+        assert_eq!(sc.census(), oracle(&sc));
+    }
+
+    #[test]
+    fn streams_over_named_fixtures() {
+        // grow an empty 7-node graph into fig1, then tear it back down
+        let fig1 = generators::named::fig1();
+        let mut sc = StreamingCensus::new(Arc::new(CsrGraph::empty(7)));
+        let arcs: Vec<(u32, u32)> = fig1.arcs().collect();
+        for &(u, v) in &arcs {
+            sc.apply(EdgeOp::Insert(u, v));
+        }
+        assert_eq!(sc.census(), merged::census(&fig1));
+        for &(u, v) in &arcs {
+            sc.apply(EdgeOp::Delete(u, v));
+        }
+        assert_eq!(sc.census(), merged::census(&CsrGraph::empty(7)));
+    }
+}

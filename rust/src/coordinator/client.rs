@@ -24,8 +24,9 @@ use std::net::{TcpStream, ToSocketAddrs};
 
 use super::protocol::{
     CensusRequest, CensusResponse, ErrorCode, Json, JobReport, JobStateKind, RequestFrame,
-    ResponseFrame, Verb, WireError,
+    ResponseFrame, StreamApplyReport, StreamOpened, StreamSnapshot, Verb, WireError,
 };
+use crate::graph::EdgeOp;
 
 /// Synchronous client for one server connection.
 pub struct TriadicClient {
@@ -143,6 +144,54 @@ impl TriadicClient {
     /// it exits (`repro serve` waits on the in-flight gauge).
     pub fn shutdown(&mut self) -> Result<(), WireError> {
         self.call(RequestFrame::new(0, Verb::Shutdown)).map(|_| ())
+    }
+
+    /// Open a streaming census session over the request's graph source
+    /// (the request's `engine` picks the seed-census engine; `threads`,
+    /// `policy` and `classes` are ignored). The session lives server-side
+    /// until [`TriadicClient::stream_close`] and is shared across
+    /// connections by its id.
+    pub fn stream_open(&mut self, request: &CensusRequest) -> Result<StreamOpened, WireError> {
+        let mut frame = RequestFrame::new(0, Verb::StreamOpen);
+        frame.request = Some(request.clone());
+        StreamOpened::from_json(&self.call(frame)?)
+    }
+
+    /// Apply a batch of edge mutations to a session, in order. Invalid
+    /// ops (self-loops, out-of-range ids) are counted in `rejected`
+    /// rather than failing the batch.
+    pub fn stream_apply(
+        &mut self,
+        stream: u64,
+        ops: &[EdgeOp],
+    ) -> Result<StreamApplyReport, WireError> {
+        let mut frame = RequestFrame::new(0, Verb::StreamApply);
+        frame.stream = Some(stream);
+        frame.ops = Some(ops.to_vec());
+        StreamApplyReport::from_json(&self.call(frame)?)
+    }
+
+    /// Read a session's live census and counters.
+    pub fn stream_query(&mut self, stream: u64) -> Result<StreamSnapshot, WireError> {
+        let mut frame = RequestFrame::new(0, Verb::StreamQuery);
+        frame.stream = Some(stream);
+        StreamSnapshot::from_json(&self.call(frame)?)
+    }
+
+    /// Ask the server to rebuild the session's base CSR from its
+    /// overlay. The census is unchanged; the overlay resets to empty.
+    pub fn stream_compact(&mut self, stream: u64) -> Result<(), WireError> {
+        let mut frame = RequestFrame::new(0, Verb::StreamCompact);
+        frame.stream = Some(stream);
+        self.call(frame).map(|_| ())
+    }
+
+    /// Close a session. Closing an unknown (or already-closed) session
+    /// is an [`ErrorCode::UnknownStream`] error.
+    pub fn stream_close(&mut self, stream: u64) -> Result<(), WireError> {
+        let mut frame = RequestFrame::new(0, Verb::StreamClose);
+        frame.stream = Some(stream);
+        self.call(frame).map(|_| ())
     }
 }
 

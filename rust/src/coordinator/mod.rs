@@ -51,6 +51,11 @@
 //! * **Transport** ([`server`], [`client`]): `repro serve --listen`
 //!   accepts TCP connections, one thread each; [`TriadicClient`] is the
 //!   library-side counterpart the `repro client` subcommand wraps.
+//! * **Streams**: `stream_open` / `stream_apply` / `stream_query` /
+//!   `stream_compact` / `stream_close` maintain live incremental
+//!   censuses ([`crate::census::StreamingCensus`]) in a cross-connection
+//!   session table — edge mutations between requests cost
+//!   O(deg(u) + deg(v)) instead of a full recompute.
 //! * **Metrics**: counters + gauges + latency histograms per backend,
 //!   job lifecycle counters, served by the `metrics` verb.
 
@@ -63,7 +68,7 @@ pub mod service;
 pub use client::TriadicClient;
 pub use protocol::{
     CensusRequest, CensusResponse, ErrorCode, GraphSource, JobReport, JobStateKind, Provenance,
-    SchedStats, WireError, PROTOCOL_VERSION,
+    SchedStats, StreamApplyReport, StreamOpened, StreamSnapshot, WireError, PROTOCOL_VERSION,
 };
 pub use router::{Route, Router, RoutingPolicy};
 pub use server::CensusServer;

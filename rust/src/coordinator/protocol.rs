@@ -22,6 +22,8 @@
 //! {"v":1,"id":7,"verb":"submit","request":{"source":{"kind":"path","path":"g.csr"}}}
 //! {"v":1,"id":8,"verb":"poll","job":3}
 //! {"v":1,"id":9,"verb":"status"}
+//! {"v":1,"id":10,"verb":"stream_open","request":{"source":{"kind":"path","path":"g.csr"}}}
+//! {"v":1,"id":11,"verb":"stream_apply","stream":1,"ops":[["+",0,1],["-",2,3]]}
 //! ```
 //!
 //! Response (server → client), one per request, echoing `id`:
@@ -34,6 +36,7 @@
 use std::fmt;
 
 use crate::census::{Census, TriadType};
+use crate::graph::EdgeOp;
 use crate::sched::{Policy, ThreadPoolStats};
 
 /// The wire protocol version spoken by this build. Bumped on any
@@ -437,6 +440,9 @@ pub enum ErrorCode {
     UnknownEngine,
     /// Job id not known to this server.
     UnknownJob,
+    /// Stream session id not known to this server (never opened, or
+    /// already closed — a double `stream_close` lands here).
+    UnknownStream,
     /// Graph source could not be loaded.
     GraphLoad,
     /// The job was cancelled before completing.
@@ -456,6 +462,7 @@ impl ErrorCode {
             ErrorCode::UnknownVerb => "unknown_verb",
             ErrorCode::UnknownEngine => "unknown_engine",
             ErrorCode::UnknownJob => "unknown_job",
+            ErrorCode::UnknownStream => "unknown_stream",
             ErrorCode::GraphLoad => "graph_load",
             ErrorCode::Cancelled => "cancelled",
             ErrorCode::ShuttingDown => "shutting_down",
@@ -473,6 +480,7 @@ impl ErrorCode {
             "unknown_verb" => ErrorCode::UnknownVerb,
             "unknown_engine" => ErrorCode::UnknownEngine,
             "unknown_job" => ErrorCode::UnknownJob,
+            "unknown_stream" => ErrorCode::UnknownStream,
             "graph_load" => ErrorCode::GraphLoad,
             "cancelled" => ErrorCode::Cancelled,
             "shutting_down" => ErrorCode::ShuttingDown,
@@ -1100,6 +1108,214 @@ impl JobReport {
 }
 
 // ---------------------------------------------------------------------------
+// Streaming census sessions
+// ---------------------------------------------------------------------------
+
+/// Encode a batch of edge ops as `[["+", u, v], ["-", u, v], …]`.
+pub fn ops_to_json(ops: &[EdgeOp]) -> Json {
+    Json::Arr(
+        ops.iter()
+            .map(|op| {
+                let (u, v) = op.endpoints();
+                Json::Arr(vec![
+                    Json::from(if op.is_insert() { "+" } else { "-" }),
+                    Json::from(u as u64),
+                    Json::from(v as u64),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Decode a `stream_apply` op array. Node ids must fit `u32`; range
+/// checking against the session's node count happens server-side, where
+/// out-of-range ops are counted as rejected rather than failing the
+/// whole batch.
+pub fn ops_from_json(v: &Json) -> Result<Vec<EdgeOp>, WireError> {
+    let bad = |m: String| WireError::new(ErrorCode::BadRequest, m);
+    let items = v
+        .as_arr()
+        .ok_or_else(|| bad("ops is not an array".into()))?;
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        let parts = item.as_arr().filter(|p| p.len() == 3);
+        let parsed = parts.and_then(|p| {
+            let sign = p[0].as_str()?;
+            let u = p[1].as_u64().and_then(|x| u32::try_from(x).ok())?;
+            let v = p[2].as_u64().and_then(|x| u32::try_from(x).ok())?;
+            match sign {
+                "+" => Some(EdgeOp::Insert(u, v)),
+                "-" => Some(EdgeOp::Delete(u, v)),
+                _ => None,
+            }
+        });
+        match parsed {
+            Some(op) => out.push(op),
+            None => return Err(bad(format!("op {item} is not [\"+\"|\"-\", u, v]"))),
+        }
+    }
+    Ok(out)
+}
+
+/// Encode a full 16-class census as the standard label → count object.
+fn census_to_json(census: &Census) -> Json {
+    Json::Obj(
+        TriadType::ALL
+            .iter()
+            .map(|&t| (t.label().to_string(), Json::from(census[t])))
+            .collect(),
+    )
+}
+
+/// Decode a label → count object (missing labels read as zero).
+fn census_from_json(v: &Json) -> Result<Census, WireError> {
+    let bad = |m: String| WireError::new(ErrorCode::BadFrame, m);
+    let pairs = match v {
+        Json::Obj(pairs) => pairs,
+        _ => return Err(bad("counts is not an object".into())),
+    };
+    let mut census = Census::zero();
+    for (label, count) in pairs {
+        let t = TriadType::from_label(label)
+            .ok_or_else(|| bad(format!("unknown triad class {label:?}")))?;
+        let c = count
+            .as_u64()
+            .ok_or_else(|| bad(format!("count for {label} is not a u64")))?;
+        census.add_count(t, c);
+    }
+    Ok(census)
+}
+
+/// `stream_open` result: the session id plus the opened graph's shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamOpened {
+    pub stream: u64,
+    pub nodes: u64,
+    pub arcs: u64,
+    /// Engine that computed the seed census.
+    pub engine: String,
+}
+
+impl StreamOpened {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("stream".into(), Json::from(self.stream)),
+            ("nodes".into(), Json::from(self.nodes)),
+            ("arcs".into(), Json::from(self.arcs)),
+            ("engine".into(), Json::from(self.engine.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<StreamOpened, WireError> {
+        Ok(StreamOpened {
+            stream: require_u64(v, "stream")?,
+            nodes: require_u64(v, "nodes")?,
+            arcs: require_u64(v, "arcs")?,
+            engine: v
+                .get("engine")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+        })
+    }
+}
+
+/// `stream_apply` result: what the batch did to the session.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamApplyReport {
+    pub stream: u64,
+    /// Ops that changed the graph.
+    pub applied: u64,
+    /// Duplicate inserts / deletes of absent arcs.
+    pub no_ops: u64,
+    /// Self-loop or out-of-range ops.
+    pub rejected: u64,
+    /// Triads individually reclassified by the delta scans.
+    pub reclassified: u64,
+    /// Effective arc count after the batch.
+    pub arcs: u64,
+}
+
+impl StreamApplyReport {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("stream".into(), Json::from(self.stream)),
+            ("applied".into(), Json::from(self.applied)),
+            ("no_ops".into(), Json::from(self.no_ops)),
+            ("rejected".into(), Json::from(self.rejected)),
+            ("reclassified".into(), Json::from(self.reclassified)),
+            ("arcs".into(), Json::from(self.arcs)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<StreamApplyReport, WireError> {
+        Ok(StreamApplyReport {
+            stream: require_u64(v, "stream")?,
+            applied: require_u64(v, "applied")?,
+            no_ops: require_u64(v, "no_ops")?,
+            rejected: require_u64(v, "rejected")?,
+            reclassified: require_u64(v, "reclassified")?,
+            arcs: require_u64(v, "arcs")?,
+        })
+    }
+}
+
+/// `stream_query` result: the live census plus session counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSnapshot {
+    pub stream: u64,
+    pub census: Census,
+    pub nodes: u64,
+    pub arcs: u64,
+    /// Dyads currently diverging from the session's base CSR.
+    pub edits: u64,
+    /// Lifetime applied-op count.
+    pub applied: u64,
+    /// Lifetime reclassified-triad count.
+    pub reclassified: u64,
+    /// Lifetime compaction count.
+    pub compactions: u64,
+}
+
+impl StreamSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("stream".into(), Json::from(self.stream)),
+            ("counts".into(), census_to_json(&self.census)),
+            ("nodes".into(), Json::from(self.nodes)),
+            ("arcs".into(), Json::from(self.arcs)),
+            ("edits".into(), Json::from(self.edits)),
+            ("applied".into(), Json::from(self.applied)),
+            ("reclassified".into(), Json::from(self.reclassified)),
+            ("compactions".into(), Json::from(self.compactions)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<StreamSnapshot, WireError> {
+        let counts = v.get("counts").ok_or_else(|| {
+            WireError::new(ErrorCode::BadFrame, "stream snapshot carries no counts")
+        })?;
+        Ok(StreamSnapshot {
+            stream: require_u64(v, "stream")?,
+            census: census_from_json(counts)?,
+            nodes: require_u64(v, "nodes")?,
+            arcs: require_u64(v, "arcs")?,
+            edits: require_u64(v, "edits")?,
+            applied: require_u64(v, "applied")?,
+            reclassified: require_u64(v, "reclassified")?,
+            compactions: require_u64(v, "compactions")?,
+        })
+    }
+}
+
+/// Required-field u64 accessor shared by the stream payload decoders.
+fn require_u64(v: &Json, key: &str) -> Result<u64, WireError> {
+    v.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| WireError::new(ErrorCode::BadFrame, format!("field {key:?} missing")))
+}
+
+// ---------------------------------------------------------------------------
 // Frames
 // ---------------------------------------------------------------------------
 
@@ -1120,6 +1336,18 @@ pub enum Verb {
     Metrics,
     /// Stop accepting connections and exit the serve loop.
     Shutdown,
+    /// Open a streaming census session over a graph source; result is a
+    /// [`StreamOpened`].
+    StreamOpen,
+    /// Apply a batch of edge mutations to a session; result is a
+    /// [`StreamApplyReport`].
+    StreamApply,
+    /// Read a session's live census; result is a [`StreamSnapshot`].
+    StreamQuery,
+    /// Rebuild the session's base CSR from its overlay.
+    StreamCompact,
+    /// Close a session and free its state.
+    StreamClose,
 }
 
 impl Verb {
@@ -1132,6 +1360,11 @@ impl Verb {
             Verb::Status => "status",
             Verb::Metrics => "metrics",
             Verb::Shutdown => "shutdown",
+            Verb::StreamOpen => "stream_open",
+            Verb::StreamApply => "stream_apply",
+            Verb::StreamQuery => "stream_query",
+            Verb::StreamCompact => "stream_compact",
+            Verb::StreamClose => "stream_close",
         }
     }
 
@@ -1144,6 +1377,11 @@ impl Verb {
             "status" => Some(Verb::Status),
             "metrics" => Some(Verb::Metrics),
             "shutdown" => Some(Verb::Shutdown),
+            "stream_open" => Some(Verb::StreamOpen),
+            "stream_apply" => Some(Verb::StreamApply),
+            "stream_query" => Some(Verb::StreamQuery),
+            "stream_compact" => Some(Verb::StreamCompact),
+            "stream_close" => Some(Verb::StreamClose),
             _ => None,
         }
     }
@@ -1157,10 +1395,14 @@ pub struct RequestFrame {
     /// Client correlation id, echoed in the response frame.
     pub id: u64,
     pub verb: Verb,
-    /// Payload for [`Verb::Submit`].
+    /// Payload for [`Verb::Submit`] / [`Verb::StreamOpen`].
     pub request: Option<CensusRequest>,
     /// Target for [`Verb::Poll`] / [`Verb::Wait`] / [`Verb::Cancel`].
     pub job: Option<u64>,
+    /// Target session for the `stream_*` verbs (except `stream_open`).
+    pub stream: Option<u64>,
+    /// Payload for [`Verb::StreamApply`].
+    pub ops: Option<Vec<EdgeOp>>,
 }
 
 impl RequestFrame {
@@ -1171,6 +1413,8 @@ impl RequestFrame {
             verb,
             request: None,
             job: None,
+            stream: None,
+            ops: None,
         }
     }
 
@@ -1186,6 +1430,12 @@ impl RequestFrame {
         }
         if let Some(j) = self.job {
             pairs.push(("job".into(), Json::from(j)));
+        }
+        if let Some(s) = self.stream {
+            pairs.push(("stream".into(), Json::from(s)));
+        }
+        if let Some(ops) = &self.ops {
+            pairs.push(("ops".into(), ops_to_json(ops)));
         }
         Json::Obj(pairs).to_string()
     }
@@ -1214,12 +1464,18 @@ impl RequestFrame {
             Some(r) => Some(CensusRequest::from_json(r)?),
             None => None,
         };
+        let ops = match v.get("ops") {
+            Some(o) => Some(ops_from_json(o)?),
+            None => None,
+        };
         Ok(RequestFrame {
             v: version,
             id: v.get("id").and_then(Json::as_u64).unwrap_or(0),
             verb,
             request,
             job: v.get("job").and_then(Json::as_u64),
+            stream: v.get("stream").and_then(Json::as_u64),
+            ops,
         })
     }
 }
@@ -1478,6 +1734,7 @@ mod tests {
             ErrorCode::UnknownVerb,
             ErrorCode::UnknownEngine,
             ErrorCode::UnknownJob,
+            ErrorCode::UnknownStream,
             ErrorCode::GraphLoad,
             ErrorCode::Cancelled,
             ErrorCode::ShuttingDown,
@@ -1486,6 +1743,110 @@ mod tests {
             assert_eq!(ErrorCode::parse(code.as_str()), code);
         }
         assert_eq!(ErrorCode::parse("novel_code"), ErrorCode::Internal);
+    }
+
+    #[test]
+    fn stream_verbs_parse_and_print() {
+        for verb in [
+            Verb::StreamOpen,
+            Verb::StreamApply,
+            Verb::StreamQuery,
+            Verb::StreamCompact,
+            Verb::StreamClose,
+        ] {
+            assert_eq!(Verb::parse(verb.as_str()), Some(verb));
+        }
+    }
+
+    #[test]
+    fn stream_ops_round_trip() {
+        let ops = vec![
+            EdgeOp::Insert(0, 1),
+            EdgeOp::Delete(7, 3),
+            EdgeOp::Insert(u32::MAX, 0),
+        ];
+        let back = ops_from_json(&Json::parse(&ops_to_json(&ops).to_string()).unwrap()).unwrap();
+        assert_eq!(back, ops);
+    }
+
+    #[test]
+    fn malformed_stream_ops_are_rejected() {
+        for bad in [
+            r#"[["*",0,1]]"#,    // unknown sign
+            r#"[["+",0]]"#,      // missing endpoint
+            r#"[["+","a",1]]"#,  // non-numeric id
+            r#"[["+",0,5000000000]]"#, // id over u32
+            r#"[1,2]"#,          // not op triples
+            r#"{"op":"+"}"#,     // not an array
+        ] {
+            let err = ops_from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{bad}");
+        }
+    }
+
+    #[test]
+    fn stream_frames_round_trip() {
+        let mut open = RequestFrame::new(1, Verb::StreamOpen);
+        open.request = Some(CensusRequest::inline(4, vec![(0, 1), (1, 2)]).engine("merged"));
+        assert_eq!(RequestFrame::decode(&open.encode()).unwrap(), open);
+
+        let mut apply = RequestFrame::new(2, Verb::StreamApply);
+        apply.stream = Some(9);
+        apply.ops = Some(vec![EdgeOp::Insert(0, 3), EdgeOp::Delete(1, 2)]);
+        assert_eq!(RequestFrame::decode(&apply.encode()).unwrap(), apply);
+
+        for verb in [Verb::StreamQuery, Verb::StreamCompact, Verb::StreamClose] {
+            let mut f = RequestFrame::new(3, verb);
+            f.stream = Some(9);
+            assert_eq!(RequestFrame::decode(&f.encode()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn stream_payloads_round_trip() {
+        let opened = StreamOpened {
+            stream: 4,
+            nodes: 100,
+            arcs: 440,
+            engine: "merged".to_string(),
+        };
+        let back =
+            StreamOpened::from_json(&Json::parse(&opened.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, opened);
+
+        let report = StreamApplyReport {
+            stream: 4,
+            applied: 10,
+            no_ops: 2,
+            rejected: 1,
+            reclassified: 77,
+            arcs: 449,
+        };
+        let back =
+            StreamApplyReport::from_json(&Json::parse(&report.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back, report);
+
+        let mut census = Census::zero();
+        census.add_count(TriadType::T003, 1_000);
+        census.add_count(TriadType::T030C, 3);
+        let snapshot = StreamSnapshot {
+            stream: 4,
+            census,
+            nodes: 100,
+            arcs: 449,
+            edits: 12,
+            applied: 10,
+            reclassified: 77,
+            compactions: 1,
+        };
+        let back =
+            StreamSnapshot::from_json(&Json::parse(&snapshot.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back, snapshot);
+        // a snapshot with no counts is a broken frame
+        let err = StreamSnapshot::from_json(&Json::parse(r#"{"stream":1}"#).unwrap()).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadFrame);
     }
 
     #[test]

@@ -11,6 +11,14 @@
 //! exposition of the coordinator registry), `shutdown` (stop accepting
 //! and return from [`CensusServer::run`]).
 //!
+//! Streaming census sessions (`stream_open` / `stream_apply` /
+//! `stream_query` / `stream_compact` / `stream_close`) live in a
+//! cross-connection table like jobs do: open on one connection, feed
+//! and query from another. Each session is its own mutex — a batch
+//! applying on one session never blocks another session (or any other
+//! verb); concurrent applies on the *same* session serialize, which is
+//! what keeps the incremental census exact.
+//!
 //! Completed jobs stay resolvable until the server exits — a polling
 //! client may fetch a terminal report any number of times. Bound the
 //! process by restarting the server, not by racing clients to observe
@@ -19,21 +27,32 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::protocol::{
-    ErrorCode, Json, RequestFrame, ResponseFrame, Verb, WireError, PROTOCOL_VERSION,
+    ErrorCode, Json, RequestFrame, ResponseFrame, StreamApplyReport, StreamOpened, StreamSnapshot,
+    Verb, WireError, PROTOCOL_VERSION,
 };
 use super::service::{Coordinator, JobHandle};
+use crate::census::StreamingCensus;
 use crate::error::{Context, Result};
 
-/// Shared server state: the coordinator, the cross-connection job table
-/// and the shutdown latch.
+/// One live streaming census session.
+struct StreamSession {
+    census: StreamingCensus,
+}
+
+/// Shared server state: the coordinator, the cross-connection job and
+/// stream tables, and the shutdown latch.
 struct ServerState {
     coordinator: Arc<Coordinator>,
     jobs: Mutex<HashMap<u64, JobHandle>>,
+    /// Stream sessions, each behind its own mutex so long applies on
+    /// one session do not serialize the whole server.
+    streams: Mutex<HashMap<u64, Arc<Mutex<StreamSession>>>>,
+    stream_seq: AtomicU64,
     shutdown: AtomicBool,
     started: Instant,
     addr: SocketAddr,
@@ -71,6 +90,8 @@ impl CensusServer {
             state: Arc::new(ServerState {
                 coordinator,
                 jobs: Mutex::new(HashMap::new()),
+                streams: Mutex::new(HashMap::new()),
+                stream_seq: AtomicU64::new(0),
                 shutdown: AtomicBool::new(false),
                 started: Instant::now(),
                 addr: local,
@@ -201,7 +222,26 @@ fn lookup_job(state: &ServerState, frame: &RequestFrame) -> Result<JobHandle, Wi
         .ok_or_else(|| WireError::new(ErrorCode::UnknownJob, format!("no job {id}")))
 }
 
+/// Look a frame's stream session up in the cross-connection table.
+fn lookup_stream(
+    state: &ServerState,
+    frame: &RequestFrame,
+) -> Result<(u64, Arc<Mutex<StreamSession>>), WireError> {
+    let id = frame
+        .stream
+        .ok_or_else(|| WireError::new(ErrorCode::BadRequest, "frame carries no stream id"))?;
+    state
+        .streams
+        .lock()
+        .unwrap()
+        .get(&id)
+        .cloned()
+        .map(|s| (id, s))
+        .ok_or_else(|| WireError::new(ErrorCode::UnknownStream, format!("no stream session {id}")))
+}
+
 fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError> {
+    let metrics = state.coordinator.metrics();
     match frame.verb {
         Verb::Submit => {
             if state.shutdown.load(Ordering::SeqCst) {
@@ -236,7 +276,6 @@ fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError>
         }
         Verb::Status => {
             let coord = &state.coordinator;
-            let metrics = coord.metrics();
             Ok(Json::Obj(vec![
                 ("protocol".into(), Json::from(PROTOCOL_VERSION)),
                 ("engine".into(), Json::from(coord.engine_name())),
@@ -253,6 +292,10 @@ fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError>
                     Json::Int(metrics.gauge("jobs_inflight") as i128),
                 ),
                 (
+                    "streams_open".into(),
+                    Json::Int(metrics.gauge("stream_sessions_open") as i128),
+                ),
+                (
                     "uptime_seconds".into(),
                     Json::Num(state.started.elapsed().as_secs_f64()),
                 ),
@@ -266,6 +309,106 @@ fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError>
             // side-effect free: handle_connection flips the latch after
             // the ack is flushed (see process_frame's second element)
             Ok(Json::Obj(vec![("stopping".into(), Json::Bool(true))]))
+        }
+        Verb::StreamOpen => {
+            if state.shutdown.load(Ordering::SeqCst) {
+                return Err(WireError::new(
+                    ErrorCode::ShuttingDown,
+                    "server is shutting down",
+                ));
+            }
+            let request = frame.request.clone().ok_or_else(|| {
+                WireError::new(ErrorCode::BadRequest, "stream_open frame carries no request")
+            })?;
+            let coord = &state.coordinator;
+            let base = coord.resolve_source(&request.source)?;
+            let (seed, engine) = coord.seed_census(&base, request.engine.as_deref())?;
+            let opened = StreamOpened {
+                stream: state.stream_seq.fetch_add(1, Ordering::Relaxed) + 1,
+                nodes: base.node_count() as u64,
+                arcs: base.arc_count(),
+                engine,
+            };
+            let session = StreamSession {
+                census: StreamingCensus::with_initial(base, seed),
+            };
+            state
+                .streams
+                .lock()
+                .unwrap()
+                .insert(opened.stream, Arc::new(Mutex::new(session)));
+            metrics.inc("stream_sessions_total", 1);
+            metrics.add_gauge("stream_sessions_open", 1);
+            Ok(opened.to_json())
+        }
+        Verb::StreamApply => {
+            let (id, session) = lookup_stream(state, frame)?;
+            let ops = frame.ops.as_deref().ok_or_else(|| {
+                WireError::new(ErrorCode::BadRequest, "stream_apply frame carries no ops")
+            })?;
+            let exec = state.coordinator.executor().clone();
+            let seats = exec.worker_count().max(1);
+            let mut s = session.lock().unwrap();
+            let report = s.census.apply_batch(ops, &exec, seats);
+            metrics.inc("stream_ops_total", ops.len() as u64);
+            metrics.inc("stream_ops_applied_total", report.applied);
+            metrics.inc("stream_reclassifications_total", report.reclassified);
+            Ok(StreamApplyReport {
+                stream: id,
+                applied: report.applied,
+                no_ops: report.no_ops,
+                rejected: report.rejected,
+                reclassified: report.reclassified,
+                arcs: s.census.overlay().arc_count(),
+            }
+            .to_json())
+        }
+        Verb::StreamQuery => {
+            let (id, session) = lookup_stream(state, frame)?;
+            let s = session.lock().unwrap();
+            let stats = s.census.stats();
+            Ok(StreamSnapshot {
+                stream: id,
+                census: s.census.census(),
+                nodes: s.census.overlay().node_count() as u64,
+                arcs: s.census.overlay().arc_count(),
+                edits: s.census.overlay().edit_count() as u64,
+                applied: stats.applied,
+                reclassified: stats.reclassified,
+                compactions: stats.compactions,
+            }
+            .to_json())
+        }
+        Verb::StreamCompact => {
+            let (id, session) = lookup_stream(state, frame)?;
+            let mut s = session.lock().unwrap();
+            let threads = state.coordinator.executor().worker_count().max(1);
+            s.census.compact_with(threads);
+            metrics.inc("stream_compactions_total", 1);
+            Ok(Json::Obj(vec![
+                ("stream".into(), Json::from(id)),
+                ("compacted".into(), Json::Bool(true)),
+                ("arcs".into(), Json::from(s.census.overlay().arc_count())),
+            ]))
+        }
+        Verb::StreamClose => {
+            let id = frame.stream.ok_or_else(|| {
+                WireError::new(ErrorCode::BadRequest, "frame carries no stream id")
+            })?;
+            let removed = state.streams.lock().unwrap().remove(&id);
+            match removed {
+                Some(_) => {
+                    metrics.add_gauge("stream_sessions_open", -1);
+                    Ok(Json::Obj(vec![
+                        ("stream".into(), Json::from(id)),
+                        ("closed".into(), Json::Bool(true)),
+                    ]))
+                }
+                None => Err(WireError::new(
+                    ErrorCode::UnknownStream,
+                    format!("no stream session {id}"),
+                )),
+            }
         }
     }
 }

@@ -824,6 +824,38 @@ impl Coordinator {
         self.job_threads.len()
     }
 
+    /// Materialize a request's graph source through the same path (and
+    /// path cache) the census pipeline uses — the intake for streaming
+    /// census sessions, which need the graph itself rather than a job.
+    pub fn resolve_source(
+        &self,
+        source: &GraphSource,
+    ) -> std::result::Result<Arc<CsrGraph>, WireError> {
+        self.core.resolve_graph(source)
+    }
+
+    /// Compute the full census that seeds a streaming session, on the
+    /// configured sparse engine (or `engine_override`) over the shared
+    /// executor. Returns the census and the engine name that produced
+    /// it.
+    pub fn seed_census(
+        &self,
+        g: &CsrGraph,
+        engine_override: Option<&str>,
+    ) -> std::result::Result<(Census, String), WireError> {
+        let name = engine_override.unwrap_or(&self.core.engine);
+        let engine = self
+            .core
+            .engines
+            .get_or_err(name)
+            .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
+        let run = self
+            .core
+            .metrics
+            .time("stream_seed_census", || engine.census(g, &self.core.executor));
+        Ok((run.census, engine.name().to_string()))
+    }
+
     /// Submit a census request for asynchronous execution. Always
     /// returns a handle: structurally broken requests (unknown engine,
     /// bad source) surface as an immediately-`Failed` job, which keeps
@@ -1317,6 +1349,31 @@ mod tests {
         // at the limit is fine
         let ok = coord.submit(CensusRequest::generator("patents", 1_000).seed(1));
         assert!(ok.wait().is_ok());
+    }
+
+    #[test]
+    fn resolve_source_and_seed_census_back_streams() {
+        let coord = sparse_coordinator();
+        let g = coord
+            .resolve_source(&GraphSource::Generator {
+                name: "patents".to_string(),
+                nodes: 200,
+                seed: Some(3),
+            })
+            .unwrap();
+        assert_eq!(g.node_count(), 200);
+        let (census, engine) = coord.seed_census(&g, Some("merged")).unwrap();
+        assert_eq!(census, merged::census(&g));
+        assert_eq!(engine, "merged");
+        let (default_census, default_engine) = coord.seed_census(&g, None).unwrap();
+        assert_eq!(default_census, census);
+        assert_eq!(default_engine, "parallel");
+        let err = coord.seed_census(&g, Some("quantum")).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownEngine);
+        let err = coord
+            .resolve_source(&GraphSource::Path("/nonexistent/x.csr".to_string()))
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::GraphLoad);
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod degree;
 pub mod generators;
 pub mod io;
 pub mod mmap;
+pub mod overlay;
 pub mod storage;
 
 pub use builder::GraphBuilder;
@@ -16,4 +17,5 @@ pub use csr::{CsrGraph, Dir, DyadType, PackedEdge};
 pub use degree::{DegreeStats, OutDegreeHistogram};
 pub use generators::{named, GraphSpec};
 pub use mmap::MmapFile;
+pub use overlay::{ApplyOutcome, DeltaOverlay, EdgeOp, RejectReason};
 pub use storage::{CsrStorage, MappedCsr};

@@ -1,0 +1,425 @@
+//! Mutable insert/delete overlay over an immutable CSR graph.
+//!
+//! The census engines operate on the frozen, cache-friendly [`CsrGraph`]
+//! (possibly a zero-copy mmap of a multi-GB file). A live serving
+//! workload, however, sees edge arrivals and retractions *between*
+//! requests. [`DeltaOverlay`] layers a sparse set of per-node dyad
+//! overrides on top of the immutable base: reads merge the sorted base
+//! row with a sorted override map in O(deg), mutations touch only the
+//! two endpoint maps, and [`DeltaOverlay::compact`] rebuilds a fresh
+//! CSR once the overlay has grown past taste.
+//!
+//! The overlay stores *effective direction bits* per touched dyad (the
+//! same 2-bit encoding as [`PackedEdge`]; `0` marks a base dyad that has
+//! been fully deleted). An override that restores a dyad to exactly its
+//! base state is dropped, so the overlay stays minimal under churn and
+//! `edit_count` measures genuine divergence from the base.
+
+use std::collections::{btree_map, BTreeMap, HashMap};
+use std::sync::Arc;
+
+use super::builder::GraphBuilder;
+use super::csr::{CsrGraph, PackedEdge};
+
+/// One directed-arc mutation in a stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EdgeOp {
+    /// Add the arc `u -> v` (a no-op if it already exists).
+    Insert(u32, u32),
+    /// Remove the arc `u -> v` (a no-op if it does not exist).
+    Delete(u32, u32),
+}
+
+impl EdgeOp {
+    /// The `(tail, head)` endpoints of the op.
+    #[inline]
+    pub fn endpoints(self) -> (u32, u32) {
+        match self {
+            EdgeOp::Insert(u, v) | EdgeOp::Delete(u, v) => (u, v),
+        }
+    }
+
+    /// True for [`EdgeOp::Insert`].
+    #[inline]
+    pub fn is_insert(self) -> bool {
+        matches!(self, EdgeOp::Insert(..))
+    }
+}
+
+/// Why a mutation was rejected without touching the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// `u == v` — the triad taxonomy is defined over simple digraphs.
+    SelfLoop,
+    /// An endpoint is `>= node_count()` (the overlay cannot grow the
+    /// node set; open the stream over a larger base instead).
+    OutOfRange,
+}
+
+/// Outcome of applying one [`EdgeOp`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApplyOutcome {
+    /// The `(u, v)` dyad changed: direction bits before and after, seen
+    /// from `u` (`0b01` = `u -> v`, `0b10` = `v -> u`, `0` = null).
+    Changed { old: u8, new: u8 },
+    /// Duplicate insert or delete of an absent arc.
+    NoChange,
+    /// Structurally invalid op; the graph is untouched.
+    Rejected(RejectReason),
+}
+
+/// Mirror 2-bit dyad direction bits to the other endpoint's view.
+#[inline]
+pub(crate) fn reverse_bits(bits: u8) -> u8 {
+    ((bits & 0b01) << 1) | ((bits & 0b10) >> 1)
+}
+
+/// A mutable insert/delete layer over an immutable (possibly mmap'd)
+/// [`CsrGraph`]. Reads see the *effective* graph; the base is never
+/// modified.
+pub struct DeltaOverlay {
+    base: Arc<CsrGraph>,
+    /// Per-node overrides: neighbor id → effective direction bits from
+    /// this node's perspective (`0` = dyad deleted). Invariant: an entry
+    /// is present iff its bits differ from the base, and the `(u, v)` /
+    /// `(v, u)` entries always mirror each other.
+    deltas: HashMap<u32, BTreeMap<u32, u8>>,
+    /// Total override entries across all maps (2 per touched dyad).
+    entries: usize,
+    /// Effective directed-arc count.
+    arc_count: u64,
+}
+
+impl DeltaOverlay {
+    /// An empty overlay: reads pass straight through to `base`.
+    pub fn new(base: Arc<CsrGraph>) -> DeltaOverlay {
+        let arc_count = base.arc_count();
+        DeltaOverlay {
+            base,
+            deltas: HashMap::new(),
+            entries: 0,
+            arc_count,
+        }
+    }
+
+    /// The immutable base graph under the overlay.
+    #[inline]
+    pub fn base(&self) -> &Arc<CsrGraph> {
+        &self.base
+    }
+
+    /// Number of nodes (fixed by the base).
+    #[inline]
+    pub fn node_count(&self) -> usize {
+        self.base.node_count()
+    }
+
+    /// Effective directed-arc count (mutual dyads count twice).
+    #[inline]
+    pub fn arc_count(&self) -> u64 {
+        self.arc_count
+    }
+
+    /// Dyads whose effective state differs from the base — the natural
+    /// compaction trigger.
+    #[inline]
+    pub fn edit_count(&self) -> usize {
+        debug_assert_eq!(self.entries % 2, 0);
+        self.entries / 2
+    }
+
+    /// True if any mutation diverges from the base.
+    #[inline]
+    pub fn is_dirty(&self) -> bool {
+        self.entries > 0
+    }
+
+    /// Base-graph direction bits of `(u, v)` from `u`'s perspective.
+    #[inline]
+    fn base_bits(&self, u: u32, v: u32) -> u8 {
+        self.base
+            .find_entry(u, v)
+            .map(|e| (e.0 & 0b11) as u8)
+            .unwrap_or(0)
+    }
+
+    /// Effective direction bits of `(u, v)` from `u`'s perspective
+    /// (`0` = null dyad).
+    #[inline]
+    pub fn dyad_bits(&self, u: u32, v: u32) -> u8 {
+        match self.deltas.get(&u).and_then(|m| m.get(&v)) {
+            Some(&bits) => bits,
+            None => self.base_bits(u, v),
+        }
+    }
+
+    /// True if the arc `u -> v` effectively exists.
+    #[inline]
+    pub fn has_arc(&self, u: u32, v: u32) -> bool {
+        self.dyad_bits(u, v) & 0b01 != 0
+    }
+
+    /// Write one side of a dyad override, keeping the minimality
+    /// invariant (entries equal to the base are removed).
+    fn set_side(&mut self, a: u32, b: u32, bits: u8) {
+        if bits == self.base_bits(a, b) {
+            if let Some(m) = self.deltas.get_mut(&a) {
+                if m.remove(&b).is_some() {
+                    self.entries -= 1;
+                }
+                if m.is_empty() {
+                    self.deltas.remove(&a);
+                }
+            }
+        } else if self.deltas.entry(a).or_default().insert(b, bits).is_none() {
+            self.entries += 1;
+        }
+    }
+
+    /// Apply one arc mutation. The returned old/new bits are what the
+    /// streaming census needs to reclassify the touched triads.
+    pub fn apply(&mut self, op: EdgeOp) -> ApplyOutcome {
+        let (u, v) = op.endpoints();
+        if u == v {
+            return ApplyOutcome::Rejected(RejectReason::SelfLoop);
+        }
+        let n = self.node_count();
+        if u as usize >= n || v as usize >= n {
+            return ApplyOutcome::Rejected(RejectReason::OutOfRange);
+        }
+        let old = self.dyad_bits(u, v);
+        let new = if op.is_insert() { old | 0b01 } else { old & !0b01 };
+        if new == old {
+            return ApplyOutcome::NoChange;
+        }
+        self.set_side(u, v, new);
+        self.set_side(v, u, reverse_bits(new));
+        if op.is_insert() {
+            self.arc_count += 1;
+        } else {
+            self.arc_count -= 1;
+        }
+        ApplyOutcome::Changed { old, new }
+    }
+
+    /// Iterate the effective neighbors of `u` as `(neighbor, bits)` in
+    /// ascending neighbor order — the overlay-aware analogue of
+    /// [`CsrGraph::row`], with the same O(deg) cost.
+    pub fn neighbors(&self, u: u32) -> OverlayRow<'_> {
+        OverlayRow {
+            base: self.base.row(u).iter().peekable(),
+            over: self.deltas.get(&u).map(|m| m.iter().peekable()),
+        }
+    }
+
+    /// Effective undirected degree of `u` (distinct connected
+    /// neighbors). O(deg); diagnostics and tests.
+    pub fn degree(&self, u: u32) -> usize {
+        self.neighbors(u).count()
+    }
+
+    /// Materialize the effective graph as a fresh validated CSR,
+    /// leaving the overlay untouched (callers swap it in and reset).
+    pub fn compact(&self) -> CsrGraph {
+        self.compact_with(1)
+    }
+
+    /// [`DeltaOverlay::compact`] with a parallel ingest sort.
+    pub fn compact_with(&self, threads: usize) -> CsrGraph {
+        let n = self.node_count();
+        let mut b = GraphBuilder::new(n);
+        for u in 0..n as u32 {
+            for (v, bits) in self.neighbors(u) {
+                if bits & 0b01 != 0 {
+                    b.arc(u, v);
+                }
+            }
+        }
+        let g = b.build_parallel(threads);
+        debug_assert_eq!(g.arc_count(), self.arc_count);
+        g
+    }
+}
+
+/// Merged iterator over a base CSR row and its override map: overrides
+/// win on equal keys, zero-bit overrides (deleted dyads) are skipped.
+pub struct OverlayRow<'a> {
+    base: std::iter::Peekable<std::slice::Iter<'a, PackedEdge>>,
+    over: Option<std::iter::Peekable<btree_map::Iter<'a, u32, u8>>>,
+}
+
+impl Iterator for OverlayRow<'_> {
+    type Item = (u32, u8);
+
+    fn next(&mut self) -> Option<(u32, u8)> {
+        loop {
+            let b = self.base.peek().map(|e| e.nbr());
+            let o = self
+                .over
+                .as_mut()
+                .and_then(|it| it.peek().map(|(&k, _)| k));
+            let take_over = match (b, o) {
+                (None, None) => return None,
+                (Some(_), None) => false,
+                (None, Some(_)) => true,
+                (Some(bn), Some(on)) => {
+                    if bn == on {
+                        self.base.next(); // override shadows the base entry
+                    }
+                    on <= bn
+                }
+            };
+            if take_over {
+                let (&v, &bits) = self.over.as_mut().unwrap().next().unwrap();
+                if bits != 0 {
+                    return Some((v, bits));
+                }
+            } else {
+                let e = self.base.next().unwrap();
+                return Some((e.nbr(), (e.0 & 0b11) as u8));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_arcs;
+    use crate::graph::csr::Dir;
+
+    fn overlay(n: usize, arcs: &[(u32, u32)]) -> DeltaOverlay {
+        DeltaOverlay::new(Arc::new(from_arcs(n, arcs)))
+    }
+
+    fn row(o: &DeltaOverlay, u: u32) -> Vec<(u32, u8)> {
+        o.neighbors(u).collect()
+    }
+
+    #[test]
+    fn passthrough_without_edits() {
+        let o = overlay(4, &[(0, 1), (1, 0), (2, 3)]);
+        assert_eq!(o.arc_count(), 3);
+        assert_eq!(o.edit_count(), 0);
+        assert!(!o.is_dirty());
+        assert_eq!(o.dyad_bits(0, 1), Dir::Both as u32 as u8);
+        assert_eq!(o.dyad_bits(2, 3), Dir::Out as u32 as u8);
+        assert_eq!(o.dyad_bits(3, 2), Dir::In as u32 as u8);
+        assert_eq!(row(&o, 0), vec![(1, 0b11)]);
+    }
+
+    #[test]
+    fn insert_creates_and_upgrades_dyads() {
+        let mut o = overlay(4, &[(0, 1)]);
+        assert_eq!(
+            o.apply(EdgeOp::Insert(2, 3)),
+            ApplyOutcome::Changed { old: 0, new: 0b01 }
+        );
+        assert_eq!(
+            o.apply(EdgeOp::Insert(1, 0)),
+            ApplyOutcome::Changed { old: 0b10, new: 0b11 }
+        );
+        assert_eq!(o.arc_count(), 3);
+        assert!(o.has_arc(2, 3) && !o.has_arc(3, 2));
+        assert_eq!(o.dyad_bits(0, 1), 0b11);
+        // both endpoint views stay mirrored
+        assert_eq!(o.dyad_bits(3, 2), 0b10);
+    }
+
+    #[test]
+    fn duplicate_insert_and_absent_delete_are_noops() {
+        let mut o = overlay(3, &[(0, 1)]);
+        assert_eq!(o.apply(EdgeOp::Insert(0, 1)), ApplyOutcome::NoChange);
+        assert_eq!(o.apply(EdgeOp::Delete(1, 0)), ApplyOutcome::NoChange);
+        assert_eq!(o.apply(EdgeOp::Delete(1, 2)), ApplyOutcome::NoChange);
+        assert_eq!(o.arc_count(), 1);
+        assert_eq!(o.edit_count(), 0);
+    }
+
+    #[test]
+    fn rejects_self_loops_and_out_of_range() {
+        let mut o = overlay(3, &[]);
+        assert_eq!(
+            o.apply(EdgeOp::Insert(1, 1)),
+            ApplyOutcome::Rejected(RejectReason::SelfLoop)
+        );
+        assert_eq!(
+            o.apply(EdgeOp::Insert(0, 3)),
+            ApplyOutcome::Rejected(RejectReason::OutOfRange)
+        );
+        assert_eq!(
+            o.apply(EdgeOp::Delete(9, 0)),
+            ApplyOutcome::Rejected(RejectReason::OutOfRange)
+        );
+        assert_eq!(o.arc_count(), 0);
+    }
+
+    #[test]
+    fn delete_downgrades_and_removes() {
+        let mut o = overlay(3, &[(0, 1), (1, 0), (1, 2)]);
+        assert_eq!(
+            o.apply(EdgeOp::Delete(0, 1)),
+            ApplyOutcome::Changed { old: 0b11, new: 0b10 }
+        );
+        assert_eq!(
+            o.apply(EdgeOp::Delete(1, 2)),
+            ApplyOutcome::Changed { old: 0b01, new: 0 }
+        );
+        assert_eq!(o.arc_count(), 1);
+        assert_eq!(o.dyad_bits(0, 1), 0b10);
+        assert_eq!(o.dyad_bits(1, 2), 0);
+        // node 1's effective row: only node 0 remains (2 was deleted)
+        assert_eq!(row(&o, 1), vec![(0, 0b01)]);
+    }
+
+    #[test]
+    fn reverting_an_edit_shrinks_the_overlay() {
+        let mut o = overlay(3, &[(0, 1)]);
+        o.apply(EdgeOp::Delete(0, 1));
+        assert_eq!(o.edit_count(), 1);
+        o.apply(EdgeOp::Insert(0, 1));
+        assert_eq!(o.edit_count(), 0, "restored dyad drops its override");
+        assert!(!o.is_dirty());
+        assert_eq!(o.dyad_bits(0, 1), 0b01);
+    }
+
+    #[test]
+    fn neighbors_merge_in_sorted_order() {
+        let mut o = overlay(6, &[(0, 1), (0, 4)]);
+        o.apply(EdgeOp::Insert(0, 3));
+        o.apply(EdgeOp::Insert(5, 0));
+        o.apply(EdgeOp::Delete(0, 4));
+        let got = row(&o, 0);
+        assert_eq!(got, vec![(1, 0b01), (3, 0b01), (5, 0b10)]);
+        assert_eq!(o.degree(0), 3);
+    }
+
+    #[test]
+    fn compact_materializes_the_effective_graph() {
+        let mut o = overlay(5, &[(0, 1), (1, 2), (2, 0)]);
+        o.apply(EdgeOp::Insert(3, 4));
+        o.apply(EdgeOp::Insert(1, 0));
+        o.apply(EdgeOp::Delete(2, 0));
+        let g = o.compact();
+        assert!(g.validate().is_ok());
+        let want = from_arcs(5, &[(0, 1), (1, 2), (3, 4), (1, 0)]);
+        assert_eq!(g, want);
+        // overlay is untouched; compacting again is identical
+        assert_eq!(o.compact_with(4), want);
+    }
+
+    #[test]
+    fn compact_of_clean_overlay_equals_base() {
+        let base = from_arcs(4, &[(0, 1), (1, 0), (2, 3)]);
+        let o = DeltaOverlay::new(Arc::new(base.clone()));
+        assert_eq!(o.compact(), base);
+    }
+
+    #[test]
+    fn reverse_bits_mirrors() {
+        assert_eq!(reverse_bits(0), 0);
+        assert_eq!(reverse_bits(0b01), 0b10);
+        assert_eq!(reverse_bits(0b10), 0b01);
+        assert_eq!(reverse_bits(0b11), 0b11);
+    }
+}

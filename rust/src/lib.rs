@@ -14,7 +14,10 @@
 //!   (Fig 5), the merged-traversal optimized variant (Fig 8), Moody's
 //!   dense matrix-method census, and the parallel engine with
 //!   hash-distributed local census vectors — all behind the
-//!   [`census::CensusEngine`] trait and its by-name registry.
+//!   [`census::CensusEngine`] trait and its by-name registry — plus
+//!   [`census::StreamingCensus`], which keeps a census live under edge
+//!   insertions/deletions at O(deg) per mutation over a
+//!   [`graph::overlay::DeltaOverlay`].
 //! * [`sched`] — an OpenMP-like scheduler (static / dynamic / guided)
 //!   over a manhattan-collapsed iteration space, on a persistent
 //!   work-stealing executor (spawn once, park workers, per-seat chunk

@@ -15,6 +15,10 @@
 //!                the scheduling study) as TSV tables.
 //! * `simulate` — sweep one machine model over processor counts.
 //! * `monitor`  — run the Fig 3/4 security monitor on synthetic traffic.
+//! * `stream`   — replay a timestamped edge-mutation stream through the
+//!                incremental census, batch by batch, optionally
+//!                compacting periodically and cross-checking the live
+//!                census against a full merged-engine recompute.
 //! * `serve`    — start the coordinator and serve the versioned census
 //!                wire protocol over TCP (`--listen ADDR`; newline-
 //!                delimited JSON frames, see README "Serving API"), or
@@ -31,7 +35,8 @@ use triadic::analysis::{builtin_patterns, census_series, MonitorConfig, TriadMon
 use triadic::analysis::{TrafficGenerator, TrafficScenario};
 use triadic::bail;
 use triadic::census::{
-    census_parallel, merged, Accumulation, EngineRegistry, ParallelConfig, TriadType,
+    census_parallel, merged, Accumulation, EngineRegistry, ParallelConfig, StreamingCensus,
+    TriadType,
 };
 use triadic::config::{graph_spec_from, Args};
 use triadic::coordinator::protocol::Json;
@@ -41,7 +46,7 @@ use triadic::coordinator::{
 };
 use triadic::error::{Context, Error, Result};
 use triadic::figures::{self, Scale};
-use triadic::graph::{degree, io};
+use triadic::graph::{degree, io, CsrGraph, EdgeOp};
 use triadic::sched::{Executor, ExecutorConfig, Policy};
 use triadic::simulator::{
     simulate, Machine, NumaMachine, SuperdomeMachine, WorkloadProfile, XmtMachine,
@@ -65,6 +70,9 @@ COMMANDS
   simulate  --machine xmt|xmt512|numa|superdome --graph ... [--procs 1,2,...]
   monitor   [--hosts N] [--rate EPS] [--duration S] [--window S]
             [--attack scan|ddos|relay|botnet|all]
+  stream    --input FILE [--nodes N] [--base FILE] [--batch K]
+            [--threads T] [--pool-threads W] [--compact-every B]
+            [--verify-every B] [--oracle] [--json FILE]
   serve     [--listen ADDR] [--stdin] [--artifacts DIR] [--threads T]
             [--trusted] [--engine E] [--pool-threads W] [--max-jobs K]
             [--job-workers J] [--max-request-nodes N]
@@ -95,6 +103,7 @@ fn run() -> Result<()> {
         Some("figures") => cmd_figures(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("monitor") => cmd_monitor(&args),
+        Some("stream") => cmd_stream(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
         Some("help") | None => {
@@ -532,6 +541,187 @@ fn cmd_monitor(args: &Args) -> Result<()> {
         total_alerts,
         series.iter().map(|w| w.hosts).max().unwrap_or(0)
     );
+    Ok(())
+}
+
+/// Parse one edge-stream line. Accepted forms (whitespace separated,
+/// `#`/`%` comments skipped by the caller):
+///
+/// * `u v`          — insert (replay of a plain edge list)
+/// * `+ u v` / `- u v`
+/// * `TS + u v`     — leading timestamp; replay order is file order, the
+///   timestamp is parsed for validation and otherwise ignored
+fn parse_stream_line(line: &str, lineno: usize) -> Result<EdgeOp> {
+    let fields: Vec<&str> = line.split_whitespace().collect();
+    let parse_id = |s: &str| -> Result<u32> {
+        s.parse::<u32>()
+            .map_err(|e| Error::msg(format!("line {lineno}: bad node id {s:?}: {e}")))
+    };
+    let op_of = |sign: &str, u: &str, v: &str| -> Result<EdgeOp> {
+        let (u, v) = (parse_id(u)?, parse_id(v)?);
+        match sign {
+            "+" => Ok(EdgeOp::Insert(u, v)),
+            "-" => Ok(EdgeOp::Delete(u, v)),
+            other => Err(Error::msg(format!(
+                "line {lineno}: bad op {other:?} (want + or -)"
+            ))),
+        }
+    };
+    match fields.as_slice() {
+        [u, v] => Ok(EdgeOp::Insert(parse_id(u)?, parse_id(v)?)),
+        [sign, u, v] => op_of(sign, u, v),
+        [ts, sign, u, v] => {
+            ts.parse::<f64>()
+                .map_err(|e| Error::msg(format!("line {lineno}: bad timestamp {ts:?}: {e}")))?;
+            op_of(sign, u, v)
+        }
+        _ => Err(Error::msg(format!(
+            "line {lineno}: expected `u v`, `op u v` or `ts op u v`"
+        ))),
+    }
+}
+
+/// Replay a timestamped edge-mutation stream through the incremental
+/// census. The final census table is the only non-`#` stdout output, so
+/// scripts can diff it against `repro census` of the end-state graph.
+fn cmd_stream(args: &Args) -> Result<()> {
+    let input = args.opt_str("input").context("--input FILE required")?;
+    let base_path = args.opt_str("base");
+    let nodes_flag = args.opt_str("nodes");
+    let batch = args.get_or("batch", 1024usize).map_err(Error::msg)?.max(1);
+    let threads = args.get_or("threads", default_threads()).map_err(Error::msg)?;
+    let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
+    let compact_every = args.get_or("compact-every", 0usize).map_err(Error::msg)?;
+    let verify_every = args.get_or("verify-every", 0usize).map_err(Error::msg)?;
+    let oracle = args.flag("oracle");
+    let json_path = args.opt_str("json");
+    args.reject_unknown().map_err(Error::msg)?;
+
+    // parse the whole stream up front (replay order = file order)
+    let text = std::fs::read_to_string(&input)
+        .with_context(|| format!("reading stream file {input}"))?;
+    let mut ops = Vec::new();
+    let mut max_id = 0u32;
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let op = parse_stream_line(t, i + 1)?;
+        let (u, v) = op.endpoints();
+        max_id = max_id.max(u).max(v);
+        ops.push(op);
+    }
+
+    // the base graph: an explicit file, or an empty graph sized by
+    // --nodes / the stream's max id (matching edge-list inference)
+    let base = match &base_path {
+        Some(p) => io::load_auto(p, threads.max(1))?,
+        None => {
+            let n = match nodes_flag {
+                Some(s) => s.parse::<usize>().map_err(|e| Error::msg(format!("bad --nodes: {e}")))?,
+                None if ops.is_empty() => 0,
+                None => max_id as usize + 1,
+            };
+            CsrGraph::empty(n)
+        }
+    };
+    let n = base.node_count();
+    eprintln!(
+        "stream: base n={} arcs={} | {} ops, batch={batch}, compact_every={compact_every}",
+        n,
+        base.arc_count(),
+        ops.len()
+    );
+
+    let exec = Executor::new(ExecutorConfig {
+        workers: pool_threads,
+        max_concurrent_jobs: 0,
+    });
+    let t_seed = std::time::Instant::now();
+    let mut sc = StreamingCensus::new(Arc::new(base));
+    let seed_seconds = t_seed.elapsed().as_secs_f64();
+
+    let verify = |sc: &StreamingCensus, what: &str| -> Result<()> {
+        let want = merged::census(&sc.overlay().compact());
+        if sc.census() != want {
+            bail!("incremental census diverged from the full recompute ({what})");
+        }
+        Ok(())
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut batches = 0usize;
+    for chunk in ops.chunks(batch) {
+        sc.apply_batch(chunk, &exec, threads.max(1));
+        batches += 1;
+        if compact_every > 0 && batches % compact_every == 0 {
+            sc.compact_with(threads.max(1));
+        }
+        if verify_every > 0 && batches % verify_every == 0 {
+            verify(&sc, &format!("after batch {batches}"))?;
+        }
+    }
+    let replay_seconds = t0.elapsed().as_secs_f64();
+
+    let oracle_status = if oracle {
+        verify(&sc, "final")?;
+        eprintln!("stream oracle OK: live census == full merged recompute");
+        "ok"
+    } else {
+        "skipped"
+    };
+
+    let s = sc.stats();
+    println!(
+        "# stream: ops={} applied={} no_ops={} rejected={} reclassified={} \
+         batches={} rounds={} compactions={}",
+        ops.len(),
+        s.applied,
+        s.no_ops,
+        s.rejected,
+        s.reclassified,
+        s.batches,
+        s.rounds,
+        s.compactions
+    );
+    println!(
+        "# stream timings: seed={seed_seconds:.3}s replay={replay_seconds:.3}s \
+         ({:.0} ops/s) final_arcs={} edits={}",
+        ops.len() as f64 / replay_seconds.max(1e-9),
+        sc.overlay().arc_count(),
+        sc.overlay().edit_count()
+    );
+    print!("{}", sc.census().table());
+
+    if let Some(path) = json_path {
+        let json = format!(
+            concat!(
+                "{{\"schema_version\":1,\"bench\":\"stream_replay\",\"nodes\":{},\"ops\":{},",
+                "\"batch\":{},\"applied\":{},\"no_ops\":{},\"rejected\":{},",
+                "\"reclassified\":{},\"batches\":{},\"rounds\":{},\"compactions\":{},",
+                "\"seed_seconds\":{:.6},\"replay_seconds\":{:.6},\"ops_per_second\":{:.1},",
+                "\"final_arcs\":{},\"oracle\":\"{}\"}}\n"
+            ),
+            n,
+            ops.len(),
+            batch,
+            s.applied,
+            s.no_ops,
+            s.rejected,
+            s.reclassified,
+            s.batches,
+            s.rounds,
+            s.compactions,
+            seed_seconds,
+            replay_seconds,
+            ops.len() as f64 / replay_seconds.max(1e-9),
+            sc.overlay().arc_count(),
+            oracle_status,
+        );
+        std::fs::write(&path, json)?;
+        eprintln!("stream: wrote machine-readable results to {path}");
+    }
     Ok(())
 }
 

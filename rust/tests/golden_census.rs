@@ -1,0 +1,138 @@
+//! Golden-census fixtures: tiny canonical digraphs whose 16-class
+//! censuses were counted *by hand* (see the comments in each
+//! `fixtures/*.census`), asserted against every registered engine and
+//! the streaming census. Unlike the property tests — which compare
+//! engines to each other — these pin the absolute numbers, so a bug
+//! shared by every engine (e.g. a broken tricode table) cannot hide.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use triadic::census::{merged, Census, EngineRegistry, StreamingCensus, TriadType};
+use triadic::graph::{CsrGraph, EdgeOp, GraphBuilder};
+use triadic::sched::Executor;
+
+const FIXTURES: [&str; 6] = [
+    "empty6",
+    "complete_k4",
+    "cycle3",
+    "star_out5",
+    "fig1",
+    "mixed10",
+];
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures")
+}
+
+/// Parse a fixture graph: `nodes N` header, then one `u v` arc per
+/// line; `#` comments and blanks skipped.
+fn load_graph(name: &str) -> CsrGraph {
+    let path = fixtures_dir().join(format!("{name}.edges"));
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    let mut nodes: Option<usize> = None;
+    let mut arcs: Vec<(u32, u32)> = Vec::new();
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("nodes ") {
+            nodes = Some(rest.trim().parse().unwrap_or_else(|e| panic!("{name}: {e}")));
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u = it.next().and_then(|s| s.parse().ok());
+        let v = it.next().and_then(|s| s.parse().ok());
+        match (u, v) {
+            (Some(u), Some(v)) => arcs.push((u, v)),
+            _ => panic!("{name}: bad arc line {t:?}"),
+        }
+    }
+    let n = nodes.unwrap_or_else(|| panic!("{name}: missing `nodes N` header"));
+    GraphBuilder::new(n).arcs(&arcs).build()
+}
+
+/// Parse a fixture census: 16 `label count` lines, each class exactly
+/// once.
+fn load_census(name: &str) -> Census {
+    let path = fixtures_dir().join(format!("{name}.census"));
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+    let mut census = Census::zero();
+    let mut seen = [false; 16];
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let label = it.next().unwrap();
+        let class = TriadType::from_label(label)
+            .unwrap_or_else(|| panic!("{name}: unknown class {label:?}"));
+        let count: u64 = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("{name}: bad count line {t:?}"));
+        assert!(!seen[class.index() - 1], "{name}: class {label} repeated");
+        seen[class.index() - 1] = true;
+        census.add_count(class, count);
+    }
+    assert!(
+        seen.iter().all(|&s| s),
+        "{name}: fixture census missing classes"
+    );
+    census
+}
+
+#[test]
+fn fixture_censuses_are_internally_consistent() {
+    for name in FIXTURES {
+        let g = load_graph(name);
+        let want = load_census(name);
+        // the hand counts must cover exactly C(n,3) triads
+        assert_eq!(
+            want.total(),
+            Census::expected_total(g.node_count()),
+            "{name}: census total != C(n,3)"
+        );
+        // and imply exactly the graph's arcs: each arc is in n-2 triads
+        assert_eq!(
+            want.implied_arc_triples(),
+            g.arc_count() as u128 * (g.node_count() as u128 - 2),
+            "{name}: census arc mass != m * (n - 2)"
+        );
+    }
+}
+
+#[test]
+fn every_registered_engine_reproduces_the_golden_censuses() {
+    let exec = Executor::with_workers(2);
+    let registry = EngineRegistry::default();
+    for name in FIXTURES {
+        let g = load_graph(name);
+        let want = load_census(name);
+        for engine_name in registry.names() {
+            let run = registry.get(engine_name).unwrap().census(&g, &exec);
+            assert_eq!(
+                run.census, want,
+                "engine {engine_name} disagrees with hand count on {name}"
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_census_reproduces_the_golden_censuses() {
+    // grow each fixture from an empty graph one arc at a time — the
+    // incremental path must land on the same hand-counted census
+    for name in FIXTURES {
+        let g = load_graph(name);
+        let want = load_census(name);
+        let mut sc = StreamingCensus::new(Arc::new(CsrGraph::empty(g.node_count())));
+        for (u, v) in g.arcs() {
+            sc.apply(EdgeOp::Insert(u, v));
+        }
+        assert_eq!(sc.census(), want, "streamed build of {name}");
+        assert_eq!(sc.census(), merged::census(&g), "{name} oracle");
+    }
+}

@@ -12,7 +12,7 @@ use triadic::coordinator::{
     CensusRequest, CensusServer, Coordinator, CoordinatorConfig, ErrorCode, JobStateKind,
     TriadicClient,
 };
-use triadic::graph::{generators, GraphBuilder};
+use triadic::graph::{generators, EdgeOp, GraphBuilder};
 use triadic::sched::Policy;
 
 /// Start a sparse-only coordinator + TCP server on an OS-assigned port.
@@ -204,6 +204,137 @@ fn malformed_and_mismatched_frames_get_structured_errors() {
     let resp = send(r#"{"v":1,"id":8,"verb":"status"}"#);
     assert_eq!(resp.id, 8);
     assert!(resp.result.is_ok());
+
+    let mut client = TriadicClient::connect(addr).unwrap();
+    client.shutdown().unwrap();
+    server_thread.join().unwrap();
+}
+
+#[test]
+fn stream_session_over_tcp_tracks_the_oracle() {
+    let (addr, coord, server_thread) = start_server();
+    let mut client = TriadicClient::connect(addr).unwrap();
+
+    // open over an inline source, seeding with the merged engine
+    let seed_arcs = vec![(0u32, 1u32), (1, 0), (1, 2), (4, 5)];
+    let opened = client
+        .stream_open(&CensusRequest::inline(6, seed_arcs.clone()).engine("merged"))
+        .unwrap();
+    assert_eq!(opened.nodes, 6);
+    assert_eq!(opened.arcs, 4);
+    assert_eq!(opened.engine, "merged");
+
+    // oracle mirror of the session, mutated with the same ops
+    let mut arcs = seed_arcs.clone();
+    let ops = vec![
+        EdgeOp::Insert(2, 3),
+        EdgeOp::Insert(3, 1),
+        EdgeOp::Delete(4, 5),
+        EdgeOp::Insert(0, 1), // duplicate -> no_op
+        EdgeOp::Insert(5, 5), // self-loop -> rejected
+        EdgeOp::Insert(0, 9), // out of range -> rejected
+    ];
+    arcs.push((2, 3));
+    arcs.push((3, 1));
+    arcs.retain(|&a| a != (4, 5));
+
+    let report = client.stream_apply(opened.stream, &ops).unwrap();
+    assert_eq!(report.applied, 3);
+    assert_eq!(report.no_ops, 1);
+    assert_eq!(report.rejected, 2);
+    assert_eq!(report.arcs, 5);
+
+    let want = merged::census(&GraphBuilder::new(6).arcs(&arcs).build());
+    let snapshot = client.stream_query(opened.stream).unwrap();
+    assert_eq!(snapshot.census, want);
+    assert_eq!(snapshot.arcs, 5);
+    assert!(snapshot.edits > 0);
+
+    // compaction preserves the census and resets the overlay
+    client.stream_compact(opened.stream).unwrap();
+    let compacted = client.stream_query(opened.stream).unwrap();
+    assert_eq!(compacted.census, want);
+    assert_eq!(compacted.edits, 0);
+    assert_eq!(compacted.compactions, 1);
+
+    // sessions are shared across connections, like jobs
+    let mut second = TriadicClient::connect(addr).unwrap();
+    let more = vec![EdgeOp::Insert(3, 4), EdgeOp::Insert(4, 3)];
+    second.stream_apply(opened.stream, &more).unwrap();
+    arcs.push((3, 4));
+    arcs.push((4, 3));
+    let want = merged::census(&GraphBuilder::new(6).arcs(&arcs).build());
+    assert_eq!(client.stream_query(opened.stream).unwrap().census, want);
+
+    // census jobs still run while a stream is open
+    let resp = client
+        .census(&CensusRequest::inline(6, arcs.clone()).engine("merged"))
+        .unwrap();
+    assert_eq!(resp.census, want);
+
+    // the stream metrics made it into the registry
+    let metrics = client.metrics_text().unwrap();
+    assert!(metrics.contains("stream_sessions_total 1"), "{metrics}");
+    assert!(metrics.contains("stream_ops_applied_total"), "{metrics}");
+    assert_eq!(coord.metrics().gauge("stream_sessions_open"), 1);
+
+    // close; double-close and unknown sessions are structured errors
+    client.stream_close(opened.stream).unwrap();
+    assert_eq!(coord.metrics().gauge("stream_sessions_open"), 0);
+    let err = client.stream_close(opened.stream).unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownStream, "double close");
+    let err = client.stream_apply(opened.stream, &more).unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownStream);
+    let err = client.stream_query(9_999).unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownStream);
+    let err = client.stream_compact(9_999).unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownStream);
+
+    // structured intake errors: bad source / unknown seed engine
+    let err = client
+        .stream_open(&CensusRequest::path("/nonexistent/never.csr"))
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::GraphLoad);
+    let err = client
+        .stream_open(&CensusRequest::generator("patents", 100).engine("quantum"))
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::UnknownEngine);
+
+    client.shutdown().unwrap();
+    server_thread.join().unwrap();
+}
+
+#[test]
+fn stream_frames_without_targets_are_bad_requests() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let (addr, _coord, server_thread) = start_server();
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut send = |line: &str| {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        stream.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        ResponseFrame::decode(reply.trim_end()).unwrap()
+    };
+
+    // stream_open without a request body
+    let resp = send(r#"{"v":1,"id":1,"verb":"stream_open"}"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
+    // stream_apply without a stream id
+    let resp = send(r#"{"v":1,"id":2,"verb":"stream_apply","ops":[["+",0,1]]}"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
+    // stream_apply with malformed ops fails frame decode as bad_request
+    let resp = send(r#"{"v":1,"id":3,"verb":"stream_apply","stream":1,"ops":[["*",0,1]]}"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
+    // stream_close without a stream id
+    let resp = send(r#"{"v":1,"id":4,"verb":"stream_close"}"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::BadRequest);
+    // stream_apply against a never-opened session
+    let resp = send(r#"{"v":1,"id":5,"verb":"stream_apply","stream":42,"ops":[["+",0,1]]}"#);
+    assert_eq!(resp.result.unwrap_err().code, ErrorCode::UnknownStream);
 
     let mut client = TriadicClient::connect(addr).unwrap();
     client.shutdown().unwrap();

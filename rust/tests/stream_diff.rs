@@ -1,0 +1,229 @@
+//! Differential / property harness for the streaming census: seeded
+//! random edge streams — interleaved inserts and deletes, duplicates,
+//! self-loops, out-of-range ids — applied to `StreamingCensus`, with
+//! the live census asserted equal to a *fresh full recompute by the
+//! merged oracle* after every batch, including across `compact()`.
+//!
+//! The oracle is deliberately primitive: a `HashSet` of directed arcs
+//! mutated by the same rules, rebuilt into a CSR and recensused from
+//! scratch each time. Any divergence in the incremental bookkeeping —
+//! a missed reclassification, a stale overlay entry, a compaction that
+//! drops an edit — shows up as a census mismatch on a reproducible
+//! seed.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use triadic::census::{merged, Census, StreamingCensus};
+use triadic::graph::{generators, CsrGraph, EdgeOp, GraphBuilder};
+use triadic::rng::Rng;
+use triadic::sched::Executor;
+
+/// The full-recompute oracle: a plain directed-arc set (ordered, so
+/// live-arc sampling is reproducible from the seed alone).
+struct OracleGraph {
+    n: usize,
+    arcs: BTreeSet<(u32, u32)>,
+}
+
+impl OracleGraph {
+    fn from_graph(g: &CsrGraph) -> OracleGraph {
+        OracleGraph {
+            n: g.node_count(),
+            arcs: g.arcs().collect(),
+        }
+    }
+
+    /// Mirror the streaming semantics: self-loops and out-of-range ids
+    /// are rejected, duplicates are no-ops.
+    fn apply(&mut self, op: EdgeOp) {
+        let (u, v) = op.endpoints();
+        if u == v || u as usize >= self.n || v as usize >= self.n {
+            return;
+        }
+        if op.is_insert() {
+            self.arcs.insert((u, v));
+        } else {
+            self.arcs.remove(&(u, v));
+        }
+    }
+
+    fn to_csr(&self) -> CsrGraph {
+        let mut b = GraphBuilder::new(self.n);
+        b.extend(self.arcs.iter().copied());
+        b.build()
+    }
+
+    fn census(&self) -> Census {
+        merged::census(&self.to_csr())
+    }
+}
+
+/// Draw one op: mostly random pairs (which produces duplicates and
+/// no-op deletes naturally at this density), spiced with guaranteed
+/// duplicates of live arcs, deletes of live arcs, self-loops and
+/// out-of-range ids.
+fn random_op(rng: &mut Rng, n: u32, oracle: &OracleGraph) -> EdgeOp {
+    let roll = rng.next_f64();
+    if roll < 0.05 {
+        // self-loop (must be rejected without touching anything)
+        let u = rng.node(n);
+        return EdgeOp::Insert(u, u);
+    }
+    if roll < 0.08 {
+        // out-of-range endpoint (also rejected)
+        return EdgeOp::Insert(rng.node(n), n + rng.node(4));
+    }
+    if roll < 0.28 && !oracle.arcs.is_empty() {
+        // target a live arc: half duplicate re-inserts, half deletes
+        let pick = rng.below(oracle.arcs.len() as u64) as usize;
+        let &(u, v) = oracle.arcs.iter().nth(pick).unwrap();
+        return if rng.chance(0.5) {
+            EdgeOp::Insert(u, v)
+        } else {
+            EdgeOp::Delete(u, v)
+        };
+    }
+    let (u, v) = (rng.node(n), rng.node(n));
+    if rng.chance(0.35) {
+        EdgeOp::Delete(u, v)
+    } else {
+        EdgeOp::Insert(u, v)
+    }
+}
+
+/// Run one differential session; returns the number of verified
+/// batches. Every batch is checked against the oracle recompute, and
+/// the overlay is compacted every `compact_every` batches (checked
+/// again immediately after).
+fn run_session(
+    seed: u64,
+    base: CsrGraph,
+    batches: usize,
+    batch_len: usize,
+    exec: &Executor,
+    seats: usize,
+    compact_every: usize,
+) -> usize {
+    let n = base.node_count() as u32;
+    let mut oracle = OracleGraph::from_graph(&base);
+    let mut sc = StreamingCensus::new(Arc::new(base));
+    let mut rng = Rng::new(seed);
+    for b in 0..batches {
+        let ops: Vec<EdgeOp> = (0..batch_len)
+            .map(|_| random_op(&mut rng, n, &oracle))
+            .collect();
+        for &op in &ops {
+            oracle.apply(op);
+        }
+        if seats <= 1 {
+            for &op in &ops {
+                sc.apply(op);
+            }
+        } else {
+            sc.apply_batch(&ops, exec, seats);
+        }
+        assert_eq!(
+            sc.census(),
+            oracle.census(),
+            "seed {seed}: live census != oracle recompute after batch {b}"
+        );
+        if compact_every > 0 && (b + 1) % compact_every == 0 {
+            sc.compact();
+            assert_eq!(
+                sc.census(),
+                oracle.census(),
+                "seed {seed}: census changed across compact() at batch {b}"
+            );
+            assert!(!sc.overlay().is_dirty());
+            // the rebuilt base is structurally the oracle graph
+            assert_eq!(sc.overlay().base().as_ref(), &oracle.to_csr());
+        }
+    }
+    // end-of-session: effective graph == oracle graph, arc for arc
+    assert_eq!(sc.overlay().compact(), oracle.to_csr(), "seed {seed}");
+    batches
+}
+
+#[test]
+fn randomized_streams_match_the_full_recompute_oracle() {
+    // the acceptance bar: >= 200 verified randomized batches across
+    // inserts, deletes, duplicates, rejects and periodic compactions
+    let exec = Executor::with_workers(3);
+    let mut verified = 0;
+    for seed in 0..4u64 {
+        let base = generators::erdos_renyi(36, 70, seed);
+        // alternate serial and batched-parallel application paths
+        let seats = if seed % 2 == 0 { 1 } else { 4 };
+        verified += run_session(seed, base, 40, 12, &exec, seats, 13);
+    }
+    // denser graph, bigger batches (long node-disjoint rounds exercise
+    // the executor fan-out), starting from an empty base
+    for seed in [7u64, 8] {
+        verified += run_session(seed, CsrGraph::empty(120), 25, 80, &exec, 4, 9);
+    }
+    assert!(verified >= 200, "only {verified} batches verified");
+}
+
+#[test]
+fn streams_over_a_memory_mapped_base() {
+    // the overlay must layer over zero-copy mapped storage identically
+    let g = generators::power_law(300, 2.2, 6.0, 31);
+    let path = std::env::temp_dir().join("triadic_stream_diff_mmap.csr");
+    triadic::graph::io::write_binary_v2_file(&g, &path).unwrap();
+    let mapped = triadic::graph::io::load_mmap_file(&path).unwrap();
+    assert!(mapped.is_mapped());
+
+    let exec = Executor::with_workers(2);
+    run_session(42, mapped, 20, 10, &exec, 3, 7);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn rejected_and_duplicate_ops_never_move_the_census() {
+    let base = generators::erdos_renyi(20, 40, 5);
+    let want = merged::census(&base);
+    let arcs: Vec<(u32, u32)> = base.arcs().collect();
+    let mut sc = StreamingCensus::new(Arc::new(base));
+    let mut ops: Vec<EdgeOp> = vec![
+        EdgeOp::Insert(3, 3),   // self-loop
+        EdgeOp::Insert(0, 99),  // out of range
+        EdgeOp::Delete(99, 0),  // out of range
+        EdgeOp::Delete(19, 18), // possibly-absent arc
+    ];
+    ops.extend(arcs.iter().map(|&(u, v)| EdgeOp::Insert(u, v))); // duplicates
+    let exec = Executor::with_workers(2);
+    sc.apply_batch(&ops, &exec, 2);
+    let s = sc.stats();
+    assert_eq!(s.rejected, 3);
+    assert_eq!(s.applied + s.no_ops + s.rejected, ops.len() as u64);
+    // duplicates of existing arcs are all no-ops; census untouched
+    // unless the one possibly-absent delete really deleted something
+    if s.applied == 0 {
+        assert_eq!(sc.census(), want);
+    } else {
+        assert_eq!(sc.census(), merged::census(&sc.overlay().compact()));
+    }
+}
+
+#[test]
+fn insert_delete_churn_returns_exactly_to_the_seed_census() {
+    let base = generators::power_law(150, 2.3, 5.0, 11);
+    let want = merged::census(&base);
+    let extra: Vec<(u32, u32)> = (0..60).map(|k| (k as u32, (k as u32 + 75) % 150)).collect();
+    let mut sc = StreamingCensus::new(Arc::new(base.clone()));
+    let exec = Executor::with_workers(3);
+    // add arcs that are genuinely new, then remove them again
+    let novel: Vec<(u32, u32)> = extra
+        .iter()
+        .copied()
+        .filter(|&(u, v)| u != v && !base.has_arc(u, v))
+        .collect();
+    let inserts: Vec<EdgeOp> = novel.iter().map(|&(u, v)| EdgeOp::Insert(u, v)).collect();
+    let deletes: Vec<EdgeOp> = novel.iter().map(|&(u, v)| EdgeOp::Delete(u, v)).collect();
+    sc.apply_batch(&inserts, &exec, 3);
+    assert_ne!(sc.census(), want, "the churn really changed the census");
+    sc.apply_batch(&deletes, &exec, 3);
+    assert_eq!(sc.census(), want);
+    assert_eq!(sc.overlay().edit_count(), 0, "overlay fully reverted");
+}
