@@ -1,0 +1,98 @@
+//! Natural vs degree-descending vertex ordering on a skewed graph.
+//!
+//! The degree-descending relabel + direction-split preprocessing exists
+//! because power-law degree skew dominates traversal cost and load
+//! balance. This bench pins the trade on a 100k-node power-law graph:
+//! the `merged` (serial) and `parallel` engines run over the natural
+//! CSR and over the degree-ordered direction-split form, the censuses
+//! are asserted byte-identical (ordering must never change results),
+//! and the speedup ratios — plus the one-off preprocessing cost — are
+//! recorded in `BENCH_ordering.json` for the CI bench trajectory.
+//!
+//! No pass/fail gate: the win is machine- and skew-dependent; the
+//! artifact records the trajectory instead.
+
+use triadic::bench::Bench;
+use triadic::census::{census_parallel_on, merged, ParallelConfig};
+use triadic::graph::generators::power_law;
+use triadic::graph::relabel;
+use triadic::sched::Executor;
+
+const NODES: usize = 100_000;
+
+fn main() {
+    let mut b = Bench::from_env(10);
+    let threads = 4;
+    let exec = Executor::with_workers(threads);
+
+    eprintln!("# generating {NODES}-node power-law graph...");
+    let g = power_law(NODES, 2.2, 8.0, 11);
+    println!("# graph: n={} arcs={} dyads={}", g.node_count(), g.arc_count(), g.dyad_count());
+
+    let t_prep = std::time::Instant::now();
+    let (_relabeling, split) = relabel::degree_split(&g, threads);
+    let prep_seconds = t_prep.elapsed().as_secs_f64();
+    println!("# degree relabel + direction split: {prep_seconds:.3}s (one-off)");
+
+    // ordering must be census-invariant before any timing means a thing
+    let natural_census = merged::census(&g);
+    let ordered_census = merged::census(&split);
+    assert_eq!(
+        natural_census, ordered_census,
+        "degree-ordered census diverged from natural order"
+    );
+
+    let merged_natural = b.run("merged_natural", || merged::census(&g)).mean_s;
+    let merged_degree = b.run("merged_degree", || merged::census(&split)).mean_s;
+
+    let cfg = ParallelConfig {
+        threads,
+        ..ParallelConfig::default()
+    };
+    let parallel_natural = b
+        .run(&format!("parallel_natural_t{threads}"), || {
+            census_parallel_on(&g, &cfg, &exec)
+        })
+        .mean_s;
+    let parallel_degree = b
+        .run(&format!("parallel_degree_t{threads}"), || {
+            census_parallel_on(&split, &cfg, &exec)
+        })
+        .mean_s;
+
+    let merged_speedup = merged_natural / merged_degree.max(1e-12);
+    let parallel_speedup = parallel_natural / parallel_degree.max(1e-12);
+    println!(
+        "# merged: natural {:.1} ms vs degree {:.1} ms -> {merged_speedup:.2}x",
+        merged_natural * 1e3,
+        merged_degree * 1e3
+    );
+    println!(
+        "# parallel(t{threads}): natural {:.1} ms vs degree {:.1} ms -> {parallel_speedup:.2}x",
+        parallel_natural * 1e3,
+        parallel_degree * 1e3
+    );
+
+    let json = format!(
+        concat!(
+            "{{\"schema_version\":1,\"bench\":\"ordering\",\"nodes\":{},\"arcs\":{},",
+            "\"threads\":{},\"prep_seconds\":{:.6},",
+            "\"merged_natural_seconds\":{:.6},\"merged_degree_seconds\":{:.6},",
+            "\"parallel_natural_seconds\":{:.6},\"parallel_degree_seconds\":{:.6},",
+            "\"merged_speedup\":{:.4},\"parallel_speedup\":{:.4},",
+            "\"census_identical\":true}}\n"
+        ),
+        g.node_count(),
+        g.arc_count(),
+        threads,
+        prep_seconds,
+        merged_natural,
+        merged_degree,
+        parallel_natural,
+        parallel_degree,
+        merged_speedup,
+        parallel_speedup,
+    );
+    std::fs::write("BENCH_ordering.json", &json).expect("writing BENCH_ordering.json");
+    println!("# wrote BENCH_ordering.json");
+}

@@ -15,19 +15,18 @@
 
 use super::isotricode::{tricode_of, TRICODE_TABLE};
 use super::types::{Census, TriadType};
-use crate::graph::csr::DyadType;
-use crate::graph::CsrGraph;
+use crate::graph::GraphView;
 
-/// Compute the full census with the Fig 5 algorithm.
-pub fn census(g: &CsrGraph) -> Census {
+/// Compute the full census with the Fig 5 algorithm, over any
+/// [`GraphView`].
+pub fn census<G: GraphView>(g: &G) -> Census {
     let n = g.node_count();
     let mut c = Census::zero();
 
     // step 2: for each u ∈ V
     for u in 0..n as u32 {
         // step 2.1: for each v ∈ N(u) with u < v
-        for e in g.row(u) {
-            let v = e.nbr();
+        for (v, uv_bits) in g.neighbors(u) {
             if u >= v {
                 continue;
             }
@@ -35,7 +34,7 @@ pub fn census(g: &CsrGraph) -> Census {
             let s = union_of_neighbors(g, u, v);
 
             // step 2.1.2: dyadic triad type for the (u,v) dyad
-            let tritype = if g.dyad(u, v) == DyadType::Mutual {
+            let tritype = if uv_bits == 0b11 {
                 TriadType::T102
             } else {
                 TriadType::T012
@@ -59,42 +58,11 @@ pub fn census(g: &CsrGraph) -> Census {
     c
 }
 
-/// `N(u) ∪ N(v) \ {u, v}` via a linear merge of the two sorted rows.
-fn union_of_neighbors(g: &CsrGraph, u: u32, v: u32) -> Vec<u32> {
-    let ru = g.row(u);
-    let rv = g.row(v);
-    let mut out = Vec::with_capacity(ru.len() + rv.len());
-    let (mut i, mut j) = (0, 0);
-    while i < ru.len() || j < rv.len() {
-        let next = match (ru.get(i), rv.get(j)) {
-            (Some(a), Some(b)) => {
-                let (an, bn) = (a.nbr(), b.nbr());
-                if an < bn {
-                    i += 1;
-                    an
-                } else if bn < an {
-                    j += 1;
-                    bn
-                } else {
-                    i += 1;
-                    j += 1;
-                    an
-                }
-            }
-            (Some(a), None) => {
-                i += 1;
-                a.nbr()
-            }
-            (None, Some(b)) => {
-                j += 1;
-                b.nbr()
-            }
-            (None, None) => unreachable!(),
-        };
-        if next != u && next != v {
-            out.push(next);
-        }
-    }
+/// `N(u) ∪ N(v) \ {u, v}` via the shared merged walk of the two
+/// ascending neighborhoods (the pseudocode's explicit `S`).
+fn union_of_neighbors<G: GraphView>(g: &G, u: u32, v: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(g.degree(u) + g.degree(v));
+    super::merged::merged_union_walk(g, u, v, |w, _, _, _| out.push(w));
     out
 }
 
@@ -104,6 +72,7 @@ mod tests {
     use crate::census::naive;
     use crate::graph::builder::from_arcs;
     use crate::graph::generators::{self, named};
+    use crate::graph::CsrGraph;
 
     #[test]
     fn union_excludes_endpoints_and_is_sorted() {

@@ -10,6 +10,13 @@
 //! engines simply ignore it. Results come back as a [`ParallelRun`]
 //! (census + per-seat telemetry) regardless of engine, so callers get
 //! uniform per-job stats.
+//!
+//! The trait (and the registry) is parameterized over the
+//! [`GraphView`] it censuses — `CsrGraph` by default for the serving
+//! path, but the same five engines instantiate over the delta overlay
+//! or the direction-split form: `EngineRegistry::<DirSplit>::default()`
+//! is the degree-ordered sparse path, and the golden tests run every
+//! engine over every view.
 
 use std::time::Instant;
 
@@ -18,17 +25,17 @@ use super::parallel::{
 };
 use super::types::Census;
 use super::{batagelj_mrvar, merged, moody, naive};
-use crate::graph::csr::CsrGraph;
+use crate::graph::{CsrGraph, GraphView};
 use crate::sched::{CancelToken, Executor, ThreadPoolStats};
 
-/// A named triad-census implementation.
-pub trait CensusEngine: Send + Sync {
+/// A named triad-census implementation over view type `G`.
+pub trait CensusEngine<G: GraphView = CsrGraph>: Send + Sync {
     /// Registry key and display name.
     fn name(&self) -> &str;
 
     /// Compute the triad census of `g`, scheduling any parallel work on
     /// `exec`.
-    fn census(&self, g: &CsrGraph, exec: &Executor) -> ParallelRun;
+    fn census(&self, g: &G, exec: &Executor) -> ParallelRun;
 
     /// [`CensusEngine::census`] with a cooperative cancellation hook:
     /// returns `None` when the job was cancelled before completing.
@@ -37,7 +44,7 @@ pub trait CensusEngine: Send + Sync {
     /// between scheduler chunks.
     fn census_cancellable(
         &self,
-        g: &CsrGraph,
+        g: &G,
         exec: &Executor,
         cancel: &CancelToken,
     ) -> Option<ParallelRun> {
@@ -68,11 +75,11 @@ fn serial_run<F: FnOnce() -> Census>(items: usize, f: F) -> ParallelRun {
 /// The `O(n^3)` all-triples oracle (tiny graphs only).
 pub struct NaiveEngine;
 
-impl CensusEngine for NaiveEngine {
+impl<G: GraphView> CensusEngine<G> for NaiveEngine {
     fn name(&self) -> &str {
         "naive"
     }
-    fn census(&self, g: &CsrGraph, _exec: &Executor) -> ParallelRun {
+    fn census(&self, g: &G, _exec: &Executor) -> ParallelRun {
         serial_run(g.entry_count(), || naive::census(g))
     }
 }
@@ -80,11 +87,11 @@ impl CensusEngine for NaiveEngine {
 /// The literal Batagelj–Mrvar subquadratic census (paper Fig 5).
 pub struct BatageljMrvarEngine;
 
-impl CensusEngine for BatageljMrvarEngine {
+impl<G: GraphView> CensusEngine<G> for BatageljMrvarEngine {
     fn name(&self) -> &str {
         "batagelj-mrvar"
     }
-    fn census(&self, g: &CsrGraph, _exec: &Executor) -> ParallelRun {
+    fn census(&self, g: &G, _exec: &Executor) -> ParallelRun {
         serial_run(g.entry_count(), || batagelj_mrvar::census(g))
     }
 }
@@ -92,11 +99,11 @@ impl CensusEngine for BatageljMrvarEngine {
 /// The optimized serial merged-traversal census (paper Fig 8).
 pub struct MergedEngine;
 
-impl CensusEngine for MergedEngine {
+impl<G: GraphView> CensusEngine<G> for MergedEngine {
     fn name(&self) -> &str {
         "merged"
     }
-    fn census(&self, g: &CsrGraph, _exec: &Executor) -> ParallelRun {
+    fn census(&self, g: &G, _exec: &Executor) -> ParallelRun {
         serial_run(g.entry_count(), || merged::census(g))
     }
 }
@@ -104,11 +111,11 @@ impl CensusEngine for MergedEngine {
 /// Moody's dense matrix-method census (`O(n^2)` memory — small graphs).
 pub struct MoodyEngine;
 
-impl CensusEngine for MoodyEngine {
+impl<G: GraphView> CensusEngine<G> for MoodyEngine {
     fn name(&self) -> &str {
         "moody"
     }
-    fn census(&self, g: &CsrGraph, _exec: &Executor) -> ParallelRun {
+    fn census(&self, g: &G, _exec: &Executor) -> ParallelRun {
         serial_run(g.entry_count(), || moody::census(g))
     }
 }
@@ -118,16 +125,16 @@ pub struct ParallelEngine {
     pub cfg: ParallelConfig,
 }
 
-impl CensusEngine for ParallelEngine {
+impl<G: GraphView> CensusEngine<G> for ParallelEngine {
     fn name(&self) -> &str {
         "parallel"
     }
-    fn census(&self, g: &CsrGraph, exec: &Executor) -> ParallelRun {
+    fn census(&self, g: &G, exec: &Executor) -> ParallelRun {
         census_parallel_on(g, &self.cfg, exec)
     }
     fn census_cancellable(
         &self,
-        g: &CsrGraph,
+        g: &G,
         exec: &Executor,
         cancel: &CancelToken,
     ) -> Option<ParallelRun> {
@@ -135,21 +142,21 @@ impl CensusEngine for ParallelEngine {
     }
 }
 
-/// Name-indexed set of engines.
-pub struct EngineRegistry {
-    engines: Vec<Box<dyn CensusEngine>>,
+/// Name-indexed set of engines over view type `G`.
+pub struct EngineRegistry<G: GraphView = CsrGraph> {
+    engines: Vec<Box<dyn CensusEngine<G>>>,
 }
 
-impl EngineRegistry {
+impl<G: GraphView> EngineRegistry<G> {
     /// An empty registry.
-    pub fn new() -> EngineRegistry {
+    pub fn new() -> EngineRegistry<G> {
         EngineRegistry {
             engines: Vec::new(),
         }
     }
 
     /// All five built-in engines; `cfg` parameterizes the parallel one.
-    pub fn builtin(cfg: ParallelConfig) -> EngineRegistry {
+    pub fn builtin(cfg: ParallelConfig) -> EngineRegistry<G> {
         let mut r = EngineRegistry::new();
         r.register(Box::new(NaiveEngine));
         r.register(Box::new(BatageljMrvarEngine));
@@ -160,14 +167,14 @@ impl EngineRegistry {
     }
 
     /// Add an engine, replacing any existing engine of the same name.
-    pub fn register(&mut self, engine: Box<dyn CensusEngine>) {
+    pub fn register(&mut self, engine: Box<dyn CensusEngine<G>>) {
         self.engines.retain(|e| e.name() != engine.name());
         self.engines.push(engine);
     }
 
     /// Look up an engine by name (`bm` / `batagelj_mrvar` alias the
     /// Batagelj–Mrvar engine).
-    pub fn get(&self, name: &str) -> Option<&dyn CensusEngine> {
+    pub fn get(&self, name: &str) -> Option<&dyn CensusEngine<G>> {
         let canonical = match name {
             "bm" | "batagelj_mrvar" => "batagelj-mrvar",
             other => other,
@@ -186,7 +193,7 @@ impl EngineRegistry {
     /// [`EngineRegistry::get`] with a caller-ready error message listing
     /// the available engines — the single source of the "unknown engine"
     /// wording used by the coordinator and the CLI.
-    pub fn get_or_err(&self, name: &str) -> Result<&dyn CensusEngine, String> {
+    pub fn get_or_err(&self, name: &str) -> Result<&dyn CensusEngine<G>, String> {
         self.get(name).ok_or_else(|| {
             format!(
                 "unknown census engine {name:?} (available: {})",
@@ -196,7 +203,7 @@ impl EngineRegistry {
     }
 }
 
-impl Default for EngineRegistry {
+impl<G: GraphView> Default for EngineRegistry<G> {
     fn default() -> Self {
         EngineRegistry::builtin(ParallelConfig::default())
     }
@@ -206,10 +213,14 @@ impl Default for EngineRegistry {
 mod tests {
     use super::*;
     use crate::graph::generators;
+    use crate::graph::relabel::DirSplit;
+    use crate::graph::DeltaOverlay;
 
     #[test]
     fn all_five_builtin_engines_are_registered() {
-        let r = EngineRegistry::default();
+        // bare `EngineRegistry` in type position picks up the CsrGraph
+        // default parameter
+        let r: EngineRegistry = EngineRegistry::default();
         assert_eq!(
             r.names(),
             vec!["naive", "batagelj-mrvar", "merged", "parallel", "moody"]
@@ -237,6 +248,30 @@ mod tests {
     }
 
     #[test]
+    fn every_engine_instantiates_over_every_view() {
+        // the acceptance bar of the GraphView refactor: one registry per
+        // representation, identical censuses from all of them
+        let exec = Executor::with_workers(2);
+        let g = generators::power_law(90, 2.2, 5.0, 17);
+        let want = naive::census(&g);
+
+        let overlay = DeltaOverlay::new(std::sync::Arc::new(g.clone()));
+        let split = DirSplit::build(&g);
+
+        let csr_reg = EngineRegistry::<crate::graph::CsrGraph>::default();
+        let overlay_reg = EngineRegistry::<DeltaOverlay>::default();
+        let split_reg = EngineRegistry::<DirSplit>::default();
+        for name in csr_reg.names() {
+            let a = csr_reg.get(name).unwrap().census(&g, &exec).census;
+            let b = overlay_reg.get(name).unwrap().census(&overlay, &exec).census;
+            let c = split_reg.get(name).unwrap().census(&split, &exec).census;
+            assert_eq!(a, want, "{name} csr");
+            assert_eq!(b, want, "{name} overlay");
+            assert_eq!(c, want, "{name} dir-split");
+        }
+    }
+
+    #[test]
     fn cancellation_discards_the_run() {
         let exec = Executor::with_workers(2);
         let r = EngineRegistry::default();
@@ -259,7 +294,7 @@ mod tests {
 
     #[test]
     fn register_replaces_by_name() {
-        let mut r = EngineRegistry::default();
+        let mut r = EngineRegistry::<crate::graph::CsrGraph>::default();
         let before = r.names().len();
         r.register(Box::new(MergedEngine));
         assert_eq!(r.names().len(), before, "same-name registration replaces");

@@ -18,7 +18,7 @@
 //! multiplicities (1, 6, 3, 3, 3, 6, 6, 6, 6, 2, 3, 3, 3, 6, 6, 1).
 
 use super::types::TriadType;
-use crate::graph::CsrGraph;
+use crate::graph::GraphView;
 
 /// Classify a 6-bit tricode into its triad isomorphism class.
 ///
@@ -152,37 +152,19 @@ pub const TRICODE_TABLE: [TriadType; 64] = {
     table
 };
 
-/// Compute the tricode of `(u, v, w)` by querying the graph (binary
-/// searches). The merged-traversal census builds tricodes directly from
-/// the packed direction bits instead; this query path serves the naive
-/// oracle and ad-hoc inspection.
+/// Compute the tricode of `(u, v, w)` by querying the view (three
+/// dyad lookups — each a pair of direction bits already laid out in
+/// tricode order). The merged-traversal census builds tricodes from
+/// in-flight neighborhood walks instead; this query path serves the
+/// naive oracle and ad-hoc inspection, over any [`GraphView`].
 #[inline]
-pub fn tricode_of(g: &CsrGraph, u: u32, v: u32, w: u32) -> u8 {
-    let mut code = 0u8;
-    if g.has_arc(u, v) {
-        code |= 1;
-    }
-    if g.has_arc(v, u) {
-        code |= 2;
-    }
-    if g.has_arc(u, w) {
-        code |= 4;
-    }
-    if g.has_arc(w, u) {
-        code |= 8;
-    }
-    if g.has_arc(v, w) {
-        code |= 16;
-    }
-    if g.has_arc(w, v) {
-        code |= 32;
-    }
-    code
+pub fn tricode_of<G: GraphView>(g: &G, u: u32, v: u32, w: u32) -> u8 {
+    tricode_from_dyads(g.dyad_bits(u, v), g.dyad_bits(u, w), g.dyad_bits(v, w))
 }
 
 /// Classify a triple directly.
 #[inline]
-pub fn triad_type_of(g: &CsrGraph, u: u32, v: u32, w: u32) -> TriadType {
+pub fn triad_type_of<G: GraphView>(g: &G, u: u32, v: u32, w: u32) -> TriadType {
     TRICODE_TABLE[tricode_of(g, u, v, w) as usize]
 }
 

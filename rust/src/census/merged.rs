@@ -1,121 +1,131 @@
 //! The paper's optimized serial census: merged two-pointer traversal
-//! (Fig 8) with *in situ* tricode construction.
+//! (Fig 8) with *in situ* tricode construction — generic over every
+//! [`GraphView`] (owned CSR, mmap CSR, delta overlay, direction-split).
 //!
 //! Improvements over the literal Batagelj–Mrvar transcription:
 //!
 //! * the union set `S` is never materialized — two pointers walk the
-//!   sorted neighbor rows of `u` and `v` in numeric order;
-//! * the `w` dyad directions are decoded from the 2 packed bits of the
-//!   row entries themselves: `w` found only in `u`'s row ⇒ the `(v,w)`
-//!   dyad is null; only in `v`'s row ⇒ `(u,w)` null; in both ⇒ both
-//!   known. No binary searches in the inner loop at all;
+//!   ascending neighbor iterators of `u` and `v` in numeric order;
+//! * the `w` dyad directions come from the iterators themselves: `w`
+//!   found only in `u`'s walk ⇒ the `(v,w)` dyad is null; only in
+//!   `v`'s ⇒ `(u,w)` null; in both ⇒ both known. No dyad lookups in
+//!   the inner loop at all;
 //! * the canonical-selection test `¬uÂw` of Fig 5 is likewise free: it
-//!   is exactly "`w` did not come from `u`'s row".
+//!   is exactly "`w` did not come from `u`'s walk".
 //!
-//! The same kernel, exposed as [`dyad_task`], is what the parallel
-//! engine schedules over the collapsed `(u,v)` iteration space.
+//! The union walk is exposed as [`merged_union_walk`] — the one merged
+//! neighborhood traversal in the crate. [`dyad_task`] (the kernel the
+//! parallel engine schedules over the collapsed `(u,v)` space) and the
+//! streaming census's per-mutation rescan are both thin closures over
+//! it, which is what deleted the bespoke overlay-scan duplication that
+//! used to live in `census/stream.rs`.
 
 use super::isotricode::{tricode_from_dyads, TRICODE_TABLE};
 use super::types::{Census, CensusSink, TriadType};
-use crate::graph::csr::{CsrGraph, Dir};
+use crate::graph::GraphView;
 
-/// Process one connected dyad `(u, v)` (`u < v`, `dir` = direction bits
-/// of the `(u,v)` entry in `u`'s row), accumulating into `c`.
+/// Walk `S = N(u) ∪ N(v) \ {u, v}` in ascending order, invoking
+/// `f(w, uw_bits, vw_bits, from_u)` for every `w` — `uw_bits` /
+/// `vw_bits` are the 2-bit dyad directions (`0` = null) and `from_u`
+/// is true iff `w` appeared in `u`'s neighborhood (the free `uÂw`
+/// test). Returns `|S|`. O(deg(u) + deg(v)).
 ///
-/// This is steps 2.1.1–2.1.4 of Fig 5 with the Fig 8 merged traversal.
-/// Generic over the sink so the parallel engine can route the increments
-/// either to a private census or to a hash-selected shared bank slot.
+/// Structured as a two-sided phase plus two straight-line drain loops
+/// (§Perf: ~15% over a peekable/Option-matching formulation — the hot
+/// loop's only branches are the ones that also advance the walk).
 #[inline]
-pub fn dyad_task<S: CensusSink>(g: &CsrGraph, u: u32, v: u32, dir: Dir, c: &mut S) {
-    debug_assert!(u < v);
-    let n = g.node_count();
-    let uv_bits = dir as u32 as u8;
-
-    // dyadic triads: third node adjacent to neither u nor v
-    let dyadic = if dir == Dir::Both {
-        TriadType::T102
-    } else {
-        TriadType::T012
-    };
-
-    let ru = g.row(u);
-    let rv = g.row(v);
-    let (mut i, mut j) = (0usize, 0usize);
-    let mut union_size = 0usize; // |S| = |N(u) ∪ N(v) \ {u,v}|
-
-    // Merged two-pointer traversal in numeric order (Fig 8), split into
-    // a two-sided phase and two straight-line drain loops (§Perf: ~15%
-    // over the Option-matching formulation — no per-step branching on
-    // slice ends inside the hot loop).
-    //
-    // Canonical-selection guard (Fig 5 step 2.1.4): count (u,v,w) iff
-    //   v < w  ∨  (u < w < v ∧ ¬uÂw)
-    // where ¬uÂw ⇔ w was not found in u's row — free in this traversal.
-    while i < ru.len() && j < rv.len() {
-        let ea = ru[i];
-        let eb = rv[j];
-        let (wa, wb) = (ea.nbr(), eb.nbr());
+pub fn merged_union_walk<G, F>(g: &G, u: u32, v: u32, mut f: F) -> usize
+where
+    G: GraphView,
+    F: FnMut(u32, u8, u8, bool),
+{
+    let mut ru = g.neighbors(u);
+    let mut rv = g.neighbors(v);
+    let mut union_size = 0usize;
+    let mut a = ru.next();
+    let mut b = rv.next();
+    while let (Some((wa, ub)), Some((wb, vb))) = (a, b) {
         let (w, uw, vw, from_u) = if wa < wb {
-            i += 1;
-            (wa, (ea.0 & 0b11) as u8, 0u8, true)
+            a = ru.next();
+            (wa, ub, 0, true)
         } else if wb < wa {
-            j += 1;
-            (wb, 0, (eb.0 & 0b11) as u8, false)
+            b = rv.next();
+            (wb, 0, vb, false)
         } else {
-            i += 1;
-            j += 1;
-            (wa, (ea.0 & 0b11) as u8, (eb.0 & 0b11) as u8, true)
+            a = ru.next();
+            b = rv.next();
+            (wa, ub, vb, true)
         };
         if w == u || w == v {
             continue;
         }
         union_size += 1;
-        if v < w || (u < w && w < v && !from_u) {
-            let code = tricode_from_dyads(uv_bits, uw, vw);
-            c.bump(TRICODE_TABLE[code as usize]);
-        }
+        f(w, uw, vw, from_u);
     }
-    // drain u's tail: w only in N(u) ⇒ (v,w) null, ¬uÂw false ⇒ count
-    // only when v < w
-    while i < ru.len() {
-        let ea = ru[i];
-        i += 1;
-        let w = ea.nbr();
+    // drain u's tail: w only in N(u) — (v,w) is null (w == u impossible
+    // in a simple graph, but the endpoint guard stays uniform)
+    while let Some((w, bits)) = a {
+        a = ru.next();
         if w == v {
             continue;
         }
         union_size += 1;
-        if v < w {
-            let code = tricode_from_dyads(uv_bits, (ea.0 & 0b11) as u8, 0);
-            c.bump(TRICODE_TABLE[code as usize]);
-        }
+        f(w, bits, 0, true);
     }
-    // drain v's tail: w only in N(v) ⇒ (u,w) null, ¬uÂw true
-    while j < rv.len() {
-        let eb = rv[j];
-        j += 1;
-        let w = eb.nbr();
+    // drain v's tail: w only in N(v) — (u,w) null
+    while let Some((w, bits)) = b {
+        b = rv.next();
         if w == u {
             continue;
         }
         union_size += 1;
-        if v < w || (u < w && w < v) {
-            let code = tricode_from_dyads(uv_bits, 0, (eb.0 & 0b11) as u8);
+        f(w, 0, bits, false);
+    }
+    union_size
+}
+
+/// Process one connected dyad `(u, v)` (`u < v`, `uv_bits` = the 2-bit
+/// direction of the dyad seen from `u`), accumulating into `c`.
+///
+/// This is steps 2.1.1–2.1.4 of Fig 5 with the Fig 8 merged traversal.
+/// Generic over the sink so the parallel engine can route increments
+/// either to a private census or to a hash-selected shared bank slot,
+/// and over the view so every representation shares one kernel.
+///
+/// Canonical-selection guard (Fig 5 step 2.1.4): count `(u,v,w)` iff
+/// `v < w ∨ (u < w < v ∧ ¬uÂw)` — each connected triad is classified
+/// exactly once, from its lowest-ordered vertex's dyads (under degree
+/// ordering that vertex is the triad's highest-degree one).
+#[inline]
+pub fn dyad_task<G: GraphView, S: CensusSink>(g: &G, u: u32, v: u32, uv_bits: u8, c: &mut S) {
+    debug_assert!(u < v);
+    debug_assert!(uv_bits != 0 && uv_bits < 4);
+    let n = g.node_count();
+
+    // dyadic triads: third node adjacent to neither u nor v
+    let dyadic = if uv_bits == 0b11 {
+        TriadType::T102
+    } else {
+        TriadType::T012
+    };
+
+    let union_size = merged_union_walk(g, u, v, |w, uw, vw, from_u| {
+        if v < w || (u < w && w < v && !from_u) {
+            let code = tricode_from_dyads(uv_bits, uw, vw);
             c.bump(TRICODE_TABLE[code as usize]);
         }
-    }
+    });
 
     c.add(dyadic, (n - union_size - 2) as u64);
 }
 
-/// Full serial census with the merged-traversal kernel.
-pub fn census(g: &CsrGraph) -> Census {
+/// Full serial census with the merged-traversal kernel, over any view.
+pub fn census<G: GraphView>(g: &G) -> Census {
     let mut c = Census::zero();
     for u in 0..g.node_count() as u32 {
-        for e in g.row(u) {
-            let v = e.nbr();
+        for (v, bits) in g.neighbors(u) {
             if u < v {
-                dyad_task(g, u, v, e.dir(), &mut c);
+                dyad_task(g, u, v, bits, &mut c);
             }
         }
     }
@@ -128,6 +138,9 @@ mod tests {
     use super::*;
     use crate::census::{batagelj_mrvar, naive};
     use crate::graph::generators::{self, named};
+    use crate::graph::relabel::DirSplit;
+    use crate::graph::{CsrGraph, DeltaOverlay};
+    use std::sync::Arc;
 
     #[test]
     fn matches_naive_on_fixtures() {
@@ -181,5 +194,34 @@ mod tests {
         let c = census(&g);
         assert_eq!(c[TriadType::T300], 20);
         assert_eq!(c.total(), Census::expected_total(6));
+    }
+
+    #[test]
+    fn union_walk_reports_bits_and_provenance() {
+        // 0-1 dyad; 2 in N(0) only, 3 in N(1) only, 4 in both
+        let g = crate::graph::builder::from_arcs(
+            5,
+            &[(0, 1), (0, 2), (3, 1), (0, 4), (4, 0), (1, 4)],
+        );
+        let mut seen = Vec::new();
+        let n = merged_union_walk(&g, 0, 1, |w, uw, vw, from_u| {
+            seen.push((w, uw, vw, from_u));
+        });
+        assert_eq!(n, 3);
+        let want: Vec<(u32, u8, u8, bool)> =
+            vec![(2, 0b01, 0, true), (3, 0, 0b10, false), (4, 0b11, 0b01, true)];
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn one_kernel_every_view() {
+        // the same generic census over CSR, overlay and direction-split
+        // views of one graph must agree bit for bit
+        let g = generators::power_law(150, 2.2, 6.0, 31);
+        let want = census(&g);
+        let overlay = DeltaOverlay::new(Arc::new(g.clone()));
+        assert_eq!(census(&overlay), want);
+        let split = DirSplit::build(&g);
+        assert_eq!(census(&split), want);
     }
 }

@@ -21,9 +21,16 @@
 //! * [`moody::census`] — Moody's dense matrix-method census, the
 //!   baseline the dense (JAX/Pallas AOT) path mirrors.
 //!
-//! All five are reachable behind the [`engine::CensusEngine`] trait via
-//! [`engine::EngineRegistry`] — the by-name selection surface of the
-//! coordinator and the `--engine` CLI flag.
+//! All five are generic over [`crate::graph::GraphView`] — owned CSR,
+//! mmap-backed CSR, the streaming
+//! [`DeltaOverlay`](crate::graph::overlay::DeltaOverlay) and the
+//! direction-split form census identically through one monomorphized
+//! kernel per engine — and reachable behind the
+//! [`engine::CensusEngine`] trait via [`engine::EngineRegistry`], the
+//! by-name selection surface of the coordinator and the `--engine` CLI
+//! flag. [`crate::graph::relabel`] supplies the census-invariant
+//! degree-descending reordering the `--order degree` /
+//! `ordering:"degree"` knobs apply before the sparse engines run.
 //!
 //! For graphs that change between requests, [`stream::StreamingCensus`]
 //! maintains a live census over a

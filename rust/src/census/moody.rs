@@ -22,7 +22,7 @@
 //! [`super::parallel`]).
 
 use super::types::{Census, TriadType};
-use crate::graph::CsrGraph;
+use crate::graph::GraphView;
 
 /// Dense dyad-indicator matrices of a digraph.
 #[derive(Debug, Clone)]
@@ -37,8 +37,8 @@ pub struct DyadMatrices {
 }
 
 impl DyadMatrices {
-    /// Decompose a graph's adjacency into `M`, `As`, `N`.
-    pub fn new(g: &CsrGraph) -> DyadMatrices {
+    /// Decompose any view's adjacency into `M`, `As`, `N`.
+    pub fn new<G: GraphView>(g: &G) -> DyadMatrices {
         let n = g.node_count();
         let mut m = vec![0f64; n * n];
         let mut a = vec![0f64; n * n];
@@ -51,14 +51,14 @@ impl DyadMatrices {
             }
         }
         for u in 0..n as u32 {
-            for e in g.row(u) {
-                let v = e.nbr() as usize;
+            for (v, bits) in g.neighbors(u) {
+                let v = v as usize;
                 let u = u as usize;
                 nul[u * n + v] = 0.0;
-                match e.dir() {
-                    crate::graph::Dir::Both => m[u * n + v] = 1.0,
-                    crate::graph::Dir::Out => a[u * n + v] = 1.0,
-                    crate::graph::Dir::In => {} // recorded from the other side
+                match bits {
+                    0b11 => m[u * n + v] = 1.0,
+                    0b01 => a[u * n + v] = 1.0,
+                    _ => {} // in-arc: recorded from the other side
                 }
             }
         }
@@ -146,8 +146,8 @@ pub fn census_from_matrices(d: &DyadMatrices) -> Census {
     c
 }
 
-/// Full dense census of a graph.
-pub fn census(g: &CsrGraph) -> Census {
+/// Full dense census of any view.
+pub fn census<G: GraphView>(g: &G) -> Census {
     census_from_matrices(&DyadMatrices::new(g))
 }
 

@@ -5,10 +5,11 @@
 
 use super::isotricode::{tricode_of, TRICODE_TABLE};
 use super::types::Census;
-use crate::graph::CsrGraph;
+use crate::graph::GraphView;
 
-/// Compute the full 16-class census by triple enumeration.
-pub fn census(g: &CsrGraph) -> Census {
+/// Compute the full 16-class census by triple enumeration, over any
+/// [`GraphView`].
+pub fn census<G: GraphView>(g: &G) -> Census {
     let n = g.node_count() as u32;
     let mut c = Census::zero();
     for u in 0..n {

@@ -22,7 +22,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::merged::dyad_task;
 use super::types::{Census, CensusSink, TriadType};
-use crate::graph::csr::CsrGraph;
+use crate::graph::GraphView;
 use crate::rng::splitmix64;
 use crate::sched::{run_partitioned_scoped, CancelToken, Executor, Policy, ThreadPoolStats};
 
@@ -180,14 +180,18 @@ impl LoopRunner<'_> {
     }
 }
 
-fn census_with(
-    g: &CsrGraph,
+fn census_with<G: GraphView>(
+    g: &G,
     cfg: &ParallelConfig,
     runner: LoopRunner<'_>,
     cancel: &CancelToken,
 ) -> Option<ParallelRun> {
     let len = g.entry_count();
     let n = g.node_count();
+    // fetched once per census: borrowed straight from CSR-shaped views,
+    // an O(n) prefix sum over effective degrees for the overlay
+    let offsets = g.flat_offsets();
+    let offsets: &[usize] = &offsets;
 
     let (census, stats, cancelled) = match cfg.accumulation {
         Accumulation::Bank { slots } => {
@@ -199,11 +203,11 @@ fn census_with(
                 cancel,
                 |_tid| (),
                 |_acc, _tid, s, e| {
-                    walk_chunk(g, s, e, |u, v, dir| {
+                    walk_chunk(g, offsets, s, e, |u, v, bits| {
                         let mut sink = BankSlot {
                             slot: &bank.slots[bank.slot_of(u, v)],
                         };
-                        dyad_task(g, u, v, dir, &mut sink);
+                        dyad_task(g, u, v, bits, &mut sink);
                     });
                 },
             );
@@ -217,8 +221,8 @@ fn census_with(
                 cancel,
                 |_tid| Census::zero(),
                 |acc, _tid, s, e| {
-                    walk_chunk(g, s, e, |u, v, dir| {
-                        dyad_task(g, u, v, dir, acc);
+                    walk_chunk(g, offsets, s, e, |u, v, bits| {
+                        dyad_task(g, u, v, bits, acc);
                     });
                 },
             );
@@ -240,15 +244,19 @@ fn census_with(
 }
 
 /// Parallel triad census over the collapsed entry space, on the shared
-/// process-wide executor.
-pub fn census_parallel(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
+/// process-wide executor. Generic over any [`GraphView`].
+pub fn census_parallel<G: GraphView>(g: &G, cfg: &ParallelConfig) -> ParallelRun {
     census_with(g, cfg, LoopRunner::Pool(Executor::global()), &CancelToken::new())
         .expect("fresh token never cancels")
 }
 
 /// Parallel triad census on an explicit [`Executor`] — the coordinator's
 /// serving path: every request interleaves chunks on the same pool.
-pub fn census_parallel_on(g: &CsrGraph, cfg: &ParallelConfig, exec: &Executor) -> ParallelRun {
+pub fn census_parallel_on<G: GraphView>(
+    g: &G,
+    cfg: &ParallelConfig,
+    exec: &Executor,
+) -> ParallelRun {
     census_with(g, cfg, LoopRunner::Pool(exec), &CancelToken::new())
         .expect("fresh token never cancels")
 }
@@ -258,8 +266,8 @@ pub fn census_parallel_on(g: &CsrGraph, cfg: &ParallelConfig, exec: &Executor) -
 /// census covers the whole entry space. This is the coordinator's
 /// job-cancellation path — a `JobHandle::cancel` on a running sparse job
 /// trips the token and the seats stop claiming chunks.
-pub fn census_parallel_cancellable(
-    g: &CsrGraph,
+pub fn census_parallel_cancellable<G: GraphView>(
+    g: &G,
     cfg: &ParallelConfig,
     exec: &Executor,
     cancel: &CancelToken,
@@ -270,31 +278,45 @@ pub fn census_parallel_cancellable(
 /// Parallel triad census spawning scoped threads for this one call (the
 /// pre-executor behavior). Baseline of `benches/executor_reuse.rs`; not
 /// for new code.
-pub fn census_parallel_scoped(g: &CsrGraph, cfg: &ParallelConfig) -> ParallelRun {
+pub fn census_parallel_scoped<G: GraphView>(g: &G, cfg: &ParallelConfig) -> ParallelRun {
     census_with(g, cfg, LoopRunner::Scoped, &CancelToken::new())
         .expect("fresh token never cancels")
 }
 
-/// Walk the collapsed entry range `[s, e)`, invoking `f(u, v, dir)` for
-/// every entry that is the canonical (`u < v`) side of a dyad. One
-/// offset binary search seats the walk; node advancement is linear.
+/// Walk the collapsed entry range `[s, e)` of `offsets` (the view's
+/// flat offsets), invoking `f(u, v, bits)` for every entry that is the
+/// canonical (`u < v`) side of a dyad. One offset binary search seats
+/// the walk; rows are then consumed linearly — the mid-row seek is
+/// O(1) for CSR-shaped views (their neighbor iterators implement
+/// positional `nth`) and O(skipped) for merged-iterator views.
 #[inline]
-fn walk_chunk<F: FnMut(u32, u32, crate::graph::Dir)>(g: &CsrGraph, s: usize, e: usize, mut f: F) {
+fn walk_chunk<G: GraphView, F: FnMut(u32, u32, u8)>(
+    g: &G,
+    offsets: &[usize],
+    s: usize,
+    e: usize,
+    mut f: F,
+) {
     if s >= e {
         return;
     }
-    let offsets = g.offsets();
-    let mut u = g.owner_of_entry(s);
-    for idx in s..e {
+    debug_assert!(e <= *offsets.last().unwrap());
+    // partition_point: first u with offsets[u+1] > s
+    let mut u = (offsets.partition_point(|&o| o <= s) - 1) as u32;
+    let mut idx = s;
+    while idx < e {
         // advance u past empty rows until idx is inside u's row
         while idx >= offsets[u as usize + 1] {
             u += 1;
         }
-        let entry = g.entry(idx);
-        let v = entry.nbr();
-        if u < v {
-            f(u, v, entry.dir());
+        let row_end = offsets[u as usize + 1].min(e);
+        let skip = idx - offsets[u as usize];
+        for (v, bits) in g.neighbors(u).skip(skip).take(row_end - idx) {
+            if u < v {
+                f(u, v, bits);
+            }
         }
+        idx = row_end;
     }
 }
 
@@ -303,6 +325,7 @@ mod tests {
     use super::*;
     use crate::census::naive;
     use crate::graph::generators::{self, named};
+    use crate::graph::CsrGraph;
 
     fn cfg(threads: usize, policy: Policy, acc: Accumulation) -> ParallelConfig {
         ParallelConfig {
@@ -377,18 +400,47 @@ mod tests {
     #[test]
     fn walk_chunk_covers_every_canonical_dyad_once() {
         let g = generators::power_law(200, 2.3, 6.0, 21);
+        let offsets = g.flat_offsets();
         let mut seen = std::collections::HashSet::new();
         // split the space into odd-sized chunks
-        let len = g.entry_count();
+        let len = GraphView::entry_count(&g);
         let mut s = 0;
         while s < len {
             let e = (s + 17).min(len);
-            walk_chunk(&g, s, e, |u, v, _| {
+            walk_chunk(&g, &offsets, s, e, |u, v, _| {
                 assert!(seen.insert((u, v)), "dyad ({u},{v}) seen twice");
             });
             s = e;
         }
         assert_eq!(seen.len() as u64, g.dyad_count());
+    }
+
+    #[test]
+    fn walk_chunk_agrees_across_views() {
+        // the overlay's computed flat offsets must chunk to the same
+        // canonical dyad set as the CSR's stored offsets
+        let g = generators::power_law(150, 2.2, 5.0, 8);
+        let overlay = crate::graph::DeltaOverlay::new(std::sync::Arc::new(g.clone()));
+        let collect = |dyads: &mut Vec<(u32, u32, u8)>, chunk: usize| {
+            let offsets = GraphView::flat_offsets(&overlay);
+            let len = GraphView::entry_count(&overlay);
+            let mut s = 0;
+            while s < len {
+                let e = s.saturating_add(chunk).min(len);
+                walk_chunk(&overlay, &offsets, s, e, |u, v, b| dyads.push((u, v, b)));
+                s = e;
+            }
+        };
+        let mut whole = Vec::new();
+        collect(&mut whole, usize::MAX);
+        let mut chunked = Vec::new();
+        collect(&mut chunked, 13);
+        assert_eq!(whole, chunked);
+        let mut csr = Vec::new();
+        let offsets = g.flat_offsets();
+        let len = GraphView::entry_count(&g);
+        walk_chunk(&g, &offsets, 0, len, |u, v, b| csr.push((u, v, b)));
+        assert_eq!(whole, csr);
     }
 
     #[test]

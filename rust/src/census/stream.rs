@@ -24,7 +24,7 @@
 use std::sync::Arc;
 
 use super::isotricode::{tricode_from_dyads, TRICODE_TABLE};
-use super::merged;
+use super::merged::{self, merged_union_walk};
 use super::types::Census;
 use crate::graph::overlay::{ApplyOutcome, DeltaOverlay, EdgeOp};
 use crate::graph::CsrGraph;
@@ -77,7 +77,7 @@ impl StreamingCensus {
     /// Open a stream over `base`, seeding the live census with a full
     /// merged-engine recompute.
     pub fn new(base: Arc<CsrGraph>) -> StreamingCensus {
-        let census = merged::census(&base);
+        let census = merged::census(base.as_ref());
         StreamingCensus::with_initial(base, census)
     }
 
@@ -236,10 +236,11 @@ fn apply_delta(counts: &mut [u64; 16], delta: &[i64; 16]) {
 
 /// Account one dyad transition `(u, v): old → new` into `delta`: every
 /// triad `{u, v, w}` moves from its class under `old` to its class
-/// under `new`. Third nodes adjacent to `u` or `v` are scanned with a
-/// merged two-pointer walk (their `(u, w)` / `(v, w)` dyads decide the
-/// class); the rest move between the null/dyadic classes in bulk.
-/// Returns the number of individually scanned third nodes.
+/// under `new`. Third nodes adjacent to `u` or `v` are visited by the
+/// same [`merged_union_walk`] every census engine uses (their `(u, w)`
+/// / `(v, w)` dyads decide the class); the rest move between the
+/// null/dyadic classes in bulk. Returns the number of individually
+/// scanned third nodes.
 fn scan_dyad_change(
     overlay: &DeltaOverlay,
     u: u32,
@@ -248,47 +249,14 @@ fn scan_dyad_change(
     new: u8,
     delta: &mut [i64; 16],
 ) -> u64 {
-    let mut ru = overlay.neighbors(u).peekable();
-    let mut rv = overlay.neighbors(v).peekable();
-    let mut union_size = 0usize;
-    loop {
-        let a = ru.peek().map(|&(w, _)| w);
-        let b = rv.peek().map(|&(w, _)| w);
-        let (w, uw, vw) = match (a, b) {
-            (None, None) => break,
-            (Some(wa), None) => {
-                let (_, bits) = ru.next().unwrap();
-                (wa, bits, 0)
-            }
-            (None, Some(wb)) => {
-                let (_, bits) = rv.next().unwrap();
-                (wb, 0, bits)
-            }
-            (Some(wa), Some(wb)) => {
-                if wa < wb {
-                    let (_, bits) = ru.next().unwrap();
-                    (wa, bits, 0)
-                } else if wb < wa {
-                    let (_, bits) = rv.next().unwrap();
-                    (wb, 0, bits)
-                } else {
-                    let (_, ub) = ru.next().unwrap();
-                    let (_, vb) = rv.next().unwrap();
-                    (wa, ub, vb)
-                }
-            }
-        };
-        if w == u || w == v {
-            continue;
-        }
-        union_size += 1;
+    let union_size = merged_union_walk(overlay, u, v, |_w, uw, vw, _from_u| {
         let from = TRICODE_TABLE[tricode_from_dyads(old, uw, vw) as usize];
         let to = TRICODE_TABLE[tricode_from_dyads(new, uw, vw) as usize];
         if from != to {
             delta[from.index() - 1] -= 1;
             delta[to.index() - 1] += 1;
         }
-    }
+    });
     // third nodes adjacent to neither endpoint: null/dyadic bulk move
     let rest = (overlay.node_count() - 2 - union_size) as i64;
     if rest > 0 {
@@ -310,7 +278,9 @@ mod tests {
     use crate::graph::generators;
 
     fn oracle(sc: &StreamingCensus) -> Census {
-        merged::census(&sc.overlay().compact())
+        // the merged engine runs straight over the overlay view — no
+        // compaction needed for a full-recompute cross-check anymore
+        merged::census(sc.overlay())
     }
 
     #[test]

@@ -36,7 +36,7 @@
 use std::fmt;
 
 use crate::census::{Census, TriadType};
-use crate::graph::EdgeOp;
+use crate::graph::{EdgeOp, VertexOrdering};
 use crate::sched::{Policy, ThreadPoolStats};
 
 /// The wire protocol version spoken by this build. Bumped on any
@@ -689,6 +689,9 @@ pub struct CensusRequest {
     pub threads: Option<usize>,
     /// Schedule-policy override for the parallel engine.
     pub policy: Option<Policy>,
+    /// Vertex ordering the sparse path preprocesses with (`None` =
+    /// natural). Census-invariant: only timing changes.
+    pub ordering: Option<VertexOrdering>,
     /// Triad-class subset to return; `None` = the full 16-class census.
     pub classes: Option<Vec<TriadType>>,
 }
@@ -700,6 +703,7 @@ impl CensusRequest {
             engine: None,
             threads: None,
             policy: None,
+            ordering: None,
             classes: None,
         }
     }
@@ -749,6 +753,12 @@ impl CensusRequest {
         self
     }
 
+    /// Vertex ordering preprocessing for the sparse path.
+    pub fn ordering(mut self, ordering: VertexOrdering) -> CensusRequest {
+        self.ordering = Some(ordering);
+        self
+    }
+
     /// Return only these triad classes.
     pub fn classes(mut self, classes: Vec<TriadType>) -> CensusRequest {
         self.classes = Some(classes);
@@ -765,6 +775,9 @@ impl CensusRequest {
         }
         if let Some(p) = &self.policy {
             pairs.push(("policy".into(), Json::from(policy_to_wire(p))));
+        }
+        if let Some(o) = self.ordering {
+            pairs.push(("ordering".into(), Json::from(o.name())));
         }
         if let Some(classes) = &self.classes {
             pairs.push((
@@ -785,6 +798,12 @@ impl CensusRequest {
         let threads = v.get("threads").and_then(Json::as_usize);
         let policy = match v.get("policy").and_then(Json::as_str) {
             Some(s) => Some(Policy::parse(s).map_err(|e| bad(format!("bad policy: {e}")))?),
+            None => None,
+        };
+        // VertexOrdering::parse's message lists the valid orderings —
+        // the protocol-decode side of the "unknown value" contract
+        let ordering = match v.get("ordering").and_then(Json::as_str) {
+            Some(s) => Some(VertexOrdering::parse(s).map_err(bad)?),
             None => None,
         };
         let classes = match v.get("classes").and_then(Json::as_arr) {
@@ -808,6 +827,7 @@ impl CensusRequest {
             engine,
             threads,
             policy,
+            ordering,
             classes,
         })
     }
@@ -836,6 +856,9 @@ pub struct Provenance {
     pub engine: String,
     /// `sparse` or `dense:SIZE` (artifact size routed to).
     pub route: String,
+    /// Vertex ordering the sparse path ran under (`natural` or
+    /// `degree`; dense routes are always `natural`).
+    pub ordering: String,
     pub nodes: u64,
     pub arcs: u64,
 }
@@ -945,6 +968,10 @@ impl CensusResponse {
                 ("source".into(), Json::from(self.provenance.source.clone())),
                 ("engine".into(), Json::from(self.provenance.engine.clone())),
                 ("route".into(), Json::from(self.provenance.route.clone())),
+                (
+                    "ordering".into(),
+                    Json::from(self.provenance.ordering.clone()),
+                ),
                 ("nodes".into(), Json::from(self.provenance.nodes)),
                 ("arcs".into(), Json::from(self.provenance.arcs)),
             ]),
@@ -1005,6 +1032,10 @@ impl CensusResponse {
                 source: getstr(prov, "source"),
                 engine: getstr(prov, "engine"),
                 route: getstr(prov, "route"),
+                ordering: match getstr(prov, "ordering") {
+                    s if s.is_empty() => VertexOrdering::Natural.name().to_string(),
+                    s => s,
+                },
                 nodes: prov.get("nodes").and_then(Json::as_u64).unwrap_or(0),
                 arcs: prov.get("arcs").and_then(Json::as_u64).unwrap_or(0),
             },
@@ -1618,13 +1649,30 @@ mod tests {
                 .seed(7)
                 .engine("parallel")
                 .threads(8)
-                .policy(Policy::Dynamic { chunk: 128 }),
+                .policy(Policy::Dynamic { chunk: 128 })
+                .ordering(VertexOrdering::Degree),
+            CensusRequest::path("/data/g.csr").ordering(VertexOrdering::Natural),
         ];
         for req in reqs {
             let line = req.to_json().to_string();
             let back = CensusRequest::from_json(&Json::parse(&line).unwrap()).unwrap();
             assert_eq!(back, req, "{line}");
         }
+    }
+
+    #[test]
+    fn unknown_ordering_is_rejected_with_the_valid_list() {
+        let json = Json::parse(
+            r#"{"source":{"kind":"generator","name":"patents","nodes":10},"ordering":"random"}"#,
+        )
+        .unwrap();
+        let err = CensusRequest::from_json(&json).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("unknown ordering"), "{err}");
+        assert!(
+            err.message.contains("natural") && err.message.contains("degree"),
+            "decode error must list the valid orderings: {err}"
+        );
     }
 
     #[test]
@@ -1651,6 +1699,7 @@ mod tests {
                 source: "generator:patents,n=100".to_string(),
                 engine: "parallel".to_string(),
                 route: "sparse".to_string(),
+                ordering: "degree".to_string(),
                 nodes: 100,
                 arcs: 440,
             },

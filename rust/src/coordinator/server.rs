@@ -322,7 +322,8 @@ fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError>
             })?;
             let coord = &state.coordinator;
             let base = coord.resolve_source(&request.source)?;
-            let (seed, engine) = coord.seed_census(&base, request.engine.as_deref())?;
+            let (seed, engine) =
+                coord.seed_census(&base, request.engine.as_deref(), request.ordering)?;
             let opened = StreamOpened {
                 stream: state.stream_seq.fetch_add(1, Ordering::Relaxed) + 1,
                 nodes: base.node_count() as u64,

@@ -25,9 +25,10 @@ use super::protocol::{
 };
 use super::router::{Route, Router, RoutingPolicy};
 use crate::census::engine::ParallelEngine;
-use crate::census::{Census, CensusEngine, EngineRegistry, ParallelConfig};
+use crate::census::{Census, CensusEngine, EngineRegistry, ParallelConfig, ParallelRun};
 use crate::error::{Context, Error, Result};
-use crate::graph::{generators, io, CsrGraph, GraphBuilder};
+use crate::graph::relabel::{self, DirSplit};
+use crate::graph::{generators, io, CsrGraph, GraphBuilder, GraphView, VertexOrdering};
 use crate::metrics::Metrics;
 use crate::runtime::DenseCensusRuntime;
 use crate::sched::{CancelToken, Executor, ExecutorConfig, Policy, ThreadPoolStats};
@@ -239,6 +240,9 @@ pub struct CensusOutcome {
     /// Per-job stats from the shared executor; `None` for dense routes
     /// (the dense service thread has no chunk scheduler).
     pub stats: Option<ThreadPoolStats>,
+    /// The vertex ordering that actually ran (dense routes ignore the
+    /// requested ordering and report `Natural`).
+    pub ordering: VertexOrdering,
 }
 
 /// Request envelope for the dense service thread.
@@ -497,6 +501,9 @@ fn job_worker(core: &Core, queue: &JobQueue) {
 struct Core {
     router: Router,
     engines: EngineRegistry,
+    /// The same five engines instantiated over the direction-split
+    /// view — the sparse path under `ordering: degree`.
+    split_engines: EngineRegistry<DirSplit>,
     engine: String,
     default_sparse: ParallelConfig,
     executor: Arc<Executor>,
@@ -510,6 +517,51 @@ struct Core {
 
 fn cancelled_error() -> WireError {
     WireError::new(ErrorCode::Cancelled, "job cancelled")
+}
+
+/// What [`Core::run_route`] hands back:
+/// `(census, route, sparse stats, engine name, applied ordering)`.
+type RouteOutcome = (Census, Route, Option<ThreadPoolStats>, String, VertexOrdering);
+
+/// Resolve and run one sparse engine over any [`GraphView`] — the
+/// natural path hands the CSR straight in, the degree-ordered path
+/// hands in the relabeled direction-split form; per-request
+/// seat/policy overrides build a one-off parallel engine either way.
+#[allow(clippy::too_many_arguments)]
+fn sparse_engine_run<G: GraphView>(
+    engines: &EngineRegistry<G>,
+    name: &str,
+    default_sparse: &ParallelConfig,
+    threads: Option<usize>,
+    policy: Option<Policy>,
+    g: &G,
+    exec: &Executor,
+    cancel: &CancelToken,
+) -> std::result::Result<(ParallelRun, String), WireError> {
+    let engine = engines
+        .get_or_err(name)
+        .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
+    // per-request seat/policy overrides build a one-off parallel
+    // engine over the configured base (serial engines ignore them)
+    let custom = if engine.name() == "parallel" && (threads.is_some() || policy.is_some()) {
+        Some(ParallelEngine {
+            cfg: ParallelConfig {
+                threads: threads.unwrap_or(default_sparse.threads),
+                policy: policy.unwrap_or(default_sparse.policy),
+                accumulation: default_sparse.accumulation,
+            },
+        })
+    } else {
+        None
+    };
+    let engine: &dyn CensusEngine<G> = match &custom {
+        Some(e) => e,
+        None => engine,
+    };
+    let run = engine
+        .census_cancellable(g, exec, cancel)
+        .ok_or_else(cancelled_error)?;
+    Ok((run, engine.name().to_string()))
 }
 
 impl Core {
@@ -529,8 +581,14 @@ impl Core {
         if cancel.is_cancelled() {
             return Err(cancelled_error());
         }
-        let (census, route, stats, engine) =
-            self.run_route(&g, req.engine.as_deref(), req.threads, req.policy, cancel)?;
+        let (census, route, stats, engine, ordering) = self.run_route(
+            &g,
+            req.engine.as_deref(),
+            req.threads,
+            req.policy,
+            req.ordering,
+            cancel,
+        )?;
         Ok(CensusResponse {
             protocol_version: PROTOCOL_VERSION,
             job,
@@ -543,6 +601,7 @@ impl Core {
                     Route::Sparse => "sparse".to_string(),
                     Route::Dense { size } => format!("dense:{size}"),
                 },
+                ordering: ordering.name().to_string(),
                 nodes: g.node_count() as u64,
                 arcs: g.arc_count(),
             },
@@ -616,17 +675,33 @@ impl Core {
         }
     }
 
+    /// Degree-relabel `g` and build the direction-split form — the
+    /// sparse path's `ordering: degree` preprocessing, timed under the
+    /// `order_preprocess` metric. Recomputed per request for now; a
+    /// preprocessed-form cache belongs next to the graph cache (the
+    /// pass is deterministic per graph) and is left as follow-up work.
+    fn degree_split(&self, g: &CsrGraph) -> DirSplit {
+        self.metrics.inc("census_degree_ordered_total", 1);
+        self.metrics.time("order_preprocess", || {
+            relabel::degree_split(g, self.graphs.ingest_threads).1
+        })
+    }
+
     /// Route and run one in-memory graph. Naming an engine forces the
     /// sparse path through it; otherwise the router may pick the dense
-    /// backend. Returns `(census, route, sparse stats, engine name)`.
+    /// backend. `ordering: degree` preprocesses the sparse path with
+    /// the degree-descending relabel + direction split (the census is
+    /// invariant; dense routes ignore the knob). Returns
+    /// `(census, route, sparse stats, engine name, applied ordering)`.
     fn run_route(
         &self,
         g: &CsrGraph,
         engine_override: Option<&str>,
         threads: Option<usize>,
         policy: Option<Policy>,
+        ordering: Option<VertexOrdering>,
         cancel: &CancelToken,
-    ) -> std::result::Result<(Census, Route, Option<ThreadPoolStats>, String), WireError> {
+    ) -> std::result::Result<RouteOutcome, WireError> {
         if let Some(p) = &policy {
             p.validate()
                 .map_err(|e| WireError::new(ErrorCode::BadRequest, e))?;
@@ -651,37 +726,47 @@ impl Core {
                     WireError::new(ErrorCode::Internal, "dense service dropped the request")
                 })?
                 .map_err(|e| WireError::new(ErrorCode::Internal, e))?;
-            return Ok((census, route, None, "dense".to_string()));
+            return Ok((census, route, None, "dense".to_string(), VertexOrdering::Natural));
         }
         self.metrics.inc("census_sparse_total", 1);
         let name = engine_override.unwrap_or(&self.engine);
-        let engine = self
-            .engines
-            .get_or_err(name)
-            .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
-        // per-request seat/policy overrides build a one-off parallel
-        // engine over the configured base (serial engines ignore them)
-        let custom = if engine.name() == "parallel" && (threads.is_some() || policy.is_some()) {
-            Some(ParallelEngine {
-                cfg: ParallelConfig {
-                    threads: threads.unwrap_or(self.default_sparse.threads),
-                    policy: policy.unwrap_or(self.default_sparse.policy),
-                    accumulation: self.default_sparse.accumulation,
-                },
-            })
-        } else {
-            None
+        let ordering = ordering.unwrap_or_default();
+        let (run, engine_name) = match ordering {
+            VertexOrdering::Natural => self.metrics.time("sparse_census", || {
+                sparse_engine_run(
+                    &self.engines,
+                    name,
+                    &self.default_sparse,
+                    threads,
+                    policy,
+                    g,
+                    &self.executor,
+                    cancel,
+                )
+            })?,
+            VertexOrdering::Degree => {
+                // validate the engine before paying for preprocessing
+                self.engines
+                    .get_or_err(name)
+                    .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
+                let split = self.degree_split(g);
+                if cancel.is_cancelled() {
+                    return Err(cancelled_error());
+                }
+                self.metrics.time("sparse_census", || {
+                    sparse_engine_run(
+                        &self.split_engines,
+                        name,
+                        &self.default_sparse,
+                        threads,
+                        policy,
+                        &split,
+                        &self.executor,
+                        cancel,
+                    )
+                })?
+            }
         };
-        let engine: &dyn CensusEngine = match &custom {
-            Some(e) => e,
-            None => engine,
-        };
-        let run = self
-            .metrics
-            .time("sparse_census", || {
-                engine.census_cancellable(g, &self.executor, cancel)
-            })
-            .ok_or_else(cancelled_error)?;
         // per-job telemetry: slots walked by this job (executor job
         // counts live in Executor::stats, not here — serial engines
         // never submit one)
@@ -689,7 +774,7 @@ impl Core {
             "census_slots_total",
             run.stats.items.iter().sum::<usize>() as u64,
         );
-        Ok((run.census, route, Some(run.stats), engine.name().to_string()))
+        Ok((run.census, route, Some(run.stats), engine_name, ordering))
     }
 }
 
@@ -757,6 +842,7 @@ impl Coordinator {
         let core = Arc::new(Core {
             router: Router::new(routing),
             engines,
+            split_engines: EngineRegistry::builtin(cfg.sparse),
             engine: cfg.engine,
             default_sparse: cfg.sparse,
             executor,
@@ -836,24 +922,44 @@ impl Coordinator {
 
     /// Compute the full census that seeds a streaming session, on the
     /// configured sparse engine (or `engine_override`) over the shared
-    /// executor. Returns the census and the engine name that produced
-    /// it.
+    /// executor. `ordering: degree` runs the seed over the relabeled
+    /// direction-split form — the census is relabeling-invariant, so
+    /// the result seeds the *original* base exactly; the overlay keeps
+    /// operating in original ids. Returns the census and the engine
+    /// name that produced it.
     pub fn seed_census(
         &self,
         g: &CsrGraph,
         engine_override: Option<&str>,
+        ordering: Option<VertexOrdering>,
     ) -> std::result::Result<(Census, String), WireError> {
         let name = engine_override.unwrap_or(&self.core.engine);
-        let engine = self
-            .core
-            .engines
-            .get_or_err(name)
-            .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
-        let run = self
-            .core
-            .metrics
-            .time("stream_seed_census", || engine.census(g, &self.core.executor));
-        Ok((run.census, engine.name().to_string()))
+        match ordering.unwrap_or_default() {
+            VertexOrdering::Natural => {
+                let engine = self
+                    .core
+                    .engines
+                    .get_or_err(name)
+                    .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
+                let run = self
+                    .core
+                    .metrics
+                    .time("stream_seed_census", || engine.census(g, &self.core.executor));
+                Ok((run.census, engine.name().to_string()))
+            }
+            VertexOrdering::Degree => {
+                let engine = self
+                    .core
+                    .split_engines
+                    .get_or_err(name)
+                    .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
+                let split = self.core.degree_split(g);
+                let run = self.core.metrics.time("stream_seed_census", || {
+                    engine.census(&split, &self.core.executor)
+                });
+                Ok((run.census, engine.name().to_string()))
+            }
+        }
     }
 
     /// Submit a census request for asynchronous execution. Always
@@ -910,16 +1016,28 @@ impl Coordinator {
     /// the intended workload: every sparse request is one job on the
     /// shared executor.
     pub fn census(&self, g: &CsrGraph) -> Result<CensusOutcome> {
+        self.census_ordered(g, None)
+    }
+
+    /// [`Coordinator::census`] with a vertex-ordering override — the
+    /// CLI's `--order` lands here; requests over the wire carry the
+    /// knob in `CensusRequest::ordering` instead.
+    pub fn census_ordered(
+        &self,
+        g: &CsrGraph,
+        ordering: Option<VertexOrdering>,
+    ) -> Result<CensusOutcome> {
         let t0 = Instant::now();
-        let (census, route, stats, _engine) = self
+        let (census, route, stats, _engine, applied) = self
             .core
-            .run_route(g, None, None, None, &CancelToken::new())
+            .run_route(g, None, None, None, ordering, &CancelToken::new())
             .map_err(Error::msg)?;
         Ok(CensusOutcome {
             census,
             route,
             seconds: t0.elapsed().as_secs_f64(),
             stats,
+            ordering: applied,
         })
     }
 
@@ -1293,6 +1411,41 @@ mod tests {
     }
 
     #[test]
+    fn degree_ordered_jobs_return_identical_censuses() {
+        let coord = sparse_coordinator();
+        let natural = coord
+            .submit(CensusRequest::generator("patents", 400).seed(11).engine("merged"))
+            .wait()
+            .unwrap();
+        assert_eq!(natural.provenance.ordering, "natural");
+        for engine in ["naive", "bm", "merged", "parallel", "moody"] {
+            let ordered = coord
+                .submit(
+                    CensusRequest::generator("patents", 400)
+                        .seed(11)
+                        .engine(engine)
+                        .ordering(crate::graph::VertexOrdering::Degree),
+                )
+                .wait()
+                .unwrap();
+            assert_eq!(ordered.census, natural.census, "engine {engine}");
+            assert_eq!(ordered.provenance.ordering, "degree", "engine {engine}");
+        }
+        assert_eq!(coord.metrics().get("census_degree_ordered_total"), 5);
+        // the shim-level override agrees too
+        let g = generators::spec_by_name("patents", 400, Some(11))
+            .unwrap()
+            .generate();
+        let out = coord
+            .census_ordered(&g, Some(crate::graph::VertexOrdering::Degree))
+            .unwrap();
+        assert_eq!(out.census, natural.census);
+        assert_eq!(out.ordering, crate::graph::VertexOrdering::Degree);
+        // plain census() reports the ordering it ran: natural
+        assert_eq!(coord.census(&g).unwrap().ordering, crate::graph::VertexOrdering::Natural);
+    }
+
+    #[test]
     fn unknown_engine_fails_the_job_immediately() {
         let coord = sparse_coordinator();
         let handle = coord.submit(CensusRequest::generator("patents", 100).engine("quantum"));
@@ -1362,13 +1515,22 @@ mod tests {
             })
             .unwrap();
         assert_eq!(g.node_count(), 200);
-        let (census, engine) = coord.seed_census(&g, Some("merged")).unwrap();
-        assert_eq!(census, merged::census(&g));
+        let (census, engine) = coord.seed_census(&g, Some("merged"), None).unwrap();
+        assert_eq!(census, merged::census(g.as_ref()));
         assert_eq!(engine, "merged");
-        let (default_census, default_engine) = coord.seed_census(&g, None).unwrap();
+        let (default_census, default_engine) = coord.seed_census(&g, None, None).unwrap();
         assert_eq!(default_census, census);
         assert_eq!(default_engine, "parallel");
-        let err = coord.seed_census(&g, Some("quantum")).unwrap_err();
+        // degree-ordered seeding is census-invariant
+        let (ordered_census, _) = coord
+            .seed_census(&g, Some("merged"), Some(VertexOrdering::Degree))
+            .unwrap();
+        assert_eq!(ordered_census, census);
+        let err = coord.seed_census(&g, Some("quantum"), None).unwrap_err();
+        assert_eq!(err.code, ErrorCode::UnknownEngine);
+        let err = coord
+            .seed_census(&g, Some("quantum"), Some(VertexOrdering::Degree))
+            .unwrap_err();
         assert_eq!(err.code, ErrorCode::UnknownEngine);
         let err = coord
             .resolve_source(&GraphSource::Path("/nonexistent/x.csr".to_string()))

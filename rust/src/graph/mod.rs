@@ -1,4 +1,7 @@
-//! Graph substrate: the paper's compact CSR structure (Fig 7), builders,
+//! Graph substrate: the paper's compact CSR structure (Fig 7), the
+//! [`GraphView`] read interface every census engine is generic over
+//! (owned CSR / mmap CSR / delta overlay / direction-split), builders,
+//! census-invariant vertex-ordering preprocessing ([`relabel`]),
 //! deterministic scale-free generators (the synthetic stand-ins for the
 //! patents / Orkut / .uk-webgraph datasets), edge-list I/O and degree /
 //! power-law analysis (Fig 6).
@@ -10,7 +13,9 @@ pub mod generators;
 pub mod io;
 pub mod mmap;
 pub mod overlay;
+pub mod relabel;
 pub mod storage;
+pub mod view;
 
 pub use builder::GraphBuilder;
 pub use csr::{CsrGraph, Dir, DyadType, PackedEdge};
@@ -18,4 +23,6 @@ pub use degree::{DegreeStats, OutDegreeHistogram};
 pub use generators::{named, GraphSpec};
 pub use mmap::MmapFile;
 pub use overlay::{ApplyOutcome, DeltaOverlay, EdgeOp, RejectReason};
+pub use relabel::{DirSplit, Relabeling, VertexOrdering};
 pub use storage::{CsrStorage, MappedCsr};
+pub use view::GraphView;

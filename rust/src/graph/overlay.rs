@@ -88,17 +88,23 @@ pub struct DeltaOverlay {
     entries: usize,
     /// Effective directed-arc count.
     arc_count: u64,
+    /// Effective connected-dyad count (maintained per mutation so the
+    /// collapsed iteration space of the parallel engine is O(1) to
+    /// size).
+    dyads: u64,
 }
 
 impl DeltaOverlay {
     /// An empty overlay: reads pass straight through to `base`.
     pub fn new(base: Arc<CsrGraph>) -> DeltaOverlay {
         let arc_count = base.arc_count();
+        let dyads = base.dyad_count();
         DeltaOverlay {
             base,
             deltas: HashMap::new(),
             entries: 0,
             arc_count,
+            dyads,
         }
     }
 
@@ -118,6 +124,12 @@ impl DeltaOverlay {
     #[inline]
     pub fn arc_count(&self) -> u64 {
         self.arc_count
+    }
+
+    /// Effective connected-dyad count (2 adjacency entries each).
+    #[inline]
+    pub fn dyad_count(&self) -> u64 {
+        self.dyads
     }
 
     /// Dyads whose effective state differs from the base — the natural
@@ -199,6 +211,11 @@ impl DeltaOverlay {
         } else {
             self.arc_count -= 1;
         }
+        if old == 0 {
+            self.dyads += 1;
+        } else if new == 0 {
+            self.dyads -= 1;
+        }
         ApplyOutcome::Changed { old, new }
     }
 
@@ -213,9 +230,14 @@ impl DeltaOverlay {
     }
 
     /// Effective undirected degree of `u` (distinct connected
-    /// neighbors). O(deg); diagnostics and tests.
+    /// neighbors). O(1) for untouched nodes, O(deg) where overrides
+    /// exist — the [`GraphView`](super::view::GraphView) flat-offsets
+    /// pass leans on the fast path.
     pub fn degree(&self, u: u32) -> usize {
-        self.neighbors(u).count()
+        match self.deltas.get(&u) {
+            None => self.base.degree(u),
+            Some(_) => self.neighbors(u).count(),
+        }
     }
 
     /// Materialize the effective graph as a fresh validated CSR,
@@ -237,6 +259,7 @@ impl DeltaOverlay {
         }
         let g = b.build_parallel(threads);
         debug_assert_eq!(g.arc_count(), self.arc_count);
+        debug_assert_eq!(g.dyad_count(), self.dyads);
         g
     }
 }
@@ -413,6 +436,21 @@ mod tests {
         let base = from_arcs(4, &[(0, 1), (1, 0), (2, 3)]);
         let o = DeltaOverlay::new(Arc::new(base.clone()));
         assert_eq!(o.compact(), base);
+    }
+
+    #[test]
+    fn dyad_count_tracks_creations_and_removals() {
+        let mut o = overlay(4, &[(0, 1), (1, 0), (2, 3)]);
+        assert_eq!(o.dyad_count(), 2);
+        o.apply(EdgeOp::Insert(0, 2)); // new dyad
+        assert_eq!(o.dyad_count(), 3);
+        o.apply(EdgeOp::Delete(0, 1)); // downgrade, dyad survives
+        assert_eq!(o.dyad_count(), 3);
+        o.apply(EdgeOp::Delete(1, 0)); // dyad gone
+        assert_eq!(o.dyad_count(), 2);
+        o.apply(EdgeOp::Insert(1, 1)); // rejected: no change
+        o.apply(EdgeOp::Insert(0, 2)); // duplicate: no change
+        assert_eq!(o.dyad_count(), 2);
     }
 
     #[test]

@@ -1,0 +1,602 @@
+//! Vertex-ordering preprocessing: degree-descending relabeling and the
+//! direction-split neighborhood form.
+//!
+//! The paper's throughput is dominated by neighborhood traversal cost
+//! and the load imbalance of power-law degrees. Two standard cures
+//! (cf. Tom & Karypis; Arifuzzaman et al. on distributed triangle
+//! counting) live here, both *census-invariant* — the triad census is
+//! a graph invariant, so every preprocessed form must and does produce
+//! byte-identical counts (enforced by tests and the CI parity step):
+//!
+//! * [`Relabeling`] — a permutation that renumbers vertices in
+//!   descending degree order. High-degree hubs get the smallest ids,
+//!   so the canonical `u < v` dyad enumeration classifies every triad
+//!   from its *highest-degree* vertex, merged walks compare against the
+//!   shortest possible tails, and the skewed head of the collapsed
+//!   iteration space lands in the first scheduler chunks instead of
+//!   straggling at the end.
+//! * [`DirSplit`] — neighborhoods stored as three sorted runs per node
+//!   (reciprocal / out-only / in-only). Direction bits are implied by
+//!   run membership, so the hot tricode classification does one
+//!   three-way merged walk with no per-entry bit masking, and the
+//!   out/in/reciprocal degree hints are O(1) run-length arithmetic.
+//!
+//! [`VertexOrdering`] is the user-facing knob, threaded end to end:
+//! `CensusRequest.ordering` on the wire, `--order` on the CLI.
+
+use std::borrow::Cow;
+use std::cmp::Reverse;
+use std::fmt;
+
+use super::builder::GraphBuilder;
+use super::csr::CsrGraph;
+use super::view::GraphView;
+
+/// Which vertex numbering a census runs under. The census itself is
+/// invariant; the knob trades preprocessing time for traversal speed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VertexOrdering {
+    /// The input numbering, untouched.
+    #[default]
+    Natural,
+    /// Degree-descending relabeling (+ direction-split neighborhoods on
+    /// the sparse path).
+    Degree,
+}
+
+impl VertexOrdering {
+    /// Every ordering, in wire/CLI spelling order.
+    pub const ALL: [VertexOrdering; 2] = [VertexOrdering::Natural, VertexOrdering::Degree];
+
+    /// Canonical wire/CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            VertexOrdering::Natural => "natural",
+            VertexOrdering::Degree => "degree",
+        }
+    }
+
+    /// Parse the wire/CLI spelling. The error lists every valid
+    /// ordering — the single source of the "unknown ordering" wording
+    /// used at both the CLI parse and protocol decode sites.
+    pub fn parse(s: &str) -> Result<VertexOrdering, String> {
+        VertexOrdering::ALL
+            .into_iter()
+            .find(|o| o.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = VertexOrdering::ALL.iter().map(|o| o.name()).collect();
+                format!("unknown ordering {s:?} (available: {})", names.join(", "))
+            })
+    }
+}
+
+impl fmt::Display for VertexOrdering {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A vertex renumbering: `perm[old] = new` and its inverse
+/// `inv[new] = old`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Relabeling {
+    perm: Vec<u32>,
+    inv: Vec<u32>,
+}
+
+impl Relabeling {
+    /// The identity relabeling over `n` nodes.
+    pub fn identity(n: usize) -> Relabeling {
+        let perm: Vec<u32> = (0..n as u32).collect();
+        Relabeling {
+            inv: perm.clone(),
+            perm,
+        }
+    }
+
+    /// Build from an explicit `new -> old` order (must be a permutation
+    /// of `0..n`; checked).
+    pub fn from_order(order: Vec<u32>) -> Relabeling {
+        let n = order.len();
+        let mut perm = vec![u32::MAX; n];
+        for (new, &old) in order.iter().enumerate() {
+            assert!(
+                (old as usize) < n && perm[old as usize] == u32::MAX,
+                "order is not a permutation of 0..{n}"
+            );
+            perm[old as usize] = new as u32;
+        }
+        Relabeling { perm, inv: order }
+    }
+
+    /// Degree-descending relabeling: node of rank 0 has the highest
+    /// undirected degree. Ties break on the old id ascending, so the
+    /// pass is deterministic for any [`GraphView`].
+    pub fn degree_descending<G: GraphView>(g: &G) -> Relabeling {
+        let n = g.node_count();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by_key(|&u| (Reverse(g.degree(u)), u));
+        Relabeling::from_order(order)
+    }
+
+    /// Number of nodes covered.
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// True for the zero-node relabeling.
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// New id of old node `u`.
+    #[inline]
+    pub fn map(&self, u: u32) -> u32 {
+        self.perm[u as usize]
+    }
+
+    /// Old id of new node `u`.
+    #[inline]
+    pub fn unmap(&self, u: u32) -> u32 {
+        self.inv[u as usize]
+    }
+
+    /// The `old -> new` permutation.
+    pub fn perm(&self) -> &[u32] {
+        &self.perm
+    }
+
+    /// The `new -> old` inverse.
+    pub fn inverse(&self) -> &[u32] {
+        &self.inv
+    }
+
+    /// True if the relabeling moves nothing.
+    pub fn is_identity(&self) -> bool {
+        self.perm.iter().enumerate().all(|(i, &p)| p == i as u32)
+    }
+}
+
+/// Materialize `g` under relabeling `r` as a fresh CSR (serial ingest
+/// sort). The censuses of `g` and the result are identical.
+pub fn relabel<G: GraphView>(g: &G, r: &Relabeling) -> CsrGraph {
+    relabel_with(g, r, 1)
+}
+
+/// [`relabel`] with a parallel ingest sort.
+pub fn relabel_with<G: GraphView>(g: &G, r: &Relabeling, threads: usize) -> CsrGraph {
+    let n = g.node_count();
+    assert_eq!(r.len(), n, "relabeling covers a different node count");
+    let mut b = GraphBuilder::new(n);
+    for u in 0..n as u32 {
+        for (v, bits) in g.neighbors(u) {
+            if bits & 0b01 != 0 {
+                b.arc(r.map(u), r.map(v));
+            }
+        }
+    }
+    let out = b.build_parallel(threads.max(1));
+    debug_assert_eq!(out.arc_count(), g.arc_count());
+    out
+}
+
+/// Degree-relabel + direction-split in one call: the sparse serving
+/// path's preparation for [`VertexOrdering::Degree`]. Returns the
+/// relabeling alongside the split form (callers that must map ids back
+/// — e.g. streaming — keep the permutation).
+pub fn degree_split<G: GraphView>(g: &G, threads: usize) -> (Relabeling, DirSplit) {
+    let r = Relabeling::degree_descending(g);
+    let relabeled = relabel_with(g, &r, threads);
+    let split = DirSplit::build(&relabeled);
+    (r, split)
+}
+
+/// Direction-split neighborhood form: per node, three sorted neighbor
+/// runs — reciprocal, out-only, in-only — in one flat array. A
+/// [`GraphView`] whose merged iteration is a three-way run merge with
+/// direction bits implied by run membership, and whose directional
+/// degree hints are O(1).
+pub struct DirSplit {
+    /// `n + 1` offsets into `nbrs` (whole-node segments).
+    offsets: Vec<usize>,
+    /// Absolute end of each node's reciprocal run.
+    recip_end: Vec<usize>,
+    /// Absolute end of each node's out-only run (in-only runs to
+    /// `offsets[u + 1]`).
+    out_end: Vec<usize>,
+    /// Neighbor ids: `[recip… | out-only… | in-only…]` per node, each
+    /// run ascending.
+    nbrs: Vec<u32>,
+    arc_count: u64,
+}
+
+impl DirSplit {
+    /// Build from any view (one ascending pass per node).
+    pub fn build<G: GraphView>(g: &G) -> DirSplit {
+        let n = g.node_count();
+        let entries = g.entry_count();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut recip_end = Vec::with_capacity(n);
+        let mut out_end = Vec::with_capacity(n);
+        let mut nbrs = Vec::with_capacity(entries);
+        let mut out_run = Vec::new();
+        let mut in_run = Vec::new();
+        offsets.push(0);
+        for u in 0..n as u32 {
+            out_run.clear();
+            in_run.clear();
+            for (v, bits) in g.neighbors(u) {
+                match bits {
+                    0b11 => nbrs.push(v),
+                    0b01 => out_run.push(v),
+                    _ => in_run.push(v),
+                }
+            }
+            recip_end.push(nbrs.len());
+            nbrs.extend_from_slice(&out_run);
+            out_end.push(nbrs.len());
+            nbrs.extend_from_slice(&in_run);
+            offsets.push(nbrs.len());
+        }
+        debug_assert_eq!(nbrs.len(), entries);
+        DirSplit {
+            offsets,
+            recip_end,
+            out_end,
+            nbrs,
+            arc_count: g.arc_count(),
+        }
+    }
+
+    /// The three runs of node `u`: `(reciprocal, out-only, in-only)`.
+    #[inline]
+    pub fn runs(&self, u: u32) -> (&[u32], &[u32], &[u32]) {
+        let u = u as usize;
+        (
+            &self.nbrs[self.offsets[u]..self.recip_end[u]],
+            &self.nbrs[self.recip_end[u]..self.out_end[u]],
+            &self.nbrs[self.out_end[u]..self.offsets[u + 1]],
+        )
+    }
+}
+
+/// Three-way run merge: ascending `(neighbor, bits)` with the bits of
+/// each element implied by the run it came from.
+pub struct DirSplitNeighbors<'a> {
+    recip: &'a [u32],
+    out: &'a [u32],
+    inn: &'a [u32],
+}
+
+impl Iterator for DirSplitNeighbors<'_> {
+    type Item = (u32, u8);
+
+    #[inline]
+    fn next(&mut self) -> Option<(u32, u8)> {
+        // The three runs are disjoint (a dyad has exactly one state),
+        // so strict minimum selection is unambiguous. `u32::MAX` is an
+        // unreachable node id (ids fit in 30 bits), so it serves as the
+        // empty sentinel.
+        let mut v = u32::MAX;
+        let mut bits = 0u8;
+        if let Some(&w) = self.recip.first() {
+            v = w;
+            bits = 0b11;
+        }
+        if let Some(&w) = self.out.first() {
+            if w < v {
+                v = w;
+                bits = 0b01;
+            }
+        }
+        if let Some(&w) = self.inn.first() {
+            if w < v {
+                v = w;
+                bits = 0b10;
+            }
+        }
+        match bits {
+            0 => None,
+            0b11 => {
+                self.recip = &self.recip[1..];
+                Some((v, bits))
+            }
+            0b01 => {
+                self.out = &self.out[1..];
+                Some((v, bits))
+            }
+            _ => {
+                self.inn = &self.inn[1..];
+                Some((v, bits))
+            }
+        }
+    }
+
+    /// Positional seek by whole interleaving blocks: the run holding
+    /// the globally smallest head owns a contiguous prefix of the
+    /// merged order (everything below the other heads), so one binary
+    /// search skips it at once. This is what keeps parallel-engine
+    /// chunk seating cheap on degree-ordered hub rows, where a single
+    /// row spans many scheduler chunks.
+    fn nth(&mut self, mut n: usize) -> Option<(u32, u8)> {
+        loop {
+            let rh = self.recip.first().copied().unwrap_or(u32::MAX);
+            let oh = self.out.first().copied().unwrap_or(u32::MAX);
+            let ih = self.inn.first().copied().unwrap_or(u32::MAX);
+            if rh == u32::MAX && oh == u32::MAX && ih == u32::MAX {
+                return None;
+            }
+            // exactly one run holds the (strict, runs are disjoint)
+            // minimum head; its elements below the other heads form the
+            // next contiguous block of the merged order
+            if rh < oh && rh < ih {
+                let block = self.recip.partition_point(|&x| x < oh.min(ih));
+                if n < block {
+                    let w = self.recip[n];
+                    self.recip = &self.recip[n + 1..];
+                    return Some((w, 0b11));
+                }
+                n -= block;
+                self.recip = &self.recip[block..];
+            } else if oh < ih {
+                let block = self.out.partition_point(|&x| x < rh.min(ih));
+                if n < block {
+                    let w = self.out[n];
+                    self.out = &self.out[n + 1..];
+                    return Some((w, 0b01));
+                }
+                n -= block;
+                self.out = &self.out[block..];
+            } else {
+                let block = self.inn.partition_point(|&x| x < rh.min(oh));
+                if n < block {
+                    let w = self.inn[n];
+                    self.inn = &self.inn[n + 1..];
+                    return Some((w, 0b10));
+                }
+                n -= block;
+                self.inn = &self.inn[block..];
+            }
+        }
+    }
+
+    #[inline]
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let len = self.recip.len() + self.out.len() + self.inn.len();
+        (len, Some(len))
+    }
+}
+
+impl ExactSizeIterator for DirSplitNeighbors<'_> {}
+
+impl GraphView for DirSplit {
+    type Neighbors<'a> = DirSplitNeighbors<'a>
+    where
+        Self: 'a;
+
+    #[inline]
+    fn node_count(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    fn arc_count(&self) -> u64 {
+        self.arc_count
+    }
+
+    #[inline]
+    fn neighbors(&self, u: u32) -> DirSplitNeighbors<'_> {
+        let (recip, out, inn) = self.runs(u);
+        DirSplitNeighbors { recip, out, inn }
+    }
+
+    #[inline]
+    fn dyad_bits(&self, u: u32, v: u32) -> u8 {
+        let (recip, out, inn) = self.runs(u);
+        if recip.binary_search(&v).is_ok() {
+            0b11
+        } else if out.binary_search(&v).is_ok() {
+            0b01
+        } else if inn.binary_search(&v).is_ok() {
+            0b10
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    fn degree(&self, u: u32) -> usize {
+        self.offsets[u as usize + 1] - self.offsets[u as usize]
+    }
+
+    #[inline]
+    fn entry_count(&self) -> usize {
+        self.nbrs.len()
+    }
+
+    #[inline]
+    fn flat_offsets(&self) -> Cow<'_, [usize]> {
+        Cow::Borrowed(&self.offsets)
+    }
+
+    #[inline]
+    fn out_degree(&self, u: u32) -> usize {
+        self.out_end[u as usize] - self.offsets[u as usize]
+    }
+
+    #[inline]
+    fn in_degree(&self, u: u32) -> usize {
+        let u = u as usize;
+        (self.recip_end[u] - self.offsets[u]) + (self.offsets[u + 1] - self.out_end[u])
+    }
+
+    #[inline]
+    fn reciprocal_degree(&self, u: u32) -> usize {
+        self.recip_end[u as usize] - self.offsets[u as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_arcs;
+    use crate::graph::generators;
+
+    fn fixture() -> CsrGraph {
+        from_arcs(6, &[(0, 1), (1, 0), (1, 2), (3, 1), (4, 5), (5, 4), (2, 4)])
+    }
+
+    #[test]
+    fn ordering_parses_and_lists_valid_values() {
+        assert_eq!(
+            VertexOrdering::parse("natural").unwrap(),
+            VertexOrdering::Natural
+        );
+        assert_eq!(
+            VertexOrdering::parse("degree").unwrap(),
+            VertexOrdering::Degree
+        );
+        let err = VertexOrdering::parse("random").unwrap_err();
+        assert!(err.contains("unknown ordering"), "{err}");
+        assert!(err.contains("natural") && err.contains("degree"), "{err}");
+        for o in VertexOrdering::ALL {
+            assert_eq!(VertexOrdering::parse(o.name()).unwrap(), o);
+        }
+        assert_eq!(VertexOrdering::default(), VertexOrdering::Natural);
+    }
+
+    #[test]
+    fn identity_and_inverse_round_trip() {
+        let r = Relabeling::identity(5);
+        assert!(r.is_identity());
+        let g = fixture();
+        let r = Relabeling::degree_descending(&g);
+        assert_eq!(r.len(), 6);
+        for u in 0..6u32 {
+            assert_eq!(r.unmap(r.map(u)), u);
+            assert_eq!(r.map(r.unmap(u)), u);
+        }
+    }
+
+    #[test]
+    fn degree_descending_puts_hubs_first() {
+        let g = fixture();
+        let r = Relabeling::degree_descending(&g);
+        // node 1 has degree 3 — it must get rank 0
+        assert_eq!(r.map(1), 0);
+        let degs: Vec<usize> = (0..6u32).map(|new| g.degree(r.unmap(new))).collect();
+        for w in degs.windows(2) {
+            assert!(w[0] >= w[1], "degrees not descending: {degs:?}");
+        }
+        // determinism: equal degrees keep old-id order
+        assert_eq!(r, Relabeling::degree_descending(&g));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a permutation")]
+    fn from_order_rejects_duplicates() {
+        Relabeling::from_order(vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn relabel_preserves_structure() {
+        let g = fixture();
+        let r = Relabeling::degree_descending(&g);
+        let h = relabel(&g, &r);
+        assert!(h.validate().is_ok());
+        assert_eq!(h.arc_count(), g.arc_count());
+        assert_eq!(h.dyad_count(), g.dyad_count());
+        // every arc maps: u -> v in g iff map(u) -> map(v) in h
+        for u in 0..6u32 {
+            for v in 0..6u32 {
+                if u != v {
+                    assert_eq!(
+                        GraphView::has_arc(&g, u, v),
+                        GraphView::has_arc(&h, r.map(u), r.map(v)),
+                        "arc ({u},{v})"
+                    );
+                }
+            }
+        }
+        // parallel ingest is bit-identical
+        assert_eq!(relabel_with(&g, &r, 4), h);
+    }
+
+    #[test]
+    fn dir_split_matches_the_source_view() {
+        for seed in 0..4 {
+            let g = generators::power_law(120, 2.2, 5.0, seed);
+            let s = DirSplit::build(&g);
+            assert_eq!(GraphView::node_count(&s), g.node_count());
+            assert_eq!(GraphView::arc_count(&s), g.arc_count());
+            assert_eq!(GraphView::entry_count(&s), g.entry_count());
+            for u in 0..g.node_count() as u32 {
+                let a: Vec<(u32, u8)> = g.neighbors(u).collect();
+                let b: Vec<(u32, u8)> = s.neighbors(u).collect();
+                assert_eq!(a, b, "seed {seed} node {u}");
+                assert_eq!(GraphView::degree(&s, u), GraphView::degree(&g, u));
+                assert_eq!(GraphView::out_degree(&s, u), GraphView::out_degree(&g, u));
+                assert_eq!(GraphView::in_degree(&s, u), GraphView::in_degree(&g, u));
+                assert_eq!(s.reciprocal_degree(u), g.reciprocal_degree(u));
+                for v in 0..g.node_count() as u32 {
+                    if u != v {
+                        assert_eq!(
+                            s.dyad_bits(u, v),
+                            GraphView::dyad_bits(&g, u, v),
+                            "seed {seed} dyad ({u},{v})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dir_split_runs_are_sorted_and_disjoint() {
+        let g = fixture();
+        let s = DirSplit::build(&g);
+        for u in 0..6u32 {
+            let (recip, out, inn) = s.runs(u);
+            for run in [recip, out, inn] {
+                for w in run.windows(2) {
+                    assert!(w[0] < w[1], "run not strictly ascending");
+                }
+            }
+            let mut all: Vec<u32> = [recip, out, inn].concat();
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), recip.len() + out.len() + inn.len());
+        }
+        // node 1: recip {0}, out {2}, in {3}
+        assert_eq!(s.runs(1), (&[0u32][..], &[2u32][..], &[3u32][..]));
+    }
+
+    #[test]
+    fn dir_split_nth_matches_linear_iteration() {
+        // block-skipping positional seek == skipping one by one, from
+        // every start offset (this is the parallel engine's chunk-seat
+        // path on degree-ordered rows)
+        let g = generators::power_law(80, 2.1, 6.0, 3);
+        let s = DirSplit::build(&g);
+        for u in 0..g.node_count() as u32 {
+            let full: Vec<(u32, u8)> = s.neighbors(u).collect();
+            for start in 0..=full.len() {
+                let seek: Vec<(u32, u8)> = s.neighbors(u).skip(start).collect();
+                assert_eq!(seek, full[start..], "node {u} start {start}");
+                let mut it = s.neighbors(u);
+                assert_eq!(it.nth(start), full.get(start).copied(), "node {u} nth {start}");
+            }
+        }
+    }
+
+    #[test]
+    fn degree_split_composes_both_passes() {
+        let g = generators::power_law(200, 2.3, 6.0, 9);
+        let (r, s) = degree_split(&g, 2);
+        assert_eq!(r.len(), 200);
+        assert_eq!(GraphView::entry_count(&s), g.entry_count());
+        // rank 0 is a maximum-degree node
+        let max_deg = (0..200u32).map(|u| g.degree(u)).max().unwrap();
+        assert_eq!(GraphView::degree(&s, 0), max_deg);
+    }
+}

@@ -1,0 +1,322 @@
+//! `GraphView` — the one read interface every census engine walks.
+//!
+//! PRs 1–4 grew three parallel graph read paths: the owned CSR, the
+//! zero-copy mmap CSR (both behind [`CsrGraph`]) and the mutable
+//! [`DeltaOverlay`]. Each was hand-specialized inside engines and the
+//! streaming scanner, which blocked representation-level speedups
+//! (degree relabeling, direction-split neighborhoods) from reaching
+//! every engine at once. `GraphView` collapses those paths into one
+//! trait: ascending merged-neighborhood iteration with the 2-bit dyad
+//! direction encoding, O(log deg) dyad lookup, and the collapsed
+//! (manhattan) iteration space the parallel scheduler chunks over.
+//!
+//! Implementors:
+//!
+//! * [`CsrGraph`] — owned *and* mmap-backed storage (one impl; the
+//!   slice accessors are already storage-agnostic);
+//! * [`DeltaOverlay`] — the streaming overlay (merged base + override
+//!   reads);
+//! * [`DirSplit`](super::relabel::DirSplit) — the direction-split
+//!   preprocessed form (reciprocal / out-only / in-only runs).
+//!
+//! Every engine in [`crate::census`] is generic over `GraphView`, so a
+//! census over any of these is the *same monomorphized kernel* — and
+//! tests assert the results are byte-identical across views.
+
+use std::borrow::Cow;
+
+use super::csr::{CsrGraph, PackedEdge};
+use super::overlay::DeltaOverlay;
+
+/// Read-only view of a simple directed graph in the crate's 2-bit dyad
+/// encoding. All neighbor iteration is in ascending neighbor-id order
+/// (the invariant every merged two-pointer walk relies on); direction
+/// bits are `0b01` = arc to the neighbor, `0b10` = arc from the
+/// neighbor, `0b11` = reciprocal, and a returned `0` from
+/// [`GraphView::dyad_bits`] means the dyad is null.
+///
+/// `Sync` is a supertrait: views are shared read-only across executor
+/// seats by the parallel engine.
+pub trait GraphView: Sync {
+    /// Ascending `(neighbor, direction bits)` iterator over one node's
+    /// connected neighbors.
+    type Neighbors<'a>: Iterator<Item = (u32, u8)> + 'a
+    where
+        Self: 'a;
+
+    /// Number of nodes.
+    fn node_count(&self) -> usize;
+
+    /// Number of directed arcs (a reciprocal dyad counts as two).
+    fn arc_count(&self) -> u64;
+
+    /// The merged neighborhood of `u`, ascending by neighbor id.
+    fn neighbors(&self, u: u32) -> Self::Neighbors<'_>;
+
+    /// Direction bits of the ordered pair `(u, v)` from `u`'s
+    /// perspective (`0` = null dyad).
+    fn dyad_bits(&self, u: u32, v: u32) -> u8;
+
+    /// Undirected degree (distinct connected neighbors).
+    fn degree(&self, u: u32) -> usize {
+        self.neighbors(u).count()
+    }
+
+    /// Total adjacency entries (2 × connected dyads) — the length of
+    /// the collapsed iteration space the parallel engine schedules.
+    fn entry_count(&self) -> usize;
+
+    /// CSR-style offsets into the collapsed entry space (`n + 1`
+    /// monotone entries, `offsets[u+1] - offsets[u] == degree(u)`).
+    /// Borrowed where the representation already stores them; computed
+    /// in O(n + entries) otherwise. The parallel engine fetches this
+    /// once per census and seats scheduler chunks by binary search.
+    fn flat_offsets(&self) -> Cow<'_, [usize]>;
+
+    /// True if the arc `u -> v` exists.
+    fn has_arc(&self, u: u32, v: u32) -> bool {
+        self.dyad_bits(u, v) & 0b01 != 0
+    }
+
+    /// True if at least one arc connects `u` and `v` (the paper's `uÂv`
+    /// relation).
+    fn is_neighbor(&self, u: u32, v: u32) -> bool {
+        self.dyad_bits(u, v) != 0
+    }
+
+    /// Out-degree hint (arcs leaving `u`). O(deg) default; preprocessed
+    /// forms override with O(1) run arithmetic.
+    fn out_degree(&self, u: u32) -> usize {
+        self.neighbors(u).filter(|&(_, b)| b & 0b01 != 0).count()
+    }
+
+    /// In-degree hint (arcs entering `u`).
+    fn in_degree(&self, u: u32) -> usize {
+        self.neighbors(u).filter(|&(_, b)| b & 0b10 != 0).count()
+    }
+
+    /// Reciprocal-degree hint (mutual dyads at `u`) — the load-balance
+    /// signal degree-ordering keys on for mutual-heavy graphs.
+    fn reciprocal_degree(&self, u: u32) -> usize {
+        self.neighbors(u).filter(|&(_, b)| b == 0b11).count()
+    }
+}
+
+/// Ascending `(neighbor, bits)` iterator over a packed CSR row.
+pub struct CsrNeighbors<'a> {
+    inner: std::slice::Iter<'a, PackedEdge>,
+}
+
+impl CsrNeighbors<'_> {
+    #[inline]
+    fn unpack(e: &PackedEdge) -> (u32, u8) {
+        (e.nbr(), (e.0 & 0b11) as u8)
+    }
+}
+
+impl Iterator for CsrNeighbors<'_> {
+    type Item = (u32, u8);
+
+    #[inline]
+    fn next(&mut self) -> Option<(u32, u8)> {
+        self.inner.next().map(Self::unpack)
+    }
+
+    /// O(1) via the slice iterator — `neighbors(u).skip(k)` seats a
+    /// scheduler chunk mid-row without replaying the prefix.
+    #[inline]
+    fn nth(&mut self, n: usize) -> Option<(u32, u8)> {
+        self.inner.nth(n).map(Self::unpack)
+    }
+
+    #[inline]
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.inner.size_hint()
+    }
+}
+
+impl ExactSizeIterator for CsrNeighbors<'_> {}
+
+impl GraphView for CsrGraph {
+    type Neighbors<'a> = CsrNeighbors<'a>
+    where
+        Self: 'a;
+
+    #[inline]
+    fn node_count(&self) -> usize {
+        CsrGraph::node_count(self)
+    }
+
+    #[inline]
+    fn arc_count(&self) -> u64 {
+        CsrGraph::arc_count(self)
+    }
+
+    #[inline]
+    fn neighbors(&self, u: u32) -> CsrNeighbors<'_> {
+        CsrNeighbors {
+            inner: self.row(u).iter(),
+        }
+    }
+
+    #[inline]
+    fn dyad_bits(&self, u: u32, v: u32) -> u8 {
+        self.find_entry(u, v).map_or(0, |e| (e.0 & 0b11) as u8)
+    }
+
+    #[inline]
+    fn degree(&self, u: u32) -> usize {
+        CsrGraph::degree(self, u)
+    }
+
+    #[inline]
+    fn entry_count(&self) -> usize {
+        CsrGraph::entry_count(self)
+    }
+
+    #[inline]
+    fn flat_offsets(&self) -> Cow<'_, [usize]> {
+        Cow::Borrowed(self.offsets())
+    }
+
+    #[inline]
+    fn out_degree(&self, u: u32) -> usize {
+        CsrGraph::out_degree(self, u)
+    }
+
+    #[inline]
+    fn in_degree(&self, u: u32) -> usize {
+        CsrGraph::in_degree(self, u)
+    }
+}
+
+impl GraphView for DeltaOverlay {
+    type Neighbors<'a> = super::overlay::OverlayRow<'a>
+    where
+        Self: 'a;
+
+    #[inline]
+    fn node_count(&self) -> usize {
+        DeltaOverlay::node_count(self)
+    }
+
+    #[inline]
+    fn arc_count(&self) -> u64 {
+        DeltaOverlay::arc_count(self)
+    }
+
+    #[inline]
+    fn neighbors(&self, u: u32) -> super::overlay::OverlayRow<'_> {
+        DeltaOverlay::neighbors(self, u)
+    }
+
+    #[inline]
+    fn dyad_bits(&self, u: u32, v: u32) -> u8 {
+        DeltaOverlay::dyad_bits(self, u, v)
+    }
+
+    #[inline]
+    fn degree(&self, u: u32) -> usize {
+        DeltaOverlay::degree(self, u)
+    }
+
+    #[inline]
+    fn entry_count(&self) -> usize {
+        (self.dyad_count() * 2) as usize
+    }
+
+    fn flat_offsets(&self) -> Cow<'_, [usize]> {
+        let n = DeltaOverlay::node_count(self);
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for u in 0..n as u32 {
+            acc += DeltaOverlay::degree(self, u);
+            offsets.push(acc);
+        }
+        debug_assert_eq!(acc, GraphView::entry_count(self));
+        Cow::Owned(offsets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_arcs;
+    use crate::graph::overlay::EdgeOp;
+    use std::sync::Arc;
+
+    fn fixture() -> CsrGraph {
+        from_arcs(6, &[(0, 1), (1, 0), (1, 2), (3, 1), (4, 5), (5, 4)])
+    }
+
+    #[test]
+    fn csr_view_matches_inherent_accessors() {
+        let g = fixture();
+        assert_eq!(GraphView::node_count(&g), 6);
+        assert_eq!(GraphView::arc_count(&g), 6);
+        assert_eq!(GraphView::entry_count(&g), g.entry_count());
+        assert_eq!(GraphView::flat_offsets(&g).as_ref(), g.offsets());
+        let row1: Vec<(u32, u8)> = g.neighbors(1).collect();
+        assert_eq!(row1, vec![(0, 0b11), (2, 0b01), (3, 0b10)]);
+        assert_eq!(g.dyad_bits(1, 0), 0b11);
+        assert_eq!(g.dyad_bits(2, 1), 0b10);
+        assert_eq!(g.dyad_bits(0, 4), 0);
+        assert!(GraphView::has_arc(&g, 1, 2) && !GraphView::has_arc(&g, 2, 1));
+        assert!(GraphView::is_neighbor(&g, 2, 1));
+        assert_eq!(GraphView::out_degree(&g, 1), 2);
+        assert_eq!(GraphView::in_degree(&g, 1), 2);
+        assert_eq!(g.reciprocal_degree(1), 1);
+        assert_eq!(g.reciprocal_degree(4), 1);
+    }
+
+    #[test]
+    fn csr_neighbors_nth_is_positional() {
+        let g = from_arcs(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]);
+        let mut it = g.neighbors(0);
+        assert_eq!(it.nth(2), Some((3, 0b01)));
+        assert_eq!(it.next(), Some((4, 0b01)));
+        assert_eq!(it.next(), None);
+        let skipped: Vec<u32> = g.neighbors(0).skip(1).map(|(v, _)| v).collect();
+        assert_eq!(skipped, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn overlay_view_tracks_edits() {
+        let mut o = DeltaOverlay::new(Arc::new(fixture()));
+        o.apply(EdgeOp::Insert(0, 2));
+        o.apply(EdgeOp::Delete(4, 5));
+        assert_eq!(GraphView::node_count(&o), 6);
+        assert_eq!(GraphView::arc_count(&o), 6);
+        // dyads: {0,1} {1,2} {1,3} {4,5} {0,2} = 5 connected
+        assert_eq!(GraphView::entry_count(&o), 10);
+        let offs = GraphView::flat_offsets(&o);
+        assert_eq!(offs.len(), 7);
+        assert_eq!(*offs.last().unwrap(), 10);
+        for u in 0..6u32 {
+            assert_eq!(
+                offs[u as usize + 1] - offs[u as usize],
+                GraphView::degree(&o, u),
+                "node {u}"
+            );
+        }
+        assert_eq!(o.dyad_bits(0, 2), 0b01);
+        assert_eq!(GraphView::dyad_bits(&o, 5, 4), 0b01);
+    }
+
+    #[test]
+    fn clean_overlay_and_base_agree_entirely() {
+        let g = fixture();
+        let o = DeltaOverlay::new(Arc::new(g.clone()));
+        assert_eq!(GraphView::entry_count(&o), GraphView::entry_count(&g));
+        assert_eq!(
+            GraphView::flat_offsets(&o).as_ref(),
+            GraphView::flat_offsets(&g).as_ref()
+        );
+        for u in 0..6u32 {
+            let a: Vec<(u32, u8)> = g.neighbors(u).collect();
+            let b: Vec<(u32, u8)> = GraphView::neighbors(&o, u).collect();
+            assert_eq!(a, b, "node {u}");
+        }
+    }
+}

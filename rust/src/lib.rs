@@ -7,8 +7,12 @@
 //! The crate provides, as a library:
 //!
 //! * [`graph`] — the paper's compact CSR graph structure (Fig 7) with
-//!   2-bit edge-direction encoding, deterministic scale-free generators,
-//!   I/O, and degree / power-law analysis (Fig 6).
+//!   2-bit edge-direction encoding, the [`graph::GraphView`] trait every
+//!   census engine is generic over (owned / mmap / overlay /
+//!   direction-split views census byte-identically), census-invariant
+//!   degree-descending relabeling ([`graph::relabel`]), deterministic
+//!   scale-free generators, I/O, and degree / power-law analysis
+//!   (Fig 6).
 //! * [`census`] — the triad taxonomy (64 tricodes → 16 isomorphism
 //!   classes), a naive `O(n^3)` oracle, Batagelj–Mrvar's `O(m)` census
 //!   (Fig 5), the merged-traversal optimized variant (Fig 8), Moody's

@@ -46,7 +46,8 @@ use triadic::coordinator::{
 };
 use triadic::error::{Context, Error, Result};
 use triadic::figures::{self, Scale};
-use triadic::graph::{degree, io, CsrGraph, EdgeOp};
+use triadic::graph::relabel::{self, DirSplit, Relabeling};
+use triadic::graph::{degree, io, CsrGraph, EdgeOp, VertexOrdering};
 use triadic::sched::{Executor, ExecutorConfig, Policy};
 use triadic::simulator::{
     simulate, Machine, NumaMachine, SuperdomeMachine, WorkloadProfile, XmtMachine,
@@ -61,25 +62,30 @@ COMMANDS
   census    --graph patents|orkut|web [--nodes N] [--seed S] [--input FILE]
             [--threads T] [--policy static|dynamic|guided[:chunk]]
             [--engine naive|bm|merged|parallel|moody] [--pool-threads W]
-            [--backend auto|sparse] [--artifacts DIR] [--mmap]
+            [--order natural|degree] [--backend auto|sparse]
+            [--artifacts DIR] [--mmap]
   generate  --graph ... --out FILE [--format txt|bin|v2]
   convert   --input FILE --out FILE [--threads T] [--verify]
   smoke     [--nodes N] [--threads T] [--seed S] [--engine E]
-            [--pool-threads W] [--json FILE]
+            [--pool-threads W] [--order natural|degree] [--json FILE]
   figures   [--fig 6|9|10|11|12|13|sched|all] [--scale small|full] [--out DIR]
   simulate  --machine xmt|xmt512|numa|superdome --graph ... [--procs 1,2,...]
   monitor   [--hosts N] [--rate EPS] [--duration S] [--window S]
             [--attack scan|ddos|relay|botnet|all]
   stream    --input FILE [--nodes N] [--base FILE] [--batch K]
-            [--threads T] [--pool-threads W] [--compact-every B]
-            [--verify-every B] [--oracle] [--json FILE]
+            [--threads T] [--pool-threads W] [--order natural|degree]
+            [--compact-every B] [--verify-every B] [--oracle] [--json FILE]
   serve     [--listen ADDR] [--stdin] [--artifacts DIR] [--threads T]
             [--trusted] [--engine E] [--pool-threads W] [--max-jobs K]
             [--job-workers J] [--max-request-nodes N]
   client    [--addr HOST:PORT] [--verb census|status|metrics|poll|cancel|shutdown]
             [--input FILE | --graph patents|orkut|web --nodes N [--seed S]]
-            [--engine E] [--threads T] [--policy P] [--classes 030T,030C]
-            [--job ID] [--raw]
+            [--engine E] [--threads T] [--policy P] [--order natural|degree]
+            [--classes 030T,030C] [--job ID] [--raw]
+
+`--order degree` renumbers vertices in descending degree order and
+direction-splits neighborhoods before the sparse census runs; the
+census itself is invariant (byte-identical tables), only timing moves.
 ";
 
 fn main() {
@@ -155,6 +161,9 @@ fn cmd_census(args: &Args) -> Result<()> {
     let policy = Policy::parse(&args.str_or("policy", "dynamic")).map_err(Error::msg)?;
     let engine_name = args.str_or("engine", "parallel");
     let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
+    // VertexOrdering::parse's error names the valid orderings — the
+    // CLI-parse side of the "unknown value" contract
+    let order = VertexOrdering::parse(&args.str_or("order", "natural")).map_err(Error::msg)?;
     let backend = args.str_or("backend", "auto");
     let artifacts = args.str_or("artifacts", "artifacts");
     args.reject_unknown().map_err(Error::msg)?;
@@ -171,13 +180,28 @@ fn cmd_census(args: &Args) -> Result<()> {
             workers: pool_threads,
             max_concurrent_jobs: 0,
         });
-        let registry = EngineRegistry::builtin(sparse);
-        let engine = registry.get_or_err(&engine_name).map_err(Error::msg)?;
-        let run = engine.census(&g, &exec);
+        let (run, engine_label) = match order {
+            VertexOrdering::Natural => {
+                let registry = EngineRegistry::builtin(sparse);
+                let engine = registry.get_or_err(&engine_name).map_err(Error::msg)?;
+                (engine.census(&g, &exec), engine.name().to_string())
+            }
+            VertexOrdering::Degree => {
+                let t_prep = std::time::Instant::now();
+                let (_relabeling, split) = relabel::degree_split(&g, threads.max(1));
+                eprintln!(
+                    "# degree ordering: relabel + direction-split in {:.3}s",
+                    t_prep.elapsed().as_secs_f64()
+                );
+                let registry = EngineRegistry::<DirSplit>::builtin(sparse);
+                let engine = registry.get_or_err(&engine_name).map_err(Error::msg)?;
+                (engine.census(&split, &exec), engine.name().to_string())
+            }
+        };
         println!(
-            "# backend=sparse engine={} threads={threads} pool_workers={} policy={} \
-             wall={:.3}s imbalance={:.2} steals={}",
-            engine.name(),
+            "# backend=sparse engine={engine_label} order={} threads={threads} \
+             pool_workers={} policy={} wall={:.3}s imbalance={:.2} steals={}",
+            order.name(),
             exec.worker_count(),
             policy.name(),
             run.stats.wall,
@@ -193,11 +217,14 @@ fn cmd_census(args: &Args) -> Result<()> {
             pool_threads,
             ..CoordinatorConfig::default()
         })?;
-        let out = coord.census(&g)?;
+        let out = coord.census_ordered(&g, Some(order))?;
+        // out.ordering is what actually ran — dense routes ignore the
+        // requested ordering and report natural
         println!(
-            "# backend={:?} engine={} dense_enabled={} wall={:.3}s",
+            "# backend={:?} engine={} order={} dense_enabled={} wall={:.3}s",
             out.route,
             coord.engine_name(),
+            out.ordering.name(),
             coord.dense_enabled(),
             out.seconds
         );
@@ -298,6 +325,7 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     let seed = args.get_or("seed", 2012u64).map_err(Error::msg)?;
     let engine_name = args.str_or("engine", "parallel");
     let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
+    let order = VertexOrdering::parse(&args.str_or("order", "natural")).map_err(Error::msg)?;
     let json_path = args.opt_str("json");
     args.reject_unknown().map_err(Error::msg)?;
 
@@ -348,6 +376,26 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     let _ = std::fs::remove_file(&path);
     if mapped_run.census != want {
         bail!("census over the mmap-loaded graph disagrees with the in-memory census");
+    }
+
+    // degree-ordering cross-check: the relabeled + direction-split
+    // census must be byte-identical (a census is a graph invariant)
+    if order == VertexOrdering::Degree {
+        let t6 = std::time::Instant::now();
+        let (_relabeling, split) = relabel::degree_split(&g, threads.max(1));
+        let t_prep = t6.elapsed().as_secs_f64();
+        let split_registry = EngineRegistry::<DirSplit>::builtin(cfg);
+        let split_engine = split_registry.get_or_err(&engine_name).map_err(Error::msg)?;
+        let t7 = std::time::Instant::now();
+        let ordered_run = split_engine.census(&split, &exec);
+        let t_ordered = t7.elapsed().as_secs_f64();
+        if ordered_run.census != want {
+            bail!("degree-ordered census disagrees with the natural-order census");
+        }
+        println!(
+            "smoke ordering: prep={t_prep:.3}s census_degree={t_ordered:.3}s \
+             (natural {t_par:.3}s) — tables identical"
+        );
     }
 
     println!(
@@ -593,6 +641,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
     let compact_every = args.get_or("compact-every", 0usize).map_err(Error::msg)?;
     let verify_every = args.get_or("verify-every", 0usize).map_err(Error::msg)?;
+    let order = VertexOrdering::parse(&args.str_or("order", "natural")).map_err(Error::msg)?;
     let oracle = args.flag("oracle");
     let json_path = args.opt_str("json");
     args.reject_unknown().map_err(Error::msg)?;
@@ -626,6 +675,33 @@ fn cmd_stream(args: &Args) -> Result<()> {
             CsrGraph::empty(n)
         }
     };
+    // degree ordering: relabel the base and map every op's endpoints
+    // through the same permutation. The census is relabeling-invariant,
+    // so the final table is byte-identical to a natural-order replay.
+    let (base, ops) = if order == VertexOrdering::Degree {
+        let r = Relabeling::degree_descending(&base);
+        // ids outside the base stay as-is — the overlay rejects them
+        // per-op either way, keeping the rejected count unchanged
+        let m = |x: u32| {
+            if (x as usize) < r.len() {
+                r.map(x)
+            } else {
+                x
+            }
+        };
+        let mapped: Vec<EdgeOp> = ops
+            .iter()
+            .map(|op| match *op {
+                EdgeOp::Insert(u, v) => EdgeOp::Insert(m(u), m(v)),
+                EdgeOp::Delete(u, v) => EdgeOp::Delete(m(u), m(v)),
+            })
+            .collect();
+        let relabeled = relabel::relabel_with(&base, &r, threads.max(1));
+        eprintln!("stream: degree-descending relabel applied to base + ops");
+        (relabeled, mapped)
+    } else {
+        (base, ops)
+    };
     let n = base.node_count();
     eprintln!(
         "stream: base n={} arcs={} | {} ops, batch={batch}, compact_every={compact_every}",
@@ -643,7 +719,9 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let seed_seconds = t_seed.elapsed().as_secs_f64();
 
     let verify = |sc: &StreamingCensus, what: &str| -> Result<()> {
-        let want = merged::census(&sc.overlay().compact());
+        // the merged engine recomputes straight over the overlay view —
+        // no compaction materialization on the verify path
+        let want = merged::census(sc.overlay());
         if sc.census() != want {
             bail!("incremental census diverged from the full recompute ({what})");
         }
@@ -849,6 +927,9 @@ fn client_request(args: &Args) -> Result<CensusRequest> {
     if let Some(policy) = args.opt_str("policy") {
         req = req.policy(Policy::parse(&policy).map_err(Error::msg)?);
     }
+    if let Some(order) = args.opt_str("order") {
+        req = req.ordering(VertexOrdering::parse(&order).map_err(Error::msg)?);
+    }
     if let Some(classes) = args.opt_str("classes") {
         let mut parsed = Vec::new();
         for label in classes.split(',').filter(|s| !s.is_empty()) {
@@ -868,10 +949,11 @@ fn print_response(resp: &CensusResponse, raw: bool) {
         return;
     }
     println!(
-        "# job={} engine={} route={} source={} nodes={} arcs={} seconds={:.3}",
+        "# job={} engine={} route={} order={} source={} nodes={} arcs={} seconds={:.3}",
         resp.job,
         resp.provenance.engine,
         resp.provenance.route,
+        resp.provenance.ordering,
         resp.provenance.source,
         resp.provenance.nodes,
         resp.provenance.arcs,

@@ -9,7 +9,8 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use triadic::census::{merged, Census, EngineRegistry, StreamingCensus, TriadType};
-use triadic::graph::{CsrGraph, EdgeOp, GraphBuilder};
+use triadic::graph::relabel::{self, DirSplit, Relabeling};
+use triadic::graph::{CsrGraph, DeltaOverlay, EdgeOp, GraphBuilder};
 use triadic::sched::Executor;
 
 const FIXTURES: [&str; 6] = [
@@ -117,6 +118,79 @@ fn every_registered_engine_reproduces_the_golden_censuses() {
                 run.census, want,
                 "engine {engine_name} disagrees with hand count on {name}"
             );
+        }
+    }
+}
+
+#[test]
+fn every_graph_view_reproduces_the_golden_censuses() {
+    // owned CSR, mmap-backed CSR, delta overlay and direction-split
+    // views of the same fixture must census byte-identically through
+    // every registered engine — the GraphView acceptance bar, pinned
+    // to hand-counted numbers
+    let exec = Executor::with_workers(2);
+    let csr_reg: EngineRegistry = EngineRegistry::default();
+    let overlay_reg = EngineRegistry::<DeltaOverlay>::default();
+    let split_reg = EngineRegistry::<DirSplit>::default();
+    for name in FIXTURES {
+        let g = load_graph(name);
+        let want = load_census(name);
+
+        // mmap round trip
+        let path = std::env::temp_dir().join(format!("triadic_golden_{name}.csr"));
+        triadic::graph::io::write_binary_v2_file(&g, &path).unwrap();
+        let mapped = triadic::graph::io::load_mmap_file(&path).unwrap();
+        assert!(mapped.is_mapped(), "{name}: v2 load did not map");
+
+        let overlay = DeltaOverlay::new(Arc::new(g.clone()));
+        let split = DirSplit::build(&g);
+
+        for engine_name in csr_reg.names() {
+            let owned = csr_reg.get(engine_name).unwrap().census(&g, &exec).census;
+            let via_map = csr_reg.get(engine_name).unwrap().census(&mapped, &exec).census;
+            let via_overlay = overlay_reg
+                .get(engine_name)
+                .unwrap()
+                .census(&overlay, &exec)
+                .census;
+            let via_split = split_reg
+                .get(engine_name)
+                .unwrap()
+                .census(&split, &exec)
+                .census;
+            assert_eq!(owned, want, "{engine_name} owned on {name}");
+            assert_eq!(via_map, want, "{engine_name} mmap on {name}");
+            assert_eq!(via_overlay, want, "{engine_name} overlay on {name}");
+            assert_eq!(via_split, want, "{engine_name} dir-split on {name}");
+        }
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+#[test]
+fn degree_relabeling_preserves_the_golden_censuses() {
+    let exec = Executor::with_workers(2);
+    let registry: EngineRegistry = EngineRegistry::default();
+    let split_reg = EngineRegistry::<DirSplit>::default();
+    for name in FIXTURES {
+        let g = load_graph(name);
+        let want = load_census(name);
+        let r = Relabeling::degree_descending(&g);
+        let relabeled = relabel::relabel(&g, &r);
+        let (_, split) = relabel::degree_split(&g, 2);
+        for engine_name in registry.names() {
+            let on_relabeled = registry
+                .get(engine_name)
+                .unwrap()
+                .census(&relabeled, &exec)
+                .census;
+            let on_split = split_reg
+                .get(engine_name)
+                .unwrap()
+                .census(&split, &exec)
+                .census;
+            assert_eq!(on_relabeled, want, "{engine_name} relabeled {name}");
+            assert_eq!(on_split, want, "{engine_name} degree-split {name}");
         }
     }
 }

@@ -81,6 +81,73 @@ fn prop_census_invariant_under_relabeling() {
 }
 
 #[test]
+fn prop_every_engine_invariant_under_random_relabeling() {
+    // census invariance under node relabeling, for every registered
+    // engine — random permutations via the Relabeling machinery, plus
+    // the degree-descending pass and its direction-split form
+    use triadic::census::EngineRegistry;
+    use triadic::graph::relabel::{self, DirSplit, Relabeling};
+    use triadic::sched::Executor;
+
+    let exec = Executor::with_workers(2);
+    let registry: EngineRegistry = EngineRegistry::default();
+    let split_reg = EngineRegistry::<DirSplit>::default();
+    for seed in 0..6u64 {
+        let n = 20 + (seed % 15) as u32;
+        let g = random_digraph(n, (n as usize) * 4, seed * 29 + 1);
+        let mut rng = Rng::new(seed + 4242);
+        let mut order: Vec<u32> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let shuffled = relabel::relabel(&g, &Relabeling::from_order(order));
+        let degree = relabel::relabel(&g, &Relabeling::degree_descending(&g));
+        let (_, split) = relabel::degree_split(&g, 2);
+        for name in registry.names() {
+            let engine = registry.get(name).unwrap();
+            let want = engine.census(&g, &exec).census;
+            assert_eq!(engine.census(&shuffled, &exec).census, want, "{name} seed {seed}");
+            assert_eq!(engine.census(&degree, &exec).census, want, "{name} seed {seed}");
+            assert_eq!(
+                split_reg.get(name).unwrap().census(&split, &exec).census,
+                want,
+                "{name} split seed {seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_views_agree_on_random_graphs() {
+    // owned vs mmap vs overlay vs direction-split parity through the
+    // generic census kernels
+    use std::sync::Arc;
+    use triadic::graph::relabel::DirSplit;
+    use triadic::graph::DeltaOverlay;
+
+    for seed in 0..6u64 {
+        let g = random_digraph(60, 240, seed * 13 + 3);
+        let want = merged::census(&g);
+
+        let path = std::env::temp_dir().join(format!("triadic_prop_view_{seed}.csr"));
+        triadic::graph::io::write_binary_v2_file(&g, &path).unwrap();
+        let mapped = triadic::graph::io::load_mmap_file(&path).unwrap();
+        assert_eq!(merged::census(&mapped), want, "mmap seed {seed}");
+        let _ = std::fs::remove_file(path);
+
+        let overlay = DeltaOverlay::new(Arc::new(g.clone()));
+        assert_eq!(merged::census(&overlay), want, "overlay seed {seed}");
+        assert_eq!(naive::census(&overlay), want, "overlay naive seed {seed}");
+
+        let split = DirSplit::build(&g);
+        assert_eq!(merged::census(&split), want, "split seed {seed}");
+        assert_eq!(
+            triadic::census::batagelj_mrvar::census(&split),
+            want,
+            "split bm seed {seed}"
+        );
+    }
+}
+
+#[test]
 fn prop_adding_an_arc_only_moves_counts_up_the_lattice() {
     // adding one arc changes exactly n-2 triads, each to a class with
     // one more arc

@@ -66,6 +66,10 @@ fn batch_over_tcp_matches_the_merged_oracle() {
             .threads(3)
             .policy(Policy::Dynamic { chunk: 32 }),
         CensusRequest::generator("web", 200).seed(13).engine("moody"),
+        CensusRequest::generator("patents", 250)
+            .seed(14)
+            .engine("merged")
+            .ordering(triadic::graph::VertexOrdering::Degree),
     ];
     let oracles = vec![
         merged::census(&path_graph),
@@ -73,6 +77,7 @@ fn batch_over_tcp_matches_the_merged_oracle() {
         oracle_for("patents", 300, 11),
         oracle_for("orkut", 150, 12),
         oracle_for("web", 200, 13),
+        oracle_for("patents", 250, 14),
     ];
 
     let mut client = TriadicClient::connect(addr).unwrap();
@@ -84,7 +89,7 @@ fn batch_over_tcp_matches_the_merged_oracle() {
         assert_ne!(report.state, JobStateKind::Failed, "intake rejected: {req:?}");
         jobs.push(report.job);
     }
-    assert_eq!(jobs.len(), 5);
+    assert_eq!(jobs.len(), 6);
 
     // poll every handle to completion over the wire
     let deadline = Instant::now() + Duration::from_secs(300);
@@ -105,7 +110,7 @@ fn batch_over_tcp_matches_the_merged_oracle() {
         assert_eq!(resp.protocol_version, 1, "request {i}");
         assert_eq!(resp.job, job);
         assert_eq!(resp.provenance.nodes as usize, {
-            let expected = [400usize, 5, 300, 150, 200];
+            let expected = [400usize, 5, 300, 150, 200, 250];
             expected[i]
         });
     }
@@ -118,6 +123,10 @@ fn batch_over_tcp_matches_the_merged_oracle() {
         "batagelj-mrvar"
     );
     assert_eq!(client.wait(jobs[4]).unwrap().provenance.engine, "moody");
+    // the degree-ordered request censuses identically and records it
+    let ordered = client.wait(jobs[5]).unwrap();
+    assert_eq!(ordered.provenance.ordering, "degree");
+    assert_eq!(client.wait(jobs[0]).unwrap().provenance.ordering, "natural");
 
     // job state is shared across connections
     let mut second = TriadicClient::connect(addr).unwrap();
