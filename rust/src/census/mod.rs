@@ -51,8 +51,8 @@ pub mod types;
 pub use engine::{CensusEngine, EngineRegistry};
 pub use isotricode::{classify_tricode, tricode_of, TRICODE_TABLE};
 pub use parallel::{
-    census_parallel, census_parallel_cancellable, census_parallel_on, census_parallel_scoped,
-    Accumulation, ParallelConfig, ParallelRun,
+    census_parallel, census_parallel_cancellable, census_parallel_on, census_parallel_range,
+    census_parallel_scoped, Accumulation, ParallelConfig, ParallelRun,
 };
 pub use stream::{BatchReport, StreamStats, StreamingCensus};
 pub use types::{Census, TriadType};

@@ -186,8 +186,25 @@ fn census_with<G: GraphView>(
     runner: LoopRunner<'_>,
     cancel: &CancelToken,
 ) -> Option<ParallelRun> {
-    let len = g.entry_count();
     let n = g.node_count();
+    let mut run = census_entries_with(g, cfg, runner, cancel, 0, g.entry_count())?;
+    run.census.close_with_null(n);
+    Some(run)
+}
+
+/// Sweep the collapsed entry subrange `[base, end)` and return the raw
+/// non-null tallies — null closure is the caller's job, which is what
+/// lets shard partials sum exactly before closing once.
+fn census_entries_with<G: GraphView>(
+    g: &G,
+    cfg: &ParallelConfig,
+    runner: LoopRunner<'_>,
+    cancel: &CancelToken,
+    base: usize,
+    end: usize,
+) -> Option<ParallelRun> {
+    debug_assert!(base <= end && end <= g.entry_count());
+    let len = end - base;
     // fetched once per census: borrowed straight from CSR-shaped views,
     // an O(n) prefix sum over effective degrees for the overlay
     let offsets = g.flat_offsets();
@@ -203,7 +220,7 @@ fn census_with<G: GraphView>(
                 cancel,
                 |_tid| (),
                 |_acc, _tid, s, e| {
-                    walk_chunk(g, offsets, s, e, |u, v, bits| {
+                    walk_chunk(g, offsets, base + s, base + e, |u, v, bits| {
                         let mut sink = BankSlot {
                             slot: &bank.slots[bank.slot_of(u, v)],
                         };
@@ -221,7 +238,7 @@ fn census_with<G: GraphView>(
                 cancel,
                 |_tid| Census::zero(),
                 |acc, _tid, s, e| {
-                    walk_chunk(g, offsets, s, e, |u, v, bits| {
+                    walk_chunk(g, offsets, base + s, base + e, |u, v, bits| {
                         dyad_task(g, u, v, bits, acc);
                     });
                 },
@@ -237,9 +254,6 @@ fn census_with<G: GraphView>(
         // a partially swept census is a wrong census — discard it
         return None;
     }
-
-    let mut census = census;
-    census.close_with_null(n);
     Some(ParallelRun { census, stats })
 }
 
@@ -273,6 +287,38 @@ pub fn census_parallel_cancellable<G: GraphView>(
     cancel: &CancelToken,
 ) -> Option<ParallelRun> {
     census_with(g, cfg, LoopRunner::Pool(exec), cancel)
+}
+
+/// Partial parallel census of the contiguous vertex range `lo..hi`: the
+/// sweep covers exactly the collapsed entries `[offsets[lo], offsets[hi])`,
+/// so a set of ranges partitioning `0..n` yields partial tables that sum
+/// — class by class — to the whole-graph non-null tallies. The returned
+/// counts are **raw**: [`Census::close_with_null`] is *not* applied (the
+/// `003` slot stays zero), because the null count is a property of the
+/// whole graph and must be closed exactly once by whoever merges the
+/// shards. This is the worker-side entry of the distributed planner.
+/// Returns `None` if `cancel` fires mid-sweep.
+///
+/// Panics if the range is inverted or `hi` exceeds the node count —
+/// wire-facing callers validate first and answer `bad_request`.
+pub fn census_parallel_range<G: GraphView>(
+    g: &G,
+    cfg: &ParallelConfig,
+    exec: &Executor,
+    cancel: &CancelToken,
+    lo: usize,
+    hi: usize,
+) -> Option<ParallelRun> {
+    let n = g.node_count();
+    assert!(
+        lo <= hi && hi <= n,
+        "shard {lo}..{hi} out of bounds for {n} nodes"
+    );
+    let (base, end) = {
+        let offsets = g.flat_offsets();
+        (offsets[lo], offsets[hi])
+    };
+    census_entries_with(g, cfg, LoopRunner::Pool(exec), cancel, base, end)
 }
 
 /// Parallel triad census spawning scoped threads for this one call (the
@@ -441,6 +487,31 @@ mod tests {
         let len = GraphView::entry_count(&g);
         walk_chunk(&g, &offsets, 0, len, |u, v, b| csr.push((u, v, b)));
         assert_eq!(whole, csr);
+    }
+
+    #[test]
+    fn range_shards_sum_to_the_closed_census() {
+        let g = generators::power_law(300, 2.2, 6.0, 41);
+        let n = GraphView::node_count(&g);
+        let want = naive::census(&g);
+        let exec = Executor::with_workers(2);
+        let c = cfg(2, Policy::Dynamic { chunk: 16 }, Accumulation::PerThread);
+        // uneven cuts, including an empty shard and a single-node shard
+        for cuts in [
+            vec![0, n],
+            vec![0, 1, 1, 2, n / 3, n],
+            vec![0, n / 4, n / 2, 3 * n / 4, n],
+        ] {
+            let mut sum = Census::zero();
+            for w in cuts.windows(2) {
+                let part = census_parallel_range(&g, &c, &exec, &CancelToken::new(), w[0], w[1])
+                    .expect("fresh token never cancels");
+                assert_eq!(part.census[TriadType::T003], 0, "shards carry raw tallies");
+                sum += part.census;
+            }
+            sum.close_with_null(n);
+            assert_eq!(sum, want, "cuts {cuts:?}");
+        }
     }
 
     #[test]

@@ -51,6 +51,14 @@
 //! * **Transport** ([`server`], [`client`]): `repro serve --listen`
 //!   accepts TCP connections, one thread each; [`TriadicClient`] is the
 //!   library-side counterpart the `repro client` subcommand wraps.
+//! * **Distribution**: `repro worker` runs a sparse-only coordinator
+//!   behind the same server and honors the request-level `shard` field
+//!   (raw partial tallies over one vertex range); `repro serve
+//!   --workers a,b,c` makes the coordinator a planner that partitions
+//!   the collapsed triad space over `flat_offsets`, scatters shard
+//!   sub-jobs to the pool (retrying a shard on the next worker when one
+//!   disconnects), and merges the partials by exact summation —
+//!   byte-identical to a single-process run.
 //! * **Streams**: `stream_open` / `stream_apply` / `stream_query` /
 //!   `stream_compact` / `stream_close` maintain live incremental
 //!   censuses ([`crate::census::StreamingCensus`]) in a cross-connection
@@ -68,7 +76,8 @@ pub mod service;
 pub use client::TriadicClient;
 pub use protocol::{
     CensusRequest, CensusResponse, ErrorCode, GraphSource, JobReport, JobStateKind, Provenance,
-    SchedStats, StreamApplyReport, StreamOpened, StreamSnapshot, WireError, PROTOCOL_VERSION,
+    SchedStats, Shard, StreamApplyReport, StreamOpened, StreamSnapshot, WireError,
+    PROTOCOL_VERSION,
 };
 pub use router::{Route, Router, RoutingPolicy};
 pub use server::CensusServer;

@@ -449,6 +449,9 @@ pub enum ErrorCode {
     Cancelled,
     /// Server is shutting down and not accepting work.
     ShuttingDown,
+    /// A distributed shard could not be placed: every worker in the
+    /// pool failed or disconnected while holding it.
+    WorkerUnavailable,
     /// Anything else.
     Internal,
 }
@@ -466,6 +469,7 @@ impl ErrorCode {
             ErrorCode::GraphLoad => "graph_load",
             ErrorCode::Cancelled => "cancelled",
             ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::WorkerUnavailable => "worker_unavailable",
             ErrorCode::Internal => "internal",
         }
     }
@@ -484,6 +488,7 @@ impl ErrorCode {
             "graph_load" => ErrorCode::GraphLoad,
             "cancelled" => ErrorCode::Cancelled,
             "shutting_down" => ErrorCode::ShuttingDown,
+            "worker_unavailable" => ErrorCode::WorkerUnavailable,
             _ => ErrorCode::Internal,
         }
     }
@@ -668,6 +673,65 @@ impl GraphSource {
     }
 }
 
+/// A contiguous vertex range `lo..hi` of the collapsed triad space —
+/// the unit the distributed planner ships to one worker. A shard
+/// request censuses only the entries `[offsets[lo], offsets[hi])` and
+/// returns **raw non-null tallies** (the `003` slot stays zero): the
+/// null count is a whole-graph property the merging coordinator closes
+/// exactly once. Decode rejects inverted ranges; the upper bound is
+/// validated against the node count where the graph is resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Shard {
+    pub fn new(lo: usize, hi: usize) -> Shard {
+        Shard { lo, hi }
+    }
+
+    /// Vertices covered (`hi - lo`; empty shards are legal).
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    fn to_json(self) -> Json {
+        Json::Obj(vec![
+            ("lo".into(), Json::from(self.lo)),
+            ("hi".into(), Json::from(self.hi)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Shard, WireError> {
+        let bad = |m: String| WireError::new(ErrorCode::BadRequest, m);
+        let lo = v
+            .get("lo")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("shard.lo missing or not a non-negative integer".into()))?;
+        let hi = v
+            .get("hi")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("shard.hi missing or not a non-negative integer".into()))?;
+        if lo > hi {
+            return Err(bad(format!(
+                "shard range inverted: lo {lo} > hi {hi} (valid: 0 <= lo <= hi <= node count)"
+            )));
+        }
+        Ok(Shard { lo, hi })
+    }
+}
+
+impl fmt::Display for Shard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}..{}", self.lo, self.hi)
+    }
+}
+
 /// A census request: graph source plus per-request execution options.
 /// Build with the constructors + chained setters:
 ///
@@ -694,6 +758,11 @@ pub struct CensusRequest {
     pub ordering: Option<VertexOrdering>,
     /// Triad-class subset to return; `None` = the full 16-class census.
     pub classes: Option<Vec<TriadType>>,
+    /// Vertex-range restriction: census only the shard's slice of the
+    /// collapsed triad space and return raw (unclosed) tallies. Set by
+    /// the distributed planner on the sub-requests it ships to workers;
+    /// `None` = the whole graph, closed as usual.
+    pub shard: Option<Shard>,
 }
 
 impl CensusRequest {
@@ -705,6 +774,7 @@ impl CensusRequest {
             policy: None,
             ordering: None,
             classes: None,
+            shard: None,
         }
     }
 
@@ -765,6 +835,13 @@ impl CensusRequest {
         self
     }
 
+    /// Restrict the census to the vertex-range shard `lo..hi` (raw,
+    /// unclosed partial tallies — the distributed planner's sub-job).
+    pub fn shard(mut self, lo: usize, hi: usize) -> CensusRequest {
+        self.shard = Some(Shard::new(lo, hi));
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![("source".into(), self.source.to_json())];
         if let Some(e) = &self.engine {
@@ -784,6 +861,9 @@ impl CensusRequest {
                 "classes".into(),
                 Json::Arr(classes.iter().map(|t| Json::from(t.label())).collect()),
             ));
+        }
+        if let Some(shard) = self.shard {
+            pairs.push(("shard".into(), shard.to_json()));
         }
         Json::Obj(pairs)
     }
@@ -822,6 +902,13 @@ impl CensusRequest {
             }
             None => None,
         };
+        // inverted ranges are rejected here, at decode time; the upper
+        // bound is checked against the node count where the graph is
+        // resolved (also a bad_request, listing the valid range)
+        let shard = match v.get("shard") {
+            Some(s) => Some(Shard::from_json(s)?),
+            None => None,
+        };
         Ok(CensusRequest {
             source,
             engine,
@@ -829,6 +916,7 @@ impl CensusRequest {
             policy,
             ordering,
             classes,
+            shard,
         })
     }
 }
@@ -1652,6 +1740,10 @@ mod tests {
                 .policy(Policy::Dynamic { chunk: 128 })
                 .ordering(VertexOrdering::Degree),
             CensusRequest::path("/data/g.csr").ordering(VertexOrdering::Natural),
+            CensusRequest::path("/data/g.csr")
+                .engine("parallel")
+                .shard(1_000, 2_000),
+            CensusRequest::generator("web", 64).shard(0, 0),
         ];
         for req in reqs {
             let line = req.to_json().to_string();
@@ -1673,6 +1765,38 @@ mod tests {
             err.message.contains("natural") && err.message.contains("degree"),
             "decode error must list the valid orderings: {err}"
         );
+    }
+
+    #[test]
+    fn inverted_or_malformed_shards_are_rejected_at_decode() {
+        let inverted = Json::parse(
+            r#"{"source":{"kind":"path","path":"g.csr"},"shard":{"lo":10,"hi":3}}"#,
+        )
+        .unwrap();
+        let err = CensusRequest::from_json(&inverted).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(
+            err.message.contains("lo 10 > hi 3") && err.message.contains("node count"),
+            "decode error must state the valid range: {err}"
+        );
+        for bad in [
+            r#"{"source":{"kind":"path","path":"g.csr"},"shard":{"hi":3}}"#,
+            r#"{"source":{"kind":"path","path":"g.csr"},"shard":{"lo":-1,"hi":3}}"#,
+            r#"{"source":{"kind":"path","path":"g.csr"},"shard":{"lo":"a","hi":3}}"#,
+        ] {
+            let err = CensusRequest::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{bad}");
+        }
+        // equal bounds (an empty shard) are legal
+        let empty = Json::parse(
+            r#"{"source":{"kind":"path","path":"g.csr"},"shard":{"lo":5,"hi":5}}"#,
+        )
+        .unwrap();
+        let req = CensusRequest::from_json(&empty).unwrap();
+        assert_eq!(req.shard, Some(Shard::new(5, 5)));
+        assert!(req.shard.unwrap().is_empty());
+        assert_eq!(Shard::new(2, 7).len(), 5);
+        assert_eq!(Shard::new(2, 7).to_string(), "2..7");
     }
 
     #[test]
@@ -1787,6 +1911,7 @@ mod tests {
             ErrorCode::GraphLoad,
             ErrorCode::Cancelled,
             ErrorCode::ShuttingDown,
+            ErrorCode::WorkerUnavailable,
             ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), code);

@@ -281,6 +281,10 @@ fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError>
                 ("engine".into(), Json::from(coord.engine_name())),
                 ("pool_workers".into(), Json::from(coord.executor().worker_count())),
                 ("job_workers".into(), Json::from(coord.job_worker_count())),
+                (
+                    "distributed_workers".into(),
+                    Json::from(coord.worker_pool().len()),
+                ),
                 ("dense_enabled".into(), Json::Bool(coord.dense_enabled())),
                 (
                     "jobs_submitted".into(),

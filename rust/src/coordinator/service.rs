@@ -19,13 +19,16 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use super::client::TriadicClient;
 use super::protocol::{
     CensusRequest, CensusResponse, ErrorCode, GraphSource, JobReport, JobStateKind, Provenance,
-    SchedStats, WireError, PROTOCOL_VERSION,
+    SchedStats, Shard, WireError, PROTOCOL_VERSION,
 };
 use super::router::{Route, Router, RoutingPolicy};
 use crate::census::engine::ParallelEngine;
-use crate::census::{Census, CensusEngine, EngineRegistry, ParallelConfig, ParallelRun};
+use crate::census::{
+    census_parallel_range, Census, CensusEngine, EngineRegistry, ParallelConfig, ParallelRun,
+};
 use crate::error::{Context, Error, Result};
 use crate::graph::relabel::{self, DirSplit};
 use crate::graph::{generators, io, CsrGraph, GraphBuilder, GraphView, VertexOrdering};
@@ -79,6 +82,13 @@ pub struct CoordinatorConfig {
     /// abort the whole process on allocation failure. Path sources are
     /// exempt — the operator controls what is on disk.
     pub max_request_nodes: usize,
+    /// Worker pool for the distributed planner: `host:port` addresses
+    /// of `repro worker` processes. When non-empty, natural-ordering
+    /// census requests are partitioned into vertex-range shards over
+    /// `flat_offsets`, scattered to the workers as wire sub-jobs, and
+    /// merged by exact summation (byte-identical to a single-process
+    /// run). Empty = everything runs in-process.
+    pub workers: Vec<String>,
 }
 
 impl Default for CoordinatorConfig {
@@ -98,6 +108,7 @@ impl Default for CoordinatorConfig {
             max_concurrent_jobs: 0,
             job_workers: 0,
             max_request_nodes: 10_000_000,
+            workers: Vec::new(),
         }
     }
 }
@@ -513,6 +524,9 @@ struct Core {
     metrics: Arc<Metrics>,
     graphs: GraphStore,
     max_request_nodes: usize,
+    /// Distributed worker pool (`host:port` of `repro worker`
+    /// processes); empty = serve everything in-process.
+    workers: Vec<String>,
 }
 
 fn cancelled_error() -> WireError {
@@ -580,6 +594,20 @@ impl Core {
         let g = self.resolve_graph(&req.source)?;
         if cancel.is_cancelled() {
             return Err(cancelled_error());
+        }
+        // Distributed-planner paths. A request carrying a shard is the
+        // *leaf*: compute that slice's raw partial and return it. A
+        // whole-graph request on a coordinator with a worker pool is the
+        // *root*: partition, scatter to the workers, merge. (Degree
+        // ordering reshuffles vertex ids, so range shards would not
+        // compose; those requests run in-process below.)
+        if let Some(shard) = req.shard {
+            return self.serve_shard(req, &g, shard, cancel, job, t0);
+        }
+        if !self.workers.is_empty()
+            && matches!(req.ordering, None | Some(VertexOrdering::Natural))
+        {
+            return self.serve_distributed(req, &g, cancel, job, t0);
         }
         let (census, route, stats, engine, ordering) = self.run_route(
             &g,
@@ -776,6 +804,236 @@ impl Core {
         );
         Ok((run.census, route, Some(run.stats), engine_name, ordering))
     }
+
+    /// Serve the leaf of a distributed census: the *raw* partial tallies
+    /// of one vertex-range shard, computed by the range-restricted
+    /// parallel engine. The 003 slot stays zero — null closure is global
+    /// (`C(n,3)` minus everything) and happens exactly once, on the
+    /// coordinator that merges the partials.
+    ///
+    /// Inverted ranges never reach here (decode rejects them); ranges
+    /// past the graph's node count are only detectable once the source
+    /// is resolved, so they are rejected now, with the valid range.
+    fn serve_shard(
+        &self,
+        req: &CensusRequest,
+        g: &CsrGraph,
+        shard: Shard,
+        cancel: &CancelToken,
+        job: u64,
+        t0: Instant,
+    ) -> std::result::Result<CensusResponse, WireError> {
+        let n = g.node_count();
+        if shard.hi > n {
+            return Err(WireError::new(
+                ErrorCode::BadRequest,
+                format!("shard {shard} out of bounds (valid: 0 <= lo <= hi <= {n})"),
+            ));
+        }
+        if let Some(p) = &req.policy {
+            p.validate()
+                .map_err(|e| WireError::new(ErrorCode::BadRequest, e))?;
+        }
+        self.metrics.inc("census_shard_total", 1);
+        let cfg = ParallelConfig {
+            threads: req.threads.unwrap_or(self.default_sparse.threads),
+            policy: req.policy.unwrap_or(self.default_sparse.policy),
+            accumulation: self.default_sparse.accumulation,
+        };
+        let run = self
+            .metrics
+            .time("shard_census", || {
+                census_parallel_range(g, &cfg, &self.executor, cancel, shard.lo, shard.hi)
+            })
+            .ok_or_else(cancelled_error)?;
+        Ok(CensusResponse {
+            protocol_version: PROTOCOL_VERSION,
+            job,
+            census: run.census,
+            classes: req.classes.clone(),
+            provenance: Provenance {
+                source: req.source.describe(),
+                engine: "parallel".to_string(),
+                route: "sparse".to_string(),
+                ordering: VertexOrdering::Natural.name().to_string(),
+                nodes: n as u64,
+                arcs: g.arc_count(),
+            },
+            stats: Some(SchedStats::from_pool(&run.stats)),
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Serve the root of a distributed census: partition the collapsed
+    /// triad space into one entry-balanced vertex-range shard per
+    /// worker, scatter them as wire sub-jobs, gather the raw partials
+    /// and merge by exact summation. Merging is associative integer
+    /// addition over disjoint entry ranges, so the result is
+    /// byte-identical to a single-process run of any engine.
+    fn serve_distributed(
+        &self,
+        req: &CensusRequest,
+        g: &CsrGraph,
+        cancel: &CancelToken,
+        job: u64,
+        t0: Instant,
+    ) -> std::result::Result<CensusResponse, WireError> {
+        let n = g.node_count();
+        let shards = partition_shards(&g.flat_offsets(), self.workers.len());
+        let census = self.distributed_census(req, n, &shards, cancel)?;
+        self.metrics.inc("census_distributed_total", 1);
+        Ok(CensusResponse {
+            protocol_version: PROTOCOL_VERSION,
+            job,
+            census,
+            classes: req.classes.clone(),
+            provenance: Provenance {
+                source: req.source.describe(),
+                engine: format!("distributed:{}", shards.len()),
+                route: "sparse".to_string(),
+                ordering: VertexOrdering::Natural.name().to_string(),
+                nodes: n as u64,
+                arcs: g.arc_count(),
+            },
+            stats: None,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Scatter/gather: one thread per shard, each cycling through the
+    /// worker pool on transport-level failures. Any shard failing on
+    /// *every* worker fails the whole request (partial merges would be
+    /// silently wrong). Returns the merged, null-closed census.
+    fn distributed_census(
+        &self,
+        req: &CensusRequest,
+        n: usize,
+        shards: &[Shard],
+        cancel: &CancelToken,
+    ) -> std::result::Result<Census, WireError> {
+        let partials: Vec<std::result::Result<Census, WireError>> =
+            self.metrics.time("distributed_scatter", || {
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = shards
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &shard)| {
+                            scope.spawn(move || self.dispatch_shard(req, shard, i, cancel))
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                })
+            });
+        let mut merged = Census::zero();
+        for partial in partials {
+            merged += partial?;
+            self.metrics.inc("shards_merged_total", 1);
+        }
+        merged.close_with_null(n);
+        Ok(merged)
+    }
+
+    /// Ship one shard, starting at worker `index % pool` (so concurrent
+    /// shards spread over the pool) and advancing to the next worker on
+    /// retryable failures — transport errors and draining workers.
+    /// Structured remote verdicts (bad request, graph load) propagate
+    /// immediately: every worker would refuse them identically. A shard
+    /// no worker could hold reports [`ErrorCode::WorkerUnavailable`].
+    fn dispatch_shard(
+        &self,
+        req: &CensusRequest,
+        shard: Shard,
+        index: usize,
+        cancel: &CancelToken,
+    ) -> std::result::Result<Census, WireError> {
+        let pool = &self.workers;
+        let mut last = None;
+        for attempt in 0..pool.len() {
+            if cancel.is_cancelled() {
+                return Err(cancelled_error());
+            }
+            let addr = pool[(index + attempt) % pool.len()].as_str();
+            self.metrics.inc("shards_dispatched_total", 1);
+            if attempt > 0 {
+                self.metrics.inc("shards_retried_total", 1);
+            }
+            let t = Instant::now();
+            match dispatch_once(addr, req, shard) {
+                Ok(census) => {
+                    self.metrics
+                        .histogram(&format!("shard_worker_{addr}"))
+                        .observe(t.elapsed().as_secs_f64());
+                    return Ok(census);
+                }
+                Err(e) if shard_retryable(&e) => {
+                    self.metrics.inc("shard_worker_failures_total", 1);
+                    last = Some(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let detail = last.map(|e| format!(" (last: {e})")).unwrap_or_default();
+        Err(WireError::new(
+            ErrorCode::WorkerUnavailable,
+            format!("shard {shard}: every worker in the pool failed{detail}"),
+        ))
+    }
+}
+
+/// One dispatch attempt: connect to a worker, run the shard as a
+/// blocking census call, hand back its raw partial. The sub-request
+/// keeps the parent's source verbatim (path sources make each worker
+/// mmap the file locally; generator/inline sources re-materialize
+/// deterministically) plus its `threads`/`policy` knobs; `engine`,
+/// `ordering` and `classes` are planner-level concerns and are
+/// stripped. Connection and transport failures surface as `internal`
+/// errors, which [`Core::dispatch_shard`] treats as retryable.
+fn dispatch_once(
+    addr: &str,
+    req: &CensusRequest,
+    shard: Shard,
+) -> std::result::Result<Census, WireError> {
+    let mut sub = req.clone();
+    sub.shard = Some(shard);
+    sub.engine = None;
+    sub.ordering = None;
+    sub.classes = None;
+    let mut client = TriadicClient::connect(addr)?;
+    Ok(client.census(&sub)?.census)
+}
+
+/// Worker failures worth retrying on a different worker. Everything
+/// else (bad request, graph load, unknown engine) is a verdict about
+/// the request itself and would repeat on any worker.
+fn shard_retryable(e: &WireError) -> bool {
+    matches!(e.code, ErrorCode::Internal | ErrorCode::ShuttingDown)
+}
+
+/// Split the vertices `0..n` into at most `k` contiguous ranges
+/// balanced by *entry* count over the collapsed offsets (`offsets[v]` =
+/// collapsed entries before vertex `v`; `offsets[n]` = total). Each
+/// boundary is the first vertex whose cumulative entry count reaches
+/// the ideal split point, so shards carry near-equal work even on
+/// skewed degree distributions — the same balancing argument as the
+/// paper's manhattan collapse, applied across processes. The ranges
+/// cover `0..n` exactly: no gaps, no overlaps.
+fn partition_shards(offsets: &[usize], k: usize) -> Vec<Shard> {
+    let n = offsets.len() - 1;
+    let total = offsets[n];
+    let k = k.clamp(1, n.max(1));
+    let mut shards = Vec::with_capacity(k);
+    let mut lo = 0usize;
+    for i in 1..=k {
+        let target = (total as u128 * i as u128 / k as u128) as usize;
+        let hi = if i == k {
+            n
+        } else {
+            offsets.partition_point(|&o| o < target).clamp(lo, n)
+        };
+        shards.push(Shard::new(lo, hi));
+        lo = hi;
+    }
+    shards
 }
 
 /// The coordinator: owns the router, the engine registry, one shared
@@ -850,6 +1108,7 @@ impl Coordinator {
             metrics,
             graphs: GraphStore::new(cfg.graph_cache, cfg.ingest_threads.max(1), cfg.trusted_mmap),
             max_request_nodes: cfg.max_request_nodes,
+            workers: cfg.workers,
         });
 
         let job_workers = if cfg.job_workers == 0 {
@@ -908,6 +1167,12 @@ impl Coordinator {
     /// Job-runner threads draining the submit queue.
     pub fn job_worker_count(&self) -> usize {
         self.job_threads.len()
+    }
+
+    /// The distributed worker pool this coordinator scatters shards to
+    /// (empty when everything is served in-process).
+    pub fn worker_pool(&self) -> &[String] {
+        &self.core.workers
     }
 
     /// Materialize a request's graph source through the same path (and
@@ -1536,6 +1801,95 @@ mod tests {
             .resolve_source(&GraphSource::Path("/nonexistent/x.csr".to_string()))
             .unwrap_err();
         assert_eq!(err.code, ErrorCode::GraphLoad);
+    }
+
+    // --- distributed planner ---
+
+    #[test]
+    fn partition_shards_covers_the_vertex_space() {
+        let g = generators::power_law(500, 2.2, 6.0, 13);
+        let offsets = g.flat_offsets();
+        let n = g.node_count();
+        for k in [1usize, 2, 3, 7, 64, 1_000] {
+            let shards = partition_shards(&offsets, k);
+            assert_eq!(shards.len(), k.min(n), "k={k}");
+            assert_eq!(shards[0].lo, 0, "k={k}");
+            assert_eq!(shards.last().unwrap().hi, n, "k={k}");
+            for pair in shards.windows(2) {
+                assert_eq!(pair[0].hi, pair[1].lo, "contiguous, k={k}");
+            }
+            // entry-balanced: no shard exceeds its fair share by more
+            // than one vertex's worth of entries
+            let total = offsets[n];
+            let heaviest = shards
+                .iter()
+                .map(|s| offsets[s.hi] - offsets[s.lo])
+                .max()
+                .unwrap();
+            let max_vertex = offsets.windows(2).map(|w| w[1] - w[0]).max().unwrap();
+            assert!(
+                heaviest <= total / k.min(n) + max_vertex + 1,
+                "k={k}: heaviest {heaviest} vs fair {} + {max_vertex}",
+                total / k.min(n)
+            );
+        }
+        // degenerate inputs: k=0 clamps to 1; an arcless graph still
+        // partitions into covering (mostly empty) ranges
+        assert_eq!(partition_shards(&offsets, 0), vec![Shard::new(0, n)]);
+        let empty = [0usize; 6]; // 5 nodes, no entries
+        let shards = partition_shards(&empty, 3);
+        assert_eq!(shards[0].lo, 0);
+        assert_eq!(shards.last().unwrap().hi, 5);
+        for pair in shards.windows(2) {
+            assert_eq!(pair[0].hi, pair[1].lo);
+        }
+    }
+
+    #[test]
+    fn shard_requests_return_raw_partials_that_merge_exactly() {
+        let coord = sparse_coordinator();
+        let g = generators::spec_by_name("patents", 300, Some(21))
+            .unwrap()
+            .generate();
+        let want = merged::census(&g);
+        // an uneven cut with an empty and a single-node shard
+        let cuts = [0usize, 0, 1, 97, 205, 300];
+        let mut total = Census::zero();
+        for pair in cuts.windows(2) {
+            let response = coord
+                .submit(
+                    CensusRequest::generator("patents", 300)
+                        .seed(21)
+                        .shard(pair[0], pair[1]),
+                )
+                .wait()
+                .unwrap();
+            // raw partial: the null slot is never set by a leaf
+            assert_eq!(
+                response.census[crate::census::TriadType::T003],
+                0,
+                "shard {}..{}",
+                pair[0],
+                pair[1]
+            );
+            assert_eq!(response.provenance.route, "sparse");
+            total += response.census;
+        }
+        total.close_with_null(g.node_count());
+        assert_eq!(total, want);
+        assert_eq!(coord.metrics().get("census_shard_total"), 5);
+    }
+
+    #[test]
+    fn out_of_bounds_shards_are_rejected_with_the_valid_range() {
+        let coord = sparse_coordinator();
+        let err = coord
+            .submit(CensusRequest::generator("patents", 100).seed(1).shard(50, 101))
+            .wait()
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("50..101"), "{err}");
+        assert!(err.message.contains("0 <= lo <= hi <= 100"), "{err}");
     }
 
     #[test]

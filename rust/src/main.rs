@@ -23,6 +23,14 @@
 //!                wire protocol over TCP (`--listen ADDR`; newline-
 //!                delimited JSON frames, see README "Serving API"), or
 //!                the legacy one-path-per-line stdin loop (`--stdin`).
+//!                With `--workers addr,addr,...` (or `--workers-file`)
+//!                the coordinator becomes a distributed planner: census
+//!                requests are partitioned into vertex-range shards,
+//!                scattered to `repro worker` processes and merged by
+//!                exact summation.
+//! * `worker`   — run one distributed census worker: a sparse-only
+//!                coordinator behind the same TCP server, fed shard
+//!                sub-jobs by a planning coordinator.
 //! * `client`   — drive a running server: submit census jobs (path /
 //!                generator sources), poll them to completion, or issue
 //!                `status` / `metrics` / `shutdown` control verbs.
@@ -78,6 +86,10 @@ COMMANDS
   serve     [--listen ADDR] [--stdin] [--artifacts DIR] [--threads T]
             [--trusted] [--engine E] [--pool-threads W] [--max-jobs K]
             [--job-workers J] [--max-request-nodes N]
+            [--workers HOST:PORT,HOST:PORT,...] [--workers-file FILE]
+  worker    [--listen ADDR] [--threads T] [--pool-threads W]
+            [--max-jobs K] [--job-workers J] [--trusted]
+            [--max-request-nodes N]
   client    [--addr HOST:PORT] [--verb census|status|metrics|poll|cancel|shutdown]
             [--input FILE | --graph patents|orkut|web --nodes N [--seed S]]
             [--engine E] [--threads T] [--policy P] [--order natural|degree]
@@ -111,6 +123,7 @@ fn run() -> Result<()> {
         Some("monitor") => cmd_monitor(&args),
         Some("stream") => cmd_stream(&args),
         Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
         Some("client") => cmd_client(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -816,6 +829,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map_err(Error::msg)?;
     let listen = args.str_or("listen", "127.0.0.1:7333");
     let stdin_mode = args.flag("stdin");
+    let workers = worker_pool_from(args)?;
     args.reject_unknown().map_err(Error::msg)?;
 
     let coord = Arc::new(Coordinator::start(CoordinatorConfig {
@@ -830,10 +844,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_concurrent_jobs: max_jobs,
         job_workers,
         max_request_nodes,
+        workers,
         ..CoordinatorConfig::default()
     })?);
     eprintln!(
-        "coordinator up: dense={} engine={} pool_workers={} job_workers={} max_jobs={}",
+        "coordinator up: dense={} engine={} pool_workers={} job_workers={} max_jobs={} \
+         distributed_workers={}",
         coord.dense_enabled(),
         coord.engine_name(),
         coord.executor().worker_count(),
@@ -842,7 +858,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "unlimited".to_string()
         } else {
             max_jobs.to_string()
-        }
+        },
+        coord.worker_pool().len()
     );
 
     if stdin_mode {
@@ -857,6 +874,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // shutdown received: new submissions are already rejected, so the
     // in-flight gauge only drains — let admitted jobs finish before the
     // process (and its job runners) goes away
+    while coord.metrics().gauge("jobs_inflight") > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    println!("{}", coord.metrics().render());
+    Ok(())
+}
+
+/// Collect the distributed worker pool from `--workers a,b,c` and/or
+/// `--workers-file FILE` (one `host:port` per line, `#` comments and
+/// blank lines skipped). Both may be given; the lists concatenate.
+fn worker_pool_from(args: &Args) -> Result<Vec<String>> {
+    let mut pool = Vec::new();
+    if let Some(list) = args.opt_str("workers") {
+        pool.extend(
+            list.split(',')
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .map(String::from),
+        );
+    }
+    if let Some(file) = args.opt_str("workers-file") {
+        let text = std::fs::read_to_string(&file)
+            .with_context(|| format!("reading workers file {file}"))?;
+        pool.extend(
+            text.lines()
+                .map(str::trim)
+                .filter(|a| !a.is_empty() && !a.starts_with('#'))
+                .map(String::from),
+        );
+    }
+    Ok(pool)
+}
+
+/// `repro worker` — one distributed census worker: a sparse-only
+/// coordinator (no dense artifacts, no worker pool of its own) behind
+/// the standard TCP server. The planning coordinator ships it
+/// sub-requests carrying a `shard` vertex range; path graph sources are
+/// mmapped locally by each worker, so the graph bytes never cross the
+/// wire. Prints `listening on HOST:PORT` for harnesses to parse.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    let threads = args.get_or("threads", default_threads()).map_err(Error::msg)?;
+    let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
+    let max_jobs = args.get_or("max-jobs", 0usize).map_err(Error::msg)?;
+    let job_workers = args.get_or("job-workers", 0usize).map_err(Error::msg)?;
+    let trusted = args.flag("trusted");
+    let max_request_nodes = args
+        .get_or("max-request-nodes", CoordinatorConfig::default().max_request_nodes)
+        .map_err(Error::msg)?;
+    args.reject_unknown().map_err(Error::msg)?;
+
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+        artifacts_dir: None,
+        sparse: ParallelConfig {
+            threads,
+            ..ParallelConfig::default()
+        },
+        trusted_mmap: trusted,
+        pool_threads,
+        max_concurrent_jobs: max_jobs,
+        job_workers,
+        max_request_nodes,
+        ..CoordinatorConfig::default()
+    })?);
+    eprintln!(
+        "worker up: pool_workers={} job_workers={}",
+        coord.executor().worker_count(),
+        coord.job_worker_count()
+    );
+    let server = CensusServer::bind(coord.clone(), listen.as_str())?;
+    println!("listening on {}", server.local_addr());
+    server.run()?;
     while coord.metrics().gauge("jobs_inflight") > 0 {
         std::thread::sleep(std::time::Duration::from_millis(25));
     }

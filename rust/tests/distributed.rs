@@ -1,0 +1,275 @@
+//! Distributed triad census, end to end: real `repro worker`-shaped
+//! processes (sparse-only coordinator + TCP server, in-process threads
+//! here), a planning coordinator with a `--workers` pool, and shard
+//! merging checked byte-for-byte against the merged serial oracle —
+//! including the failure path where a worker is dead mid-pool and its
+//! shards are retried on a survivor.
+
+use std::sync::Arc;
+
+use triadic::census::{
+    census_parallel_range, merged, Census, EngineRegistry, ParallelConfig, TriadType,
+};
+use triadic::coordinator::{
+    CensusRequest, CensusServer, Coordinator, CoordinatorConfig, ErrorCode, TriadicClient,
+};
+use triadic::graph::{generators, CsrGraph, VertexOrdering};
+use triadic::sched::{CancelToken, Executor};
+
+/// One in-process "repro worker": sparse-only coordinator + TCP server
+/// on an OS-assigned port.
+struct Worker {
+    addr: std::net::SocketAddr,
+    thread: std::thread::JoinHandle<()>,
+}
+
+fn start_worker() -> Worker {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            pool_threads: 2,
+            job_workers: 2,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    let server = CensusServer::bind(coord, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let thread = std::thread::spawn(move || server.run().unwrap());
+    Worker { addr, thread }
+}
+
+impl Worker {
+    fn stop(self) {
+        let mut client = TriadicClient::connect(self.addr).unwrap();
+        client.shutdown().unwrap();
+        self.thread.join().unwrap();
+    }
+}
+
+/// A planning coordinator whose pool is the given worker addresses.
+fn start_planner(workers: &[std::net::SocketAddr]) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        artifacts_dir: None,
+        pool_threads: 2,
+        job_workers: 2,
+        workers: workers.iter().map(|a| a.to_string()).collect(),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap()
+}
+
+/// Tiny deterministic xorshift for partition fuzzing.
+fn xorshift(state: &mut u64) -> u64 {
+    *state ^= *state << 13;
+    *state ^= *state >> 7;
+    *state ^= *state << 17;
+    *state
+}
+
+/// Random sorted cut vector over `0..=n`, always starting at 0 and
+/// ending at n, with duplicate cuts (empty shards) left in on purpose.
+fn random_cuts(n: usize, pieces: usize, seed: u64) -> Vec<usize> {
+    let mut state = seed | 1;
+    let mut cuts = vec![0, n];
+    for _ in 0..pieces {
+        cuts.push((xorshift(&mut state) % (n as u64 + 1)) as usize);
+    }
+    cuts.sort_unstable();
+    cuts
+}
+
+#[test]
+fn random_partitions_sum_to_the_whole_census_across_engines() {
+    let exec = Executor::with_workers(2);
+    let cancel = CancelToken::new();
+    let cfg = ParallelConfig::default();
+    let graphs = [
+        generators::power_law(240, 2.2, 6.0, 31),
+        generators::erdos_renyi(150, 900, 5),
+        CsrGraph::empty(60), // arcless: every shard is an empty partial
+    ];
+    for (gi, g) in graphs.iter().enumerate() {
+        let n = g.node_count();
+        let registry = EngineRegistry::builtin(cfg);
+        for seed in 0..6u64 {
+            let cuts = random_cuts(n, 1 + (seed as usize % 5), 1_000 * gi as u64 + seed + 1);
+            let mut total = Census::zero();
+            for pair in cuts.windows(2) {
+                let run = census_parallel_range(g, &cfg, &exec, &cancel, pair[0], pair[1])
+                    .expect("not cancelled");
+                // leaf partials are raw: the null class is never touched
+                assert_eq!(run.census[TriadType::T003], 0, "graph {gi} seed {seed}");
+                total += run.census;
+            }
+            total.close_with_null(n);
+            for name in ["naive", "bm", "merged", "parallel", "moody"] {
+                let engine = registry.get_or_err(name).unwrap();
+                assert_eq!(
+                    total,
+                    engine.census(g, &exec).census,
+                    "graph {gi} seed {seed} engine {name} cuts {cuts:?}"
+                );
+            }
+        }
+        // degenerate single-node ladder: n shards of one vertex each
+        let ladder: Vec<usize> = (0..=n).collect();
+        let mut total = Census::zero();
+        for pair in ladder.windows(2) {
+            total += census_parallel_range(g, &cfg, &exec, &cancel, pair[0], pair[1])
+                .unwrap()
+                .census;
+        }
+        total.close_with_null(n);
+        assert_eq!(total, merged::census(g), "graph {gi} one-vertex shards");
+    }
+}
+
+#[test]
+fn distributed_census_matches_the_oracle_at_every_pool_size() {
+    // path-source fixture: every worker mmaps the same converted file
+    let g = generators::power_law(500, 2.2, 6.0, 77);
+    let want = merged::census(&g);
+    let path = std::env::temp_dir().join("triadic_distributed_pool.csr");
+    triadic::graph::io::write_binary_v2_file(&g, &path).unwrap();
+
+    let workers: Vec<Worker> = (0..3).map(|_| start_worker()).collect();
+    let addrs: Vec<_> = workers.iter().map(|w| w.addr).collect();
+
+    for k in 1..=3usize {
+        let planner = start_planner(&addrs[..k]);
+        let response = planner
+            .submit(CensusRequest::path(path.to_str().unwrap()))
+            .wait()
+            .unwrap();
+        assert_eq!(response.census, want, "pool size {k}");
+        assert_eq!(response.provenance.engine, format!("distributed:{k}"));
+        assert_eq!(response.provenance.route, "sparse");
+        assert_eq!(planner.metrics().get("shards_merged_total"), k as u64);
+        assert_eq!(planner.metrics().get("shards_dispatched_total"), k as u64);
+        assert_eq!(planner.metrics().get("shards_retried_total"), 0);
+        assert_eq!(planner.metrics().get("census_distributed_total"), 1);
+        planner.shutdown();
+    }
+
+    // generator sources distribute too (workers re-materialize the
+    // graph deterministically from the spec)
+    let planner = start_planner(&addrs);
+    let response = planner
+        .submit(CensusRequest::generator("patents", 300).seed(21))
+        .wait()
+        .unwrap();
+    let oracle = merged::census(
+        &generators::spec_by_name("patents", 300, Some(21))
+            .unwrap()
+            .generate(),
+    );
+    assert_eq!(response.census, oracle);
+
+    // a degree-ordering request bypasses the planner and runs locally
+    let ordered = planner
+        .submit(
+            CensusRequest::generator("patents", 300)
+                .seed(21)
+                .engine("merged")
+                .ordering(VertexOrdering::Degree),
+        )
+        .wait()
+        .unwrap();
+    assert_eq!(ordered.census, oracle);
+    assert_eq!(ordered.provenance.engine, "merged");
+    assert_eq!(ordered.provenance.ordering, "degree");
+    planner.shutdown();
+
+    for w in workers {
+        w.stop();
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn a_dead_worker_is_retried_on_a_survivor() {
+    let g = generators::power_law(400, 2.2, 6.0, 13);
+    let want = merged::census(&g);
+    let path = std::env::temp_dir().join("triadic_distributed_retry.csr");
+    triadic::graph::io::write_binary_v2_file(&g, &path).unwrap();
+
+    let dead = start_worker();
+    let live = start_worker();
+    let dead_addr = dead.addr;
+    // kill the first worker; its port now refuses connections, so every
+    // shard dispatched to it fails at transport level mid-job and must
+    // be retried on the survivor
+    dead.stop();
+
+    let planner = start_planner(&[dead_addr, live.addr]);
+    let response = planner
+        .submit(CensusRequest::path(path.to_str().unwrap()))
+        .wait()
+        .unwrap();
+    assert_eq!(response.census, want);
+    assert_eq!(response.provenance.engine, "distributed:2");
+    assert!(planner.metrics().get("shards_retried_total") >= 1);
+    assert!(planner.metrics().get("shard_worker_failures_total") >= 1);
+    assert_eq!(planner.metrics().get("shards_merged_total"), 2);
+    planner.shutdown();
+
+    // with *every* worker dead the request fails with the structured
+    // worker_unavailable verdict, not a partial census
+    let planner = start_planner(&[dead_addr]);
+    let err = planner
+        .submit(CensusRequest::path(path.to_str().unwrap()))
+        .wait()
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::WorkerUnavailable);
+    assert!(err.message.contains("every worker"), "{err}");
+    planner.shutdown();
+
+    live.stop();
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn workers_serve_shard_requests_and_reject_bad_ranges_over_the_wire() {
+    let worker = start_worker();
+    let mut client = TriadicClient::connect(worker.addr).unwrap();
+
+    let g = generators::spec_by_name("patents", 200, Some(9)).unwrap().generate();
+    let want = merged::census(&g);
+    let n = g.node_count();
+
+    // raw partials over an uneven 3-cut, merged client-side
+    let mut total = Census::zero();
+    for (lo, hi) in [(0usize, 1usize), (1, 140), (140, n)] {
+        let response = client
+            .census(&CensusRequest::generator("patents", 200).seed(9).shard(lo, hi))
+            .unwrap();
+        assert_eq!(response.census[TriadType::T003], 0, "shard {lo}..{hi}");
+        total += response.census;
+    }
+    total.close_with_null(n);
+    assert_eq!(total, want);
+
+    // an empty shard is legal and contributes nothing
+    let empty = client
+        .census(&CensusRequest::generator("patents", 200).seed(9).shard(50, 50))
+        .unwrap();
+    assert_eq!(empty.census, Census::zero());
+
+    // out of bounds: rejected with the valid range once the graph is
+    // resolved server-side
+    let err = client
+        .census(&CensusRequest::generator("patents", 200).seed(9).shard(0, 201))
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("0 <= lo <= hi <= 200"), "{err}");
+
+    // inverted: rejected at decode time, before any job is created
+    let err = client
+        .census(&CensusRequest::generator("patents", 200).seed(9).shard(9, 3))
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("inverted"), "{err}");
+
+    worker.stop();
+}
