@@ -1,0 +1,113 @@
+//! Hub-bitmap hybrid kernel vs the degree-ordered run-merge kernel.
+//!
+//! After the degree-descending relabel the heavy hub rows are nodes
+//! `0..k`; the hybrid kernel classifies hub-involving dyads with packed
+//! 2-bit-direction bitmap words (AND + popcount) instead of three-run
+//! merges. This bench pins the trade on a 100k-node power-law graph:
+//! the parallel engine runs over the natural CSR, the degree-ordered
+//! direction-split form and the hub-split form, the censuses are
+//! asserted byte-identical, and the speedup ratios land in
+//! `BENCH_hub.json`.
+//!
+//! Gate: `"pass"` is true iff the hybrid kernel beats the plain
+//! degree-ordered kernel (`speedup_vs_degree > 1.0`) — CI's perf-smoke
+//! job greps for it. The comparison holds preprocessing constant (both
+//! sides pay the same relabel + split; the bitmap build is reported
+//! separately as one-off cost).
+
+use triadic::bench::Bench;
+use triadic::census::{census_hybrid_on, census_parallel_on, ParallelConfig};
+use triadic::graph::generators::power_law;
+use triadic::graph::relabel;
+use triadic::graph::HubSplit;
+use triadic::sched::Executor;
+
+const NODES: usize = 100_000;
+
+fn main() {
+    let mut b = Bench::from_env(10);
+    let threads = 4;
+    let exec = Executor::with_workers(threads);
+
+    eprintln!("# generating {NODES}-node power-law graph...");
+    let g = power_law(NODES, 2.2, 8.0, 11);
+    println!("# graph: n={} arcs={} dyads={}", g.node_count(), g.arc_count(), g.dyad_count());
+
+    let t_prep = std::time::Instant::now();
+    let (_relabeling, split) = relabel::degree_split(&g, threads);
+    let prep_split_seconds = t_prep.elapsed().as_secs_f64();
+    let t_hub = std::time::Instant::now();
+    let hub = HubSplit::build(split);
+    let prep_hub_seconds = t_hub.elapsed().as_secs_f64();
+    println!(
+        "# degree relabel + direction split: {prep_split_seconds:.3}s, {} hub bitmap rows: \
+         {prep_hub_seconds:.3}s (one-off)",
+        hub.hub_count()
+    );
+    assert!(hub.hub_count() > 0, "power-law graph must promote hub rows");
+
+    let cfg = ParallelConfig {
+        threads,
+        ..ParallelConfig::default()
+    };
+
+    // identity first: timing means nothing if the kernels disagree
+    let natural_run = census_parallel_on(&g, &cfg, &exec);
+    let degree_run = census_parallel_on(hub.split(), &cfg, &exec);
+    let hybrid_run = census_hybrid_on(&hub, &cfg, &exec);
+    assert_eq!(natural_run.census, degree_run.census, "degree-ordered census diverged");
+    assert_eq!(natural_run.census, hybrid_run.census, "hybrid census diverged");
+
+    let parallel_natural = b
+        .run(&format!("parallel_natural_t{threads}"), || {
+            census_parallel_on(&g, &cfg, &exec)
+        })
+        .mean_s;
+    let parallel_degree = b
+        .run(&format!("parallel_degree_t{threads}"), || {
+            census_parallel_on(hub.split(), &cfg, &exec)
+        })
+        .mean_s;
+    let hybrid = b
+        .run(&format!("hybrid_hub_t{threads}"), || {
+            census_hybrid_on(&hub, &cfg, &exec)
+        })
+        .mean_s;
+
+    let speedup_vs_natural = parallel_natural / hybrid.max(1e-12);
+    let speedup_vs_degree = parallel_degree / hybrid.max(1e-12);
+    let pass = speedup_vs_degree > 1.0;
+    println!(
+        "# hybrid(t{threads}): {:.1} ms vs degree {:.1} ms ({speedup_vs_degree:.2}x) vs natural \
+         {:.1} ms ({speedup_vs_natural:.2}x) pass={pass}",
+        hybrid * 1e3,
+        parallel_degree * 1e3,
+        parallel_natural * 1e3
+    );
+
+    let json = format!(
+        concat!(
+            "{{\"schema_version\":1,\"bench\":\"hub_kernel\",\"nodes\":{},\"arcs\":{},",
+            "\"threads\":{},\"hub_rows\":{},",
+            "\"prep_split_seconds\":{:.6},\"prep_hub_seconds\":{:.6},",
+            "\"parallel_natural_seconds\":{:.6},\"parallel_degree_seconds\":{:.6},",
+            "\"hybrid_seconds\":{:.6},",
+            "\"speedup_vs_natural\":{:.4},\"speedup_vs_degree\":{:.4},",
+            "\"census_identical\":true,\"pass\":{}}}\n"
+        ),
+        g.node_count(),
+        g.arc_count(),
+        threads,
+        hub.hub_count(),
+        prep_split_seconds,
+        prep_hub_seconds,
+        parallel_natural,
+        parallel_degree,
+        hybrid,
+        speedup_vs_natural,
+        speedup_vs_degree,
+        pass,
+    );
+    std::fs::write("BENCH_hub.json", &json).expect("writing BENCH_hub.json");
+    println!("# wrote BENCH_hub.json");
+}

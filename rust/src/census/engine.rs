@@ -53,6 +53,15 @@ pub trait CensusEngine<G: GraphView = CsrGraph>: Send + Sync {
         }
         Some(self.census(g, exec))
     }
+
+    /// A copy of this engine re-parameterized with one request's
+    /// thread/policy overrides, when the engine is configurable (the
+    /// parallel and hybrid engines). Serial engines return `None`: they
+    /// have no scheduling knobs, and callers fall back to the engine as
+    /// registered.
+    fn with_config(&self, _cfg: ParallelConfig) -> Option<Box<dyn CensusEngine<G>>> {
+        None
+    }
 }
 
 /// Wrap a serial engine's result in the uniform telemetry shape: one
@@ -68,6 +77,9 @@ fn serial_run<F: FnOnce() -> Census>(items: usize, f: F) -> ParallelRun {
             items: vec![items],
             busy: vec![wall],
             wall,
+            seat_sockets: vec![0],
+            local_steals: 0,
+            remote_steals: 0,
         },
     }
 }
@@ -139,6 +151,10 @@ impl<G: GraphView> CensusEngine<G> for ParallelEngine {
         cancel: &CancelToken,
     ) -> Option<ParallelRun> {
         census_parallel_cancellable(g, &self.cfg, exec, cancel)
+    }
+
+    fn with_config(&self, cfg: ParallelConfig) -> Option<Box<dyn CensusEngine<G>>> {
+        Some(Box::new(ParallelEngine { cfg }))
     }
 }
 

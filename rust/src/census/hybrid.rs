@@ -1,0 +1,378 @@
+//! Hub-bitmap hybrid census kernel over [`HubSplit`].
+//!
+//! The merged union walk costs O(deg(u) + deg(v)) per canonical dyad,
+//! and under degree ordering `u < v` means `u` is the *heavier*
+//! endpoint — so on power-law graphs the hub rows dominate the whole
+//! sweep. The hybrid kernel classifies hub-anchored dyads from the
+//! hub's bitmap row instead:
+//!
+//! * **sparse path** (any `v`): walk only `N(v)` (the short side),
+//!   answering every `(u, w)` dyad with an O(1) bitmap probe; the
+//!   untouched remainder of `N(u)` above `v` is bulk-counted per
+//!   direction class with the hub's rank arrays. O(deg(v)) total —
+//!   the hub's own degree drops out of the per-dyad cost entirely.
+//! * **dense path** (`v` also a bitmap hub with degree ≥ n/16): no
+//!   walk at all — intersect the two rows' direction planes word by
+//!   word and popcount each of the 15 `(uw, vw)` state combinations
+//!   over range masks, bulk-adding whole tricode classes at a time.
+//!
+//! Both produce the exact increment multiset of
+//! [`dyad_task`](super::merged::dyad_task) — same canonical guard,
+//! same union accounting — so the hybrid census is byte-identical to
+//! every other engine (enforced by golden fixtures and prop sweeps).
+//! Non-hub dyads fall through to the merged walk unchanged.
+
+use super::engine::{CensusEngine, EngineRegistry};
+use super::isotricode::{tricode_from_dyads, TRICODE_TABLE};
+use super::merged::dyad_task;
+use super::parallel::{census_kernel_cancellable, DyadKernel, ParallelConfig, ParallelRun};
+use super::types::{Census, CensusSink, TriadType};
+use crate::graph::{GraphView, HubSplit};
+use crate::sched::{CancelToken, Executor};
+
+/// A hub–hub dyad takes the dense word-intersection path when the
+/// lighter row still covers ≥ 1/16 of all nodes: below that, walking
+/// `N(v)` beats scanning `n/64` words per plane.
+const DENSE_DEGREE_DIVISOR: usize = 16;
+
+/// Classify one canonical hub-anchored dyad (`u < v`, `u` a bitmap
+/// hub), accumulating exactly the increments `dyad_task` would.
+#[inline]
+pub fn hub_dyad_task<S: CensusSink>(h: &HubSplit, u: u32, v: u32, uv_bits: u8, c: &mut S) {
+    debug_assert!(u < v && h.is_hub(u));
+    debug_assert!(uv_bits != 0 && uv_bits < 4);
+    if h.is_hub(v) && h.degree(v) * DENSE_DEGREE_DIVISOR >= h.node_count() {
+        hub_dense_dyad_task(h, u, v, uv_bits, c);
+    } else {
+        hub_sparse_dyad_task(h, u, v, uv_bits, c);
+    }
+}
+
+/// Sparse path: one walk of `N(v)` with O(1) bitmap probes for the
+/// `(u, w)` dyads, then O(1) rank arithmetic for the hub-only tail.
+fn hub_sparse_dyad_task<S: CensusSink>(h: &HubSplit, u: u32, v: u32, uv_bits: u8, c: &mut S) {
+    let n = h.node_count();
+    let dyadic = if uv_bits == 0b11 {
+        TriadType::T102
+    } else {
+        TriadType::T012
+    };
+    let mut inter = 0u64;
+    // walked N(v) members above v, split by their (u, w) class — these
+    // are already emitted, so the bulk tail below must exclude them
+    let mut above = [0u64; 4];
+    for (w, vw) in h.neighbors(v) {
+        // w == u probes bit u of u's own row, which is 0 (no self
+        // loops), so the guard below skips it without a branch
+        let uw = h.hub_dyad_bits(u, w);
+        if uw != 0 {
+            inter += 1;
+        }
+        if w > v {
+            above[uw as usize] += 1;
+            c.bump(TRICODE_TABLE[tricode_from_dyads(uv_bits, uw, vw) as usize]);
+        } else if u < w && uw == 0 {
+            // canonical guard: u < w < v counts only when ¬uÂw
+            c.bump(TRICODE_TABLE[tricode_from_dyads(uv_bits, 0, vw) as usize]);
+        }
+    }
+    // w ∈ N(u) \ N(v), w > v: the (v, w) dyad is null and the guard
+    // always passes — whole classes at a time from the rank arrays
+    let totals = h.counts_above(u, v);
+    for cls in 1..4u8 {
+        let extra = totals[cls as usize] - above[cls as usize];
+        if extra > 0 {
+            c.add(TRICODE_TABLE[tricode_from_dyads(uv_bits, cls, 0) as usize], extra);
+        }
+    }
+    // |N(u) ∪ N(v) \ {u, v}|: u ∈ N(v) and v ∈ N(u) are the only
+    // members the union walk would drop
+    let union_size = h.degree(u) as u64 + h.degree(v) as u64 - inter - 2;
+    c.add(dyadic, n as u64 - union_size - 2);
+}
+
+/// Bits of word `wi` whose global id is `>= t`.
+#[inline]
+fn bits_ge(wi: usize, t: u32) -> u64 {
+    let lo = (wi * 64) as u64;
+    let t = t as u64;
+    if t <= lo {
+        u64::MAX
+    } else if t >= lo + 64 {
+        0
+    } else {
+        !0u64 << (t - lo)
+    }
+}
+
+/// Dense path: both rows are bitmaps — popcount the 15 non-null
+/// `(uw, vw)` state intersections over the canonical-guard range masks.
+fn hub_dense_dyad_task<S: CensusSink>(h: &HubSplit, u: u32, v: u32, uv_bits: u8, c: &mut S) {
+    let n = h.node_count();
+    let words = h.words();
+    let (uo, ui) = h.planes(u);
+    let (vo, vi) = h.planes(v);
+    let dyadic = if uv_bits == 0b11 {
+        TriadType::T102
+    } else {
+        TriadType::T012
+    };
+    // counts[a][b]: members of the w > v region in u-state a, v-state b;
+    // mid[b]: u < w < v members with null (u, w) (the ¬uÂw guard)
+    let mut counts = [[0u64; 4]; 4];
+    let mut mid = [0u64; 4];
+    let mut union_bits = 0u64;
+    for wi in 0..words {
+        let (o1, i1) = (uo[wi], ui[wi]);
+        let (o2, i2) = (vo[wi], vi[wi]);
+        // state planes by 2-bit dyad code; null includes padding bits
+        // past n, but those are null in *both* rows and the (0, 0)
+        // combination is never counted
+        let ua = [!(o1 | i1), o1 & !i1, i1 & !o1, o1 & i1];
+        let va = [!(o2 | i2), o2 & !i2, i2 & !o2, o2 & i2];
+        let hi = bits_ge(wi, v + 1);
+        let mid_mask = bits_ge(wi, u + 1) & !bits_ge(wi, v);
+        union_bits += (o1 | i1 | o2 | i2).count_ones() as u64;
+        for (a, &uw) in ua.iter().enumerate() {
+            for (b, &vw) in va.iter().enumerate() {
+                if a == 0 && b == 0 {
+                    continue;
+                }
+                let m = uw & vw;
+                counts[a][b] += (m & hi).count_ones() as u64;
+                if a == 0 {
+                    mid[b] += (m & mid_mask).count_ones() as u64;
+                }
+            }
+        }
+    }
+    for (a, row) in counts.iter().enumerate() {
+        for (b, &k) in row.iter().enumerate() {
+            if k > 0 {
+                let code = tricode_from_dyads(uv_bits, a as u8, b as u8);
+                c.add(TRICODE_TABLE[code as usize], k);
+            }
+        }
+    }
+    for (b, &k) in mid.iter().enumerate() {
+        if k > 0 {
+            let code = tricode_from_dyads(uv_bits, 0, b as u8);
+            c.add(TRICODE_TABLE[code as usize], k);
+        }
+    }
+    // the union planes carry bit v (in u's row) and bit u (in v's row)
+    // and nothing past n, so |S| is the popcount minus the endpoints
+    let union_size = union_bits - 2;
+    c.add(dyadic, n as u64 - union_size - 2);
+}
+
+/// The hybrid sweep's per-dyad kernel: hub rows take the bitmap path,
+/// the sparse tail keeps the merged walk.
+pub(crate) struct HubKernel;
+
+impl DyadKernel<HubSplit> for HubKernel {
+    #[inline]
+    fn dyad<S: CensusSink>(&self, g: &HubSplit, u: u32, v: u32, bits: u8, sink: &mut S) {
+        if g.is_hub(u) {
+            hub_dyad_task(g, u, v, bits, sink);
+        } else {
+            dyad_task(g, u, v, bits, sink);
+        }
+    }
+}
+
+/// Hybrid parallel census on an explicit executor (the serving path
+/// for `--order degree`).
+pub fn census_hybrid_on(h: &HubSplit, cfg: &ParallelConfig, exec: &Executor) -> ParallelRun {
+    census_kernel_cancellable(h, cfg, exec, &CancelToken::new(), &HubKernel)
+        .expect("fresh token never cancels")
+}
+
+/// [`census_hybrid_on`] with a cooperative cancellation hook.
+pub fn census_hybrid_cancellable(
+    h: &HubSplit,
+    cfg: &ParallelConfig,
+    exec: &Executor,
+    cancel: &CancelToken,
+) -> Option<ParallelRun> {
+    census_kernel_cancellable(h, cfg, exec, cancel, &HubKernel)
+}
+
+/// Serial hybrid census (tests and the differential oracle harness).
+pub fn census_hybrid_serial(h: &HubSplit) -> Census {
+    let mut c = Census::zero();
+    for u in 0..h.node_count() as u32 {
+        for (v, bits) in h.neighbors(u) {
+            if u < v {
+                HubKernel.dyad(h, u, v, bits, &mut c);
+            }
+        }
+    }
+    c.close_with_null(h.node_count());
+    c
+}
+
+/// The hybrid engine: registered as `"parallel"` over [`HubSplit`], so
+/// the degree-ordered sparse serving path upgrades transparently — same
+/// engine name, same telemetry shape, byte-identical census.
+pub struct HybridEngine {
+    pub cfg: ParallelConfig,
+}
+
+impl CensusEngine<HubSplit> for HybridEngine {
+    fn name(&self) -> &str {
+        "parallel"
+    }
+
+    fn census(&self, g: &HubSplit, exec: &Executor) -> ParallelRun {
+        census_hybrid_on(g, &self.cfg, exec)
+    }
+
+    fn census_cancellable(
+        &self,
+        g: &HubSplit,
+        exec: &Executor,
+        cancel: &CancelToken,
+    ) -> Option<ParallelRun> {
+        census_hybrid_cancellable(g, &self.cfg, exec, cancel)
+    }
+
+    fn with_config(&self, cfg: ParallelConfig) -> Option<Box<dyn CensusEngine<HubSplit>>> {
+        Some(Box::new(HybridEngine { cfg }))
+    }
+}
+
+/// The five built-in engines over [`HubSplit`] with `"parallel"`
+/// replaced by the hybrid kernel — the registry `Core` serves degree-
+/// ordered requests from.
+pub fn hybrid_registry(cfg: ParallelConfig) -> EngineRegistry<HubSplit> {
+    let mut r = EngineRegistry::builtin(cfg);
+    r.register(Box::new(HybridEngine { cfg }));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::census::{merged, naive};
+    use crate::graph::builder::from_arcs;
+    use crate::graph::generators::{self, named};
+    use crate::graph::relabel::{degree_split, DirSplit};
+    use crate::graph::CsrGraph;
+
+    fn hub_of(g: &CsrGraph, k: Option<usize>) -> HubSplit {
+        let (_, split) = degree_split(g, 2);
+        match k {
+            Some(k) => HubSplit::with_hub_count(split, k),
+            None => HubSplit::build(split),
+        }
+    }
+
+    #[test]
+    fn serial_hybrid_matches_merged_at_every_hub_count() {
+        for seed in 0..6 {
+            let g = generators::power_law(160, 2.2, 6.0, seed);
+            let want = merged::census(&g);
+            let n = g.node_count();
+            for k in [0, 1, 3, n / 2, n] {
+                let h = hub_of(&g, Some(k));
+                assert_eq!(census_hybrid_serial(&h), want, "seed {seed} k {k}");
+            }
+            let h = hub_of(&g, None);
+            assert_eq!(census_hybrid_serial(&h), want, "seed {seed} adaptive");
+        }
+    }
+
+    #[test]
+    fn dense_path_matches_on_mutual_cliques() {
+        // complete mutual graphs push every hub–hub dyad down the dense
+        // word-intersection path (degree = n - 1 ≫ n/16)
+        for n in [4, 6, 9, 65, 130] {
+            let g = named::complete_mutual(n);
+            let h = hub_of(&g, Some(n));
+            assert_eq!(census_hybrid_serial(&h), merged::census(&g), "K{n}");
+        }
+    }
+
+    #[test]
+    fn mega_hub_star_is_exact() {
+        // one hub of degree n-1 over degree-1 tails: the sparse hub path
+        // with maximal rank-tail bulk counts
+        let arcs: Vec<(u32, u32)> = (1..300u32)
+            .map(|v| if v % 3 == 0 { (v, 0) } else { (0, v) })
+            .collect();
+        let g = from_arcs(300, &arcs);
+        let want = merged::census(&g);
+        for k in [0, 1, 300] {
+            let h = hub_of(&g, Some(k));
+            assert_eq!(census_hybrid_serial(&h), want, "k {k}");
+        }
+        let h = hub_of(&g, None);
+        assert_eq!(h.hub_count(), 1, "adaptive k takes exactly the star center");
+        assert_eq!(census_hybrid_serial(&h), want);
+    }
+
+    #[test]
+    fn empty_graph_and_no_edges() {
+        for n in [0, 1, 7] {
+            let g = CsrGraph::empty(n);
+            let h = HubSplit::build(DirSplit::build(&g));
+            assert_eq!(census_hybrid_serial(&h), merged::census(&g), "n {n}");
+        }
+    }
+
+    #[test]
+    fn parallel_hybrid_matches_and_covers_all_entries() {
+        let exec = Executor::with_workers(2);
+        let g = generators::power_law(400, 2.1, 7.0, 23);
+        let want = merged::census(&g);
+        let h = hub_of(&g, Some(40));
+        let cfg = ParallelConfig {
+            threads: 3,
+            ..ParallelConfig::default()
+        };
+        let run = census_hybrid_on(&h, &cfg, &exec);
+        assert_eq!(run.census, want);
+        assert_eq!(run.stats.items.iter().sum::<usize>(), h.entry_count());
+    }
+
+    #[test]
+    fn hybrid_registry_replaces_parallel_only() {
+        let reg = hybrid_registry(ParallelConfig::default());
+        let mut names = reg.names();
+        names.sort_unstable();
+        assert_eq!(
+            names,
+            vec!["batagelj-mrvar", "merged", "moody", "naive", "parallel"]
+        );
+        let exec = Executor::with_workers(2);
+        let g = generators::power_law(90, 2.2, 5.0, 17);
+        let want = naive::census(&g);
+        let h = hub_of(&g, Some(10));
+        for name in reg.names() {
+            let run = reg.get(name).unwrap().census(&h, &exec);
+            assert_eq!(run.census, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn cancellation_and_config_override() {
+        let exec = Executor::with_workers(2);
+        let g = generators::power_law(80, 2.2, 5.0, 3);
+        let h = hub_of(&g, Some(8));
+        let engine = HybridEngine {
+            cfg: ParallelConfig::default(),
+        };
+        let cancelled = CancelToken::new();
+        cancelled.cancel();
+        assert!(engine.census_cancellable(&h, &exec, &cancelled).is_none());
+        let over = engine
+            .with_config(ParallelConfig {
+                threads: 2,
+                ..ParallelConfig::default()
+            })
+            .expect("hybrid engine is configurable");
+        assert_eq!(over.name(), "parallel");
+        assert_eq!(over.census(&h, &exec).census, naive::census(&g));
+    }
+}

@@ -40,6 +40,7 @@
 
 pub mod batagelj_mrvar;
 pub mod engine;
+pub mod hybrid;
 pub mod isotricode;
 pub mod merged;
 pub mod moody;
@@ -49,6 +50,10 @@ pub mod stream;
 pub mod types;
 
 pub use engine::{CensusEngine, EngineRegistry};
+pub use hybrid::{
+    census_hybrid_cancellable, census_hybrid_on, census_hybrid_serial, hybrid_registry,
+    HybridEngine,
+};
 pub use isotricode::{classify_tricode, tricode_of, TRICODE_TABLE};
 pub use parallel::{
     census_parallel, census_parallel_cancellable, census_parallel_on, census_parallel_range,

@@ -138,6 +138,25 @@ pub struct ParallelRun {
     pub stats: ThreadPoolStats,
 }
 
+/// Per-dyad classification kernel the collapsed sweep dispatches to.
+/// [`MergedKernel`] (the merged union walk) is the default; the
+/// hub-bitmap hybrid (`census/hybrid.rs`) substitutes a kernel that
+/// answers hub rows from bitmap planes. The sweep is monomorphized per
+/// kernel, so the tail path pays no dispatch cost.
+pub(crate) trait DyadKernel<G: GraphView>: Sync {
+    fn dyad<S: CensusSink>(&self, g: &G, u: u32, v: u32, bits: u8, sink: &mut S);
+}
+
+/// The default kernel: [`dyad_task`]'s merged two-pointer walk.
+pub(crate) struct MergedKernel;
+
+impl<G: GraphView> DyadKernel<G> for MergedKernel {
+    #[inline]
+    fn dyad<S: CensusSink>(&self, g: &G, u: u32, v: u32, bits: u8, sink: &mut S) {
+        dyad_task(g, u, v, bits, sink);
+    }
+}
+
 /// Which driver executes the collapsed iteration space.
 enum LoopRunner<'e> {
     /// A persistent shared executor (the serving path).
@@ -180,28 +199,43 @@ impl LoopRunner<'_> {
     }
 }
 
-fn census_with<G: GraphView>(
+fn census_with<G: GraphView, K: DyadKernel<G>>(
     g: &G,
     cfg: &ParallelConfig,
     runner: LoopRunner<'_>,
     cancel: &CancelToken,
+    kernel: &K,
 ) -> Option<ParallelRun> {
     let n = g.node_count();
-    let mut run = census_entries_with(g, cfg, runner, cancel, 0, g.entry_count())?;
+    let mut run = census_entries_with(g, cfg, runner, cancel, 0, g.entry_count(), kernel)?;
     run.census.close_with_null(n);
     Some(run)
+}
+
+/// Kernel-parameterized cancellable census on an explicit executor —
+/// the hybrid engine's entry point (`census/hybrid.rs` supplies the
+/// hub-aware kernel; scheduling and accumulation stay shared here).
+pub(crate) fn census_kernel_cancellable<G: GraphView, K: DyadKernel<G>>(
+    g: &G,
+    cfg: &ParallelConfig,
+    exec: &Executor,
+    cancel: &CancelToken,
+    kernel: &K,
+) -> Option<ParallelRun> {
+    census_with(g, cfg, LoopRunner::Pool(exec), cancel, kernel)
 }
 
 /// Sweep the collapsed entry subrange `[base, end)` and return the raw
 /// non-null tallies — null closure is the caller's job, which is what
 /// lets shard partials sum exactly before closing once.
-fn census_entries_with<G: GraphView>(
+fn census_entries_with<G: GraphView, K: DyadKernel<G>>(
     g: &G,
     cfg: &ParallelConfig,
     runner: LoopRunner<'_>,
     cancel: &CancelToken,
     base: usize,
     end: usize,
+    kernel: &K,
 ) -> Option<ParallelRun> {
     debug_assert!(base <= end && end <= g.entry_count());
     let len = end - base;
@@ -224,7 +258,7 @@ fn census_entries_with<G: GraphView>(
                         let mut sink = BankSlot {
                             slot: &bank.slots[bank.slot_of(u, v)],
                         };
-                        dyad_task(g, u, v, bits, &mut sink);
+                        kernel.dyad(g, u, v, bits, &mut sink);
                     });
                 },
             );
@@ -239,7 +273,7 @@ fn census_entries_with<G: GraphView>(
                 |_tid| Census::zero(),
                 |acc, _tid, s, e| {
                     walk_chunk(g, offsets, base + s, base + e, |u, v, bits| {
-                        dyad_task(g, u, v, bits, acc);
+                        kernel.dyad(g, u, v, bits, acc);
                     });
                 },
             );
@@ -260,8 +294,14 @@ fn census_entries_with<G: GraphView>(
 /// Parallel triad census over the collapsed entry space, on the shared
 /// process-wide executor. Generic over any [`GraphView`].
 pub fn census_parallel<G: GraphView>(g: &G, cfg: &ParallelConfig) -> ParallelRun {
-    census_with(g, cfg, LoopRunner::Pool(Executor::global()), &CancelToken::new())
-        .expect("fresh token never cancels")
+    census_with(
+        g,
+        cfg,
+        LoopRunner::Pool(Executor::global()),
+        &CancelToken::new(),
+        &MergedKernel,
+    )
+    .expect("fresh token never cancels")
 }
 
 /// Parallel triad census on an explicit [`Executor`] — the coordinator's
@@ -271,7 +311,7 @@ pub fn census_parallel_on<G: GraphView>(
     cfg: &ParallelConfig,
     exec: &Executor,
 ) -> ParallelRun {
-    census_with(g, cfg, LoopRunner::Pool(exec), &CancelToken::new())
+    census_with(g, cfg, LoopRunner::Pool(exec), &CancelToken::new(), &MergedKernel)
         .expect("fresh token never cancels")
 }
 
@@ -286,7 +326,7 @@ pub fn census_parallel_cancellable<G: GraphView>(
     exec: &Executor,
     cancel: &CancelToken,
 ) -> Option<ParallelRun> {
-    census_with(g, cfg, LoopRunner::Pool(exec), cancel)
+    census_with(g, cfg, LoopRunner::Pool(exec), cancel, &MergedKernel)
 }
 
 /// Partial parallel census of the contiguous vertex range `lo..hi`: the
@@ -318,14 +358,14 @@ pub fn census_parallel_range<G: GraphView>(
         let offsets = g.flat_offsets();
         (offsets[lo], offsets[hi])
     };
-    census_entries_with(g, cfg, LoopRunner::Pool(exec), cancel, base, end)
+    census_entries_with(g, cfg, LoopRunner::Pool(exec), cancel, base, end, &MergedKernel)
 }
 
 /// Parallel triad census spawning scoped threads for this one call (the
 /// pre-executor behavior). Baseline of `benches/executor_reuse.rs`; not
 /// for new code.
 pub fn census_parallel_scoped<G: GraphView>(g: &G, cfg: &ParallelConfig) -> ParallelRun {
-    census_with(g, cfg, LoopRunner::Scoped, &CancelToken::new())
+    census_with(g, cfg, LoopRunner::Scoped, &CancelToken::new(), &MergedKernel)
         .expect("fresh token never cancels")
 }
 

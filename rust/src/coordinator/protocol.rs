@@ -966,6 +966,15 @@ pub struct SchedStats {
     pub wall_seconds: f64,
     /// Max/mean busy ratio (1.0 = perfectly balanced).
     pub imbalance: f64,
+    /// Sockets the executor scheduled the job across (1 when the
+    /// topology is single-socket or unknown).
+    pub sockets: usize,
+    /// Dynamic-policy chunk steals that stayed on the thief's socket.
+    pub local_steals: u64,
+    /// Steals that crossed a socket boundary.
+    pub remote_steals: u64,
+    /// Max/mean busy ratio across *sockets* (1.0 = balanced).
+    pub socket_imbalance: f64,
 }
 
 impl SchedStats {
@@ -977,6 +986,10 @@ impl SchedStats {
             busy_seconds: stats.busy.iter().sum(),
             wall_seconds: stats.wall,
             imbalance: stats.imbalance(),
+            sockets: stats.socket_busy().len(),
+            local_steals: stats.local_steals,
+            remote_steals: stats.remote_steals,
+            socket_imbalance: stats.socket_imbalance(),
         }
     }
 
@@ -988,6 +1001,10 @@ impl SchedStats {
             ("busy_seconds".into(), Json::Num(self.busy_seconds)),
             ("wall_seconds".into(), Json::Num(self.wall_seconds)),
             ("imbalance".into(), Json::Num(self.imbalance)),
+            ("sockets".into(), Json::from(self.sockets)),
+            ("local_steals".into(), Json::from(self.local_steals)),
+            ("remote_steals".into(), Json::from(self.remote_steals)),
+            ("socket_imbalance".into(), Json::Num(self.socket_imbalance)),
         ])
     }
 
@@ -999,6 +1016,13 @@ impl SchedStats {
             busy_seconds: v.get("busy_seconds").and_then(Json::as_f64).unwrap_or(0.0),
             wall_seconds: v.get("wall_seconds").and_then(Json::as_f64).unwrap_or(0.0),
             imbalance: v.get("imbalance").and_then(Json::as_f64).unwrap_or(0.0),
+            sockets: v.get("sockets").and_then(Json::as_usize).unwrap_or(1),
+            local_steals: v.get("local_steals").and_then(Json::as_u64).unwrap_or(0),
+            remote_steals: v.get("remote_steals").and_then(Json::as_u64).unwrap_or(0),
+            socket_imbalance: v
+                .get("socket_imbalance")
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0),
         }
     }
 }
@@ -1834,6 +1858,10 @@ mod tests {
                 busy_seconds: 0.01,
                 wall_seconds: 0.004,
                 imbalance: 1.2,
+                sockets: 2,
+                local_steals: 5,
+                remote_steals: 1,
+                socket_imbalance: 1.5,
             }),
             seconds: 0.005,
         };

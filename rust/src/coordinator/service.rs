@@ -16,7 +16,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::Instant;
 
 use super::client::TriadicClient;
@@ -25,13 +25,13 @@ use super::protocol::{
     SchedStats, Shard, WireError, PROTOCOL_VERSION,
 };
 use super::router::{Route, Router, RoutingPolicy};
-use crate::census::engine::ParallelEngine;
 use crate::census::{
-    census_parallel_range, Census, CensusEngine, EngineRegistry, ParallelConfig, ParallelRun,
+    census_parallel_range, hybrid_registry, Census, CensusEngine, EngineRegistry, ParallelConfig,
+    ParallelRun,
 };
 use crate::error::{Context, Error, Result};
-use crate::graph::relabel::{self, DirSplit};
-use crate::graph::{generators, io, CsrGraph, GraphBuilder, GraphView, VertexOrdering};
+use crate::graph::relabel;
+use crate::graph::{generators, io, CsrGraph, GraphBuilder, GraphView, HubSplit, VertexOrdering};
 use crate::metrics::Metrics;
 use crate::runtime::DenseCensusRuntime;
 use crate::sched::{CancelToken, Executor, ExecutorConfig, Policy, ThreadPoolStats};
@@ -235,6 +235,58 @@ impl GraphStore {
                 Err(e)
             }
         }
+    }
+}
+
+/// Cache of degree-relabeled hub-split forms, keyed by graph *identity*
+/// (the `Arc<CsrGraph>` allocation) rather than by path — it sits next
+/// to [`GraphStore`], which pins the `Arc`s that make identity stable
+/// across requests. Holding [`Weak`] keys means the cache never keeps
+/// an evicted or rewritten graph alive; entries whose graph died are
+/// pruned on the next lookup and counted as `split_cache_stale_total`.
+struct SplitCache {
+    capacity: usize,
+    entries: Mutex<VecDeque<(Weak<CsrGraph>, Arc<HubSplit>)>>,
+}
+
+impl SplitCache {
+    fn new(capacity: usize) -> SplitCache {
+        SplitCache {
+            capacity,
+            entries: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// The cached split of exactly this graph allocation, if still live.
+    fn get(&self, g: &Arc<CsrGraph>, metrics: &Metrics) -> Option<Arc<HubSplit>> {
+        let mut entries = self.entries.lock().unwrap();
+        let before = entries.len();
+        entries.retain(|(weak, _)| weak.strong_count() > 0);
+        let dead = before - entries.len();
+        if dead > 0 {
+            metrics.inc("split_cache_stale_total", dead as u64);
+        }
+        let hit = entries.iter().find_map(|(weak, split)| {
+            weak.upgrade()
+                .filter(|live| Arc::ptr_eq(live, g))
+                .map(|_| split.clone())
+        });
+        match &hit {
+            Some(_) => metrics.inc("split_cache_hits_total", 1),
+            None => metrics.inc("split_cache_misses_total", 1),
+        }
+        hit
+    }
+
+    fn put(&self, g: &Arc<CsrGraph>, split: Arc<HubSplit>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut entries = self.entries.lock().unwrap();
+        while entries.len() >= self.capacity {
+            entries.pop_front();
+        }
+        entries.push_back((Arc::downgrade(g), split));
     }
 }
 
@@ -512,9 +564,12 @@ fn job_worker(core: &Core, queue: &JobQueue) {
 struct Core {
     router: Router,
     engines: EngineRegistry,
-    /// The same five engines instantiated over the direction-split
-    /// view — the sparse path under `ordering: degree`.
-    split_engines: EngineRegistry<DirSplit>,
+    /// The five engines instantiated over the hub-split view — the
+    /// sparse path under `ordering: degree`, where `parallel` is the
+    /// hub-bitmap hybrid kernel.
+    split_engines: EngineRegistry<HubSplit>,
+    /// Preprocessed hub-split forms keyed to graph-cache entries.
+    splits: SplitCache,
     engine: String,
     default_sparse: ParallelConfig,
     executor: Arc<Executor>,
@@ -539,8 +594,8 @@ type RouteOutcome = (Census, Route, Option<ThreadPoolStats>, String, VertexOrder
 
 /// Resolve and run one sparse engine over any [`GraphView`] — the
 /// natural path hands the CSR straight in, the degree-ordered path
-/// hands in the relabeled direction-split form; per-request
-/// seat/policy overrides build a one-off parallel engine either way.
+/// hands in the relabeled hub-split form; per-request seat/policy
+/// overrides re-parameterize the engine either way.
 #[allow(clippy::too_many_arguments)]
 fn sparse_engine_run<G: GraphView>(
     engines: &EngineRegistry<G>,
@@ -555,21 +610,20 @@ fn sparse_engine_run<G: GraphView>(
     let engine = engines
         .get_or_err(name)
         .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
-    // per-request seat/policy overrides build a one-off parallel
-    // engine over the configured base (serial engines ignore them)
-    let custom = if engine.name() == "parallel" && (threads.is_some() || policy.is_some()) {
-        Some(ParallelEngine {
-            cfg: ParallelConfig {
-                threads: threads.unwrap_or(default_sparse.threads),
-                policy: policy.unwrap_or(default_sparse.policy),
-                accumulation: default_sparse.accumulation,
-            },
+    // per-request seat/policy overrides re-parameterize configurable
+    // engines (the parallel and hybrid ones) over the configured base;
+    // serial engines have no knobs and run as registered
+    let custom = if threads.is_some() || policy.is_some() {
+        engine.with_config(ParallelConfig {
+            threads: threads.unwrap_or(default_sparse.threads),
+            policy: policy.unwrap_or(default_sparse.policy),
+            accumulation: default_sparse.accumulation,
         })
     } else {
         None
     };
     let engine: &dyn CensusEngine<G> = match &custom {
-        Some(e) => e,
+        Some(e) => e.as_ref(),
         None => engine,
     };
     let run = engine
@@ -611,6 +665,7 @@ impl Core {
         }
         let (census, route, stats, engine, ordering) = self.run_route(
             &g,
+            Some(&g),
             req.engine.as_deref(),
             req.threads,
             req.policy,
@@ -703,16 +758,27 @@ impl Core {
         }
     }
 
-    /// Degree-relabel `g` and build the direction-split form — the
-    /// sparse path's `ordering: degree` preprocessing, timed under the
-    /// `order_preprocess` metric. Recomputed per request for now; a
-    /// preprocessed-form cache belongs next to the graph cache (the
-    /// pass is deterministic per graph) and is left as follow-up work.
-    fn degree_split(&self, g: &CsrGraph) -> DirSplit {
+    /// Degree-relabel `g` and build the hub-split form (direction-split
+    /// plus hub bitmaps) — the sparse path's `ordering: degree`
+    /// preprocessing, timed under the `order_preprocess` metric. When
+    /// the caller can vouch for the graph's identity (an `Arc` pinned by
+    /// the graph cache or a resolved source), the preprocessed form is
+    /// cached next to it, so repeated degree-ordered requests over a
+    /// cached graph skip the relabel + split + bitmap build entirely.
+    fn degree_split(&self, g: &CsrGraph, identity: Option<&Arc<CsrGraph>>) -> Arc<HubSplit> {
         self.metrics.inc("census_degree_ordered_total", 1);
-        self.metrics.time("order_preprocess", || {
-            relabel::degree_split(g, self.graphs.ingest_threads).1
-        })
+        if let Some(arc) = identity {
+            if let Some(split) = self.splits.get(arc, &self.metrics) {
+                return split;
+            }
+        }
+        let split = Arc::new(self.metrics.time("order_preprocess", || {
+            HubSplit::build(relabel::degree_split(g, self.graphs.ingest_threads).1)
+        }));
+        if let Some(arc) = identity {
+            self.splits.put(arc, split.clone());
+        }
+        split
     }
 
     /// Route and run one in-memory graph. Naming an engine forces the
@@ -724,6 +790,7 @@ impl Core {
     fn run_route(
         &self,
         g: &CsrGraph,
+        identity: Option<&Arc<CsrGraph>>,
         engine_override: Option<&str>,
         threads: Option<usize>,
         policy: Option<Policy>,
@@ -777,7 +844,7 @@ impl Core {
                 self.engines
                     .get_or_err(name)
                     .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
-                let split = self.degree_split(g);
+                let split = self.degree_split(g, identity);
                 if cancel.is_cancelled() {
                     return Err(cancelled_error());
                 }
@@ -788,7 +855,7 @@ impl Core {
                         &self.default_sparse,
                         threads,
                         policy,
-                        &split,
+                        split.as_ref(),
                         &self.executor,
                         cancel,
                     )
@@ -802,6 +869,10 @@ impl Core {
             "census_slots_total",
             run.stats.items.iter().sum::<usize>() as u64,
         );
+        self.metrics
+            .inc("census_steals_local_total", run.stats.local_steals);
+        self.metrics
+            .inc("census_steals_remote_total", run.stats.remote_steals);
         Ok((run.census, route, Some(run.stats), engine_name, ordering))
     }
 
@@ -1100,13 +1171,14 @@ impl Coordinator {
         let core = Arc::new(Core {
             router: Router::new(routing),
             engines,
-            split_engines: EngineRegistry::builtin(cfg.sparse),
+            split_engines: hybrid_registry(cfg.sparse),
             engine: cfg.engine,
             default_sparse: cfg.sparse,
             executor,
             dense_tx: Mutex::new(dense_tx),
             metrics,
             graphs: GraphStore::new(cfg.graph_cache, cfg.ingest_threads.max(1), cfg.trusted_mmap),
+            splits: SplitCache::new(cfg.graph_cache),
             max_request_nodes: cfg.max_request_nodes,
             workers: cfg.workers,
         });
@@ -1194,7 +1266,7 @@ impl Coordinator {
     /// name that produced it.
     pub fn seed_census(
         &self,
-        g: &CsrGraph,
+        g: &Arc<CsrGraph>,
         engine_override: Option<&str>,
         ordering: Option<VertexOrdering>,
     ) -> std::result::Result<(Census, String), WireError> {
@@ -1218,9 +1290,9 @@ impl Coordinator {
                     .split_engines
                     .get_or_err(name)
                     .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
-                let split = self.core.degree_split(g);
+                let split = self.core.degree_split(g, Some(g));
                 let run = self.core.metrics.time("stream_seed_census", || {
-                    engine.census(&split, &self.core.executor)
+                    engine.census(split.as_ref(), &self.core.executor)
                 });
                 Ok((run.census, engine.name().to_string()))
             }
@@ -1295,7 +1367,7 @@ impl Coordinator {
         let t0 = Instant::now();
         let (census, route, stats, _engine, applied) = self
             .core
-            .run_route(g, None, None, None, ordering, &CancelToken::new())
+            .run_route(g, None, None, None, None, ordering, &CancelToken::new())
             .map_err(Error::msg)?;
         Ok(CensusOutcome {
             census,
@@ -1708,6 +1780,51 @@ mod tests {
         assert_eq!(out.ordering, crate::graph::VertexOrdering::Degree);
         // plain census() reports the ordering it ran: natural
         assert_eq!(coord.census(&g).unwrap().ordering, crate::graph::VertexOrdering::Natural);
+    }
+
+    #[test]
+    fn degree_split_cache_reuses_preprocessed_forms() {
+        let coord = sparse_coordinator();
+        let g = generators::power_law(500, 2.2, 6.0, 23);
+        let want = merged::census(&g);
+        let path = std::env::temp_dir().join("triadic_split_cache.csr");
+        crate::graph::io::write_binary_v2_file(&g, &path).unwrap();
+
+        // Path sources resolve to the graph cache's pinned Arc, so the
+        // hub-split form is built once and reused by identity.
+        for _ in 0..3 {
+            let out = coord
+                .submit(
+                    CensusRequest::path(path.to_str().unwrap())
+                        .ordering(crate::graph::VertexOrdering::Degree),
+                )
+                .wait()
+                .unwrap();
+            assert_eq!(out.census, want);
+            assert_eq!(out.provenance.ordering, "degree");
+        }
+        assert_eq!(coord.metrics().get("split_cache_misses_total"), 1);
+        assert_eq!(coord.metrics().get("split_cache_hits_total"), 2);
+
+        // Generator sources materialize a fresh Arc per request: each
+        // one misses, and its weak entry is pruned as stale once the
+        // graph dies.
+        for _ in 0..2 {
+            let out = coord
+                .submit(
+                    CensusRequest::generator("patents", 300)
+                        .seed(7)
+                        .ordering(crate::graph::VertexOrdering::Degree),
+                )
+                .wait()
+                .unwrap();
+            assert_eq!(out.provenance.ordering, "degree");
+        }
+        assert_eq!(coord.metrics().get("split_cache_misses_total"), 3);
+        assert_eq!(coord.metrics().get("split_cache_hits_total"), 2);
+        assert_eq!(coord.metrics().get("split_cache_stale_total"), 1);
+        assert_eq!(coord.metrics().get("census_degree_ordered_total"), 5);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Hub-bitmap rows over a [`DirSplit`]: the data side of the hybrid
+//! census kernel.
+//!
+//! After degree-descending relabeling the hubs are exactly the nodes
+//! `0..k`, and the canonical `u < v` dyad enumeration classifies every
+//! hub-involving triad from its hub endpoint. The merged union walk
+//! pays O(deg(u) + deg(v)) per dyad — dominated by the hub's enormous
+//! row. `HubSplit` stores the top-`k` rows *additionally* as packed
+//! 2-bit-direction bitmaps (an out plane and an in plane of `n` bits
+//! each), so the census kernel (`census/hybrid.rs`) can
+//!
+//! * answer "what is the `(u, w)` dyad?" for a hub `u` in O(1) — two
+//!   masked loads — while walking only the *short* neighborhood
+//!   `N(v)`; and
+//! * bulk-count the hub's remaining neighbors above any id with O(1)
+//!   rank arithmetic (word-granularity prefix ranks per direction
+//!   class, closed with one masked popcount), instead of draining the
+//!   hub row element by element.
+//!
+//! `k` is picked adaptively: rows qualify while their degree exceeds a
+//! density threshold (the merge-walk cost model: a hub repays its
+//! bitmap once `deg²` beats the row-build cost `n/64`), capped by a
+//! memory budget. `k = 0` (nothing qualifies — e.g. natural ordering
+//! or a degree-uniform graph) degrades to plain [`DirSplit`] behavior:
+//! the view delegates every [`GraphView`] method to the inner split,
+//! so generic engines run unchanged and byte-identical.
+
+use std::borrow::Cow;
+
+use super::relabel::{DirSplit, DirSplitNeighbors};
+use super::view::GraphView;
+
+/// Memory ceiling for the bitmap planes + rank arrays (bytes).
+const DEFAULT_MEMORY_BUDGET: usize = 64 << 20;
+
+/// Degree above which a row repays its bitmap: the hub kernel saves
+/// ~deg(u) work on each of the hub's ~deg(u) canonical dyads, while the
+/// row costs O(n/64) words to build — profitable once deg ≳ √n/4, with
+/// a small floor so trivial rows never qualify.
+fn hub_degree_threshold(n: usize) -> usize {
+    (((n as f64).sqrt() / 4.0) as usize).max(32)
+}
+
+/// [`DirSplit`] plus packed direction-bitmap rows for the top-`k`
+/// (hub) nodes. See the module docs for layout and the cost model.
+pub struct HubSplit {
+    split: DirSplit,
+    /// Hubs are nodes `0..k`.
+    k: usize,
+    /// Words per bit plane row: `ceil(n / 64)`.
+    words: usize,
+    /// `k × words` — bit `w` of row `u` set iff the arc `u -> w` exists.
+    out_plane: Vec<u64>,
+    /// `k × words` — bit `w` set iff the arc `w -> u` exists.
+    in_plane: Vec<u64>,
+    /// `k × (words + 1)` per class: `rank[u][wi]` = neighbors of that
+    /// class in words `< wi`. Suffix counts close with one masked
+    /// popcount of the boundary word.
+    rank_recip: Vec<u32>,
+    rank_out: Vec<u32>,
+    rank_in: Vec<u32>,
+}
+
+impl HubSplit {
+    /// Build with the adaptive hub count (degree threshold + the
+    /// default memory budget).
+    pub fn build(split: DirSplit) -> HubSplit {
+        let k = Self::adaptive_hub_count(&split, DEFAULT_MEMORY_BUDGET);
+        Self::with_hub_count(split, k)
+    }
+
+    /// Longest prefix of rows whose degree clears the density
+    /// threshold, capped by `memory_budget` bytes of plane + rank
+    /// storage. On a degree-descending relabeled graph this is exactly
+    /// "every row above the threshold"; under other orderings the
+    /// prefix scan stops at the first light row (conservative by
+    /// design — bitmap rows only pay off for hubs).
+    pub fn adaptive_hub_count(split: &DirSplit, memory_budget: usize) -> usize {
+        let n = split.node_count();
+        if n == 0 {
+            return 0;
+        }
+        let words = n.div_ceil(64);
+        let bytes_per_hub = 2 * words * 8 + 3 * (words + 1) * 4;
+        let cap = (memory_budget / bytes_per_hub.max(1)).min(n);
+        let threshold = hub_degree_threshold(n);
+        let mut k = 0;
+        while k < cap && split.degree(k as u32) >= threshold {
+            k += 1;
+        }
+        k
+    }
+
+    /// Build with an explicit hub count (tests force `k = 0` / `k = n`;
+    /// production callers use [`HubSplit::build`]).
+    pub fn with_hub_count(split: DirSplit, k: usize) -> HubSplit {
+        let n = split.node_count();
+        let k = k.min(n);
+        let words = n.div_ceil(64);
+        let mut out_plane = vec![0u64; k * words];
+        let mut in_plane = vec![0u64; k * words];
+        for u in 0..k {
+            let row = u * words;
+            let (recip, out_only, in_only) = split.runs(u as u32);
+            for &w in recip {
+                out_plane[row + w as usize / 64] |= 1 << (w % 64);
+                in_plane[row + w as usize / 64] |= 1 << (w % 64);
+            }
+            for &w in out_only {
+                out_plane[row + w as usize / 64] |= 1 << (w % 64);
+            }
+            for &w in in_only {
+                in_plane[row + w as usize / 64] |= 1 << (w % 64);
+            }
+        }
+        let mut rank_recip = vec![0u32; k * (words + 1)];
+        let mut rank_out = vec![0u32; k * (words + 1)];
+        let mut rank_in = vec![0u32; k * (words + 1)];
+        for u in 0..k {
+            let row = u * words;
+            let base = u * (words + 1);
+            for wi in 0..words {
+                let o = out_plane[row + wi];
+                let i = in_plane[row + wi];
+                rank_recip[base + wi + 1] = rank_recip[base + wi] + (o & i).count_ones();
+                rank_out[base + wi + 1] = rank_out[base + wi] + (o & !i).count_ones();
+                rank_in[base + wi + 1] = rank_in[base + wi] + (i & !o).count_ones();
+            }
+        }
+        HubSplit {
+            split,
+            k,
+            words,
+            out_plane,
+            in_plane,
+            rank_recip,
+            rank_out,
+            rank_in,
+        }
+    }
+
+    /// Number of bitmap-backed hub rows.
+    pub fn hub_count(&self) -> usize {
+        self.k
+    }
+
+    /// The inner direction-split form (the sparse-tail path).
+    pub fn split(&self) -> &DirSplit {
+        &self.split
+    }
+
+    /// True if `u` has a bitmap row.
+    #[inline]
+    pub fn is_hub(&self, u: u32) -> bool {
+        (u as usize) < self.k
+    }
+
+    /// Words per bit-plane row.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// O(1) dyad lookup from hub `u`'s bitmap row: direction bits of
+    /// `(u, w)` from `u`'s perspective (`0` = null).
+    #[inline]
+    pub fn hub_dyad_bits(&self, u: u32, w: u32) -> u8 {
+        debug_assert!(self.is_hub(u));
+        let row = u as usize * self.words;
+        let (wi, bit) = (w as usize / 64, w as usize % 64);
+        let o = (self.out_plane[row + wi] >> bit) & 1;
+        let i = (self.in_plane[row + wi] >> bit) & 1;
+        (o | (i << 1)) as u8
+    }
+
+    /// Bit-plane words `(out, in)` of hub `u`'s row — the dense
+    /// hub–hub word-intersection path of the kernel.
+    #[inline]
+    pub fn planes(&self, u: u32) -> (&[u64], &[u64]) {
+        debug_assert!(self.is_hub(u));
+        let row = u as usize * self.words;
+        (
+            &self.out_plane[row..row + self.words],
+            &self.in_plane[row..row + self.words],
+        )
+    }
+
+    /// Per direction class, the number of neighbors of hub `u` with id
+    /// strictly greater than `v`, indexed by the class's 2-bit dyad
+    /// code (`[_, out-only, in-only, reciprocal]`). O(1): one rank
+    /// lookup plus one masked popcount per class.
+    #[inline]
+    pub fn counts_above(&self, u: u32, v: u32) -> [u64; 4] {
+        debug_assert!(self.is_hub(u));
+        let (recip, out_only, in_only) = self.split.runs(u);
+        let row = u as usize * self.words;
+        let base = u as usize * (self.words + 1);
+        let (wi, bit) = (v as usize / 64, v as usize % 64);
+        // bits with id <= v inside the boundary word
+        let low = if bit == 63 {
+            u64::MAX
+        } else {
+            (1u64 << (bit + 1)) - 1
+        };
+        let o = self.out_plane[row + wi];
+        let i = self.in_plane[row + wi];
+        let le_out = self.rank_out[base + wi] as u64 + ((o & !i) & low).count_ones() as u64;
+        let le_in = self.rank_in[base + wi] as u64 + ((i & !o) & low).count_ones() as u64;
+        let le_recip = self.rank_recip[base + wi] as u64 + ((o & i) & low).count_ones() as u64;
+        [
+            0,
+            out_only.len() as u64 - le_out,
+            in_only.len() as u64 - le_in,
+            recip.len() as u64 - le_recip,
+        ]
+    }
+}
+
+impl GraphView for HubSplit {
+    type Neighbors<'a>
+        = DirSplitNeighbors<'a>
+    where
+        Self: 'a;
+
+    #[inline]
+    fn node_count(&self) -> usize {
+        self.split.node_count()
+    }
+
+    #[inline]
+    fn arc_count(&self) -> u64 {
+        self.split.arc_count()
+    }
+
+    #[inline]
+    fn neighbors(&self, u: u32) -> DirSplitNeighbors<'_> {
+        self.split.neighbors(u)
+    }
+
+    #[inline]
+    fn dyad_bits(&self, u: u32, v: u32) -> u8 {
+        if self.is_hub(u) {
+            self.hub_dyad_bits(u, v)
+        } else {
+            self.split.dyad_bits(u, v)
+        }
+    }
+
+    #[inline]
+    fn degree(&self, u: u32) -> usize {
+        self.split.degree(u)
+    }
+
+    #[inline]
+    fn entry_count(&self) -> usize {
+        self.split.entry_count()
+    }
+
+    #[inline]
+    fn flat_offsets(&self) -> Cow<'_, [usize]> {
+        self.split.flat_offsets()
+    }
+
+    #[inline]
+    fn out_degree(&self, u: u32) -> usize {
+        self.split.out_degree(u)
+    }
+
+    #[inline]
+    fn in_degree(&self, u: u32) -> usize {
+        self.split.in_degree(u)
+    }
+
+    #[inline]
+    fn reciprocal_degree(&self, u: u32) -> usize {
+        self.split.reciprocal_degree(u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_arcs;
+    use crate::graph::generators;
+    use crate::graph::relabel::degree_split;
+
+    fn forced(n: usize, seed: u64, k: usize) -> HubSplit {
+        let g = generators::power_law(n, 2.2, 6.0, seed);
+        let (_, split) = degree_split(&g, 2);
+        HubSplit::with_hub_count(split, k)
+    }
+
+    #[test]
+    fn hub_bits_match_the_split_lookup() {
+        let h = forced(150, 7, 150);
+        let n = h.node_count() as u32;
+        for u in 0..n {
+            for w in 0..n {
+                if u != w {
+                    assert_eq!(
+                        h.hub_dyad_bits(u, w),
+                        h.split().dyad_bits(u, w),
+                        "dyad ({u},{w})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn counts_above_match_a_linear_scan() {
+        let h = forced(140, 11, 140);
+        let n = h.node_count() as u32;
+        for u in 0..n {
+            for v in 0..n {
+                let mut want = [0u64; 4];
+                for (w, bits) in h.split().neighbors(u) {
+                    if w > v {
+                        want[bits as usize] += 1;
+                    }
+                }
+                let got = h.counts_above(u, v);
+                assert_eq!(got, want, "hub {u} above {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_k_takes_the_heavy_prefix_only() {
+        // star: one mega-hub, tails of degree 1
+        let arcs: Vec<(u32, u32)> = (1..200u32).map(|v| (0, v)).collect();
+        let g = from_arcs(200, &arcs);
+        let (_, split) = degree_split(&g, 2);
+        let k = HubSplit::adaptive_hub_count(&split, DEFAULT_MEMORY_BUDGET);
+        assert_eq!(k, 1, "only the star center clears the threshold");
+        // degree-uniform sparse graph: nothing qualifies
+        let ring: Vec<(u32, u32)> = (0..100u32).map(|u| (u, (u + 1) % 100)).collect();
+        let g = from_arcs(100, &ring);
+        let (_, split) = degree_split(&g, 2);
+        assert_eq!(HubSplit::adaptive_hub_count(&split, DEFAULT_MEMORY_BUDGET), 0);
+    }
+
+    #[test]
+    fn memory_budget_caps_the_hub_count() {
+        let g = generators::power_law(512, 2.0, 8.0, 3);
+        let (_, split) = degree_split(&g, 2);
+        let unbounded = HubSplit::adaptive_hub_count(&split, usize::MAX);
+        // a budget of ~two rows keeps at most two hubs
+        let words = 512usize.div_ceil(64);
+        let per_hub = 2 * words * 8 + 3 * (words + 1) * 4;
+        let capped = HubSplit::adaptive_hub_count(&split, 2 * per_hub);
+        assert!(capped <= 2 && capped <= unbounded);
+    }
+
+    #[test]
+    fn view_delegates_to_the_inner_split() {
+        let h = forced(120, 5, 8);
+        let n = h.node_count() as u32;
+        assert_eq!(h.entry_count(), h.split().entry_count());
+        assert_eq!(h.arc_count(), h.split().arc_count());
+        assert_eq!(h.flat_offsets(), h.split().flat_offsets());
+        for u in 0..n {
+            let a: Vec<(u32, u8)> = h.neighbors(u).collect();
+            let b: Vec<(u32, u8)> = h.split().neighbors(u).collect();
+            assert_eq!(a, b, "node {u}");
+            assert_eq!(h.degree(u), h.split().degree(u));
+            assert_eq!(h.out_degree(u), h.split().out_degree(u));
+            assert_eq!(h.in_degree(u), h.split().in_degree(u));
+            assert_eq!(h.reciprocal_degree(u), h.split().reciprocal_degree(u));
+            for v in 0..n {
+                if u != v {
+                    assert_eq!(h.dyad_bits(u, v), h.split().dyad_bits(u, v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_empty_edge_cases() {
+        let g = crate::graph::CsrGraph::empty(0);
+        let split = DirSplit::build(&g);
+        let h = HubSplit::build(split);
+        assert_eq!(h.hub_count(), 0);
+        assert_eq!(h.node_count(), 0);
+        let h = forced(60, 1, 0);
+        assert_eq!(h.hub_count(), 0);
+        assert!(!h.is_hub(0));
+    }
+}

@@ -10,6 +10,7 @@ pub mod builder;
 pub mod csr;
 pub mod degree;
 pub mod generators;
+pub mod hub;
 pub mod io;
 pub mod mmap;
 pub mod overlay;
@@ -21,6 +22,7 @@ pub use builder::GraphBuilder;
 pub use csr::{CsrGraph, Dir, DyadType, PackedEdge};
 pub use degree::{DegreeStats, OutDegreeHistogram};
 pub use generators::{named, GraphSpec};
+pub use hub::HubSplit;
 pub use mmap::MmapFile;
 pub use overlay::{ApplyOutcome, DeltaOverlay, EdgeOp, RejectReason};
 pub use relabel::{DirSplit, Relabeling, VertexOrdering};

@@ -43,8 +43,8 @@ use triadic::analysis::{builtin_patterns, census_series, MonitorConfig, TriadMon
 use triadic::analysis::{TrafficGenerator, TrafficScenario};
 use triadic::bail;
 use triadic::census::{
-    census_parallel, merged, Accumulation, EngineRegistry, ParallelConfig, StreamingCensus,
-    TriadType,
+    census_parallel, hybrid_registry, merged, Accumulation, EngineRegistry, ParallelConfig,
+    StreamingCensus, TriadType,
 };
 use triadic::config::{graph_spec_from, Args};
 use triadic::coordinator::protocol::Json;
@@ -54,8 +54,8 @@ use triadic::coordinator::{
 };
 use triadic::error::{Context, Error, Result};
 use triadic::figures::{self, Scale};
-use triadic::graph::relabel::{self, DirSplit, Relabeling};
-use triadic::graph::{degree, io, CsrGraph, EdgeOp, VertexOrdering};
+use triadic::graph::relabel::{self, Relabeling};
+use triadic::graph::{degree, io, CsrGraph, EdgeOp, HubSplit, VertexOrdering};
 use triadic::sched::{Executor, ExecutorConfig, Policy};
 use triadic::simulator::{
     simulate, Machine, NumaMachine, SuperdomeMachine, WorkloadProfile, XmtMachine,
@@ -202,11 +202,13 @@ fn cmd_census(args: &Args) -> Result<()> {
             VertexOrdering::Degree => {
                 let t_prep = std::time::Instant::now();
                 let (_relabeling, split) = relabel::degree_split(&g, threads.max(1));
+                let split = HubSplit::build(split);
                 eprintln!(
-                    "# degree ordering: relabel + direction-split in {:.3}s",
+                    "# degree ordering: relabel + direction-split + {} hub rows in {:.3}s",
+                    split.hub_count(),
                     t_prep.elapsed().as_secs_f64()
                 );
-                let registry = EngineRegistry::<DirSplit>::builtin(sparse);
+                let registry = hybrid_registry(sparse);
                 let engine = registry.get_or_err(&engine_name).map_err(Error::msg)?;
                 (engine.census(&split, &exec), engine.name().to_string())
             }
@@ -396,8 +398,9 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     if order == VertexOrdering::Degree {
         let t6 = std::time::Instant::now();
         let (_relabeling, split) = relabel::degree_split(&g, threads.max(1));
+        let split = HubSplit::build(split);
         let t_prep = t6.elapsed().as_secs_f64();
-        let split_registry = EngineRegistry::<DirSplit>::builtin(cfg);
+        let split_registry = hybrid_registry(cfg);
         let split_engine = split_registry.get_or_err(&engine_name).map_err(Error::msg)?;
         let t7 = std::time::Instant::now();
         let ordered_run = split_engine.census(&split, &exec);

@@ -33,6 +33,27 @@
 //! chunk/item/busy telemetry is preserved in the exact
 //! [`ThreadPoolStats`] shape the figures harness and the workload
 //! characterizer consume.
+//!
+//! ## Socket awareness
+//!
+//! On a NUMA host (the paper's Magny-Cours in particular) the executor
+//! is *topology-aware*: workers are assigned to sockets in proportion to
+//! socket CPU counts ([`Topology`]), a job's seats are grouped the same
+//! way, and workers claim seats of their own socket group first. Under
+//! the dynamic policy each socket stripes a *contiguous slab* of the
+//! chunk ordinal space across its own seats, and an idle seat steals
+//! same-socket victims before crossing a socket boundary — so chunk data
+//! stays on the memory node that first touched it until a whole socket
+//! runs dry. Local and remote steals are counted separately (surfaced in
+//! [`ExecutorStats`] and [`ThreadPoolStats`]) so the NUMA bench can
+//! compare measured cross-socket traffic against the simulator's
+//! prediction. The static policy keeps the paper's global block-cyclic
+//! assignment untouched — its measured imbalance is a reported result —
+//! and on a single-socket topology every socket-aware path reduces
+//! exactly to the topology-blind behavior. Placement is structural
+//! (groups, steal order, slab affinity), not enforced by CPU pinning:
+//! the crate stays std-only, and the OS scheduler usually keeps parked
+//! worker threads where they last ran.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -42,6 +63,7 @@ use std::time::Instant;
 
 use super::policy::{ChunkSource, Policy};
 use super::pool::ThreadPoolStats;
+use super::topology::Topology;
 
 fn host_parallelism() -> usize {
     std::thread::available_parallelism()
@@ -110,8 +132,15 @@ pub struct ExecutorStats {
     pub pool_seats: u64,
     /// Seats executed inline by submitting threads (help-first).
     pub inline_seats: u64,
-    /// Chunks claimed from another seat's deque (dynamic policy).
+    /// Chunks claimed from another seat's deque (dynamic policy);
+    /// always `local_steals + remote_steals`.
     pub steals: u64,
+    /// Steals whose victim deque belonged to the thief's own socket.
+    pub local_steals: u64,
+    /// Steals that crossed a socket boundary (a socket ran dry).
+    pub remote_steals: u64,
+    /// Sockets in the scheduling topology.
+    pub sockets: usize,
     /// Peak pool workers simultaneously busy (never exceeds `workers`).
     pub peak_workers_busy: usize,
     /// Peak jobs simultaneously admitted through the gate.
@@ -124,26 +153,28 @@ struct SeatOutcome<A> {
     chunks: usize,
     items: usize,
     busy: f64,
+    /// Socket of the thread that executed the seat (submitter = 0).
+    socket: usize,
 }
 
-/// Type-erased `Fn(seat)` — a data pointer plus a monomorphized
+/// Type-erased `Fn(seat, socket)` — a data pointer plus a monomorphized
 /// trampoline. Erasure itself is safe; *calling* is unsafe and only
 /// sound while the submitter keeps the closure alive, which
 /// [`Executor::run`] enforces by blocking until every seat is done.
 struct RawTask {
     data: *const (),
-    call: unsafe fn(*const (), usize),
+    call: unsafe fn(*const (), usize, usize),
 }
 
-// The pointee is a `Fn(usize) + Sync` closure borrowed by every
+// The pointee is a `Fn(usize, usize) + Sync` closure borrowed by every
 // participating thread; the submitter outlives all calls.
 unsafe impl Send for RawTask {}
 unsafe impl Sync for RawTask {}
 
 impl RawTask {
-    fn erase<F: Fn(usize) + Sync>(f: &F) -> RawTask {
-        unsafe fn call_impl<F: Fn(usize)>(data: *const (), seat: usize) {
-            unsafe { (*(data as *const F))(seat) }
+    fn erase<F: Fn(usize, usize) + Sync>(f: &F) -> RawTask {
+        unsafe fn call_impl<F: Fn(usize, usize)>(data: *const (), seat: usize, socket: usize) {
+            unsafe { (*(data as *const F))(seat, socket) }
         }
         RawTask {
             data: f as *const F as *const (),
@@ -157,47 +188,74 @@ impl RawTask {
 struct JobCore {
     task: RawTask,
     nseats: usize,
-    next_seat: AtomicUsize,
+    /// Per-socket seat ranges and each range's next-seat cursor:
+    /// claimers drain their own socket's range first, so seats (and the
+    /// socket-slab chunk deques laid out for them) execute on the
+    /// socket that owns them whenever the pool isn't starved.
+    groups: Vec<(usize, usize)>,
+    next: Vec<AtomicUsize>,
     done: Mutex<usize>,
     done_cv: Condvar,
     panicked: AtomicBool,
 }
 
 impl JobCore {
-    fn new(task: RawTask, nseats: usize) -> JobCore {
+    fn new(task: RawTask, nseats: usize, topo: &Topology) -> JobCore {
+        let groups: Vec<(usize, usize)> = (0..topo.nsockets())
+            .map(|s| topo.group(s, nseats))
+            .collect();
+        let next = groups
+            .iter()
+            .map(|&(start, _)| AtomicUsize::new(start))
+            .collect();
         JobCore {
             task,
             nseats,
-            next_seat: AtomicUsize::new(0),
+            groups,
+            next,
             done: Mutex::new(0),
             done_cv: Condvar::new(),
             panicked: AtomicBool::new(false),
         }
     }
 
-    /// Claim the next unexecuted seat, if any.
-    fn claim_seat(&self) -> Option<usize> {
-        // Opportunistic pre-check bounds the counter: each thread
-        // overshoots at most once, so `next_seat` stays well below
-        // `usize::MAX` no matter how often exhausted jobs are probed.
-        if self.next_seat.load(Ordering::Relaxed) >= self.nseats {
-            return None;
+    /// Claim the next unexecuted seat, preferring the caller's own
+    /// socket group and rotating through the others once it is drained.
+    fn claim_seat(&self, socket: usize) -> Option<usize> {
+        let nsockets = self.groups.len();
+        for k in 0..nsockets {
+            let gidx = (socket + k) % nsockets;
+            let (_, end) = self.groups[gidx];
+            let next = &self.next[gidx];
+            // Opportunistic pre-check bounds the counter: each thread
+            // overshoots at most once per group, so the cursors stay
+            // well below `usize::MAX` no matter how often exhausted
+            // jobs are probed.
+            if next.load(Ordering::Relaxed) >= end {
+                continue;
+            }
+            let s = next.fetch_add(1, Ordering::Relaxed);
+            if s < end {
+                return Some(s);
+            }
         }
-        let s = self.next_seat.fetch_add(1, Ordering::Relaxed);
-        (s < self.nseats).then_some(s)
+        None
     }
 
     fn all_claimed(&self) -> bool {
-        self.next_seat.load(Ordering::Relaxed) >= self.nseats
+        self.groups
+            .iter()
+            .zip(&self.next)
+            .all(|(&(_, end), next)| next.load(Ordering::Relaxed) >= end)
     }
 
     /// Execute one claimed seat, recording (not propagating) panics so
     /// the pool worker survives and the submitter can re-raise.
-    fn run_seat(&self, seat: usize) {
+    fn run_seat(&self, seat: usize, socket: usize) {
         // Safety: the submitter blocks in `wait` until `done == nseats`,
         // so the closure behind `task` is alive for the whole call.
         let result = catch_unwind(AssertUnwindSafe(|| unsafe {
-            (self.task.call)(self.task.data, seat)
+            (self.task.call)(self.task.data, seat, socket)
         }));
         if result.is_err() {
             self.panicked.store(true, Ordering::SeqCst);
@@ -221,67 +279,107 @@ impl JobCore {
 /// Per-job chunk distribution: per-seat block-cyclic ranges (static /
 /// dynamic) or the shared dispenser (guided).
 ///
-/// The block-cyclic assignment (chunk ordinal `o` belongs to seat
-/// `o % nseats`) is never materialized: seat `i`'s deque is represented
-/// by a `[lo, hi)` window over its own ordinal sequence `i, i + n,
-/// i + 2n, …`, so setup is O(nseats) and O(1) memory regardless of
+/// Per-seat deques are never materialized: seat `i`'s deque is a `[lo,
+/// hi)` window over its own ordinal sequence `first[i], first[i] +
+/// stride[i], …`, so setup is O(nseats) and O(1) memory regardless of
 /// `len / chunk` — a multi-GB mapped graph costs the same to schedule
-/// as a toy one. Own claims pop the window front; steals (dynamic) pop
-/// the *back* of a victim's window, i.e. the victim's tail chunks.
+/// as a toy one. Under *static* the sequence is the paper's global
+/// block-cyclic assignment (ordinal `o` on seat `o % nseats`; measured
+/// imbalance preserved exactly). Under *dynamic* each socket stripes a
+/// contiguous *slab* of the ordinal space across its own seats, so a
+/// seat's chunks are socket-resident until stealing kicks in. Own
+/// claims pop the window front; steals pop the *back* of a victim's
+/// window — same-socket victims first, remote sockets only once the
+/// thief's whole socket has run dry. On one socket both layouts and the
+/// steal order are identical to the topology-blind original.
 enum ChunkQueues {
     /// Central CAS dispenser — guided chunks shrink with global progress.
     Shared(ChunkSource),
-    /// Arithmetic block-cyclic per-seat windows; `steal` enables
-    /// claiming from the back of other seats' windows once one's own is
-    /// empty.
+    /// Arithmetic per-seat windows; `steal` enables claiming from the
+    /// back of other seats' windows once one's own is empty.
     Cyclic {
         chunk: usize,
         len: usize,
-        nseats: usize,
         steal: bool,
-        /// Per seat: `[lo, hi)` over the seat's own ordinal indices
-        /// (`j`-th own ordinal = seat + j * nseats).
+        /// Per seat: first own chunk ordinal.
+        first: Vec<usize>,
+        /// Per seat: distance between consecutive own ordinals.
+        stride: Vec<usize>,
+        /// Per seat: `[lo, hi)` over the seat's own ordinal indices.
         ranges: Vec<Mutex<(usize, usize)>>,
-        steals: AtomicU64,
+        /// Per socket: `[start, end)` seat range (steal order).
+        groups: Vec<(usize, usize)>,
+        /// Socket owning each seat.
+        seat_socket: Vec<usize>,
+        local_steals: AtomicU64,
+        remote_steals: AtomicU64,
     },
 }
 
 impl ChunkQueues {
-    fn new(len: usize, nseats: usize, policy: Policy) -> ChunkQueues {
+    fn new(len: usize, nseats: usize, policy: Policy, topo: &Topology) -> ChunkQueues {
         if let Err(e) = policy.validate() {
             panic!("invalid policy: {e}");
         }
         match policy {
             Policy::Static { chunk } | Policy::Dynamic { chunk } => {
                 let total = len.div_ceil(chunk);
-                let ranges = (0..nseats)
-                    .map(|seat| {
-                        let own = total.saturating_sub(seat).div_ceil(nseats);
-                        Mutex::new((0usize, own))
-                    })
+                let dynamic = matches!(policy, Policy::Dynamic { .. });
+                let groups: Vec<(usize, usize)> = (0..topo.nsockets())
+                    .map(|s| topo.group(s, nseats))
                     .collect();
+                let mut first = vec![0usize; nseats];
+                let mut stride = vec![1usize; nseats];
+                let mut ranges = Vec::with_capacity(nseats);
+                let mut seat_socket = vec![0usize; nseats];
+                for (socket, &(gs, ge)) in groups.iter().enumerate() {
+                    let m = ge - gs;
+                    // This socket's contiguous slab of chunk ordinals
+                    // (proportional to its seat share, like the seat
+                    // ranges themselves).
+                    let slab_lo = total * gs / nseats.max(1);
+                    let slab_hi = total * ge / nseats.max(1);
+                    for seat in gs..ge {
+                        seat_socket[seat] = socket;
+                        let own = if dynamic {
+                            first[seat] = slab_lo + (seat - gs);
+                            stride[seat] = m;
+                            (slab_hi - slab_lo).saturating_sub(seat - gs).div_ceil(m)
+                        } else {
+                            first[seat] = seat;
+                            stride[seat] = nseats;
+                            total.saturating_sub(seat).div_ceil(nseats)
+                        };
+                        ranges.push(Mutex::new((0usize, own)));
+                    }
+                }
                 ChunkQueues::Cyclic {
                     chunk,
                     len,
-                    nseats,
-                    steal: matches!(policy, Policy::Dynamic { .. }),
+                    steal: dynamic,
+                    first,
+                    stride,
                     ranges,
-                    steals: AtomicU64::new(0),
+                    groups,
+                    seat_socket,
+                    local_steals: AtomicU64::new(0),
+                    remote_steals: AtomicU64::new(0),
                 }
             }
             Policy::Guided { .. } => ChunkQueues::Shared(ChunkSource::new(len, nseats, policy)),
         }
     }
 
-    /// The iteration range of the `j`-th own ordinal of `seat`.
+    /// The iteration range of the `j`-th own ordinal of a seat with the
+    /// given `first`/`stride` generator.
     fn cyclic_range(
         chunk: usize,
         len: usize,
-        nseats: usize,
-        seat: usize,
+        first: usize,
+        stride: usize,
         j: usize,
     ) -> (usize, usize) {
-        let ordinal = seat + j * nseats;
+        let ordinal = first + j * stride;
         let start = ordinal * chunk;
         (start, (start + chunk).min(len))
     }
@@ -293,36 +391,68 @@ impl ChunkQueues {
             ChunkQueues::Cyclic {
                 chunk,
                 len,
-                nseats,
                 steal,
+                first,
+                stride,
                 ranges,
-                steals,
+                groups,
+                seat_socket,
+                local_steals,
+                remote_steals,
             } => {
                 {
                     let mut r = ranges[seat].lock().unwrap();
                     if r.0 < r.1 {
                         let j = r.0;
                         r.0 += 1;
-                        return Some(Self::cyclic_range(*chunk, *len, *nseats, seat, j));
+                        let (f, s) = (first[seat], stride[seat]);
+                        return Some(Self::cyclic_range(*chunk, *len, f, s, j));
                     }
                 }
                 if !*steal {
                     return None;
                 }
-                for k in 1..*nseats {
-                    let victim = (seat + k) % *nseats;
-                    let j = {
-                        let mut r = ranges[victim].lock().unwrap();
-                        if r.0 < r.1 {
-                            r.1 -= 1;
-                            Some(r.1)
-                        } else {
-                            None
+                // Steal from the back of a victim's deque: same-socket
+                // victims first, remote sockets only once the thief's
+                // whole socket has run dry.
+                let nsockets = groups.len();
+                let home = seat_socket[seat];
+                for ks in 0..nsockets {
+                    let socket = (home + ks) % nsockets;
+                    let (gs, ge) = groups[socket];
+                    let m = ge - gs;
+                    if m == 0 {
+                        continue;
+                    }
+                    let base = if socket == home { seat - gs } else { 0 };
+                    for k in 0..m {
+                        let victim = gs + (base + k) % m;
+                        if victim == seat {
+                            continue;
                         }
-                    };
-                    if let Some(j) = j {
-                        steals.fetch_add(1, Ordering::Relaxed);
-                        return Some(Self::cyclic_range(*chunk, *len, *nseats, victim, j));
+                        let j = {
+                            let mut r = ranges[victim].lock().unwrap();
+                            if r.0 < r.1 {
+                                r.1 -= 1;
+                                Some(r.1)
+                            } else {
+                                None
+                            }
+                        };
+                        if let Some(j) = j {
+                            if socket == home {
+                                local_steals.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                remote_steals.fetch_add(1, Ordering::Relaxed);
+                            }
+                            return Some(Self::cyclic_range(
+                                *chunk,
+                                *len,
+                                first[victim],
+                                stride[victim],
+                                j,
+                            ));
+                        }
                     }
                 }
                 None
@@ -330,11 +460,24 @@ impl ChunkQueues {
         }
     }
 
-    fn steals(&self) -> u64 {
+    /// `(same-socket, cross-socket)` steal counts.
+    fn steal_split(&self) -> (u64, u64) {
         match self {
-            ChunkQueues::Shared(_) => 0,
-            ChunkQueues::Cyclic { steals, .. } => steals.load(Ordering::Relaxed),
+            ChunkQueues::Shared(_) => (0, 0),
+            ChunkQueues::Cyclic {
+                local_steals,
+                remote_steals,
+                ..
+            } => (
+                local_steals.load(Ordering::Relaxed),
+                remote_steals.load(Ordering::Relaxed),
+            ),
         }
+    }
+
+    fn steals(&self) -> u64 {
+        let (local, remote) = self.steal_split();
+        local + remote
     }
 }
 
@@ -342,6 +485,9 @@ struct Inner {
     queue: Mutex<VecDeque<Arc<JobCore>>>,
     work_cv: Condvar,
     shutdown: AtomicBool,
+    /// Socket inventory every job's seat groups and chunk slabs are
+    /// laid out against.
+    topology: Topology,
     // admission gate
     max_jobs: usize,
     admitted: Mutex<usize>,
@@ -351,6 +497,8 @@ struct Inner {
     pool_seats: AtomicU64,
     inline_seats: AtomicU64,
     steals: AtomicU64,
+    steals_local: AtomicU64,
+    steals_remote: AtomicU64,
     workers_busy: AtomicUsize,
     peak_workers_busy: AtomicUsize,
     peak_admitted: AtomicUsize,
@@ -392,9 +540,17 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Spawn a pool per `cfg`. Workers park immediately and cost nothing
-    /// until a job arrives.
+    /// Spawn a pool per `cfg` against the detected host topology.
+    /// Workers park immediately and cost nothing until a job arrives.
     pub fn new(cfg: ExecutorConfig) -> Executor {
+        Executor::with_topology(cfg, Topology::detect())
+    }
+
+    /// Spawn a pool per `cfg` over an explicit [`Topology`] — tests and
+    /// benches model multi-socket machines on single-socket hosts this
+    /// way. Worker `i` of `W` is assigned to the socket owning slot `i`
+    /// in the proportional layout.
+    pub fn with_topology(cfg: ExecutorConfig, topo: Topology) -> Executor {
         let workers = if cfg.workers == 0 {
             host_parallelism()
         } else {
@@ -404,6 +560,7 @@ impl Executor {
             queue: Mutex::new(VecDeque::new()),
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            topology: topo,
             max_jobs: cfg.max_concurrent_jobs,
             admitted: Mutex::new(0),
             gate_cv: Condvar::new(),
@@ -411,6 +568,8 @@ impl Executor {
             pool_seats: AtomicU64::new(0),
             inline_seats: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            steals_local: AtomicU64::new(0),
+            steals_remote: AtomicU64::new(0),
             workers_busy: AtomicUsize::new(0),
             peak_workers_busy: AtomicUsize::new(0),
             peak_admitted: AtomicUsize::new(0),
@@ -418,9 +577,10 @@ impl Executor {
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
             let inner = inner.clone();
+            let socket = inner.topology.socket_of(i, workers);
             let h = std::thread::Builder::new()
                 .name(format!("triadic-worker-{i}"))
-                .spawn(move || worker_loop(&inner))
+                .spawn(move || worker_loop(&inner, socket))
                 .expect("spawning executor worker");
             handles.push(h);
         }
@@ -452,6 +612,11 @@ impl Executor {
         self.workers
     }
 
+    /// The socket inventory this executor schedules against.
+    pub fn topology(&self) -> &Topology {
+        &self.inner.topology
+    }
+
     /// Snapshot of the executor telemetry.
     pub fn stats(&self) -> ExecutorStats {
         ExecutorStats {
@@ -460,6 +625,9 @@ impl Executor {
             pool_seats: self.inner.pool_seats.load(Ordering::Relaxed),
             inline_seats: self.inner.inline_seats.load(Ordering::Relaxed),
             steals: self.inner.steals.load(Ordering::Relaxed),
+            local_steals: self.inner.steals_local.load(Ordering::Relaxed),
+            remote_steals: self.inner.steals_remote.load(Ordering::Relaxed),
+            sockets: self.inner.topology.nsockets(),
             peak_workers_busy: self.inner.peak_workers_busy.load(Ordering::Relaxed),
             peak_admitted: self.inner.peak_admitted.load(Ordering::Relaxed),
         }
@@ -517,13 +685,16 @@ impl Executor {
         self.inner.admit();
         let _permit = AdmitGuard(&self.inner);
         let t0 = Instant::now();
-        let chunks = ChunkQueues::new(len, nseats, policy);
+        let chunks = ChunkQueues::new(len, nseats, policy, &self.inner.topology);
 
         let mut stats = ThreadPoolStats {
             chunks: vec![0; nseats],
             items: vec![0; nseats],
             busy: vec![0.0; nseats],
             wall: 0.0,
+            seat_sockets: vec![0; nseats],
+            local_steals: 0,
+            remote_steals: 0,
         };
 
         if nseats == 1 {
@@ -548,7 +719,7 @@ impl Executor {
         let slots: Vec<Mutex<Option<SeatOutcome<A>>>> =
             (0..nseats).map(|_| Mutex::new(None)).collect();
         let panicked = {
-            let body = |seat: usize| {
+            let body = |seat: usize, socket: usize| {
                 let mut acc = init(seat);
                 let mut nchunks = 0usize;
                 let mut items = 0usize;
@@ -566,9 +737,14 @@ impl Executor {
                     chunks: nchunks,
                     items,
                     busy: tb.elapsed().as_secs_f64(),
+                    socket,
                 });
             };
-            let job = Arc::new(JobCore::new(RawTask::erase(&body), nseats));
+            let job = Arc::new(JobCore::new(
+                RawTask::erase(&body),
+                nseats,
+                &self.inner.topology,
+            ));
             {
                 let mut q = self.inner.queue.lock().unwrap();
                 q.push_back(job.clone());
@@ -582,17 +758,22 @@ impl Executor {
                 }
             }
             // Help-first: claim seats of our own job until none remain.
-            while let Some(seat) = job.claim_seat() {
-                job.run_seat(seat);
+            // The submitter is attributed to socket 0 — its thread is
+            // not one of the placed workers.
+            while let Some(seat) = job.claim_seat(0) {
+                job.run_seat(seat, 0);
                 self.inner.inline_seats.fetch_add(1, Ordering::Relaxed);
             }
             job.wait();
             job.panicked.load(Ordering::SeqCst)
         };
         self.inner.jobs.fetch_add(1, Ordering::Relaxed);
+        let (local, remote) = chunks.steal_split();
+        self.inner.steals.fetch_add(local + remote, Ordering::Relaxed);
+        self.inner.steals_local.fetch_add(local, Ordering::Relaxed);
         self.inner
-            .steals
-            .fetch_add(chunks.steals(), Ordering::Relaxed);
+            .steals_remote
+            .fetch_add(remote, Ordering::Relaxed);
         if panicked {
             panic!("worker panicked");
         }
@@ -607,7 +788,10 @@ impl Executor {
             stats.chunks[tid] = out.chunks;
             stats.items[tid] = out.items;
             stats.busy[tid] = out.busy;
+            stats.seat_sockets[tid] = out.socket;
         }
+        stats.local_steals = local;
+        stats.remote_steals = remote;
         stats.wall = t0.elapsed().as_secs_f64();
         (results, stats, cancel.is_cancelled())
     }
@@ -627,8 +811,9 @@ impl Drop for Executor {
 }
 
 /// Body of one pool worker: park on the condvar until a job with open
-/// seats reaches the queue front, then drain seats until none remain.
-fn worker_loop(inner: &Inner) {
+/// seats reaches the queue front, then drain seats until none remain —
+/// the worker's own socket group first.
+fn worker_loop(inner: &Inner, socket: usize) {
     loop {
         let job = {
             let mut q = inner.queue.lock().unwrap();
@@ -649,8 +834,8 @@ fn worker_loop(inner: &Inner) {
         };
         let busy = inner.workers_busy.fetch_add(1, Ordering::Relaxed) + 1;
         inner.peak_workers_busy.fetch_max(busy, Ordering::Relaxed);
-        while let Some(seat) = job.claim_seat() {
-            job.run_seat(seat);
+        while let Some(seat) = job.claim_seat(socket) {
+            job.run_seat(seat, socket);
             inner.pool_seats.fetch_add(1, Ordering::Relaxed);
         }
         inner.workers_busy.fetch_sub(1, Ordering::Relaxed);
@@ -724,7 +909,8 @@ mod tests {
     fn static_deques_preserve_block_cyclic_assignment() {
         // 1000 items / chunk 100 = 10 chunks; seat i owns ordinals
         // i, i+4, i+8 — and without stealing keeps exactly those.
-        let q = ChunkQueues::new(1000, 4, Policy::Static { chunk: 100 });
+        let topo = Topology::synthetic(vec![1]);
+        let q = ChunkQueues::new(1000, 4, Policy::Static { chunk: 100 }, &topo);
         let mut own = 0usize;
         while let Some((s, e)) = q.claim(0) {
             own += e - s;
@@ -748,13 +934,116 @@ mod tests {
     fn dynamic_deques_steal_the_tail() {
         // same layout, but seat 0 may drain everyone once its own deque
         // is empty: 3 own chunks, 7 stolen.
-        let q = ChunkQueues::new(1000, 4, Policy::Dynamic { chunk: 100 });
+        let topo = Topology::synthetic(vec![1]);
+        let q = ChunkQueues::new(1000, 4, Policy::Dynamic { chunk: 100 }, &topo);
         let mut total = 0usize;
         while let Some((s, e)) = q.claim(0) {
             total += e - s;
         }
         assert_eq!(total, 1000);
         assert_eq!(q.steals(), 7);
+        assert_eq!(q.steal_split(), (7, 0), "one socket: all steals local");
+    }
+
+    #[test]
+    fn static_layout_ignores_sockets() {
+        // Static must keep the paper's global block-cyclic assignment
+        // (and its measured imbalance) exactly, whatever the topology.
+        let topo = Topology::synthetic(vec![2, 2]);
+        let q = ChunkQueues::new(1000, 4, Policy::Static { chunk: 100 }, &topo);
+        let mut own = 0usize;
+        while let Some((s, e)) = q.claim(0) {
+            own += e - s;
+        }
+        assert_eq!(own, 300, "seat 0 still owns ordinals 0, 4, 8");
+        assert_eq!(q.steals(), 0);
+    }
+
+    #[test]
+    fn dynamic_socket_slabs_prefer_local_steals() {
+        // Two sockets, four seats, 10 chunks: seats 0-1 stripe slab
+        // [0, 5), seats 2-3 stripe slab [5, 10). Seat 0 drains it all:
+        // 3 own chunks, 2 local steals empty its socket, then 5 remote
+        // steals cross to socket 1.
+        let topo = Topology::synthetic(vec![1, 1]);
+        let q = ChunkQueues::new(1000, 4, Policy::Dynamic { chunk: 100 }, &topo);
+        let mut total = 0usize;
+        while let Some((s, e)) = q.claim(0) {
+            total += e - s;
+        }
+        assert_eq!(total, 1000, "seat 0 eventually covers every chunk");
+        assert_eq!(q.steal_split(), (2, 5));
+        assert_eq!(q.steals(), 7);
+    }
+
+    #[test]
+    fn dynamic_socket_slabs_tile_without_stealing() {
+        // When every seat drains only its own deque, the socket slabs
+        // plus in-slab striping must cover [0, len) exactly once.
+        let topo = Topology::synthetic(vec![6, 12]);
+        let q = ChunkQueues::new(970, 5, Policy::Dynamic { chunk: 64 }, &topo);
+        let mut seen = vec![0u8; 970];
+        for seat in 0..5 {
+            loop {
+                let claimed = {
+                    // drain own deque only: stop before stealing
+                    match &q {
+                        ChunkQueues::Cyclic { ranges, .. } => {
+                            let r = ranges[seat].lock().unwrap();
+                            r.0 < r.1
+                        }
+                        ChunkQueues::Shared(_) => unreachable!(),
+                    }
+                };
+                if !claimed {
+                    break;
+                }
+                let (s, e) = q.claim(seat).unwrap();
+                for slot in &mut seen[s..e] {
+                    *slot += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "every item covered once");
+        assert_eq!(q.steals(), 0);
+    }
+
+    #[test]
+    fn multi_socket_executor_matches_serial() {
+        let exec = Executor::with_topology(
+            ExecutorConfig {
+                workers: 4,
+                max_concurrent_jobs: 0,
+            },
+            Topology::synthetic(vec![1, 1]),
+        );
+        let len = 30_000usize;
+        let expected: u64 = (0..len as u64).sum();
+        for policy in [
+            Policy::Static { chunk: 64 },
+            Policy::Dynamic { chunk: 32 },
+            Policy::Guided { min_chunk: 8 },
+        ] {
+            let (parts, stats) = exec.run(
+                len,
+                4,
+                policy,
+                |_| 0u64,
+                |acc, _, s, e| {
+                    for i in s..e {
+                        *acc += i as u64;
+                    }
+                },
+            );
+            assert_eq!(parts.iter().sum::<u64>(), expected, "{policy:?}");
+            assert_eq!(stats.seat_sockets.len(), 4, "{policy:?}");
+            assert!(stats.seat_sockets.iter().all(|&s| s < 2), "{policy:?}");
+            assert!(stats.socket_imbalance() >= 1.0, "{policy:?}");
+            assert!(stats.socket_busy().len() <= 2, "{policy:?}");
+        }
+        let s = exec.stats();
+        assert_eq!(s.sockets, 2);
+        assert_eq!(s.steals, s.local_steals + s.remote_steals);
     }
 
     #[test]

@@ -17,7 +17,9 @@
 pub mod executor;
 pub mod policy;
 pub mod pool;
+pub mod topology;
 
 pub use executor::{CancelToken, Executor, ExecutorConfig, ExecutorStats};
 pub use policy::{ChunkIter, Policy};
 pub use pool::{run_partitioned, run_partitioned_scoped, ThreadPoolStats};
+pub use topology::Topology;

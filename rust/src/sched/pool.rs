@@ -27,6 +27,14 @@ pub struct ThreadPoolStats {
     pub busy: Vec<f64>,
     /// Wall-clock seconds of the whole loop.
     pub wall: f64,
+    /// Socket that executed each seat (all zeros on topology-blind
+    /// paths: the scoped baseline and serial engines).
+    pub seat_sockets: Vec<usize>,
+    /// Dynamic-schedule chunk steals whose victim deque belonged to the
+    /// same socket as the thief.
+    pub local_steals: u64,
+    /// Steals that crossed a socket boundary (a whole socket ran dry).
+    pub remote_steals: u64,
 }
 
 impl ThreadPoolStats {
@@ -50,6 +58,30 @@ impl ThreadPoolStats {
             busy / cap
         } else {
             0.0
+        }
+    }
+
+    /// Busy seconds aggregated per socket (index = socket id; length =
+    /// highest socket seen + 1, minimum 1).
+    pub fn socket_busy(&self) -> Vec<f64> {
+        let sockets = self.seat_sockets.iter().copied().max().map_or(1, |m| m + 1);
+        let mut out = vec![0.0; sockets];
+        for (seat, &b) in self.busy.iter().enumerate() {
+            out[self.seat_sockets.get(seat).copied().unwrap_or(0)] += b;
+        }
+        out
+    }
+
+    /// Load imbalance across sockets: max socket busy time / mean socket
+    /// busy time (1.0 = perfectly balanced, or single-socket).
+    pub fn socket_imbalance(&self) -> f64 {
+        let per_socket = self.socket_busy();
+        let max = per_socket.iter().cloned().fold(0.0, f64::max);
+        let mean = per_socket.iter().sum::<f64>() / per_socket.len().max(1) as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            1.0
         }
     }
 }
@@ -106,6 +138,9 @@ where
         items: vec![0; nthreads],
         busy: vec![0.0; nthreads],
         wall: 0.0,
+        seat_sockets: vec![0; nthreads],
+        local_steals: 0,
+        remote_steals: 0,
     };
 
     if nthreads == 1 {

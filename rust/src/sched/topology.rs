@@ -1,0 +1,214 @@
+//! Machine topology detection for NUMA-aware scheduling.
+//!
+//! The paper's subject is how NUMA hardware (the 48-core Magny-Cours
+//! Opteron in particular) copes with triad-census parallelism; the
+//! executor uses this module to group workers and scheduler deques per
+//! socket so steals stay socket-local until a whole socket runs dry.
+//!
+//! Detection reads `/sys/devices/system/node/node*/cpulist` (Linux's
+//! NUMA node inventory). Everywhere that is absent or unreadable —
+//! macOS, containers with a masked sysfs, single-socket boxes — the
+//! portable fallback is one synthetic socket holding every CPU, which
+//! reduces all socket-aware placement to exactly the topology-blind
+//! behavior (asserted by the executor's unit tests).
+
+use std::fs;
+use std::path::Path;
+
+/// Socket inventory: how many CPUs each socket holds, plus the
+/// proportional slot arithmetic the executor uses to map worker/seat/
+/// chunk ordinals onto sockets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// CPUs per socket, ascending by node id. Never empty; entries > 0.
+    cpus: Vec<usize>,
+    /// Cumulative CPU counts (`cum[s]` = CPUs in sockets `< s`).
+    cum: Vec<usize>,
+}
+
+impl Topology {
+    /// Detect the host topology from sysfs; portable fallback to one
+    /// synthetic socket holding every CPU.
+    pub fn detect() -> Topology {
+        Self::from_sysfs(Path::new("/sys/devices/system/node"))
+            .unwrap_or_else(Self::single_socket)
+    }
+
+    /// One socket holding every available CPU — the portable fallback
+    /// and the topology-blind baseline.
+    pub fn single_socket() -> Topology {
+        let cpus = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        Topology::synthetic(vec![cpus])
+    }
+
+    /// Build from explicit per-socket CPU counts (tests and benches
+    /// model multi-socket machines on single-socket hosts this way).
+    pub fn synthetic(cpus: Vec<usize>) -> Topology {
+        assert!(
+            !cpus.is_empty() && cpus.iter().all(|&c| c > 0),
+            "topology needs at least one socket with at least one CPU"
+        );
+        let mut cum = Vec::with_capacity(cpus.len() + 1);
+        cum.push(0);
+        for &c in &cpus {
+            cum.push(cum.last().unwrap() + c);
+        }
+        Topology { cpus, cum }
+    }
+
+    /// Parse a sysfs NUMA node directory. `None` when the directory is
+    /// missing, holds no `node*` entries, or any cpulist is unreadable.
+    fn from_sysfs(dir: &Path) -> Option<Topology> {
+        let mut nodes: Vec<(usize, usize)> = Vec::new();
+        for entry in fs::read_dir(dir).ok()? {
+            let entry = entry.ok()?;
+            let name = entry.file_name();
+            let name = name.to_str()?;
+            let Some(id) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let list = fs::read_to_string(entry.path().join("cpulist")).ok()?;
+            let count = count_cpulist(list.trim())?;
+            if count > 0 {
+                nodes.push((id, count));
+            }
+        }
+        if nodes.is_empty() {
+            return None;
+        }
+        nodes.sort_unstable();
+        Some(Topology::synthetic(nodes.into_iter().map(|(_, c)| c).collect()))
+    }
+
+    /// Number of sockets (≥ 1).
+    pub fn nsockets(&self) -> usize {
+        self.cpus.len()
+    }
+
+    /// Total CPUs across sockets.
+    pub fn total_cpus(&self) -> usize {
+        *self.cum.last().unwrap()
+    }
+
+    /// CPUs on socket `s`.
+    pub fn socket_cpus(&self, s: usize) -> usize {
+        self.cpus[s]
+    }
+
+    /// When `total` slots (workers, seats, chunk ordinals) are laid out
+    /// contiguously in proportion to socket CPU counts, the `[start,
+    /// end)` slot range of socket `s`.
+    pub fn group(&self, s: usize, total: usize) -> (usize, usize) {
+        let c = self.total_cpus();
+        (total * self.cum[s] / c, total * self.cum[s + 1] / c)
+    }
+
+    /// The socket owning slot `idx` of `total` (inverse of
+    /// [`Topology::group`]).
+    pub fn socket_of(&self, idx: usize, total: usize) -> usize {
+        debug_assert!(idx < total);
+        for s in 0..self.nsockets() {
+            let (start, end) = self.group(s, total);
+            if idx >= start && idx < end {
+                return s;
+            }
+        }
+        // proportional ranges tile [0, total) exactly; unreachable
+        self.nsockets() - 1
+    }
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::single_socket()
+    }
+}
+
+/// Number of CPUs in a sysfs cpulist string (`"0-7,16-23"`).
+fn count_cpulist(s: &str) -> Option<usize> {
+    if s.is_empty() {
+        return Some(0);
+    }
+    let mut total = 0usize;
+    for part in s.split(',') {
+        match part.split_once('-') {
+            Some((lo, hi)) => {
+                let (lo, hi) = (lo.trim().parse::<usize>().ok()?, hi.trim().parse::<usize>().ok()?);
+                if hi < lo {
+                    return None;
+                }
+                total += hi - lo + 1;
+            }
+            None => {
+                part.trim().parse::<usize>().ok()?;
+                total += 1;
+            }
+        }
+    }
+    Some(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_ranges_and_singles() {
+        assert_eq!(count_cpulist("0-7"), Some(8));
+        assert_eq!(count_cpulist("0,2,4"), Some(3));
+        assert_eq!(count_cpulist("0-1,8-9,15"), Some(5));
+        assert_eq!(count_cpulist(""), Some(0));
+        assert_eq!(count_cpulist("7-3"), None);
+        assert_eq!(count_cpulist("x"), None);
+    }
+
+    #[test]
+    fn groups_tile_the_slot_space_proportionally() {
+        let t = Topology::synthetic(vec![6, 6, 12]);
+        assert_eq!(t.nsockets(), 3);
+        assert_eq!(t.total_cpus(), 24);
+        for total in [0, 1, 4, 24, 48, 100] {
+            let mut covered = 0;
+            for s in 0..t.nsockets() {
+                let (start, end) = t.group(s, total);
+                assert_eq!(start, covered, "gap before socket {s} at total {total}");
+                covered = end;
+                for idx in start..end {
+                    assert_eq!(t.socket_of(idx, total), s);
+                }
+            }
+            assert_eq!(covered, total);
+        }
+        // the big socket gets proportionally more slots
+        let (s0, e0) = t.group(0, 48);
+        let (s2, e2) = t.group(2, 48);
+        assert_eq!(e0 - s0, 12);
+        assert_eq!(e2 - s2, 24);
+    }
+
+    #[test]
+    fn single_socket_owns_everything() {
+        let t = Topology::synthetic(vec![8]);
+        assert_eq!(t.group(0, 10), (0, 10));
+        for idx in 0..10 {
+            assert_eq!(t.socket_of(idx, 10), 0);
+        }
+    }
+
+    #[test]
+    fn detect_always_yields_a_usable_topology() {
+        let t = Topology::detect();
+        assert!(t.nsockets() >= 1);
+        assert!(t.total_cpus() >= 1);
+        assert_eq!(t.group(0, 0), (0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one socket")]
+    fn synthetic_rejects_empty() {
+        Topology::synthetic(vec![]);
+    }
+}

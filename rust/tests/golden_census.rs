@@ -8,9 +8,11 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use triadic::census::{merged, Census, EngineRegistry, StreamingCensus, TriadType};
+use triadic::census::{
+    hybrid_registry, merged, Census, EngineRegistry, ParallelConfig, StreamingCensus, TriadType,
+};
 use triadic::graph::relabel::{self, DirSplit, Relabeling};
-use triadic::graph::{CsrGraph, DeltaOverlay, EdgeOp, GraphBuilder};
+use triadic::graph::{CsrGraph, DeltaOverlay, EdgeOp, GraphBuilder, HubSplit};
 use triadic::sched::Executor;
 
 const FIXTURES: [&str; 6] = [
@@ -191,6 +193,60 @@ fn degree_relabeling_preserves_the_golden_censuses() {
                 .census;
             assert_eq!(on_relabeled, want, "{engine_name} relabeled {name}");
             assert_eq!(on_split, want, "{engine_name} degree-split {name}");
+        }
+    }
+}
+
+#[test]
+fn hybrid_hub_kernel_reproduces_the_golden_censuses() {
+    // the hub-bitmap hybrid kernel (the `parallel` engine of the
+    // hub-split registry) must match the hand counts at every hub
+    // count: adaptive, k = 0 (pure direction-split fallback) and
+    // k = n (every row a bitmap)
+    let exec = Executor::with_workers(2);
+    let registry = hybrid_registry(ParallelConfig::default());
+    for name in FIXTURES {
+        let g = load_graph(name);
+        let want = load_census(name);
+        let n = g.node_count();
+        let adaptive = HubSplit::build(relabel::degree_split(&g, 2).1);
+        let none = HubSplit::with_hub_count(relabel::degree_split(&g, 2).1, 0);
+        let all = HubSplit::with_hub_count(relabel::degree_split(&g, 2).1, n);
+        for engine_name in registry.names() {
+            let engine = registry.get(engine_name).unwrap();
+            assert_eq!(engine.census(&adaptive, &exec).census, want, "{engine_name} {name}");
+            assert_eq!(engine.census(&none, &exec).census, want, "{engine_name} {name} k=0");
+            assert_eq!(engine.census(&all, &exec).census, want, "{engine_name} {name} k=n");
+        }
+    }
+}
+
+#[test]
+fn hybrid_hub_kernel_handles_degenerate_hub_shapes() {
+    // a single mega-hub star (one bitmap row covers every dyad that
+    // matters) and an empty graph (no hubs at all) — the shapes where
+    // the dense/sparse dispatch inside the hybrid kernel degenerates
+    let exec = Executor::with_workers(2);
+    let registry = hybrid_registry(ParallelConfig::default());
+
+    // star: node 0 -> 1..n, plus a few reciprocated spokes
+    let n = 300;
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n as u32 {
+        b.arc(0, v);
+        if v % 7 == 0 {
+            b.arc(v, 0);
+        }
+    }
+    let star = b.build();
+    let empty = CsrGraph::empty(64);
+
+    for g in [&star, &empty] {
+        let want = merged::census(g);
+        let split = HubSplit::build(relabel::degree_split(g, 2).1);
+        for engine_name in registry.names() {
+            let got = registry.get(engine_name).unwrap().census(&split, &exec).census;
+            assert_eq!(got, want, "{engine_name} nodes={}", g.node_count());
         }
     }
 }

@@ -148,6 +148,40 @@ fn prop_views_agree_on_random_graphs() {
 }
 
 #[test]
+fn prop_hybrid_kernel_identical_to_merged_at_every_hub_count() {
+    // the hub-bitmap hybrid census must be byte-identical to the serial
+    // merged census on the *original* graph, whatever slice of the rows
+    // is promoted to bitmaps — adaptive, none (k=0, pure run-merge
+    // fallback) and all (k=n)
+    use triadic::census::{census_hybrid_serial, hybrid_registry, ParallelConfig};
+    use triadic::graph::relabel;
+    use triadic::graph::HubSplit;
+    use triadic::sched::Executor;
+
+    let exec = Executor::with_workers(2);
+    let registry = hybrid_registry(ParallelConfig {
+        threads: 3,
+        ..ParallelConfig::default()
+    });
+    for seed in 0..8u64 {
+        let n = 40 + (seed % 30) as u32;
+        let g = random_digraph(n, (n as usize) * 5, seed * 19 + 3);
+        let want = merged::census(&g);
+        let ks = [None, Some(0), Some(n as usize / 2), Some(n as usize)];
+        for k in ks {
+            let split = relabel::degree_split(&g, 2).1;
+            let h = match k {
+                None => HubSplit::build(split),
+                Some(k) => HubSplit::with_hub_count(split, k),
+            };
+            assert_eq!(census_hybrid_serial(&h), want, "serial seed {seed} k={k:?}");
+            let run = registry.get("parallel").unwrap().census(&h, &exec);
+            assert_eq!(run.census, want, "parallel seed {seed} k={k:?}");
+        }
+    }
+}
+
+#[test]
 fn prop_adding_an_arc_only_moves_counts_up_the_lattice() {
     // adding one arc changes exactly n-2 triads, each to a class with
     // one more arc
