@@ -21,12 +21,55 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use super::protocol::{
     CensusRequest, CensusResponse, ErrorCode, Json, JobReport, JobStateKind, RequestFrame,
     ResponseFrame, StreamApplyReport, StreamOpened, StreamSnapshot, Verb, WireError,
 };
 use crate::graph::EdgeOp;
+
+/// Transport deadlines for a [`TriadicClient`]. `None` fields block
+/// forever (the pre-timeout behavior). Build with the chained setters:
+///
+/// ```ignore
+/// let t = ClientTimeouts::default()
+///     .connect(Duration::from_secs(5))
+///     .read(Duration::from_secs(30))
+///     .write(Duration::from_secs(30));
+/// let mut client = TriadicClient::connect_with_timeouts(addr, t)?;
+/// ```
+///
+/// Mind the read deadline on [`TriadicClient::wait`] /
+/// [`TriadicClient::census`]: the server answers a `wait` only once
+/// the job is terminal, so the deadline must cover the whole census,
+/// not one network round trip. Poll loops can run much tighter.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClientTimeouts {
+    pub connect: Option<Duration>,
+    pub read: Option<Duration>,
+    pub write: Option<Duration>,
+}
+
+impl ClientTimeouts {
+    /// Deadline for establishing the TCP connection.
+    pub fn connect(mut self, d: Duration) -> ClientTimeouts {
+        self.connect = Some(d);
+        self
+    }
+
+    /// Deadline for each blocking read of a response frame.
+    pub fn read(mut self, d: Duration) -> ClientTimeouts {
+        self.read = Some(d);
+        self
+    }
+
+    /// Deadline for each blocking write of a request frame.
+    pub fn write(mut self, d: Duration) -> ClientTimeouts {
+        self.write = Some(d);
+        self
+    }
+}
 
 /// Synchronous client for one server connection.
 pub struct TriadicClient {
@@ -35,20 +78,78 @@ pub struct TriadicClient {
     next_id: u64,
 }
 
+/// Map an I/O failure to the structured `transport` error code, naming
+/// a deadline expiry explicitly (read timeouts surface as
+/// `WouldBlock` on some platforms, `TimedOut` on others).
 fn transport_error(e: std::io::Error) -> WireError {
-    WireError::new(ErrorCode::Internal, format!("transport: {e}"))
+    let detail = match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            format!("timed out: {e}")
+        }
+        _ => e.to_string(),
+    };
+    WireError::new(ErrorCode::Transport, format!("transport: {detail}"))
 }
 
 impl TriadicClient {
     /// Connect to a running `repro serve --listen` endpoint.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<TriadicClient, WireError> {
-        let stream = TcpStream::connect(addr).map_err(transport_error)?;
+        TriadicClient::connect_with_timeouts(addr, ClientTimeouts::default())
+    }
+
+    /// Connect with transport deadlines, so a stalled or black-holed
+    /// server surfaces as a structured [`ErrorCode::Transport`] error
+    /// instead of hanging this thread forever.
+    pub fn connect_with_timeouts<A: ToSocketAddrs>(
+        addr: A,
+        timeouts: ClientTimeouts,
+    ) -> Result<TriadicClient, WireError> {
+        let stream = match timeouts.connect {
+            None => TcpStream::connect(&addr).map_err(transport_error)?,
+            Some(deadline) => {
+                // `connect_timeout` wants resolved addresses: try each,
+                // keeping the last failure for the error message
+                let addrs: Vec<_> = addr
+                    .to_socket_addrs()
+                    .map_err(transport_error)?
+                    .collect();
+                let mut last = None;
+                let mut stream = None;
+                for a in &addrs {
+                    match TcpStream::connect_timeout(a, deadline) {
+                        Ok(s) => {
+                            stream = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                stream.ok_or_else(|| match last {
+                    Some(e) => transport_error(e),
+                    None => WireError::new(
+                        ErrorCode::Transport,
+                        "transport: address resolved to nothing",
+                    ),
+                })?
+            }
+        };
         let reader = BufReader::new(stream.try_clone().map_err(transport_error)?);
-        Ok(TriadicClient {
+        let client = TriadicClient {
             reader,
             writer: stream,
             next_id: 0,
-        })
+        };
+        client.with_timeouts(timeouts)
+    }
+
+    /// Apply (or clear) read/write deadlines on the live connection.
+    /// The `connect` field is ignored here — the connection exists.
+    pub fn with_timeouts(self, timeouts: ClientTimeouts) -> Result<TriadicClient, WireError> {
+        self.writer
+            .set_read_timeout(timeouts.read)
+            .and_then(|_| self.writer.set_write_timeout(timeouts.write))
+            .map_err(transport_error)?;
+        Ok(self)
     }
 
     /// One request/response round trip; returns the `result` payload.
@@ -65,8 +166,8 @@ impl TriadicClient {
         let n = self.reader.read_line(&mut reply).map_err(transport_error)?;
         if n == 0 {
             return Err(WireError::new(
-                ErrorCode::Internal,
-                "server closed the connection",
+                ErrorCode::Transport,
+                "transport: server closed the connection",
             ));
         }
         let response = ResponseFrame::decode(reply.trim_end())?;

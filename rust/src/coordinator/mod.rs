@@ -49,8 +49,11 @@
 //!   runs on the sparse engines. Naming an engine in a request forces
 //!   the sparse path.
 //! * **Transport** ([`server`], [`client`]): `repro serve --listen`
-//!   accepts TCP connections, one thread each; [`TriadicClient`] is the
-//!   library-side counterpart the `repro client` subcommand wraps.
+//!   fronts the coordinator with the nonblocking multi-tenant gateway
+//!   ([`crate::net`]) by default, or the legacy thread-per-connection
+//!   accept loop behind `--legacy-accept`; both share one dispatch
+//!   core and job table. [`TriadicClient`] is the library-side
+//!   counterpart the `repro client` subcommand wraps.
 //! * **Distribution**: `repro worker` runs a sparse-only coordinator
 //!   behind the same server and honors the request-level `shard` field
 //!   (raw partial tallies over one vertex range); `repro serve
@@ -73,11 +76,11 @@ pub mod router;
 pub mod server;
 pub mod service;
 
-pub use client::TriadicClient;
+pub use client::{ClientTimeouts, TriadicClient};
 pub use protocol::{
     CensusRequest, CensusResponse, ErrorCode, GraphSource, JobReport, JobStateKind, Provenance,
     SchedStats, Shard, StreamApplyReport, StreamOpened, StreamSnapshot, WireError,
-    PROTOCOL_VERSION,
+    DEFAULT_PRIORITY, MAX_PRIORITY, PROTOCOL_VERSION,
 };
 pub use router::{Route, Router, RoutingPolicy};
 pub use server::CensusServer;

@@ -452,6 +452,19 @@ pub enum ErrorCode {
     /// A distributed shard could not be placed: every worker in the
     /// pool failed or disconnected while holding it.
     WorkerUnavailable,
+    /// The tenant's token bucket is empty: the request was shed by the
+    /// admission gate. Retry after backing off; the connection stays
+    /// open and usable.
+    RateLimited,
+    /// The server (or this tenant's inflight quota) is at capacity:
+    /// connection cap reached, write buffers backed up, or too many
+    /// jobs already running. Retry against a less loaded endpoint.
+    Overloaded,
+    /// Client-side transport failure: connect/read/write failed or
+    /// timed out before a response frame arrived. Produced by
+    /// [`TriadicClient`](super::client::TriadicClient), never sent by
+    /// a server.
+    Transport,
     /// Anything else.
     Internal,
 }
@@ -470,6 +483,9 @@ impl ErrorCode {
             ErrorCode::Cancelled => "cancelled",
             ErrorCode::ShuttingDown => "shutting_down",
             ErrorCode::WorkerUnavailable => "worker_unavailable",
+            ErrorCode::RateLimited => "rate_limited",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Transport => "transport",
             ErrorCode::Internal => "internal",
         }
     }
@@ -489,6 +505,9 @@ impl ErrorCode {
             "cancelled" => ErrorCode::Cancelled,
             "shutting_down" => ErrorCode::ShuttingDown,
             "worker_unavailable" => ErrorCode::WorkerUnavailable,
+            "rate_limited" => ErrorCode::RateLimited,
+            "overloaded" => ErrorCode::Overloaded,
+            "transport" => ErrorCode::Transport,
             _ => ErrorCode::Internal,
         }
     }
@@ -763,7 +782,22 @@ pub struct CensusRequest {
     /// the distributed planner on the sub-requests it ships to workers;
     /// `None` = the whole graph, closed as usual.
     pub shard: Option<Shard>,
+    /// Tenant this request bills against at the gateway's admission
+    /// gate (token bucket + inflight quota). `None` = the default
+    /// bucket. Servers without a gateway ignore the field.
+    pub tenant: Option<String>,
+    /// Submit-queue priority, `0..=`[`MAX_PRIORITY`] (higher runs
+    /// sooner; FIFO within a level). `None` = the tenant's configured
+    /// priority, or [`DEFAULT_PRIORITY`].
+    pub priority: Option<u8>,
 }
+
+/// Default submit-queue priority for requests (and tenants) that do
+/// not name one.
+pub const DEFAULT_PRIORITY: u8 = 4;
+
+/// Largest submit-queue priority a request may carry.
+pub const MAX_PRIORITY: u8 = 9;
 
 impl CensusRequest {
     pub fn from_source(source: GraphSource) -> CensusRequest {
@@ -775,6 +809,8 @@ impl CensusRequest {
             ordering: None,
             classes: None,
             shard: None,
+            tenant: None,
+            priority: None,
         }
     }
 
@@ -842,6 +878,19 @@ impl CensusRequest {
         self
     }
 
+    /// Bill this request against a named tenant at the gateway.
+    pub fn tenant<T: Into<String>>(mut self, tenant: T) -> CensusRequest {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// Submit-queue priority, `0..=`[`MAX_PRIORITY`] (higher runs
+    /// sooner).
+    pub fn priority(mut self, priority: u8) -> CensusRequest {
+        self.priority = Some(priority);
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![("source".into(), self.source.to_json())];
         if let Some(e) = &self.engine {
@@ -864,6 +913,12 @@ impl CensusRequest {
         }
         if let Some(shard) = self.shard {
             pairs.push(("shard".into(), shard.to_json()));
+        }
+        if let Some(t) = &self.tenant {
+            pairs.push(("tenant".into(), Json::from(t.clone())));
+        }
+        if let Some(p) = self.priority {
+            pairs.push(("priority".into(), Json::from(p as u64)));
         }
         Json::Obj(pairs)
     }
@@ -909,6 +964,19 @@ impl CensusRequest {
             Some(s) => Some(Shard::from_json(s)?),
             None => None,
         };
+        let tenant = v.get("tenant").and_then(Json::as_str).map(str::to_string);
+        let priority = match v.get("priority") {
+            Some(p) => {
+                let p = p
+                    .as_u64()
+                    .filter(|&p| p <= MAX_PRIORITY as u64)
+                    .ok_or_else(|| {
+                        bad(format!("priority {p} out of range 0..={MAX_PRIORITY}"))
+                    })?;
+                Some(p as u8)
+            }
+            None => None,
+        };
         Ok(CensusRequest {
             source,
             engine,
@@ -917,6 +985,8 @@ impl CensusRequest {
             ordering,
             classes,
             shard,
+            tenant,
+            priority,
         })
     }
 }
@@ -1768,6 +1838,10 @@ mod tests {
                 .engine("parallel")
                 .shard(1_000, 2_000),
             CensusRequest::generator("web", 64).shard(0, 0),
+            CensusRequest::generator("patents", 256)
+                .tenant("acme")
+                .priority(7),
+            CensusRequest::path("/data/g.csr").priority(0),
         ];
         for req in reqs {
             let line = req.to_json().to_string();
@@ -1940,11 +2014,38 @@ mod tests {
             ErrorCode::Cancelled,
             ErrorCode::ShuttingDown,
             ErrorCode::WorkerUnavailable,
+            ErrorCode::RateLimited,
+            ErrorCode::Overloaded,
+            ErrorCode::Transport,
             ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::parse(code.as_str()), code);
         }
         assert_eq!(ErrorCode::parse("novel_code"), ErrorCode::Internal);
+    }
+
+    #[test]
+    fn out_of_range_priorities_are_rejected_at_decode() {
+        let json = Json::parse(
+            r#"{"source":{"kind":"generator","name":"patents","nodes":10},"priority":12}"#,
+        )
+        .unwrap();
+        let err = CensusRequest::from_json(&json).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("priority"), "{err}");
+        for bad in [
+            r#"{"source":{"kind":"path","path":"g"},"priority":-1}"#,
+            r#"{"source":{"kind":"path","path":"g"},"priority":"high"}"#,
+        ] {
+            let err = CensusRequest::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{bad}");
+        }
+        // the whole valid range decodes
+        for p in 0..=MAX_PRIORITY {
+            let line = CensusRequest::path("g").priority(p).to_json().to_string();
+            let back = CensusRequest::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(back.priority, Some(p));
+        }
     }
 
     #[test]

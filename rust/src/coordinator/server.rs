@@ -1,15 +1,23 @@
 //! Dependency-free TCP census server speaking the newline-delimited
 //! JSON protocol of [`super::protocol`].
 //!
-//! One thread per connection; frames are processed strictly in order
-//! per connection, and job state is shared across connections (submit
-//! on one, poll on another). The server is a pure transport: every
-//! frame decodes, dispatches to the [`Coordinator`] job API, and
-//! encodes — all payload shapes live in the protocol module.
+//! Two transports share one dispatch core:
+//!
+//! - [`CensusServer`] — the legacy thread-per-connection accept loop
+//!   (kept behind `repro serve --legacy-accept` for ablation). One
+//!   thread per connection; frames are processed strictly in order.
+//! - [`Gateway`](crate::net::Gateway) — the nonblocking reactor that
+//!   multiplexes thousands of connections (newline-JSON and HTTP) on a
+//!   fixed thread count, with per-tenant admission control.
+//!
+//! Both paths decode, dispatch to the [`Coordinator`] job API through
+//! [`ServiceState`], and encode — all payload shapes live in the
+//! protocol module. Job and stream state is shared across connections
+//! *and transports*: submit over HTTP, poll over newline-JSON.
 //!
 //! Control verbs: `status` (identity + job counters), `metrics` (text
 //! exposition of the coordinator registry), `shutdown` (stop accepting
-//! and return from [`CensusServer::run`]).
+//! and return from the serve loop).
 //!
 //! Streaming census sessions (`stream_open` / `stream_apply` /
 //! `stream_query` / `stream_compact` / `stream_close`) live in a
@@ -19,13 +27,19 @@
 //! verb); concurrent applies on the *same* session serialize, which is
 //! what keeps the incremental census exact.
 //!
+//! Slow-client protection (both transports): a per-connection idle
+//! timeout and a max buffered-frame size, so a slowloris or a
+//! never-reading peer cannot pin a thread or grow a buffer without
+//! bound. Oversized frames get a structured `bad_request` before the
+//! disconnect; idle connections are closed silently.
+//!
 //! Completed jobs stay resolvable until the server exits — a polling
 //! client may fetch a terminal report any number of times. Bound the
 //! process by restarting the server, not by racing clients to observe
 //! results exactly once.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -38,16 +52,20 @@ use super::protocol::{
 use super::service::{Coordinator, JobHandle};
 use crate::census::StreamingCensus;
 use crate::error::{Context, Result};
+use crate::net::conn::{read_bounded_line, BoundedLine, ConnLimits};
 
 /// One live streaming census session.
 struct StreamSession {
     census: StreamingCensus,
 }
 
-/// Shared server state: the coordinator, the cross-connection job and
-/// stream tables, and the shutdown latch.
-struct ServerState {
-    coordinator: Arc<Coordinator>,
+/// The transport-independent serving state: the coordinator, the
+/// cross-connection job and stream tables, and the shutdown latch.
+/// The legacy accept loop and the nonblocking gateway both hold an
+/// `Arc<ServiceState>` — which is what makes `--legacy-accept` a pure
+/// transport ablation.
+pub(crate) struct ServiceState {
+    pub(crate) coordinator: Arc<Coordinator>,
     jobs: Mutex<HashMap<u64, JobHandle>>,
     /// Stream sessions, each behind its own mutex so long applies on
     /// one session do not serialize the whole server.
@@ -55,25 +73,67 @@ struct ServerState {
     stream_seq: AtomicU64,
     shutdown: AtomicBool,
     started: Instant,
-    addr: SocketAddr,
+    /// A blocking accept loop registers its address here so
+    /// [`ServiceState::begin_shutdown`] can poke it awake; the
+    /// nonblocking gateway leaves it empty and notices the latch on
+    /// its next reactor tick.
+    wake_addr: Mutex<Option<SocketAddr>>,
 }
 
-impl ServerState {
-    /// Flip the shutdown latch and wake the blocking accept loop with a
-    /// throwaway connection. Called *after* the shutdown ack has been
-    /// flushed to the requesting client, so the ack is never raced by
-    /// process teardown.
-    fn begin_shutdown(&self) {
+impl ServiceState {
+    pub(crate) fn new(coordinator: Arc<Coordinator>) -> ServiceState {
+        ServiceState {
+            coordinator,
+            jobs: Mutex::new(HashMap::new()),
+            streams: Mutex::new(HashMap::new()),
+            stream_seq: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+            wake_addr: Mutex::new(None),
+        }
+    }
+
+    /// Register the address a blocking accept loop listens on, for the
+    /// shutdown wake-up connection.
+    pub(crate) fn set_wake_addr(&self, addr: SocketAddr) {
+        *self.wake_addr.lock().unwrap() = Some(addr);
+    }
+
+    /// Flip the shutdown latch and (for a blocking accept loop) wake it
+    /// with a throwaway connection. Called *after* the shutdown ack has
+    /// been flushed to the requesting client, so the ack is never raced
+    /// by process teardown.
+    pub(crate) fn begin_shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(self.addr);
+        if let Some(addr) = *self.wake_addr.lock().unwrap() {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    pub(crate) fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Look a job up in the cross-connection table (the gateway parks
+    /// `wait` verbs on the handle instead of blocking a reactor).
+    pub(crate) fn job(&self, id: u64) -> Option<JobHandle> {
+        self.jobs.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Insert a submitted job into the cross-connection table.
+    pub(crate) fn insert_job(&self, handle: JobHandle) {
+        self.jobs.lock().unwrap().insert(handle.id(), handle);
     }
 }
 
-/// The census TCP server. Bind, read the OS-assigned address, then
-/// [`CensusServer::run`] the accept loop (usually on its own thread).
+/// The legacy census TCP server: thread-per-connection, blocking I/O.
+/// Bind, read the OS-assigned address, then [`CensusServer::run`] the
+/// accept loop (usually on its own thread).
 pub struct CensusServer {
     listener: TcpListener,
-    state: Arc<ServerState>,
+    state: Arc<ServiceState>,
+    limits: ConnLimits,
+    addr: SocketAddr,
 }
 
 impl CensusServer {
@@ -82,26 +142,31 @@ impl CensusServer {
         coordinator: Arc<Coordinator>,
         addr: A,
     ) -> Result<CensusServer> {
+        CensusServer::bind_with_limits(coordinator, addr, ConnLimits::default())
+    }
+
+    /// [`CensusServer::bind`] with explicit slow-client limits.
+    pub fn bind_with_limits<A: ToSocketAddrs + std::fmt::Debug>(
+        coordinator: Arc<Coordinator>,
+        addr: A,
+        limits: ConnLimits,
+    ) -> Result<CensusServer> {
         let listener =
             TcpListener::bind(&addr).with_context(|| format!("binding census server {addr:?}"))?;
         let local = listener.local_addr().context("reading bound address")?;
+        let state = Arc::new(ServiceState::new(coordinator));
+        state.set_wake_addr(local);
         Ok(CensusServer {
             listener,
-            state: Arc::new(ServerState {
-                coordinator,
-                jobs: Mutex::new(HashMap::new()),
-                streams: Mutex::new(HashMap::new()),
-                stream_seq: AtomicU64::new(0),
-                shutdown: AtomicBool::new(false),
-                started: Instant::now(),
-                addr: local,
-            }),
+            state,
+            limits,
+            addr: local,
         })
     }
 
     /// The actually-bound address (resolves `:0` to the assigned port).
     pub fn local_addr(&self) -> SocketAddr {
-        self.state.addr
+        self.addr
     }
 
     /// Accept loop: one handler thread per connection, until a client
@@ -109,9 +174,14 @@ impl CensusServer {
     /// requests on other connections finish on their own; new frames
     /// after shutdown are answered with `shutting_down`.
     pub fn run(self) -> Result<()> {
-        let CensusServer { listener, state } = self;
+        let CensusServer {
+            listener,
+            state,
+            limits,
+            addr: _,
+        } = self;
         for conn in listener.incoming() {
-            if state.shutdown.load(Ordering::SeqCst) {
+            if state.is_shutting_down() {
                 break;
             }
             match conn {
@@ -119,13 +189,13 @@ impl CensusServer {
                     let state = state.clone();
                     let spawned = std::thread::Builder::new()
                         .name("census-conn".into())
-                        .spawn(move || handle_connection(&state, stream));
+                        .spawn(move || handle_connection(&state, stream, limits));
                     if let Err(e) = spawned {
                         eprintln!("serve: failed to spawn connection thread: {e}");
                     }
                 }
                 Err(e) => {
-                    if state.shutdown.load(Ordering::SeqCst) {
+                    if state.is_shutting_down() {
                         break;
                     }
                     eprintln!("serve: accept error: {e}");
@@ -137,11 +207,16 @@ impl CensusServer {
 }
 
 /// Serve one connection: read frames line by line, answer each in
-/// order, stop on disconnect or after shutdown is requested.
-fn handle_connection(state: &ServerState, stream: TcpStream) {
+/// order, stop on disconnect, idle timeout, an oversized frame, or
+/// after shutdown is requested.
+fn handle_connection(state: &ServiceState, stream: TcpStream, limits: ConnLimits) {
     let metrics = state.coordinator.metrics();
     metrics.inc("server_connections_total", 1);
     metrics.add_gauge("server_connections_open", 1);
+    // the read timeout doubles as the idle timeout: a connection that
+    // sends nothing for a whole window is dropped, so a slowloris
+    // holds a thread for one window, not forever
+    let _ = stream.set_read_timeout(Some(limits.idle_timeout));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(e) => {
@@ -150,10 +225,30 @@ fn handle_connection(state: &ServerState, stream: TcpStream) {
             return;
         }
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_bounded_line(&mut reader, limits.max_frame_bytes) {
+            Ok(BoundedLine::Line(l)) => l,
+            Ok(BoundedLine::TooLong) => {
+                // structured verdict before the disconnect — the peer
+                // learns *why* instead of seeing a silent drop
+                metrics.inc("server_oversize_disconnects_total", 1);
+                let reply = ResponseFrame::err(0, oversize_error(limits.max_frame_bytes));
+                let mut out = reply.encode();
+                out.push('\n');
+                let _ = writer.write_all(out.as_bytes()).and_then(|_| writer.flush());
+                break;
+            }
+            Ok(BoundedLine::Eof) => break,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                metrics.inc("server_idle_disconnects_total", 1);
+                break;
+            }
             Err(_) => break, // peer vanished mid-frame
         };
         if line.trim().is_empty() {
@@ -174,26 +269,27 @@ fn handle_connection(state: &ServerState, stream: TcpStream) {
     metrics.add_gauge("server_connections_open", -1);
 }
 
+/// The structured error an oversized frame is answered with, shared by
+/// both transports so clients see one shape.
+pub(crate) fn oversize_error(limit: usize) -> WireError {
+    WireError::new(
+        ErrorCode::BadRequest,
+        format!("frame exceeds this server's limit of {limit} bytes"),
+    )
+}
+
 /// Decode, dispatch, encode one frame. Never panics the connection:
 /// every failure becomes a structured error frame. The second element
 /// is `true` when the server should begin shutdown *after* the reply
 /// has been written (the `shutdown` verb's ack-first contract).
-fn process_frame(state: &ServerState, line: &str) -> (ResponseFrame, bool) {
+pub(crate) fn process_frame(state: &ServiceState, line: &str) -> (ResponseFrame, bool) {
     let metrics = state.coordinator.metrics();
     metrics.inc("server_frames_total", 1);
     let frame = match RequestFrame::decode(line) {
         Ok(f) => f,
         Err(e) => {
-            // the frame failed validation (version, verb, request body)
-            // but the correlation id may still be salvageable from the
-            // raw JSON so the client can key the error; 0 marks a frame
-            // too broken even for that
             metrics.inc("server_errors_total", 1);
-            let id = Json::parse(line)
-                .ok()
-                .and_then(|v| v.get("id").and_then(Json::as_u64))
-                .unwrap_or(0);
-            return (ResponseFrame::err(id, e), false);
+            return (ResponseFrame::err(salvage_id(line), e), false);
         }
     };
     match execute(state, &frame) {
@@ -208,23 +304,29 @@ fn process_frame(state: &ServerState, line: &str) -> (ResponseFrame, bool) {
     }
 }
 
+/// A frame failed validation (version, verb, request body) but the
+/// correlation id may still be salvageable from the raw JSON so the
+/// client can key the error; 0 marks a frame too broken even for that.
+pub(crate) fn salvage_id(line: &str) -> u64 {
+    Json::parse(line)
+        .ok()
+        .and_then(|v| v.get("id").and_then(Json::as_u64))
+        .unwrap_or(0)
+}
+
 /// Look a frame's job up in the cross-connection table.
-fn lookup_job(state: &ServerState, frame: &RequestFrame) -> Result<JobHandle, WireError> {
+fn lookup_job(state: &ServiceState, frame: &RequestFrame) -> Result<JobHandle, WireError> {
     let id = frame
         .job
         .ok_or_else(|| WireError::new(ErrorCode::BadRequest, "frame carries no job id"))?;
     state
-        .jobs
-        .lock()
-        .unwrap()
-        .get(&id)
-        .cloned()
+        .job(id)
         .ok_or_else(|| WireError::new(ErrorCode::UnknownJob, format!("no job {id}")))
 }
 
 /// Look a frame's stream session up in the cross-connection table.
 fn lookup_stream(
-    state: &ServerState,
+    state: &ServiceState,
     frame: &RequestFrame,
 ) -> Result<(u64, Arc<Mutex<StreamSession>>), WireError> {
     let id = frame
@@ -240,11 +342,15 @@ fn lookup_stream(
         .ok_or_else(|| WireError::new(ErrorCode::UnknownStream, format!("no stream session {id}")))
 }
 
-fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError> {
+/// Dispatch one decoded frame against the shared serving state. The
+/// `wait` verb blocks the calling thread until the job is terminal —
+/// fine on a thread-per-connection transport; the gateway intercepts
+/// `wait` before this point and parks the connection instead.
+pub(crate) fn execute(state: &ServiceState, frame: &RequestFrame) -> Result<Json, WireError> {
     let metrics = state.coordinator.metrics();
     match frame.verb {
         Verb::Submit => {
-            if state.shutdown.load(Ordering::SeqCst) {
+            if state.is_shutting_down() {
                 return Err(WireError::new(
                     ErrorCode::ShuttingDown,
                     "server is shutting down",
@@ -255,7 +361,7 @@ fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError>
             })?;
             let handle = state.coordinator.submit(request);
             let report = handle.report();
-            state.jobs.lock().unwrap().insert(handle.id(), handle);
+            state.insert_job(handle);
             Ok(report.to_json())
         }
         Verb::Poll => Ok(lookup_job(state, frame)?.report().to_json()),
@@ -310,12 +416,12 @@ fn execute(state: &ServerState, frame: &RequestFrame) -> Result<Json, WireError>
             Json::from(state.coordinator.metrics().render()),
         )])),
         Verb::Shutdown => {
-            // side-effect free: handle_connection flips the latch after
-            // the ack is flushed (see process_frame's second element)
+            // side-effect free: the transport flips the latch after the
+            // ack is flushed (see process_frame's second element)
             Ok(Json::Obj(vec![("stopping".into(), Json::Bool(true))]))
         }
         Verb::StreamOpen => {
-            if state.shutdown.load(Ordering::SeqCst) {
+            if state.is_shutting_down() {
                 return Err(WireError::new(
                     ErrorCode::ShuttingDown,
                     "server is shutting down",

@@ -19,10 +19,10 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::Instant;
 
-use super::client::TriadicClient;
+use super::client::{ClientTimeouts, TriadicClient};
 use super::protocol::{
     CensusRequest, CensusResponse, ErrorCode, GraphSource, JobReport, JobStateKind, Provenance,
-    SchedStats, Shard, WireError, PROTOCOL_VERSION,
+    SchedStats, Shard, WireError, DEFAULT_PRIORITY, PROTOCOL_VERSION,
 };
 use super::router::{Route, Router, RoutingPolicy};
 use crate::census::{
@@ -504,6 +504,9 @@ impl JobHandle {
 struct QueuedJob {
     shared: Arc<JobShared>,
     request: CensusRequest,
+    /// Submit-queue priority (higher drains sooner, FIFO within a
+    /// level). From the request, or [`DEFAULT_PRIORITY`].
+    priority: u8,
 }
 
 #[derive(Default)]
@@ -1056,9 +1059,12 @@ impl Core {
 /// keeps the parent's source verbatim (path sources make each worker
 /// mmap the file locally; generator/inline sources re-materialize
 /// deterministically) plus its `threads`/`policy` knobs; `engine`,
-/// `ordering` and `classes` are planner-level concerns and are
-/// stripped. Connection and transport failures surface as `internal`
-/// errors, which [`Core::dispatch_shard`] treats as retryable.
+/// `ordering`, `classes` and admission fields are planner-level
+/// concerns and are stripped. Connection and transport failures
+/// surface as `transport` errors, which [`Core::dispatch_shard`]
+/// treats as retryable. Connecting is bounded so one dead worker
+/// costs seconds, not a planner thread pinned forever; the read stays
+/// unbounded — shard censuses legitimately run long.
 fn dispatch_once(
     addr: &str,
     req: &CensusRequest,
@@ -1069,7 +1075,10 @@ fn dispatch_once(
     sub.engine = None;
     sub.ordering = None;
     sub.classes = None;
-    let mut client = TriadicClient::connect(addr)?;
+    sub.tenant = None;
+    sub.priority = None;
+    let timeouts = ClientTimeouts::default().connect(std::time::Duration::from_secs(5));
+    let mut client = TriadicClient::connect_with_timeouts(addr, timeouts)?;
     Ok(client.census(&sub)?.census)
 }
 
@@ -1077,7 +1086,10 @@ fn dispatch_once(
 /// else (bad request, graph load, unknown engine) is a verdict about
 /// the request itself and would repeat on any worker.
 fn shard_retryable(e: &WireError) -> bool {
-    matches!(e.code, ErrorCode::Internal | ErrorCode::ShuttingDown)
+    matches!(
+        e.code,
+        ErrorCode::Internal | ErrorCode::ShuttingDown | ErrorCode::Transport
+    )
 }
 
 /// Split the vertices `0..n` into at most `k` contiguous ranges
@@ -1332,7 +1344,18 @@ impl Coordinator {
                 )));
                 return handle;
             }
-            q.queue.push_back(QueuedJob { shared, request });
+            // priority insertion: ahead of strictly lower levels only,
+            // so equal-priority jobs stay FIFO
+            let priority = request.priority.unwrap_or(DEFAULT_PRIORITY);
+            let job = QueuedJob {
+                shared,
+                request,
+                priority,
+            };
+            match q.queue.iter().position(|j| j.priority < priority) {
+                Some(i) => q.queue.insert(i, job),
+                None => q.queue.push_back(job),
+            }
         }
         self.job_queue.cv.notify_one();
         handle

@@ -41,6 +41,11 @@
 //!   executor, a newline-delimited-JSON TCP server + `TriadicClient`,
 //!   and metrics. The blocking `census`/`census_path` calls survive as
 //!   compatibility shims.
+//! * [`net`] — the nonblocking multi-tenant serving gateway: reactor
+//!   threads over raw-syscall epoll (portable scan fallback), one
+//!   listener speaking both newline-JSON and minimal HTTP/1.1, with
+//!   per-tenant token-bucket rate limits, inflight quotas, priorities,
+//!   and structured load shedding.
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts`
 //! lowers Moody's matrix census to HLO text which [`runtime`] loads; no
@@ -61,6 +66,7 @@ pub mod error;
 pub mod figures;
 pub mod graph;
 pub mod metrics;
+pub mod net;
 pub mod rng;
 pub mod runtime;
 pub mod sched;

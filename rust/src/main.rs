@@ -56,6 +56,7 @@ use triadic::error::{Context, Error, Result};
 use triadic::figures::{self, Scale};
 use triadic::graph::relabel::{self, Relabeling};
 use triadic::graph::{degree, io, CsrGraph, EdgeOp, HubSplit, VertexOrdering};
+use triadic::net::{Gateway, GatewayConfig, TenantTable};
 use triadic::sched::{Executor, ExecutorConfig, Policy};
 use triadic::simulator::{
     simulate, Machine, NumaMachine, SuperdomeMachine, WorkloadProfile, XmtMachine,
@@ -87,6 +88,8 @@ COMMANDS
             [--trusted] [--engine E] [--pool-threads W] [--max-jobs K]
             [--job-workers J] [--max-request-nodes N]
             [--workers HOST:PORT,HOST:PORT,...] [--workers-file FILE]
+            [--reactor-threads R] [--max-conns C] [--tenant-config FILE]
+            [--scan-backend] [--legacy-accept]
   worker    [--listen ADDR] [--threads T] [--pool-threads W]
             [--max-jobs K] [--job-workers J] [--trusted]
             [--max-request-nodes N]
@@ -833,6 +836,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let listen = args.str_or("listen", "127.0.0.1:7333");
     let stdin_mode = args.flag("stdin");
     let workers = worker_pool_from(args)?;
+    let reactor_threads = args.get_or("reactor-threads", 2usize).map_err(Error::msg)?;
+    let max_conns = args.get_or("max-conns", 4096usize).map_err(Error::msg)?;
+    let tenant_config = args.opt_str("tenant-config");
+    let scan_backend = args.flag("scan-backend");
+    let legacy_accept = args.flag("legacy-accept");
     args.reject_unknown().map_err(Error::msg)?;
 
     let coord = Arc::new(Coordinator::start(CoordinatorConfig {
@@ -869,11 +877,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return serve_stdin(&coord);
     }
 
-    let server = CensusServer::bind(coord.clone(), listen.as_str())?;
-    // machine-parseable: CI and scripts read the bound address off
-    // stdout (std's stdout is line-buffered, so this flushes even piped)
-    println!("listening on {}", server.local_addr());
-    server.run()?;
+    if legacy_accept {
+        // the thread-per-connection ablation path: same dispatch core,
+        // no reactor, no admission control
+        let server = CensusServer::bind(coord.clone(), listen.as_str())?;
+        // machine-parseable: CI and scripts read the bound address off
+        // stdout (std's stdout is line-buffered, so this flushes even piped)
+        println!("listening on {}", server.local_addr());
+        server.run()?;
+    } else {
+        let tenants = match &tenant_config {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading tenant config {path}"))?;
+                TenantTable::parse_config(&text).map_err(Error::msg)?
+            }
+            None => TenantTable::default(),
+        };
+        let config = GatewayConfig {
+            reactor_threads,
+            max_conns,
+            scan_backend,
+            ..GatewayConfig::default()
+        };
+        let gateway = Gateway::bind(coord.clone(), listen.as_str(), tenants, config)?;
+        eprintln!(
+            "gateway up: reactors={reactor_threads} max_conns={max_conns} backend={}",
+            if scan_backend { "scan" } else { "auto" }
+        );
+        println!("listening on {}", gateway.local_addr());
+        gateway.run()?;
+    }
     // shutdown received: new submissions are already rejected, so the
     // in-flight gauge only drains — let admitted jobs finish before the
     // process (and its job runners) goes away

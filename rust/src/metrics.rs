@@ -97,6 +97,15 @@ impl Metrics {
         *self.gauges.lock().unwrap().entry(name.to_string()).or_insert(0) = value;
     }
 
+    /// Raise a gauge to `value` if it is below it — high-water marks
+    /// like peak open connections, updated atomically under the
+    /// registry lock so racing reactor threads cannot lower the peak.
+    pub fn set_gauge_max(&self, name: &str, value: i64) {
+        let mut gauges = self.gauges.lock().unwrap();
+        let v = gauges.entry(name.to_string()).or_insert(0);
+        *v = (*v).max(value);
+    }
+
     /// Read a gauge.
     pub fn gauge(&self, name: &str) -> i64 {
         self.gauges.lock().unwrap().get(name).copied().unwrap_or(0)
@@ -194,5 +203,15 @@ mod tests {
         m.set_gauge("inflight", 10);
         assert_eq!(m.gauge("inflight"), 10);
         assert_eq!(m.gauge("missing"), 0);
+    }
+
+    #[test]
+    fn gauge_max_is_a_high_water_mark() {
+        let m = Metrics::new();
+        m.set_gauge_max("peak", 5);
+        m.set_gauge_max("peak", 3);
+        assert_eq!(m.gauge("peak"), 5);
+        m.set_gauge_max("peak", 9);
+        assert_eq!(m.gauge("peak"), 9);
     }
 }

@@ -1,0 +1,446 @@
+//! Per-connection buffering state machines shared by the gateway and
+//! the legacy accept loop: bounded frame accumulation with protocol
+//! sniffing on the read side, a drainable write buffer with partial
+//! write tracking on the write side, and the bounded blocking line
+//! reader the legacy thread-per-connection server uses.
+//!
+//! Everything here is transport-free — the structs never own a socket,
+//! they only consume and produce byte slices — which is what makes the
+//! partial/pipelined/oversized frame behavior unit-testable without a
+//! reactor or even a TCP connection.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, Write};
+use std::time::Duration;
+
+use super::http::{self, HttpRequest};
+
+/// Slow-client protection knobs, enforced by both transports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConnLimits {
+    /// A connection that sends no bytes for this long is dropped.
+    pub idle_timeout: Duration,
+    /// Largest frame (JSON line, or HTTP headers + body) the server
+    /// buffers before answering `bad_request` and disconnecting.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ConnLimits {
+    fn default() -> ConnLimits {
+        ConnLimits {
+            idle_timeout: Duration::from_secs(60),
+            // inline graph sources are the big payloads; 8 MiB covers
+            // ~300k inline arcs while still bounding a hostile peer
+            max_frame_bytes: 8 * 1024 * 1024,
+        }
+    }
+}
+
+/// Outcome of one bounded line read on the legacy blocking path.
+pub enum BoundedLine {
+    /// A complete line (newline stripped, may be empty).
+    Line(String),
+    /// The line outgrew the limit before a newline arrived.
+    TooLong,
+    /// Clean end of stream.
+    Eof,
+}
+
+/// Read one newline-terminated line without ever buffering more than
+/// `max` bytes — the blocking-path twin of [`FrameBuffer`]'s cap. A
+/// final unterminated line before EOF is still returned (matching
+/// `BufRead::lines`); invalid UTF-8 is replaced rather than fatal,
+/// leaving frame validation to the protocol decoder.
+pub fn read_bounded_line(r: &mut impl BufRead, max: usize) -> std::io::Result<BoundedLine> {
+    let mut acc: Vec<u8> = Vec::new();
+    loop {
+        let available = r.fill_buf()?;
+        if available.is_empty() {
+            return Ok(if acc.is_empty() {
+                BoundedLine::Eof
+            } else {
+                BoundedLine::Line(strip_cr(acc))
+            });
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                if acc.len() + i > max {
+                    return Ok(BoundedLine::TooLong);
+                }
+                acc.extend_from_slice(&available[..i]);
+                r.consume(i + 1);
+                return Ok(BoundedLine::Line(strip_cr(acc)));
+            }
+            None => {
+                let n = available.len();
+                if acc.len() + n > max {
+                    return Ok(BoundedLine::TooLong);
+                }
+                acc.extend_from_slice(available);
+                r.consume(n);
+            }
+        }
+    }
+}
+
+fn strip_cr(mut bytes: Vec<u8>) -> String {
+    if bytes.last() == Some(&b'\r') {
+        bytes.pop();
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// The protocol a connection turned out to speak, decided by its first
+/// non-whitespace byte and sticky for the connection's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    /// Nothing received yet.
+    Undecided,
+    /// Newline-delimited JSON frames (first byte `{`).
+    Jsonl,
+    /// HTTP/1.1 (first byte an ASCII letter — a method name).
+    Http,
+}
+
+/// One decoded inbound frame.
+#[derive(Debug)]
+pub enum FrameEvent {
+    /// A complete JSON line (newline stripped).
+    Jsonl(String),
+    /// A complete HTTP request (headers + body).
+    Http(HttpRequest),
+}
+
+/// Why a connection must be answered with `bad_request` and closed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// The buffered frame outgrew the limit without completing.
+    TooBig { limit: usize },
+    /// The bytes are recognizably HTTP but malformed or unsupported.
+    BadHttp(String),
+}
+
+/// Read-side state machine for one nonblocking connection: bytes go in
+/// via [`FrameBuffer::extend`], complete frames come out via
+/// [`FrameBuffer::next`]. Handles partial frames (bytes wait in the
+/// buffer), pipelined frames (each `next` call yields one), protocol
+/// sniffing, and the max-frame cap.
+#[derive(Debug)]
+pub struct FrameBuffer {
+    buf: VecDeque<u8>,
+    max: usize,
+    protocol: Protocol,
+}
+
+impl FrameBuffer {
+    pub fn new(max: usize) -> FrameBuffer {
+        FrameBuffer {
+            buf: VecDeque::new(),
+            max,
+            protocol: Protocol::Undecided,
+        }
+    }
+
+    /// Append received bytes. Growth past the cap is reported by the
+    /// next [`FrameBuffer::next`] call, not here, so a frame completed
+    /// by the same read is still honored.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend(bytes.iter().copied());
+    }
+
+    /// The sniffed protocol (sticky once decided).
+    pub fn protocol(&self) -> Protocol {
+        self.protocol
+    }
+
+    /// Buffered-but-unconsumed byte count.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Extract the next complete frame, if one is buffered. `Ok(None)`
+    /// means "need more bytes".
+    pub fn next(&mut self) -> Result<Option<FrameEvent>, FrameError> {
+        // inter-frame whitespace (blank lines, trailing CRLF after an
+        // HTTP body) is meaningless in both protocols
+        while matches!(self.buf.front(), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+            self.buf.pop_front();
+        }
+        if self.buf.is_empty() {
+            return Ok(None);
+        }
+        if self.protocol == Protocol::Undecided {
+            self.protocol = match self.buf.front() {
+                Some(b'{') => Protocol::Jsonl,
+                Some(b) if b.is_ascii_alphabetic() => Protocol::Http,
+                // not a frame either protocol could start — let the
+                // JSON decoder produce the structured bad_frame error
+                _ => Protocol::Jsonl,
+            };
+        }
+        match self.protocol {
+            Protocol::Jsonl => self.next_jsonl(),
+            Protocol::Http => self.next_http(),
+            Protocol::Undecided => unreachable!("sniffed above"),
+        }
+    }
+
+    fn next_jsonl(&mut self) -> Result<Option<FrameEvent>, FrameError> {
+        match self.buf.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                let mut line: Vec<u8> = self.buf.drain(..=i).collect();
+                line.pop(); // the newline
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                Ok(Some(FrameEvent::Jsonl(
+                    String::from_utf8_lossy(&line).into_owned(),
+                )))
+            }
+            None if self.buf.len() > self.max => Err(FrameError::TooBig { limit: self.max }),
+            None => Ok(None),
+        }
+    }
+
+    fn next_http(&mut self) -> Result<Option<FrameEvent>, FrameError> {
+        self.buf.make_contiguous();
+        let (head, _) = self.buf.as_slices();
+        match http::parse_request(head, self.max) {
+            Ok(Some((request, consumed))) => {
+                self.buf.drain(..consumed);
+                Ok(Some(FrameEvent::Http(request)))
+            }
+            Ok(None) if self.buf.len() > self.max => Err(FrameError::TooBig { limit: self.max }),
+            Ok(None) => Ok(None),
+            Err(e) => Err(FrameError::BadHttp(e)),
+        }
+    }
+}
+
+/// Write-side buffer for one nonblocking connection: replies are queued
+/// with [`WriteBuffer::push`] and drained by [`WriteBuffer::flush_to`]
+/// as the socket accepts them, tracking partial writes across calls.
+#[derive(Debug, Default)]
+pub struct WriteBuffer {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl WriteBuffer {
+    pub fn new() -> WriteBuffer {
+        WriteBuffer::default()
+    }
+
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes still waiting to reach the socket.
+    pub fn len(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write as much as the sink accepts. Returns `Ok(true)` when the
+    /// buffer fully drained, `Ok(false)` on a partial write
+    /// (`WouldBlock` is a partial write, not an error).
+    pub fn flush_to(&mut self, w: &mut impl Write) -> std::io::Result<bool> {
+        while self.pos < self.buf.len() {
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ))
+                }
+                Ok(n) => self.pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+            return Ok(true);
+        }
+        // reclaim drained prefix once it dominates the allocation
+        if self.pos > 64 * 1024 && self.pos * 2 > self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn line_of(ev: Option<FrameEvent>) -> String {
+        match ev {
+            Some(FrameEvent::Jsonl(l)) => l,
+            other => panic!("expected a jsonl frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn partial_frame_waits_for_the_rest() {
+        let mut fb = FrameBuffer::new(1024);
+        fb.extend(b"{\"id\":1,\"verb\"");
+        assert!(matches!(fb.next(), Ok(None)));
+        fb.extend(b":\"status\"}\n");
+        assert_eq!(line_of(fb.next().unwrap()), "{\"id\":1,\"verb\":\"status\"}");
+        assert!(matches!(fb.next(), Ok(None)));
+    }
+
+    #[test]
+    fn pipelined_frames_come_out_one_per_call() {
+        let mut fb = FrameBuffer::new(1024);
+        fb.extend(b"{\"a\":1}\n{\"b\":2}\r\n{\"c\":3}\n");
+        assert_eq!(line_of(fb.next().unwrap()), "{\"a\":1}");
+        assert_eq!(line_of(fb.next().unwrap()), "{\"b\":2}");
+        assert_eq!(line_of(fb.next().unwrap()), "{\"c\":3}");
+        assert!(matches!(fb.next(), Ok(None)));
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_not_buffered_forever() {
+        let mut fb = FrameBuffer::new(64);
+        fb.extend(&vec![b'{'; 100]);
+        assert!(matches!(fb.next(), Err(FrameError::TooBig { limit: 64 })));
+    }
+
+    #[test]
+    fn frame_completed_by_the_overflowing_read_still_parses() {
+        let mut fb = FrameBuffer::new(8);
+        fb.extend(b"{\"a\":123}\n"); // 9 bytes + newline, cap is 8
+        // a *complete* line is extracted regardless of the cap — the cap
+        // bounds waiting-for-more, not finished frames one read brought
+        assert_eq!(line_of(fb.next().unwrap()), "{\"a\":123}");
+    }
+
+    #[test]
+    fn blank_lines_between_frames_are_skipped() {
+        let mut fb = FrameBuffer::new(1024);
+        fb.extend(b"\r\n  \n{\"a\":1}\n\n");
+        assert_eq!(line_of(fb.next().unwrap()), "{\"a\":1}");
+        assert!(matches!(fb.next(), Ok(None)));
+    }
+
+    #[test]
+    fn sniffs_http_and_yields_a_request() {
+        let mut fb = FrameBuffer::new(1024);
+        fb.extend(b"GET /v1/status HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(fb.protocol(), Protocol::Undecided);
+        match fb.next().unwrap() {
+            Some(FrameEvent::Http(req)) => {
+                assert_eq!(req.method, "GET");
+                assert_eq!(req.path, "/v1/status");
+            }
+            other => panic!("expected an http frame, got {other:?}"),
+        }
+        assert_eq!(fb.protocol(), Protocol::Http);
+    }
+
+    #[test]
+    fn partial_http_headers_wait_then_complete_with_body() {
+        let mut fb = FrameBuffer::new(4096);
+        fb.extend(b"POST /v1/census HTTP/1.1\r\nContent-Length: 7\r\n");
+        assert!(matches!(fb.next(), Ok(None)));
+        fb.extend(b"\r\n{\"x\"");
+        assert!(matches!(fb.next(), Ok(None))); // body still short
+        fb.extend(b":1}");
+        match fb.next().unwrap() {
+            Some(FrameEvent::Http(req)) => assert_eq!(req.body, b"{\"x\":1}"),
+            other => panic!("expected an http frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pipelined_http_requests_on_one_connection() {
+        let mut fb = FrameBuffer::new(4096);
+        fb.extend(b"GET /metrics HTTP/1.1\r\n\r\nGET /v1/status HTTP/1.1\r\n\r\n");
+        let paths: Vec<String> = (0..2)
+            .map(|_| match fb.next().unwrap() {
+                Some(FrameEvent::Http(req)) => req.path,
+                other => panic!("expected an http frame, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(paths, ["/metrics", "/v1/status"]);
+    }
+
+    #[test]
+    fn bounded_line_reader_matches_lines_semantics() {
+        let mut r = BufReader::new(&b"alpha\nbeta\r\ngamma"[..]);
+        assert!(matches!(read_bounded_line(&mut r, 64), Ok(BoundedLine::Line(l)) if l == "alpha"));
+        assert!(matches!(read_bounded_line(&mut r, 64), Ok(BoundedLine::Line(l)) if l == "beta"));
+        // final unterminated line still comes back, then clean EOF
+        assert!(matches!(read_bounded_line(&mut r, 64), Ok(BoundedLine::Line(l)) if l == "gamma"));
+        assert!(matches!(read_bounded_line(&mut r, 64), Ok(BoundedLine::Eof)));
+    }
+
+    #[test]
+    fn bounded_line_reader_stops_at_the_cap() {
+        let big = vec![b'x'; 100];
+        let mut r = BufReader::new(&big[..]);
+        assert!(matches!(read_bounded_line(&mut r, 64), Ok(BoundedLine::TooLong)));
+    }
+
+    #[test]
+    fn write_buffer_tracks_partial_writes() {
+        struct Trickle(Vec<u8>);
+        impl Write for Trickle {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                let n = buf.len().min(3);
+                self.0.extend_from_slice(&buf[..n]);
+                if n < buf.len() {
+                    // simulate the kernel buffer filling after n bytes
+                    Ok(n)
+                } else {
+                    Ok(n)
+                }
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut wb = WriteBuffer::new();
+        wb.push(b"0123456789");
+        let mut sink = Trickle(Vec::new());
+        assert!(wb.flush_to(&mut sink).unwrap());
+        assert_eq!(sink.0, b"0123456789");
+        assert!(wb.is_empty());
+    }
+
+    #[test]
+    fn write_buffer_resumes_after_would_block() {
+        struct BlockAfter(usize, Vec<u8>);
+        impl Write for BlockAfter {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                if self.0 == 0 {
+                    return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "full"));
+                }
+                let n = buf.len().min(self.0);
+                self.0 -= n;
+                self.1.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut wb = WriteBuffer::new();
+        wb.push(b"hello world");
+        let mut sink = BlockAfter(4, Vec::new());
+        assert!(!wb.flush_to(&mut sink).unwrap());
+        assert_eq!(wb.len(), 7);
+        sink.0 = 64;
+        assert!(wb.flush_to(&mut sink).unwrap());
+        assert_eq!(sink.1, b"hello world");
+    }
+}

@@ -1,0 +1,745 @@
+//! The nonblocking multi-tenant serving gateway: a small fixed set of
+//! reactor threads multiplexes every connection — newline-JSON and
+//! HTTP/1.1 on the same listener — through readiness polling
+//! ([`super::reactor`]), per-connection state machines
+//! ([`super::conn`]) and per-tenant admission ([`super::tenant`]).
+//!
+//! Architecture, per reactor thread (no cross-thread handoff at all):
+//!
+//! ```text
+//!   listener clone (nonblocking, SO_REUSE via try_clone)
+//!        │ accept
+//!        ▼
+//!   Poller (epoll / scan) ── readiness ──▶ Conn
+//!        ▲                                 │ FrameBuffer → sniff
+//!        │ ~50ms tick                      │  ├─ jsonl frame ─▶ decode
+//!   parked waits, tenant                   │  └─ http request ─▶ route
+//!   releases, idle sweep                   ▼
+//!                              admission (token bucket, inflight)
+//!                                          │ Coordinator::submit
+//!                                          ▼
+//!                              WriteBuffer ─▶ socket (backpressure)
+//! ```
+//!
+//! Blocking verbs never block a reactor: `wait` (and every HTTP
+//! census, which is synchronous by nature) *parks* the connection on
+//! its [`JobHandle`] and is resolved on a later tick; frames that
+//! arrive behind a parked wait stay buffered so responses keep strict
+//! request order, which the [`TriadicClient`] protocol requires.
+//!
+//! Load shedding is always structured: over-quota tenants get
+//! `rate_limited` on a healthy connection, a full gateway answers the
+//! first decoded frame with `overloaded` (in the peer's own protocol)
+//! and closes after the reply — never a silent drop.
+//!
+//! [`TriadicClient`]: crate::coordinator::TriadicClient
+
+use std::collections::HashMap;
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::conn::{ConnLimits, FrameBuffer, FrameError, FrameEvent, Protocol, WriteBuffer};
+use super::http::{self, HttpRequest};
+use super::reactor::{Event, Interest, Poller};
+use super::tenant::{TenantTable, DEFAULT_TENANT};
+use crate::coordinator::protocol::{
+    CensusRequest, ErrorCode, Json, JobStateKind, RequestFrame, ResponseFrame, Verb, WireError,
+};
+use crate::coordinator::server::{execute, oversize_error, salvage_id, ServiceState};
+use crate::coordinator::service::{Coordinator, JobHandle};
+use crate::error::{Context, Result};
+use crate::metrics::Metrics;
+
+/// The listener's polling token; connection tokens are their fds,
+/// which can never collide with this.
+const LISTENER_TOKEN: u64 = u64::MAX;
+
+/// Reactor tick: the poll timeout, and therefore the cadence of
+/// parked-wait resolution, tenant inflight release, idle sweeps and
+/// shutdown-latch checks.
+const TICK: Duration = Duration::from_millis(50);
+
+/// Gateway tuning. `Default` is what `repro serve` uses out of the box.
+#[derive(Debug, Clone, Copy)]
+pub struct GatewayConfig {
+    /// Reactor threads; each owns its own poller and listener clone.
+    pub reactor_threads: usize,
+    /// Open-connection cap across all reactor threads; connections
+    /// beyond it are answered `overloaded` and closed.
+    pub max_conns: usize,
+    /// Slow-client protection (idle timeout, max frame bytes).
+    pub limits: ConnLimits,
+    /// Per-connection outbound buffer level above which the gateway
+    /// stops reading from that connection until the peer drains.
+    pub max_write_buffer: usize,
+    /// Force the portable scan poller even where epoll is available.
+    pub scan_backend: bool,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig {
+            reactor_threads: 2,
+            max_conns: 4096,
+            limits: ConnLimits::default(),
+            max_write_buffer: 4 * 1024 * 1024,
+            scan_backend: false,
+        }
+    }
+}
+
+/// The gateway: bind, then [`Gateway::run`] until a client sends the
+/// `shutdown` verb.
+pub struct Gateway {
+    listener: TcpListener,
+    state: Arc<ServiceState>,
+    tenants: Arc<TenantTable>,
+    config: GatewayConfig,
+    addr: SocketAddr,
+}
+
+impl Gateway {
+    pub fn bind<A: ToSocketAddrs + std::fmt::Debug>(
+        coordinator: Arc<Coordinator>,
+        addr: A,
+        tenants: TenantTable,
+        config: GatewayConfig,
+    ) -> Result<Gateway> {
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("binding gateway {addr:?}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        Ok(Gateway {
+            listener,
+            state: Arc::new(ServiceState::new(coordinator)),
+            tenants: Arc::new(tenants),
+            config,
+            addr: local,
+        })
+    }
+
+    /// The actually-bound address (resolves `:0` to the assigned port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Run the reactor threads; returns once a `shutdown` verb has been
+    /// acked and every thread has drained out.
+    pub fn run(self) -> Result<()> {
+        // one fd per connection: lift the conservative default soft
+        // limit the way long-running servers conventionally do
+        let _ = super::reactor::raise_nofile_limit();
+        let threads = self.config.reactor_threads.max(1);
+        let per_thread_conns = (self.config.max_conns / threads).max(1);
+        let mut joins = Vec::new();
+        for i in 1..threads {
+            let listener = self.listener.try_clone().context("cloning gateway listener")?;
+            let state = self.state.clone();
+            let tenants = self.tenants.clone();
+            let config = self.config;
+            let handle = std::thread::Builder::new()
+                .name(format!("gateway-reactor-{i}"))
+                .spawn(move || reactor_loop(listener, state, tenants, config, per_thread_conns))
+                .context("spawning reactor thread")?;
+            joins.push(handle);
+        }
+        reactor_loop(
+            self.listener,
+            self.state.clone(),
+            self.tenants.clone(),
+            self.config,
+            per_thread_conns,
+        );
+        for handle in joins {
+            let _ = handle.join();
+        }
+        Ok(())
+    }
+}
+
+/// Why a connection is parked: the reply it owes, held until the job
+/// turns terminal.
+enum Parked {
+    /// A `wait` verb; reply is the job report keyed by the frame id.
+    Jsonl { id: u64, handle: JobHandle },
+    /// A `POST /v1/census`; reply is an HTTP response with the report.
+    Http { handle: JobHandle },
+}
+
+impl Parked {
+    fn handle(&self) -> &JobHandle {
+        match self {
+            Parked::Jsonl { handle, .. } => handle,
+            Parked::Http { handle } => handle,
+        }
+    }
+}
+
+/// One multiplexed connection's full state.
+struct Conn {
+    stream: TcpStream,
+    token: u64,
+    frames: FrameBuffer,
+    out: WriteBuffer,
+    last_activity: Instant,
+    parked: Option<Parked>,
+    interest: Interest,
+    /// Accepted over the connection cap: the first decoded frame is
+    /// answered `overloaded` (in the peer's protocol) and then closed.
+    shedding: bool,
+    /// Peer closed its write side; keep only to finish pending output.
+    read_closed: bool,
+    close_after_flush: bool,
+    /// This connection carried the `shutdown` verb: once its ack is on
+    /// the wire, flip the server-wide latch.
+    shutdown_after_flush: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn queue_jsonl(&mut self, frame: ResponseFrame) {
+        let mut line = frame.encode();
+        line.push('\n');
+        self.out.push(line.as_bytes());
+    }
+
+    fn queue_http_error(&mut self, error: &WireError) {
+        let body = format!("{}", Json::Obj(vec![("error".into(), error.to_json())]));
+        let status = http::status_for(error.code);
+        self.out.push(&http::response(status, "application/json", body.as_bytes()));
+    }
+}
+
+/// One reactor thread: its own poller, listener clone and connections.
+/// Fatal poller failures flip the shutdown latch so sibling threads
+/// exit too, rather than leaving a half-alive gateway.
+fn reactor_loop(
+    listener: TcpListener,
+    state: Arc<ServiceState>,
+    tenants: Arc<TenantTable>,
+    config: GatewayConfig,
+    max_conns: usize,
+) {
+    let metrics = state.coordinator.metrics();
+    let mut poller = if config.scan_backend {
+        Poller::new_scan()
+    } else {
+        match Poller::new() {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("gateway: poller setup failed: {e}");
+                state.begin_shutdown();
+                return;
+            }
+        }
+    };
+    if listener.set_nonblocking(true).is_err() {
+        state.begin_shutdown();
+        return;
+    }
+    let listener_fd = listener.as_raw_fd();
+    if let Err(e) = poller.register(listener_fd, LISTENER_TOKEN, Interest::Read) {
+        eprintln!("gateway: registering listener failed: {e}");
+        state.begin_shutdown();
+        return;
+    }
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut admitted: Vec<(String, JobHandle)> = Vec::new();
+    let mut events: Vec<Event> = Vec::new();
+    loop {
+        if state.is_shutting_down() {
+            break;
+        }
+        if let Err(e) = poller.wait(&mut events, TICK) {
+            eprintln!("gateway: poll failed: {e}");
+            state.begin_shutdown();
+            break;
+        }
+        for &ev in &events {
+            if ev.token == LISTENER_TOKEN {
+                accept_ready(&listener, &mut poller, &mut conns, &metrics, &config, max_conns);
+                continue;
+            }
+            let Some(conn) = conns.get_mut(&ev.token) else {
+                continue;
+            };
+            if ev.error {
+                conn.dead = true;
+                continue;
+            }
+            if ev.readable && !conn.dead {
+                read_ready(conn, &state, &tenants, &mut admitted, &metrics, &config);
+            }
+            if ev.writable && !conn.dead {
+                flush_conn(conn, &state, &metrics);
+            }
+        }
+        tick(&state, &tenants, &mut conns, &mut admitted, &metrics, &config);
+        sync_interest_and_reap(&mut poller, &mut conns, &metrics, &config);
+    }
+    // tear-down: every surviving connection closes when dropped
+    metrics.add_gauge("gateway_connections_open", -(conns.len() as i64));
+}
+
+/// Drain the accept queue. Connections over the cap are still accepted
+/// but marked shedding — they get a structured `overloaded` refusal on
+/// their first frame instead of a mysterious RST.
+fn accept_ready(
+    listener: &TcpListener,
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, Conn>,
+    metrics: &Metrics,
+    config: &GatewayConfig,
+    max_conns: usize,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                eprintln!("gateway: accept failed: {e}");
+                break;
+            }
+        };
+        if stream.set_nonblocking(true).is_err() {
+            continue;
+        }
+        let _ = stream.set_nodelay(true);
+        let token = stream.as_raw_fd() as u64;
+        let shedding = conns.len() >= max_conns;
+        if poller.register(stream.as_raw_fd(), token, Interest::Read).is_err() {
+            continue;
+        }
+        metrics.inc("gateway_connections_total", 1);
+        if shedding {
+            metrics.inc("gateway_shed_connections_total", 1);
+        }
+        metrics.add_gauge("gateway_connections_open", 1);
+        let open = metrics.gauge("gateway_connections_open");
+        metrics.set_gauge_max("gateway_connections_peak", open);
+        conns.insert(
+            token,
+            Conn {
+                stream,
+                token,
+                frames: FrameBuffer::new(config.limits.max_frame_bytes),
+                out: WriteBuffer::new(),
+                last_activity: Instant::now(),
+                parked: None,
+                interest: Interest::Read,
+                shedding,
+                read_closed: false,
+                close_after_flush: false,
+                shutdown_after_flush: false,
+                dead: false,
+            },
+        );
+    }
+}
+
+/// Pull everything the socket has, then run the frame state machine.
+fn read_ready(
+    conn: &mut Conn,
+    state: &Arc<ServiceState>,
+    tenants: &Arc<TenantTable>,
+    admitted: &mut Vec<(String, JobHandle)>,
+    metrics: &Metrics,
+    config: &GatewayConfig,
+) {
+    // backpressure: a peer that won't read its replies doesn't get to
+    // keep feeding us requests
+    if conn.out.len() > config.max_write_buffer {
+        return;
+    }
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.read_closed = true;
+                break;
+            }
+            Ok(n) => {
+                conn.frames.extend(&buf[..n]);
+                conn.last_activity = Instant::now();
+                if conn.frames.pending_bytes() > config.limits.max_frame_bytes {
+                    break; // the state machine will report TooBig
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+    drive_frames(conn, state, tenants, admitted, metrics);
+    flush_conn(conn, state, metrics);
+}
+
+/// Extract and dispatch buffered frames until exhausted, parked, or
+/// condemned. Called after reads and after a park resolves.
+fn drive_frames(
+    conn: &mut Conn,
+    state: &Arc<ServiceState>,
+    tenants: &Arc<TenantTable>,
+    admitted: &mut Vec<(String, JobHandle)>,
+    metrics: &Metrics,
+) {
+    while conn.parked.is_none() && !conn.close_after_flush && !conn.dead {
+        match conn.frames.next() {
+            Ok(Some(FrameEvent::Jsonl(line))) => {
+                handle_jsonl(conn, &line, state, tenants, admitted, metrics);
+            }
+            Ok(Some(FrameEvent::Http(request))) => {
+                handle_http(conn, &request, state, tenants, admitted, metrics);
+            }
+            Ok(None) => break,
+            Err(FrameError::TooBig { limit }) => {
+                metrics.inc("gateway_oversize_disconnects_total", 1);
+                let error = oversize_error(limit);
+                match conn.frames.protocol() {
+                    Protocol::Http => conn.queue_http_error(&error),
+                    _ => conn.queue_jsonl(ResponseFrame::err(0, error)),
+                }
+                conn.close_after_flush = true;
+            }
+            Err(FrameError::BadHttp(reason)) => {
+                metrics.inc("gateway_errors_total", 1);
+                conn.queue_http_error(&WireError::new(ErrorCode::BadRequest, reason));
+                conn.close_after_flush = true;
+            }
+        }
+    }
+}
+
+/// Dispatch one newline-JSON frame, mirroring the legacy server's
+/// semantics except that `submit` passes tenant admission and `wait`
+/// parks instead of blocking.
+fn handle_jsonl(
+    conn: &mut Conn,
+    line: &str,
+    state: &Arc<ServiceState>,
+    tenants: &Arc<TenantTable>,
+    admitted: &mut Vec<(String, JobHandle)>,
+    metrics: &Metrics,
+) {
+    metrics.inc("gateway_frames_total", 1);
+    if conn.shedding {
+        conn.queue_jsonl(ResponseFrame::err(salvage_id(line), overloaded_error()));
+        conn.close_after_flush = true;
+        return;
+    }
+    let frame = match RequestFrame::decode(line) {
+        Ok(f) => f,
+        Err(e) => {
+            metrics.inc("gateway_errors_total", 1);
+            conn.queue_jsonl(ResponseFrame::err(salvage_id(line), e));
+            return;
+        }
+    };
+    match frame.verb {
+        Verb::Submit => match admit_and_submit(frame.request.clone(), state, tenants, admitted) {
+            Ok(report) => conn.queue_jsonl(ResponseFrame::ok(frame.id, report)),
+            Err(e) => {
+                count_refusal(metrics, &e);
+                conn.queue_jsonl(ResponseFrame::err(frame.id, e));
+            }
+        },
+        Verb::Wait => {
+            let handle = frame.job.ok_or_else(no_job_error).and_then(|id| {
+                state
+                    .job(id)
+                    .ok_or_else(|| WireError::new(ErrorCode::UnknownJob, format!("no job {id}")))
+            });
+            match handle {
+                Err(e) => {
+                    metrics.inc("gateway_errors_total", 1);
+                    conn.queue_jsonl(ResponseFrame::err(frame.id, e));
+                }
+                Ok(handle) if handle.report().state.is_terminal() => {
+                    conn.queue_jsonl(ResponseFrame::ok(frame.id, handle.report().to_json()));
+                }
+                Ok(handle) => {
+                    metrics.inc("gateway_parked_waits_total", 1);
+                    conn.parked = Some(Parked::Jsonl { id: frame.id, handle });
+                }
+            }
+        }
+        Verb::Shutdown => {
+            conn.queue_jsonl(ResponseFrame::ok(
+                frame.id,
+                Json::Obj(vec![("stopping".into(), Json::Bool(true))]),
+            ));
+            conn.shutdown_after_flush = true;
+            conn.close_after_flush = true;
+        }
+        _ => match execute(state, &frame) {
+            Ok(result) => conn.queue_jsonl(ResponseFrame::ok(frame.id, result)),
+            Err(e) => {
+                metrics.inc("gateway_errors_total", 1);
+                conn.queue_jsonl(ResponseFrame::err(frame.id, e));
+            }
+        },
+    }
+}
+
+/// Route one HTTP request. The census route parks until the job is
+/// terminal, so plain `curl` sees a synchronous API.
+fn handle_http(
+    conn: &mut Conn,
+    request: &HttpRequest,
+    state: &Arc<ServiceState>,
+    tenants: &Arc<TenantTable>,
+    admitted: &mut Vec<(String, JobHandle)>,
+    metrics: &Metrics,
+) {
+    metrics.inc("gateway_http_requests_total", 1);
+    if conn.shedding {
+        conn.queue_http_error(&overloaded_error());
+        conn.close_after_flush = true;
+        return;
+    }
+    match (request.method.as_str(), request.path.as_str()) {
+        ("POST", "/v1/census") => {
+            let parsed = std::str::from_utf8(&request.body)
+                .map_err(|_| {
+                    WireError::new(ErrorCode::BadRequest, "census body is not valid UTF-8")
+                })
+                .and_then(|text| {
+                    Json::parse(text).map_err(|e| {
+                        WireError::new(ErrorCode::BadRequest, format!("census body: {e}"))
+                    })
+                })
+                .and_then(|v| CensusRequest::from_json(&v));
+            let submitted =
+                parsed.and_then(|req| admit_and_submit_handle(req, state, tenants, admitted));
+            match submitted {
+                Err(e) => {
+                    count_refusal(metrics, &e);
+                    conn.queue_http_error(&e);
+                }
+                Ok(handle) if handle.report().state.is_terminal() => {
+                    queue_http_report(conn, &handle);
+                }
+                Ok(handle) => {
+                    metrics.inc("gateway_parked_waits_total", 1);
+                    conn.parked = Some(Parked::Http { handle });
+                }
+            }
+        }
+        ("GET", "/v1/status") => {
+            match execute(state, &RequestFrame::new(0, Verb::Status)) {
+                Ok(result) => {
+                    let body = format!("{result}");
+                    conn.out
+                        .push(&http::response(200, "application/json", body.as_bytes()));
+                }
+                Err(e) => conn.queue_http_error(&e),
+            }
+        }
+        ("GET", "/metrics") => {
+            let text = state.coordinator.metrics().render();
+            conn.out
+                .push(&http::response(200, "text/plain; version=0.0.4", text.as_bytes()));
+        }
+        (_, "/v1/census") | (_, "/v1/status") | (_, "/metrics") => {
+            let e = WireError::new(
+                ErrorCode::BadRequest,
+                format!("method {} not allowed on {}", request.method, request.path),
+            );
+            let body = format!("{}", Json::Obj(vec![("error".into(), e.to_json())]));
+            conn.out
+                .push(&http::response(405, "application/json", body.as_bytes()));
+        }
+        (_, path) => {
+            let e = WireError::new(
+                ErrorCode::BadRequest,
+                format!("no route {path}; routes are /v1/census, /v1/status, /metrics"),
+            );
+            let body = format!("{}", Json::Obj(vec![("error".into(), e.to_json())]));
+            conn.out
+                .push(&http::response(404, "application/json", body.as_bytes()));
+        }
+    }
+}
+
+/// Tenant admission + submit, returning the intake report (the
+/// newline-JSON `submit` reply).
+fn admit_and_submit(
+    request: Option<CensusRequest>,
+    state: &Arc<ServiceState>,
+    tenants: &Arc<TenantTable>,
+    admitted: &mut Vec<(String, JobHandle)>,
+) -> std::result::Result<Json, WireError> {
+    let request = request
+        .ok_or_else(|| WireError::new(ErrorCode::BadRequest, "submit frame carries no request"))?;
+    let handle = admit_and_submit_handle(request, state, tenants, admitted)?;
+    Ok(handle.report().to_json())
+}
+
+/// The shared admission path: resolve the tenant, pass the token
+/// bucket and inflight gates, inherit the tenant's default priority,
+/// submit, and start tracking the job for quota release.
+fn admit_and_submit_handle(
+    mut request: CensusRequest,
+    state: &Arc<ServiceState>,
+    tenants: &Arc<TenantTable>,
+    admitted: &mut Vec<(String, JobHandle)>,
+) -> std::result::Result<JobHandle, WireError> {
+    if state.is_shutting_down() {
+        return Err(WireError::new(ErrorCode::ShuttingDown, "server is shutting down"));
+    }
+    let tenant = request.tenant.clone().unwrap_or_else(|| DEFAULT_TENANT.to_string());
+    let default_priority = tenants.admit(&tenant)?;
+    if request.priority.is_none() {
+        request.priority = Some(default_priority);
+    }
+    let handle = state.coordinator.submit(request);
+    state.insert_job(handle.clone());
+    admitted.push((tenant, handle.clone()));
+    Ok(handle)
+}
+
+/// Format a terminal job report as the HTTP census response.
+fn queue_http_report(conn: &mut Conn, handle: &JobHandle) {
+    let report = handle.report();
+    let status = match report.state {
+        JobStateKind::Done => 200,
+        JobStateKind::Cancelled => 409,
+        _ => report.error.as_ref().map_or(500, |e| http::status_for(e.code)),
+    };
+    let body = format!("{}", report.to_json());
+    conn.out.push(&http::response(status, "application/json", body.as_bytes()));
+}
+
+/// The per-tick housekeeping pass: resolve parked waits (and resume
+/// their pipelines), release tenant inflight slots for terminal jobs,
+/// and sweep idle connections.
+fn tick(
+    state: &Arc<ServiceState>,
+    tenants: &Arc<TenantTable>,
+    conns: &mut HashMap<u64, Conn>,
+    admitted: &mut Vec<(String, JobHandle)>,
+    metrics: &Metrics,
+    config: &GatewayConfig,
+) {
+    let now = Instant::now();
+    for conn in conns.values_mut() {
+        if conn.dead {
+            continue;
+        }
+        let resolved = match &conn.parked {
+            Some(parked) if parked.handle().report().state.is_terminal() => conn.parked.take(),
+            _ => None,
+        };
+        if let Some(parked) = resolved {
+            match parked {
+                Parked::Jsonl { id, handle } => {
+                    conn.queue_jsonl(ResponseFrame::ok(id, handle.report().to_json()));
+                }
+                Parked::Http { handle } => queue_http_report(conn, &handle),
+            }
+            conn.last_activity = now;
+            // frames pipelined behind the wait can run now
+            drive_frames(conn, state, tenants, admitted, metrics);
+        }
+        let idle = now.duration_since(conn.last_activity) > config.limits.idle_timeout;
+        if idle && conn.parked.is_none() && conn.out.is_empty() {
+            metrics.inc("gateway_idle_disconnects_total", 1);
+            conn.dead = true;
+            continue;
+        }
+        if !conn.out.is_empty() || conn.read_closed || conn.close_after_flush {
+            flush_conn(conn, state, metrics);
+        }
+    }
+    admitted.retain(|(tenant, handle)| {
+        if handle.report().state.is_terminal() {
+            tenants.release(tenant);
+            false
+        } else {
+            true
+        }
+    });
+}
+
+/// Push pending bytes; on full drain, handle deferred closes and the
+/// shutdown handshake.
+fn flush_conn(conn: &mut Conn, state: &Arc<ServiceState>, metrics: &Metrics) {
+    match conn.out.flush_to(&mut conn.stream) {
+        Ok(true) => {
+            if conn.shutdown_after_flush {
+                // the ack is on the wire: now stop the world
+                state.begin_shutdown();
+            }
+            if conn.close_after_flush || (conn.read_closed && conn.parked.is_none()) {
+                conn.dead = true;
+            }
+        }
+        Ok(false) => {}
+        Err(_) => {
+            metrics.inc("gateway_errors_total", 1);
+            conn.dead = true;
+        }
+    }
+}
+
+/// Keep each connection's poller registration in line with what it
+/// can actually make progress on, then reap dead connections.
+fn sync_interest_and_reap(
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, Conn>,
+    metrics: &Metrics,
+    config: &GatewayConfig,
+) {
+    let mut dead = Vec::new();
+    for conn in conns.values_mut() {
+        if conn.dead {
+            dead.push(conn.token);
+            continue;
+        }
+        let wanted = if conn.out.is_empty() {
+            Interest::Read
+        } else if conn.out.len() > config.max_write_buffer {
+            Interest::Write
+        } else {
+            Interest::ReadWrite
+        };
+        if wanted != conn.interest {
+            let fd = conn.stream.as_raw_fd();
+            if poller.modify(fd, conn.token, wanted).is_ok() {
+                conn.interest = wanted;
+            }
+        }
+    }
+    for token in dead {
+        if let Some(conn) = conns.remove(&token) {
+            poller.deregister(conn.stream.as_raw_fd(), token);
+            metrics.add_gauge("gateway_connections_open", -1);
+        }
+    }
+}
+
+fn overloaded_error() -> WireError {
+    WireError::new(
+        ErrorCode::Overloaded,
+        "gateway is at its connection limit; retry against a less loaded window",
+    )
+}
+
+fn no_job_error() -> WireError {
+    WireError::new(ErrorCode::BadRequest, "frame carries no job id")
+}
+
+/// Count a refused submit under the right metric.
+fn count_refusal(metrics: &Metrics, error: &WireError) {
+    match error.code {
+        ErrorCode::RateLimited => metrics.inc("gateway_rate_limited_total", 1),
+        ErrorCode::Overloaded => metrics.inc("gateway_overloaded_total", 1),
+        _ => metrics.inc("gateway_errors_total", 1),
+    }
+}

@@ -1,0 +1,246 @@
+//! Minimal HTTP/1.1 support for the gateway: enough to serve
+//! `POST /v1/census`, `GET /v1/status` and `GET /metrics` to stock
+//! tools (`curl`, python's `http.client`) without a dependency.
+//!
+//! Deliberately small: `Content-Length` bodies only (chunked transfer
+//! encoding is rejected with a structured 400), a 16 KiB header cap,
+//! keep-alive connections, no multipart/TLS/compression. The gateway's
+//! JSON-over-TCP protocol remains the first-class interface; HTTP is
+//! the drop-in integration path.
+
+use crate::coordinator::protocol::ErrorCode;
+
+/// Cap on the request line + headers, independent of the body cap — no
+/// client needs kilobytes of headers to name a graph.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// One parsed request. Header names are stored lowercased.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Try to parse one request from the front of `buf`.
+///
+/// - `Ok(Some((request, consumed)))` — a complete request; the caller
+///   drains `consumed` bytes (pipelined requests may follow).
+/// - `Ok(None)` — incomplete; read more bytes and retry.
+/// - `Err(reason)` — malformed or unsupported; answer 400 and close.
+pub fn parse_request(buf: &[u8], max_body: usize) -> Result<Option<(HttpRequest, usize)>, String> {
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(format!("request headers exceed {MAX_HEADER_BYTES} bytes"));
+        }
+        return Ok(None);
+    };
+    if head_end.head > MAX_HEADER_BYTES {
+        return Err(format!("request headers exceed {MAX_HEADER_BYTES} bytes"));
+    }
+    let head = std::str::from_utf8(&buf[..head_end.head])
+        .map_err(|_| "request headers are not valid UTF-8".to_string())?;
+    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m, p, v),
+        _ => return Err(format!("malformed request line {request_line:?}")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("unsupported protocol version {version:?}"));
+    }
+    let mut headers = Vec::new();
+    for line in lines.filter(|l| !l.is_empty()) {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(format!("malformed header line {line:?}"));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let request = HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: Vec::new(),
+    };
+    if let Some(te) = request.header("transfer-encoding") {
+        if te.to_ascii_lowercase().contains("chunked") {
+            return Err("chunked transfer encoding is not supported; \
+                        send a Content-Length body"
+                .to_string());
+        }
+    }
+    let content_length = match request.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| format!("unparseable Content-Length {v:?}"))?,
+    };
+    if content_length > max_body {
+        return Err(format!(
+            "request body of {content_length} bytes exceeds this server's limit of {max_body}"
+        ));
+    }
+    let body_start = head_end.total;
+    if buf.len() < body_start + content_length {
+        return Ok(None);
+    }
+    let mut request = request;
+    request.body = buf[body_start..body_start + content_length].to_vec();
+    Ok(Some((request, body_start + content_length)))
+}
+
+struct HeadEnd {
+    /// Bytes of request line + headers (excluding the blank line).
+    head: usize,
+    /// Bytes up to and including the blank line (body starts here).
+    total: usize,
+}
+
+/// Find the header/body boundary: `\r\n\r\n`, tolerating bare `\n\n`.
+fn find_head_end(buf: &[u8]) -> Option<HeadEnd> {
+    let mut i = 0;
+    while i + 1 < buf.len() {
+        if buf[i] == b'\n' {
+            if buf[i + 1] == b'\n' {
+                return Some(HeadEnd { head: i, total: i + 2 });
+            }
+            if i + 2 < buf.len() && buf[i + 1] == b'\r' && buf[i + 2] == b'\n' {
+                return Some(HeadEnd { head: i, total: i + 3 });
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Build a complete response with `Content-Length` and keep-alive.
+pub fn response(status: u16, content_type: &str, body: &[u8]) -> Vec<u8> {
+    let mut out = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        reason(status),
+        body.len()
+    )
+    .into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+/// The HTTP status a structured wire error maps to, so the same
+/// [`ErrorCode`] taxonomy drives both protocols.
+pub fn status_for(code: ErrorCode) -> u16 {
+    match code {
+        ErrorCode::BadVersion
+        | ErrorCode::BadFrame
+        | ErrorCode::BadRequest
+        | ErrorCode::UnknownVerb
+        | ErrorCode::GraphLoad => 400,
+        ErrorCode::UnknownEngine | ErrorCode::UnknownJob | ErrorCode::UnknownStream => 404,
+        ErrorCode::Cancelled => 409,
+        ErrorCode::RateLimited => 429,
+        ErrorCode::ShuttingDown | ErrorCode::WorkerUnavailable | ErrorCode::Overloaded => 503,
+        ErrorCode::Transport => 502,
+        ErrorCode::Internal => 500,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_get_with_headers() {
+        let raw = b"GET /v1/status HTTP/1.1\r\nHost: localhost:7333\r\nAccept: */*\r\n\r\n";
+        let (req, consumed) = parse_request(raw, 1024).unwrap().unwrap();
+        assert_eq!(consumed, raw.len());
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/v1/status");
+        assert_eq!(req.header("host"), Some("localhost:7333"));
+        assert_eq!(req.header("Accept"), Some("*/*"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_a_post_with_content_length_body() {
+        let raw = b"POST /v1/census HTTP/1.1\r\nContent-Length: 11\r\n\r\nhello world";
+        let (req, consumed) = parse_request(raw, 1024).unwrap().unwrap();
+        assert_eq!(consumed, raw.len());
+        assert_eq!(req.body, b"hello world");
+    }
+
+    #[test]
+    fn incomplete_requests_ask_for_more_bytes() {
+        assert!(parse_request(b"GET /v1/st", 1024).unwrap().is_none());
+        assert!(parse_request(b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nab", 1024)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn tolerates_bare_lf_line_endings() {
+        let raw = b"GET /metrics HTTP/1.1\nHost: x\n\n";
+        let (req, consumed) = parse_request(raw, 1024).unwrap().unwrap();
+        assert_eq!(consumed, raw.len());
+        assert_eq!(req.path, "/metrics");
+    }
+
+    #[test]
+    fn rejects_chunked_oversized_and_garbage() {
+        let chunked = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert!(parse_request(chunked, 1024).unwrap_err().contains("chunked"));
+        let big = b"POST /x HTTP/1.1\r\nContent-Length: 99999\r\n\r\n";
+        assert!(parse_request(big, 1024).unwrap_err().contains("exceeds"));
+        let garbage = b"NONSENSE\r\n\r\n";
+        assert!(parse_request(garbage, 1024).is_err());
+        let old = b"GET /x HTTP/0.9\r\n\r\n";
+        assert!(parse_request(old, 1024).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn response_carries_length_and_keepalive() {
+        let r = response(200, "application/json", b"{}");
+        let text = String::from_utf8(r).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn error_codes_map_to_sensible_statuses() {
+        assert_eq!(status_for(ErrorCode::RateLimited), 429);
+        assert_eq!(status_for(ErrorCode::Overloaded), 503);
+        assert_eq!(status_for(ErrorCode::BadRequest), 400);
+        assert_eq!(status_for(ErrorCode::UnknownJob), 404);
+        assert_eq!(status_for(ErrorCode::Internal), 500);
+    }
+}

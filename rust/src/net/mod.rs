@@ -1,0 +1,37 @@
+//! Nonblocking serving infrastructure: the multi-tenant gateway that
+//! fronts the [`crate::coordinator`] job pipeline at high connection
+//! counts.
+//!
+//! The legacy server ([`crate::coordinator::CensusServer`]) spends one
+//! OS thread per connection — simple, and still available behind
+//! `repro serve --legacy-accept` — but a monitoring deployment with
+//! thousands of mostly-idle subscriber connections wants the paper's
+//! serving posture instead: a small fixed thread count multiplexing
+//! all sockets through readiness polling, with explicit admission
+//! control per tenant.
+//!
+//! * [`reactor`] — readiness polling: raw-syscall epoll on Linux
+//!   (no libc dependency), a portable level-triggered scan fallback
+//!   elsewhere.
+//! * [`conn`] — per-connection state machines: bounded frame
+//!   accumulation with protocol sniffing (newline-JSON and HTTP/1.1 on
+//!   one listener), partial-write tracking, slow-client limits.
+//! * [`http`] — a deliberately minimal HTTP/1.1 layer for
+//!   `POST /v1/census`, `GET /v1/status` and `GET /metrics`.
+//! * [`tenant`] — token-bucket rate limits, max-inflight quotas and
+//!   default priorities per tenant, with structured `rate_limited`
+//!   refusals.
+//! * [`gateway`] — the reactor threads tying it together; dispatch
+//!   reuses the coordinator's job pipeline, so a census submitted over
+//!   HTTP can be polled over newline-JSON.
+
+pub mod conn;
+pub mod gateway;
+pub mod http;
+pub mod reactor;
+pub mod tenant;
+
+pub use conn::ConnLimits;
+pub use gateway::{Gateway, GatewayConfig};
+pub use reactor::{raise_nofile_limit, Event, Interest, Poller};
+pub use tenant::{TenantPolicy, TenantTable, DEFAULT_TENANT};

@@ -1,0 +1,350 @@
+//! Multi-tenant admission control for the serving gateway: per-tenant
+//! token-bucket rate limiting, max-inflight quotas, and default
+//! priorities, keyed by the `tenant` field of a census request.
+//!
+//! Admission is two gates in order: the token bucket (sustained `rate`
+//! admissions/second with capacity `burst`) and the inflight quota
+//! (jobs admitted but not yet terminal). Either refusal is the
+//! structured [`ErrorCode::RateLimited`] — the client keeps its
+//! connection and can retry; nothing is silently dropped. Server-wide
+//! overload (connection caps) is the gateway's `overloaded`, not a
+//! tenant verdict.
+//!
+//! Time is injected into [`TenantTable::admit_at`] so refill behavior
+//! is testable deterministically; the serving path uses
+//! [`TenantTable::admit`].
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::protocol::{ErrorCode, WireError, DEFAULT_PRIORITY, MAX_PRIORITY};
+
+/// The bucket unnamed (and unconfigured) tenants land in.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Limits and defaults for one tenant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantPolicy {
+    /// Sustained admissions per second refilled into the bucket.
+    pub rate: f64,
+    /// Bucket capacity — the burst admitted after an idle period.
+    pub burst: f64,
+    /// Maximum jobs admitted but not yet terminal.
+    pub max_inflight: usize,
+    /// Submit-queue priority for requests that don't set their own.
+    pub priority: u8,
+}
+
+impl TenantPolicy {
+    /// No limits at all — the default for unconfigured deployments, so
+    /// turning the gateway on changes nothing until a tenant config
+    /// opts into limits.
+    pub fn unlimited() -> TenantPolicy {
+        TenantPolicy {
+            rate: f64::INFINITY,
+            burst: f64::INFINITY,
+            max_inflight: usize::MAX,
+            priority: DEFAULT_PRIORITY,
+        }
+    }
+
+    pub fn new(rate: f64, burst: f64, max_inflight: usize) -> TenantPolicy {
+        TenantPolicy {
+            rate,
+            burst,
+            max_inflight,
+            priority: DEFAULT_PRIORITY,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> TenantPolicy {
+        self.priority = priority;
+        self
+    }
+}
+
+/// Mutable per-tenant accounting.
+#[derive(Debug)]
+struct TenantState {
+    tokens: f64,
+    last_refill: Instant,
+    inflight: usize,
+}
+
+/// All tenants' policies plus their live accounting. One table is
+/// shared (behind an `Arc`) by every reactor thread; the interior
+/// mutex is held only for the few arithmetic steps of a decision.
+#[derive(Debug)]
+pub struct TenantTable {
+    policies: HashMap<String, TenantPolicy>,
+    default_policy: TenantPolicy,
+    state: Mutex<HashMap<String, TenantState>>,
+}
+
+impl Default for TenantTable {
+    fn default() -> TenantTable {
+        TenantTable::new(TenantPolicy::unlimited())
+    }
+}
+
+impl TenantTable {
+    /// A table where unconfigured tenants get `default_policy`.
+    pub fn new(default_policy: TenantPolicy) -> TenantTable {
+        TenantTable {
+            policies: HashMap::new(),
+            default_policy,
+            state: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Configure one tenant. Naming [`DEFAULT_TENANT`] replaces the
+    /// policy every unconfigured tenant falls back to.
+    pub fn set_policy(&mut self, tenant: &str, policy: TenantPolicy) {
+        if tenant == DEFAULT_TENANT {
+            self.default_policy = policy;
+        }
+        self.policies.insert(tenant.to_string(), policy);
+    }
+
+    /// The policy a tenant resolves to.
+    pub fn policy(&self, tenant: &str) -> TenantPolicy {
+        self.policies.get(tenant).copied().unwrap_or(self.default_policy)
+    }
+
+    /// Parse the tenant config file format: one tenant per line,
+    /// `name rate burst max_inflight [priority]`, `#` comments and
+    /// blank lines ignored. `unlimited` is accepted for `rate`, `burst`
+    /// and `max_inflight`. A line named `default` re-bounds the bucket
+    /// unnamed tenants share.
+    pub fn parse_config(text: &str) -> Result<TenantTable, String> {
+        let mut table = TenantTable::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or_default().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_ascii_whitespace().collect();
+            let at = |msg: String| format!("tenant config line {}: {msg}", lineno + 1);
+            if fields.len() < 4 || fields.len() > 5 {
+                return Err(at(format!(
+                    "expected `name rate burst max_inflight [priority]`, got {} fields",
+                    fields.len()
+                )));
+            }
+            let rate = parse_limit_f64(fields[1]).map_err(&at)?;
+            let burst = parse_limit_f64(fields[2]).map_err(&at)?;
+            let max_inflight = parse_limit_usize(fields[3]).map_err(&at)?;
+            let mut policy = TenantPolicy::new(rate, burst, max_inflight);
+            if let Some(p) = fields.get(4) {
+                let p: u8 = p
+                    .parse()
+                    .ok()
+                    .filter(|&p| p <= MAX_PRIORITY)
+                    .ok_or_else(|| at(format!("priority {p:?} out of range 0..={MAX_PRIORITY}")))?;
+                policy = policy.with_priority(p);
+            }
+            table.set_policy(fields[0], policy);
+        }
+        Ok(table)
+    }
+
+    /// Admit one request for `tenant` at the serving clock.
+    pub fn admit(&self, tenant: &str) -> Result<u8, WireError> {
+        self.admit_at(tenant, Instant::now())
+    }
+
+    /// Admit one request for `tenant` as of `now`. `Ok` carries the
+    /// tenant's default priority and counts one inflight slot (release
+    /// it with [`TenantTable::release`] when the job turns terminal);
+    /// `Err` is the structured `rate_limited` verdict.
+    pub fn admit_at(&self, tenant: &str, now: Instant) -> Result<u8, WireError> {
+        let policy = self.policy(tenant);
+        let mut state = self.state.lock().unwrap();
+        let s = state.entry(tenant.to_string()).or_insert(TenantState {
+            tokens: policy.burst,
+            last_refill: now,
+            inflight: 0,
+        });
+        if policy.burst.is_finite() {
+            if policy.rate.is_finite() {
+                let dt = now.saturating_duration_since(s.last_refill).as_secs_f64();
+                s.tokens = (s.tokens + policy.rate * dt).min(policy.burst);
+            } else {
+                // unlimited rate with a finite burst: instant refill
+                s.tokens = policy.burst;
+            }
+        }
+        s.last_refill = now;
+        if s.tokens < 1.0 {
+            return Err(WireError::new(
+                ErrorCode::RateLimited,
+                format!(
+                    "tenant {tenant:?} exceeded its request rate \
+                     ({}/s, burst {}); retry shortly",
+                    policy.rate, policy.burst
+                ),
+            ));
+        }
+        if s.inflight >= policy.max_inflight {
+            return Err(WireError::new(
+                ErrorCode::RateLimited,
+                format!(
+                    "tenant {tenant:?} has {} jobs in flight (limit {}); \
+                     wait for one to finish",
+                    s.inflight, policy.max_inflight
+                ),
+            ));
+        }
+        if s.tokens.is_finite() {
+            s.tokens -= 1.0;
+        }
+        s.inflight += 1;
+        Ok(policy.priority)
+    }
+
+    /// Return one inflight slot (the admitted job turned terminal).
+    pub fn release(&self, tenant: &str) {
+        let mut state = self.state.lock().unwrap();
+        if let Some(s) = state.get_mut(tenant) {
+            s.inflight = s.inflight.saturating_sub(1);
+        }
+    }
+
+    /// Jobs currently counted against a tenant's inflight quota.
+    pub fn inflight(&self, tenant: &str) -> usize {
+        self.state.lock().unwrap().get(tenant).map_or(0, |s| s.inflight)
+    }
+}
+
+fn parse_limit_f64(s: &str) -> Result<f64, String> {
+    if s == "unlimited" {
+        return Ok(f64::INFINITY);
+    }
+    s.parse::<f64>()
+        .ok()
+        .filter(|v| *v > 0.0)
+        .ok_or_else(|| format!("expected a positive number or `unlimited`, got {s:?}"))
+}
+
+fn parse_limit_usize(s: &str) -> Result<usize, String> {
+    if s == "unlimited" {
+        return Ok(usize::MAX);
+    }
+    s.parse::<usize>()
+        .ok()
+        .filter(|v| *v > 0)
+        .ok_or_else(|| format!("expected a positive integer or `unlimited`, got {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn burst_is_the_hard_ceiling() {
+        let mut table = TenantTable::default();
+        table.set_policy("acme", TenantPolicy::new(1.0, 3.0, usize::MAX));
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            table.admit_at("acme", t0).expect("within burst");
+        }
+        let err = table.admit_at("acme", t0).unwrap_err();
+        assert_eq!(err.code, ErrorCode::RateLimited);
+        // a long idle refills to burst, never beyond it
+        let later = t0 + Duration::from_secs(3600);
+        for _ in 0..3 {
+            table.admit_at("acme", later).expect("refilled to burst");
+        }
+        assert_eq!(table.admit_at("acme", later).unwrap_err().code, ErrorCode::RateLimited);
+    }
+
+    #[test]
+    fn tokens_refill_at_the_configured_rate() {
+        let mut table = TenantTable::default();
+        table.set_policy("acme", TenantPolicy::new(2.0, 2.0, usize::MAX));
+        let t0 = Instant::now();
+        table.admit_at("acme", t0).unwrap();
+        table.admit_at("acme", t0).unwrap();
+        assert!(table.admit_at("acme", t0).is_err());
+        // rate 2/s → one token back after half a second
+        let t1 = t0 + Duration::from_millis(500);
+        table.admit_at("acme", t1).expect("one token refilled");
+        assert!(table.admit_at("acme", t1).is_err());
+    }
+
+    #[test]
+    fn tenants_are_isolated() {
+        let mut table = TenantTable::default();
+        table.set_policy("noisy", TenantPolicy::new(1.0, 1.0, usize::MAX));
+        table.set_policy("quiet", TenantPolicy::new(1.0, 1.0, usize::MAX));
+        let t0 = Instant::now();
+        table.admit_at("noisy", t0).unwrap();
+        assert!(table.admit_at("noisy", t0).is_err());
+        table.admit_at("quiet", t0).expect("quiet tenant has its own bucket");
+    }
+
+    #[test]
+    fn inflight_quota_blocks_until_release() {
+        let mut table = TenantTable::default();
+        table.set_policy("acme", TenantPolicy::new(f64::INFINITY, f64::INFINITY, 2));
+        let t0 = Instant::now();
+        table.admit_at("acme", t0).unwrap();
+        table.admit_at("acme", t0).unwrap();
+        let err = table.admit_at("acme", t0).unwrap_err();
+        assert_eq!(err.code, ErrorCode::RateLimited);
+        assert!(err.message.contains("in flight"));
+        table.release("acme");
+        assert_eq!(table.inflight("acme"), 1);
+        table.admit_at("acme", t0).expect("slot freed by release");
+    }
+
+    #[test]
+    fn unknown_tenants_fall_back_to_the_default_policy() {
+        let mut table = TenantTable::default();
+        table.set_policy(DEFAULT_TENANT, TenantPolicy::new(1.0, 1.0, usize::MAX));
+        let t0 = Instant::now();
+        table.admit_at("never-configured", t0).unwrap();
+        assert!(table.admit_at("never-configured", t0).is_err());
+        // ...and an out-of-the-box table admits everything
+        let open = TenantTable::default();
+        for _ in 0..10_000 {
+            open.admit_at("anyone", t0).unwrap();
+        }
+    }
+
+    #[test]
+    fn default_priority_comes_from_the_policy() {
+        let mut table = TenantTable::default();
+        table.set_policy("batch", TenantPolicy::new(10.0, 10.0, 8).with_priority(1));
+        let t0 = Instant::now();
+        assert_eq!(table.admit_at("batch", t0).unwrap(), 1);
+        assert_eq!(table.admit_at("other", t0).unwrap(), DEFAULT_PRIORITY);
+    }
+
+    #[test]
+    fn config_file_round_trip() {
+        let text = "\
+# tenants for the staging gateway
+default   100 200 64
+acme      5   10  4   8   # latency-sensitive
+batch     1   2   unlimited 0
+";
+        let table = TenantTable::parse_config(text).unwrap();
+        assert_eq!(table.policy("acme"), TenantPolicy::new(5.0, 10.0, 4).with_priority(8));
+        assert_eq!(table.policy("batch").max_inflight, usize::MAX);
+        assert_eq!(table.policy("batch").priority, 0);
+        assert_eq!(table.policy("anyone-else"), TenantPolicy::new(100.0, 200.0, 64));
+    }
+
+    #[test]
+    fn config_errors_name_the_line() {
+        let err = TenantTable::parse_config("acme 5 10\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = TenantTable::parse_config("ok 1 1 1\nacme -3 10 4\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = TenantTable::parse_config("acme 1 1 1 99\n").unwrap_err();
+        assert!(err.contains("priority"), "{err}");
+    }
+}

@@ -1,18 +1,24 @@
-//! End-to-end serving-API test: a real TCP server, a real
+//! End-to-end serving-API tests: a real TCP server, a real
 //! [`TriadicClient`], a batch of mixed-source census jobs polled to
 //! completion, and every response checked against the merged-engine
-//! serial oracle computed locally.
+//! serial oracle computed locally — against both transports: the
+//! legacy thread-per-connection [`CensusServer`] and the nonblocking
+//! multi-tenant [`Gateway`], including a ≥500-connection mixed
+//! JSON+HTTP soak.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use triadic::census::{merged, TriadType};
-use triadic::coordinator::protocol::{Json, ResponseFrame};
+use triadic::coordinator::protocol::{Json, RequestFrame, ResponseFrame, Verb};
 use triadic::coordinator::{
-    CensusRequest, CensusServer, Coordinator, CoordinatorConfig, ErrorCode, JobStateKind,
-    TriadicClient,
+    CensusRequest, CensusServer, Coordinator, CoordinatorConfig, ErrorCode, JobReport,
+    JobStateKind, TriadicClient,
 };
 use triadic::graph::{generators, EdgeOp, GraphBuilder};
+use triadic::net::{ConnLimits, Gateway, GatewayConfig, TenantPolicy, TenantTable};
 use triadic::sched::Policy;
 
 /// Start a sparse-only coordinator + TCP server on an OS-assigned port.
@@ -34,6 +40,121 @@ fn start_server() -> (
     let addr = server.local_addr();
     let handle = std::thread::spawn(move || server.run().unwrap());
     (addr, coord, handle)
+}
+
+/// Start the nonblocking gateway on an OS-assigned port.
+fn start_gateway(
+    config: GatewayConfig,
+    tenants: TenantTable,
+) -> (
+    std::net::SocketAddr,
+    Arc<Coordinator>,
+    std::thread::JoinHandle<()>,
+) {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            pool_threads: 4,
+            job_workers: 4,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    let gateway = Gateway::bind(coord.clone(), "127.0.0.1:0", tenants, config).unwrap();
+    let addr = gateway.local_addr();
+    let handle = std::thread::spawn(move || gateway.run().unwrap());
+    (addr, coord, handle)
+}
+
+/// Read one newline-terminated frame off a raw socket, carrying
+/// leftover bytes between calls in `buf` (no fd-doubling `try_clone`).
+fn read_frame_line(stream: &mut TcpStream, buf: &mut Vec<u8>) -> String {
+    loop {
+        if let Some(i) = buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = buf.drain(..=i).collect();
+            return String::from_utf8(line[..i].to_vec()).unwrap();
+        }
+        let mut tmp = [0u8; 4096];
+        let n = stream.read(&mut tmp).expect("frame read");
+        assert!(n > 0, "server closed mid-frame");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+}
+
+/// Read one HTTP response (status, body) off a raw socket.
+fn read_http_response(stream: &mut TcpStream, buf: &mut Vec<u8>) -> (u16, Vec<u8>) {
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i;
+        }
+        let mut tmp = [0u8; 4096];
+        let n = stream.read(&mut tmp).expect("http read");
+        assert!(n > 0, "server closed mid-response");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+    let status: u16 = head
+        .split_ascii_whitespace()
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .unwrap();
+    let length: usize = head
+        .lines()
+        .find_map(|l| {
+            let lower = l.to_ascii_lowercase();
+            lower.strip_prefix("content-length:").map(|v| v.trim().to_string())
+        })
+        .expect("content-length header")
+        .parse()
+        .unwrap();
+    let body_start = head_end + 4;
+    while buf.len() < body_start + length {
+        let mut tmp = [0u8; 4096];
+        let n = stream.read(&mut tmp).expect("http body read");
+        assert!(n > 0, "server closed mid-body");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let body = buf[body_start..body_start + length].to_vec();
+    buf.drain(..body_start + length);
+    (status, body)
+}
+
+/// Submit + wait over raw newline-JSON, returning the terminal report.
+fn jsonl_census(stream: &mut TcpStream, buf: &mut Vec<u8>, request: &CensusRequest) -> JobReport {
+    let mut frame = RequestFrame::new(1, Verb::Submit);
+    frame.request = Some(request.clone());
+    let mut line = frame.encode();
+    line.push('\n');
+    stream.write_all(line.as_bytes()).unwrap();
+    let reply = ResponseFrame::decode(&read_frame_line(stream, buf)).unwrap();
+    let report = JobReport::from_json(&reply.result.expect("submit accepted")).unwrap();
+
+    let mut wait = RequestFrame::new(2, Verb::Wait);
+    wait.job = Some(report.job);
+    let mut line = wait.encode();
+    line.push('\n');
+    stream.write_all(line.as_bytes()).unwrap();
+    let reply = ResponseFrame::decode(&read_frame_line(stream, buf)).unwrap();
+    JobReport::from_json(&reply.result.expect("wait answered")).unwrap()
+}
+
+/// Submit a census over raw HTTP, returning (status, terminal report).
+fn http_census(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    request: &CensusRequest,
+) -> (u16, JobReport) {
+    let body = format!("{}", request.to_json());
+    let msg = format!(
+        "POST /v1/census HTTP/1.1\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(msg.as_bytes()).unwrap();
+    let (status, reply) = read_http_response(stream, buf);
+    let json = Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+    (status, JobReport::from_json(&json).unwrap())
 }
 
 fn oracle_for(name: &str, nodes: usize, seed: u64) -> triadic::Census {
@@ -213,6 +334,339 @@ fn malformed_and_mismatched_frames_get_structured_errors() {
     let resp = send(r#"{"v":1,"id":8,"verb":"status"}"#);
     assert_eq!(resp.id, 8);
     assert!(resp.result.is_ok());
+
+    let mut client = TriadicClient::connect(addr).unwrap();
+    client.shutdown().unwrap();
+    server_thread.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Nonblocking gateway
+// ---------------------------------------------------------------------------
+
+/// The tentpole soak: ≥500 concurrent connections on one gateway
+/// listener, even ones speaking newline-JSON and odd ones HTTP/1.1,
+/// every census checked against the merged oracle, nothing dropped.
+#[test]
+fn gateway_soaks_500_mixed_protocol_connections() {
+    const CONNS: usize = 500;
+    const DRIVERS: usize = 16;
+
+    // both ends of every connection live in this test process, so the
+    // client side needs the fd headroom the gateway raises for itself
+    triadic::net::raise_nofile_limit().unwrap();
+    let (addr, coord, gateway_thread) =
+        start_gateway(GatewayConfig::default(), TenantTable::default());
+
+    let triangle = vec![(0u32, 1u32), (1, 2), (2, 0)];
+    let fan = vec![(0u32, 1u32), (1, 2), (2, 0), (0, 3), (3, 4), (4, 0)];
+    let shapes: Arc<Vec<(CensusRequest, triadic::Census)>> = Arc::new(vec![
+        (
+            CensusRequest::inline(3, triangle.clone()).engine("merged"),
+            merged::census(&GraphBuilder::new(3).arcs(&triangle).build()),
+        ),
+        (
+            CensusRequest::inline(5, fan.clone()).engine("merged"),
+            merged::census(&GraphBuilder::new(5).arcs(&fan).build()),
+        ),
+        (
+            CensusRequest::generator("patents", 120).seed(5).engine("merged"),
+            oracle_for("patents", 120, 5),
+        ),
+        (
+            CensusRequest::generator("web", 100).seed(6).engine("bm"),
+            oracle_for("web", 100, 6),
+        ),
+    ]);
+
+    // open every socket before driving any traffic, so the gateway
+    // really holds CONNS connections at once
+    let mut sockets = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        sockets.push((i, s));
+        if i % 50 == 49 {
+            // stay under the listen backlog while the reactors drain it
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while coord.metrics().gauge("gateway_connections_open") < CONNS as i64 {
+        assert!(
+            Instant::now() < deadline,
+            "gateway never accepted all {CONNS} connections"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // round-robin the sockets over a fixed pool of driver threads
+    let mut buckets: Vec<Vec<(usize, TcpStream)>> = (0..DRIVERS).map(|_| Vec::new()).collect();
+    for (i, s) in sockets {
+        buckets[i % DRIVERS].push((i, s));
+    }
+    let threads: Vec<_> = buckets
+        .into_iter()
+        .map(|bucket| {
+            let shapes = shapes.clone();
+            std::thread::spawn(move || {
+                for (i, mut stream) in bucket {
+                    let (request, want) = &shapes[i % shapes.len()];
+                    let mut buf = Vec::new();
+                    let report = if i % 2 == 0 {
+                        jsonl_census(&mut stream, &mut buf, request)
+                    } else {
+                        let (status, report) = http_census(&mut stream, &mut buf, request);
+                        assert_eq!(status, 200, "conn {i}");
+                        report
+                    };
+                    assert_eq!(report.state, JobStateKind::Done, "conn {i}: {:?}", report.error);
+                    let response = report.response.expect("done report carries a response");
+                    assert_eq!(&response.census, want, "conn {i}");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    let peak = coord.metrics().gauge("gateway_connections_peak");
+    assert!(peak >= CONNS as i64, "peak {peak} < {CONNS}");
+    assert!(coord.metrics().get("gateway_http_requests_total") >= (CONNS / 2) as u64);
+    assert!(coord.metrics().get("gateway_frames_total") >= CONNS as u64);
+    assert_eq!(coord.metrics().get("gateway_shed_connections_total"), 0);
+
+    let mut client = TriadicClient::connect(addr).unwrap();
+    client.shutdown().unwrap();
+    gateway_thread.join().unwrap();
+}
+
+/// Every HTTP route end-to-end, on the portable scan poller so the
+/// fallback backend keeps e2e coverage even on Linux CI — plus the
+/// cross-protocol contract: a job submitted over HTTP is pollable over
+/// newline-JSON, because both transports share one job table.
+#[test]
+fn gateway_http_routes_and_cross_protocol_polling() {
+    let config = GatewayConfig {
+        reactor_threads: 1,
+        scan_backend: true,
+        ..GatewayConfig::default()
+    };
+    let (addr, _coord, gateway_thread) = start_gateway(config, TenantTable::default());
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut buf = Vec::new();
+
+    stream
+        .write_all(b"GET /v1/status HTTP/1.1\r\nHost: t\r\n\r\n")
+        .unwrap();
+    let (status, body) = read_http_response(&mut stream, &mut buf);
+    assert_eq!(status, 200);
+    let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(json.get("protocol").and_then(Json::as_u64), Some(1));
+
+    // census route, keep-alive on the same connection
+    let arcs = vec![(0u32, 1u32), (1, 2), (2, 0)];
+    let want = merged::census(&GraphBuilder::new(3).arcs(&arcs).build());
+    let request = CensusRequest::inline(3, arcs).engine("merged");
+    let (status, report) = http_census(&mut stream, &mut buf, &request);
+    assert_eq!(status, 200);
+    assert_eq!(report.state, JobStateKind::Done);
+    assert_eq!(report.response.unwrap().census, want);
+
+    let mut client = TriadicClient::connect(addr).unwrap();
+    assert_eq!(client.poll(report.job).unwrap().state, JobStateKind::Done);
+
+    stream.write_all(b"GET /metrics HTTP/1.1\r\n\r\n").unwrap();
+    let (status, body) = read_http_response(&mut stream, &mut buf);
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("gateway_connections_open"), "{text}");
+    assert!(text.contains("gateway_http_requests_total"), "{text}");
+
+    // unknown route / known route with the wrong method
+    stream.write_all(b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
+    let (status, _) = read_http_response(&mut stream, &mut buf);
+    assert_eq!(status, 404);
+    stream.write_all(b"PUT /metrics HTTP/1.1\r\n\r\n").unwrap();
+    let (status, _) = read_http_response(&mut stream, &mut buf);
+    assert_eq!(status, 405);
+
+    // malformed census body: a structured 400, and the connection
+    // survives to serve the next request
+    stream
+        .write_all(b"POST /v1/census HTTP/1.1\r\nContent-Length: 8\r\n\r\nnot json")
+        .unwrap();
+    let (status, body) = read_http_response(&mut stream, &mut buf);
+    assert_eq!(status, 400);
+    let json = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(
+        json.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("bad_request")
+    );
+    stream.write_all(b"GET /v1/status HTTP/1.1\r\n\r\n").unwrap();
+    let (status, _) = read_http_response(&mut stream, &mut buf);
+    assert_eq!(status, 200);
+
+    client.shutdown().unwrap();
+    gateway_thread.join().unwrap();
+}
+
+/// Token-bucket refusals are structured `rate_limited` errors on a
+/// connection that stays healthy — and other tenants are unaffected.
+#[test]
+fn gateway_rate_limits_tenants_with_structured_errors() {
+    let mut tenants = TenantTable::default();
+    tenants.set_policy("metered", TenantPolicy::new(0.0, 2.0, usize::MAX));
+    let (addr, coord, gateway_thread) = start_gateway(GatewayConfig::default(), tenants);
+
+    let mut client = TriadicClient::connect(addr).unwrap();
+    let arcs = vec![(0u32, 1u32), (1, 2), (2, 0)];
+    let want = merged::census(&GraphBuilder::new(3).arcs(&arcs).build());
+    let metered = CensusRequest::inline(3, arcs.clone())
+        .engine("merged")
+        .tenant("metered");
+
+    // a burst of two is admitted; the third is refused with a code,
+    // not a dropped connection
+    let first = client.submit(&metered).unwrap();
+    let second = client.submit(&metered).unwrap();
+    let err = client.submit(&metered).unwrap_err();
+    assert_eq!(err.code, ErrorCode::RateLimited);
+
+    // the connection still serves control verbs and other tenants
+    assert!(client.status().is_ok());
+    let resp = client
+        .census(&CensusRequest::inline(3, arcs).engine("merged"))
+        .unwrap();
+    assert_eq!(resp.census, want);
+
+    // the admitted metered jobs ran to completion
+    assert_eq!(client.wait(first.job).unwrap().census, want);
+    assert_eq!(client.wait(second.job).unwrap().census, want);
+    assert!(coord.metrics().get("gateway_rate_limited_total") >= 1);
+
+    client.shutdown().unwrap();
+    gateway_thread.join().unwrap();
+}
+
+/// Connections beyond `max_conns` are accepted, told `overloaded` in
+/// their own protocol, and closed — never silently dropped.
+#[test]
+fn gateway_sheds_over_capacity_connections_without_dropping_them() {
+    let config = GatewayConfig {
+        reactor_threads: 1,
+        max_conns: 2,
+        ..GatewayConfig::default()
+    };
+    let (addr, coord, gateway_thread) = start_gateway(config, TenantTable::default());
+
+    // two idle connections occupy the whole gateway
+    let hold_a = TcpStream::connect(addr).unwrap();
+    let _hold_b = TcpStream::connect(addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while coord.metrics().gauge("gateway_connections_open") < 2 {
+        assert!(Instant::now() < deadline, "holds never accepted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let mut refused = TriadicClient::connect(addr).unwrap();
+    let err = refused.status().unwrap_err();
+    assert_eq!(err.code, ErrorCode::Overloaded);
+    assert!(coord.metrics().get("gateway_shed_connections_total") >= 1);
+
+    // freeing a slot restores service
+    drop(hold_a);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while coord.metrics().gauge("gateway_connections_open") > 1 {
+        assert!(Instant::now() < deadline, "closed connections never reaped");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let mut client = TriadicClient::connect(addr).unwrap();
+    assert!(client.status().is_ok());
+
+    client.shutdown().unwrap();
+    gateway_thread.join().unwrap();
+}
+
+/// Slow-client protection on the gateway: oversized frames get a
+/// structured `bad_request` then a disconnect; silent connections are
+/// idled out.
+#[test]
+fn gateway_bounds_slow_and_oversized_clients() {
+    let config = GatewayConfig {
+        limits: ConnLimits {
+            idle_timeout: Duration::from_millis(300),
+            max_frame_bytes: 1024,
+        },
+        ..GatewayConfig::default()
+    };
+    let (addr, coord, gateway_thread) = start_gateway(config, TenantTable::default());
+
+    let mut big = TcpStream::connect(addr).unwrap();
+    big.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    big.write_all(&vec![b'{'; 2048]).unwrap();
+    let mut buf = Vec::new();
+    let reply = ResponseFrame::decode(&read_frame_line(&mut big, &mut buf)).unwrap();
+    let err = reply.result.unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("1024"), "{}", err.message);
+    let mut tail = [0u8; 16];
+    assert_eq!(big.read(&mut tail).unwrap(), 0, "oversized sender kept its connection");
+
+    let mut idle = TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    assert_eq!(idle.read(&mut tail).unwrap(), 0, "idle connection never dropped");
+
+    assert!(coord.metrics().get("gateway_oversize_disconnects_total") >= 1);
+    assert!(coord.metrics().get("gateway_idle_disconnects_total") >= 1);
+
+    let mut client = TriadicClient::connect(addr).unwrap();
+    client.shutdown().unwrap();
+    gateway_thread.join().unwrap();
+}
+
+/// The same slow-client limits hold on the legacy thread-per-connection
+/// path.
+#[test]
+fn legacy_server_bounds_slow_and_oversized_clients() {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: None,
+            pool_threads: 2,
+            job_workers: 1,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    let limits = ConnLimits {
+        idle_timeout: Duration::from_millis(300),
+        max_frame_bytes: 1024,
+    };
+    let server = CensusServer::bind_with_limits(coord.clone(), "127.0.0.1:0", limits).unwrap();
+    let addr = server.local_addr();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+
+    let mut big = TcpStream::connect(addr).unwrap();
+    big.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    big.write_all(&vec![b'{'; 2048]).unwrap();
+    let mut buf = Vec::new();
+    let reply = ResponseFrame::decode(&read_frame_line(&mut big, &mut buf)).unwrap();
+    let err = reply.result.unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest);
+    assert!(err.message.contains("1024"), "{}", err.message);
+    let mut tail = [0u8; 16];
+    assert_eq!(big.read(&mut tail).unwrap(), 0, "oversized sender kept its connection");
+
+    // the legacy path disconnects idle peers silently
+    let mut idle = TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    assert_eq!(idle.read(&mut tail).unwrap(), 0, "idle connection never dropped");
+
+    assert!(coord.metrics().get("server_oversize_disconnects_total") >= 1);
+    assert!(coord.metrics().get("server_idle_disconnects_total") >= 1);
 
     let mut client = TriadicClient::connect(addr).unwrap();
     client.shutdown().unwrap();
