@@ -1,0 +1,152 @@
+//! Sampled vs exact incremental census maintenance.
+//!
+//! The sampled census exists so a firehose of edge mutations can be
+//! absorbed at a fraction of the exact per-op cost. This bench pins
+//! that down on a 100k-node power-law graph: a 64-op mixed
+//! insert/delete batch applied through `SampledCensus` at p = 0.05 and
+//! p = 0.2 is compared against the same batch through the exact
+//! `StreamingCensus`, and each rate's estimate is scored against the
+//! exact census of the seed graph (sum of absolute per-class errors
+//! over the non-null mass). Acceptance target: p = 0.05 maintenance
+//! >= 3x faster than exact.
+//!
+//! Writes `BENCH_sampled.json` (schema_version 1) for the CI bench
+//! trajectory and exits non-zero if the target is missed.
+
+use std::sync::Arc;
+
+use triadic::bench::Bench;
+use triadic::census::{merged, SampledCensus, StreamingCensus, TriadType, DEFAULT_SAMPLE_SEED};
+use triadic::graph::generators::power_law;
+use triadic::graph::EdgeOp;
+use triadic::rng::Rng;
+use triadic::sched::Executor;
+
+const NODES: usize = 100_000;
+const BATCH: usize = 64;
+
+/// Sum of absolute per-class estimate errors over the non-null mass.
+fn relative_error(sc: &SampledCensus, truth: &triadic::Census) -> f64 {
+    let est = sc.estimate();
+    let (mut err, mut mass) = (0.0f64, 0.0f64);
+    for t in TriadType::ALL {
+        if t == TriadType::T003 {
+            continue;
+        }
+        err += (est.class(t).estimate - truth[t] as f64).abs();
+        mass += truth[t] as f64;
+    }
+    err / mass.max(1.0)
+}
+
+fn main() {
+    let iters: usize = std::env::var("BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30);
+    let mut b = Bench::new(iters);
+    let threads = 4;
+    let exec = Executor::with_workers(threads);
+
+    eprintln!("# generating {NODES}-node power-law graph...");
+    let g = power_law(NODES, 2.2, 8.0, 7);
+    let arcs: Vec<(u32, u32)> = g.arcs().collect();
+    println!("# graph: n={} arcs={}", g.node_count(), g.arc_count());
+
+    // the same pre-generated mixed batches drive every session: 70%
+    // inserts of random pairs, 30% deletes of existing arcs
+    let mut rng = Rng::new(99);
+    let total_batches = 3 * (4 * iters + 8);
+    let batches: Vec<Vec<EdgeOp>> = (0..total_batches)
+        .map(|_| {
+            (0..BATCH)
+                .map(|_| {
+                    if rng.chance(0.3) {
+                        let (u, v) = arcs[rng.below(arcs.len() as u64) as usize];
+                        EdgeOp::Delete(u, v)
+                    } else {
+                        EdgeOp::Insert(rng.node(NODES as u32), rng.node(NODES as u32))
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let mut next = 0usize;
+
+    let t_truth = std::time::Instant::now();
+    let truth = merged::census(&g);
+    println!("# exact census of the seed graph: {:.3}s", t_truth.elapsed().as_secs_f64());
+
+    let t_seed = std::time::Instant::now();
+    let mut exact = StreamingCensus::new(Arc::new(g.clone()));
+    let exact_seed_seconds = t_seed.elapsed().as_secs_f64();
+    let exact_batch = b
+        .run(&format!("exact_delta_batch{BATCH}"), || {
+            let report = exact.apply_batch(&batches[next % batches.len()], &exec, threads);
+            next += 1;
+            report
+        })
+        .mean_s;
+
+    let mut rows = Vec::new();
+    for p in [0.05f64, 0.2] {
+        let t_seed = std::time::Instant::now();
+        let mut sc = SampledCensus::new(Arc::new(g.clone()), p, DEFAULT_SAMPLE_SEED);
+        let seed_seconds = t_seed.elapsed().as_secs_f64();
+        let rel_error = relative_error(&sc, &truth);
+        let batch_seconds = b
+            .run(&format!("sampled_p{p}_delta_batch{BATCH}"), || {
+                let report = sc.apply_batch(&batches[next % batches.len()], &exec, threads);
+                next += 1;
+                report
+            })
+            .mean_s;
+        let speedup = exact_batch / batch_seconds.max(1e-12);
+        println!(
+            "# p={p}: seed {seed_seconds:.3}s (exact {exact_seed_seconds:.3}s), batch \
+             {:.1} us vs exact {:.1} us -> {speedup:.1}x, rel_error {rel_error:.4}",
+            batch_seconds * 1e6,
+            exact_batch * 1e6
+        );
+        rows.push((p, seed_seconds, batch_seconds, speedup, rel_error));
+    }
+
+    // acceptance: the aggressive rate must buy at least 3x on the
+    // maintenance path
+    let pass = rows[0].3 >= 3.0;
+    let row_json: Vec<String> = rows
+        .iter()
+        .map(|(p, seed, batch, speedup, rel)| {
+            format!(
+                concat!(
+                    "{{\"p\":{},\"seed_seconds\":{:.6},\"delta_batch_seconds\":{:.9},",
+                    "\"speedup_vs_exact\":{:.2},\"relative_error\":{:.6}}}"
+                ),
+                p, seed, batch, speedup, rel
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\"schema_version\":1,\"bench\":\"sampled_census\",\"nodes\":{},\"arcs\":{},",
+            "\"batch\":{},\"exact_seed_seconds\":{:.6},\"exact_delta_batch_seconds\":{:.9},",
+            "\"rates\":[{}],\"pass\":{}}}\n"
+        ),
+        g.node_count(),
+        g.arc_count(),
+        BATCH,
+        exact_seed_seconds,
+        exact_batch,
+        row_json.join(","),
+        pass,
+    );
+    std::fs::write("BENCH_sampled.json", &json).expect("writing BENCH_sampled.json");
+    println!("# wrote BENCH_sampled.json");
+    if !pass {
+        eprintln!(
+            "FAIL: p=0.05 maintenance only {:.1}x faster than exact (need 3x)",
+            rows[0].3
+        );
+        std::process::exit(1);
+    }
+}

@@ -36,7 +36,12 @@
 //! maintains a live census over a
 //! [`DeltaOverlay`](crate::graph::overlay::DeltaOverlay) by
 //! reclassifying only the O(deg(u) + deg(v)) triads touched by each
-//! edge mutation — no full recompute on the serving path.
+//! edge mutation — no full recompute on the serving path. When even
+//! that is too much, [`sampled::SampledCensus`] trades exactness for
+//! throughput: exact maintenance restricted to a deterministically
+//! hash-sampled fraction `p` of the dyads, unbiased per class with
+//! variance-derived confidence intervals (the `sampled{p}` fidelity
+//! of the wire protocol and the `--sample-p` CLI flag).
 
 pub mod batagelj_mrvar;
 pub mod engine;
@@ -46,6 +51,7 @@ pub mod merged;
 pub mod moody;
 pub mod naive;
 pub mod parallel;
+pub mod sampled;
 pub mod stream;
 pub mod types;
 
@@ -58,6 +64,10 @@ pub use isotricode::{classify_tricode, tricode_of, TRICODE_TABLE};
 pub use parallel::{
     census_parallel, census_parallel_cancellable, census_parallel_on, census_parallel_range,
     census_parallel_scoped, Accumulation, ParallelConfig, ParallelRun,
+};
+pub use sampled::{
+    estimate_sampled, keep_dyad, sample_base, ClassEstimate, SampledCensus, SampledEstimate,
+    DEFAULT_CONFIDENCE_Z, DEFAULT_SAMPLE_SEED,
 };
 pub use stream::{BatchReport, StreamStats, StreamingCensus};
 pub use types::{Census, TriadType};

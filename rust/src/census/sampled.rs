@@ -1,0 +1,607 @@
+//! Approximate triad census over a p-sampled edge overlay.
+//!
+//! Exact streaming maintenance pays O(deg(u) + deg(v)) per mutation;
+//! on a firehose that is still too much. Following the coordinated
+//! edge-sampling line of Tangwongsan, Pavan & Tirthapura (arXiv
+//! 1308.2166), [`SampledCensus`] keeps the full 16-class table only
+//! over the *sampled subgraph*: an unordered dyad `{u, v}` is in the
+//! sample iff a deterministic hash of `(seed, u, v)` falls below `p`,
+//! so an insert and a later delete of the same dyad always agree, the
+//! decision is free of coordination state, and replaying the same
+//! stream under the same seed is bit-reproducible.
+//!
+//! Because sampling can only *null* dyads — never invent arcs — a
+//! triad observed with `k` connected dyads arose from a true triad of
+//! some class with `≥ k` connected dyads. That makes the expected
+//! observed counts an upper-triangular linear system over the true
+//! counts, inverted exactly by [`estimate_sampled`]: closed-triad
+//! classes (three connected dyads) unbias by `1/p³` with no
+//! correction, dyadic-pair classes by `1/p²` minus the expected
+//! spill-down from degraded closed triads, single-dyad classes by
+//! `1/p` minus both spill terms, and the null class closes against
+//! the invariant `C(n, 3)` total. At `p = 1` every factor collapses
+//! to 1 and the table is byte-identical to the exact census.
+//!
+//! Interval semantics: each class carries a variance-derived
+//! `estimate ± z·std_err` interval. The variance model is per-triad
+//! Bernoulli sampling inflated by the mean number of observed triads
+//! per kept dyad — triads sharing a sampled dyad rise and fall
+//! together, so the plain binomial term is a floor, not the truth —
+//! plus the propagated variance of the spill-down corrections. The
+//! claimed coverage is enforced empirically by the seeded
+//! differential harness in `rust/tests/sampled_diff.rs`.
+
+use std::sync::{Arc, OnceLock};
+
+use super::isotricode::{tricode_from_dyads, TRICODE_TABLE};
+use super::merged;
+use super::stream::{BatchReport, StreamStats, StreamingCensus};
+use super::types::{Census, TriadType};
+use crate::graph::overlay::{ApplyOutcome, DeltaOverlay, EdgeOp};
+use crate::graph::{CsrGraph, GraphBuilder};
+use crate::rng::splitmix64;
+use crate::sched::Executor;
+
+/// Default dyad-hash seed for sessions that do not pick their own —
+/// a nod to arXiv 1308.2166.
+pub const DEFAULT_SAMPLE_SEED: u64 = 0x1308_2166;
+
+/// Default interval half-width in standard errors (two-sided 99%).
+pub const DEFAULT_CONFIDENCE_Z: f64 = 2.576;
+
+/// Deterministic dyad-sampling decision: keep the unordered dyad
+/// `{u, v}` iff `splitmix64(seed, min, max)` lands below `p`. The
+/// same `(seed, p)` always answers the same for a dyad, in either
+/// endpoint order, so inserts and deletes agree; `p ≥ 1` keeps all.
+#[inline]
+pub fn keep_dyad(seed: u64, u: u32, v: u32, p: f64) -> bool {
+    if p >= 1.0 {
+        return true;
+    }
+    let (a, b) = if u <= v { (u, v) } else { (v, u) };
+    let mut x = seed ^ (((a as u64) << 32) | (b as u64));
+    let h = splitmix64(&mut x);
+    ((h >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < p
+}
+
+/// Filter `g` down to the arcs whose dyad survives [`keep_dyad`] under
+/// `(seed, p)` — the sampled base a [`SampledCensus`] session layers
+/// its overlay on.
+pub fn sample_base(g: &CsrGraph, p: f64, seed: u64) -> CsrGraph {
+    let mut b = GraphBuilder::new(g.node_count());
+    for (u, v) in g.arcs() {
+        if keep_dyad(seed, u, v, p) {
+            b.arc(u, v);
+        }
+    }
+    b.build()
+}
+
+/// One class of a [`SampledEstimate`]: the raw sampled-subgraph count
+/// beside the unbiased point estimate and its confidence interval.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassEstimate {
+    /// Count of this class in the sampled subgraph (no unbiasing).
+    pub observed: u64,
+    /// Unbiased point estimate of the true count (may be fractional;
+    /// slightly negative values are sampling noise around zero).
+    pub estimate: f64,
+    /// Standard error of the estimate under the variance model.
+    pub std_err: f64,
+    /// `max(0, estimate - z·std_err)`.
+    pub lo: f64,
+    /// `max(lo, estimate + z·std_err)`.
+    pub hi: f64,
+}
+
+/// The 16 per-class estimates of one sampled census, plus the sampling
+/// parameters they were derived under.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampledEstimate {
+    /// Dyad sampling rate the estimates unbias.
+    pub p: f64,
+    /// Interval half-width in standard errors.
+    pub z: f64,
+    /// Node count of the full graph (fixes the `C(n, 3)` closure).
+    pub nodes: usize,
+    /// Estimates in census-index order.
+    pub classes: [ClassEstimate; 16],
+}
+
+impl SampledEstimate {
+    /// The estimate for one class.
+    #[inline]
+    pub fn class(&self, t: TriadType) -> &ClassEstimate {
+        &self.classes[t.index() - 1]
+    }
+
+    /// Sum of the point estimates — identically `C(n, 3)` because the
+    /// null class is closed against the invariant total.
+    pub fn total(&self) -> f64 {
+        self.classes.iter().map(|c| c.estimate).sum()
+    }
+
+    /// Round the point estimates to an integer [`Census`], re-closing
+    /// the null class so the total stays exactly `C(n, 3)`. At
+    /// `p = 1.0` this is byte-identical to the exact census.
+    pub fn census(&self) -> Census {
+        let mut c = Census::zero();
+        for t in TriadType::ALL {
+            if t != TriadType::T003 {
+                c.add_count(t, self.class(t).estimate.round().max(0.0) as u64);
+            }
+        }
+        let total = Census::expected_total(self.nodes);
+        let null = total.saturating_sub(c.nonnull_total());
+        let mut counts = *c.counts();
+        counts[0] = null.min(u64::MAX as u128) as u64;
+        Census::from_counts(counts)
+    }
+
+    /// Single-realization gate for the CLI `--oracle-interval` check:
+    /// `exact` within `estimate ± band·std_err ± slack`. One sample is
+    /// not an ensemble — statistical coverage of the nominal `z`
+    /// interval is asserted over many seeds in `sampled_diff.rs`; the
+    /// CLI gate widens to `band` standard errors plus an absolute
+    /// `slack` so a deterministic smoke run is not a coin flip.
+    pub fn covers(&self, t: TriadType, exact: u64, band: f64, slack: f64) -> bool {
+        let c = self.class(t);
+        (exact as f64 - c.estimate).abs() <= band * c.std_err + slack
+    }
+}
+
+/// Degradation table: for each class `s`, `ways[s][d][t]` counts the
+/// subsets of `s`'s connected dyads whose removal (exactly `d` dyads)
+/// leaves a triad of class `t`. Derived at first use from the tricode
+/// machinery itself — one representative dyad triple per class — so it
+/// can never drift from the classifier.
+struct DegradeTable {
+    ways: [[[u8; 16]; 4]; 16],
+    /// Connected dyads per class (`M + A`).
+    k: [u8; 16],
+}
+
+fn degrade_table() -> &'static DegradeTable {
+    static TABLE: OnceLock<DegradeTable> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut rep: [Option<[u8; 3]>; 16] = [None; 16];
+        for uv in 0..4u8 {
+            for uw in 0..4u8 {
+                for vw in 0..4u8 {
+                    let t = TRICODE_TABLE[tricode_from_dyads(uv, uw, vw) as usize];
+                    rep[t.index() - 1].get_or_insert([uv, uw, vw]);
+                }
+            }
+        }
+        let mut ways = [[[0u8; 16]; 4]; 16];
+        let mut k = [0u8; 16];
+        for s in 0..16 {
+            let dyads = rep[s].expect("every class has a representative dyad triple");
+            let connected: Vec<usize> = (0..3).filter(|&i| dyads[i] != 0).collect();
+            k[s] = connected.len() as u8;
+            for mask in 0..(1u32 << connected.len()) {
+                let mut left = dyads;
+                let mut dropped = 0usize;
+                for (bit, &pos) in connected.iter().enumerate() {
+                    if mask & (1 << bit) == 0 {
+                        left[pos] = 0;
+                        dropped += 1;
+                    }
+                }
+                let t = TRICODE_TABLE[tricode_from_dyads(left[0], left[1], left[2]) as usize];
+                ways[s][dropped][t.index() - 1] += 1;
+            }
+        }
+        DegradeTable { ways, k }
+    })
+}
+
+/// Unbias the census of a p-sampled subgraph into per-class estimates
+/// of the true census. `observed` is the exact census of the sampled
+/// subgraph (any engine), `nodes` the full node count, `kept_dyads`
+/// the connected dyads surviving in the sample (the variance model's
+/// sharing denominator), `z` the interval half-width in standard
+/// errors.
+///
+/// Classes resolve in decreasing connected-dyad order: a class only
+/// ever degrades into classes with strictly fewer connected dyads, so
+/// the spill-down corrections always reference already-unbiased
+/// estimates, and the whole system inverts in one pass.
+pub fn estimate_sampled(
+    observed: &Census,
+    nodes: usize,
+    kept_dyads: u64,
+    p: f64,
+    z: f64,
+) -> SampledEstimate {
+    assert!(p > 0.0 && p <= 1.0, "sample rate out of range: {p}");
+    let tab = degrade_table();
+    let q = 1.0 - p;
+    let denom = kept_dyads.max(1) as f64;
+    let mut est = [0f64; 16];
+    let mut var = [0f64; 16];
+    let mut order: Vec<usize> = (1..16).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(tab.k[i]));
+    for &t in &order {
+        let pk = p.powi(tab.k[t] as i32);
+        let o = observed.counts()[t] as f64;
+        let mut e = o / pk;
+        // triads observed in one class share kept dyads and rise and
+        // fall together; widen the per-triad Bernoulli term by the
+        // mean observed triads per kept dyad (the +1 keeps an empty
+        // observation from claiming certainty)
+        let width = 1.0 + tab.k[t] as f64 * o / denom;
+        let mut v = (1.0 - pk) * (o + 1.0) * width / (pk * pk);
+        for &s in &order {
+            if tab.k[s] <= tab.k[t] {
+                continue;
+            }
+            let d = (tab.k[s] - tab.k[t]) as usize;
+            let w = tab.ways[s][d][t] as f64;
+            if w > 0.0 {
+                let coeff = w * q.powi(d as i32);
+                e -= coeff * est[s];
+                v += coeff * coeff * var[s];
+            }
+        }
+        est[t] = e;
+        var[t] = v;
+    }
+    est[0] = Census::expected_total(nodes) as f64 - est[1..].iter().sum::<f64>();
+    var[0] = var[1..].iter().sum();
+    let mut classes = [ClassEstimate::default(); 16];
+    for i in 0..16 {
+        let se = var[i].sqrt();
+        let lo = (est[i] - z * se).max(0.0);
+        classes[i] = ClassEstimate {
+            observed: observed.counts()[i],
+            estimate: est[i],
+            std_err: se,
+            lo,
+            hi: (est[i] + z * se).max(lo),
+        };
+    }
+    SampledEstimate {
+        p,
+        z,
+        nodes,
+        classes,
+    }
+}
+
+/// A live approximate census: exact streaming maintenance restricted
+/// to the p-sampled dyads, unbiased on demand by [`estimate_sampled`].
+///
+/// Ops whose dyad hashes out of the sample are counted (`skipped`) and
+/// dropped in O(1); sampled ops pay the usual O(deg) delta scan — but
+/// against the sampled overlay, whose degrees are themselves a `p`
+/// fraction of the full graph's. Invalid ops (self-loops, range) fall
+/// through to the overlay so rejection semantics match exact mode
+/// byte for byte, as does everything else at `p = 1.0`.
+pub struct SampledCensus {
+    inner: StreamingCensus,
+    p: f64,
+    seed: u64,
+    z: f64,
+    seen: u64,
+    skipped: u64,
+}
+
+impl SampledCensus {
+    /// Open a sampled session over `base`: filter it by [`keep_dyad`],
+    /// seed with a merged-engine recompute of the sampled subgraph.
+    pub fn new(base: Arc<CsrGraph>, p: f64, seed: u64) -> SampledCensus {
+        let sampled = if p >= 1.0 {
+            base
+        } else {
+            Arc::new(sample_base(&base, p, seed))
+        };
+        let census = merged::census(sampled.as_ref());
+        SampledCensus::with_initial(sampled, census, p, seed)
+    }
+
+    /// Open over a caller-prepared sampled base (already filtered by
+    /// [`keep_dyad`] under the same `(p, seed)`, or the full graph at
+    /// `p = 1.0`) with its caller-computed exact census — the
+    /// coordinator seeds large graphs on its configured engine.
+    pub fn with_initial(base: Arc<CsrGraph>, census: Census, p: f64, seed: u64) -> SampledCensus {
+        assert!(p > 0.0 && p <= 1.0, "sample rate out of range: {p}");
+        SampledCensus {
+            inner: StreamingCensus::with_initial(base, census),
+            p,
+            seed,
+            z: DEFAULT_CONFIDENCE_Z,
+            seen: 0,
+            skipped: 0,
+        }
+    }
+
+    /// Override the interval half-width (standard errors).
+    pub fn with_z(mut self, z: f64) -> SampledCensus {
+        self.z = z;
+        self
+    }
+
+    /// True when `op` is valid but its dyad is not in the sample.
+    fn samples_out(&self, op: EdgeOp) -> bool {
+        let (u, v) = op.endpoints();
+        let n = self.inner.overlay().node_count();
+        let valid = u != v && (u as usize) < n && (v as usize) < n;
+        valid && !keep_dyad(self.seed, u, v, self.p)
+    }
+
+    /// Apply one mutation. Sampled-out ops return
+    /// [`ApplyOutcome::NoChange`] in O(1).
+    pub fn apply(&mut self, op: EdgeOp) -> ApplyOutcome {
+        self.seen += 1;
+        if self.samples_out(op) {
+            self.skipped += 1;
+            return ApplyOutcome::NoChange;
+        }
+        self.inner.apply(op)
+    }
+
+    /// Apply a batch, parallelizing the surviving ops' delta scans as
+    /// in [`StreamingCensus::apply_batch`]. Sampled-out ops count as
+    /// `no_ops` in the report (they are no-ops of the sampled
+    /// overlay by construction).
+    pub fn apply_batch(&mut self, ops: &[EdgeOp], exec: &Executor, seats: usize) -> BatchReport {
+        self.seen += ops.len() as u64;
+        let mut kept = Vec::with_capacity(ops.len());
+        for &op in ops {
+            if !self.samples_out(op) {
+                kept.push(op);
+            }
+        }
+        let dropped = (ops.len() - kept.len()) as u64;
+        self.skipped += dropped;
+        let mut report = self.inner.apply_batch(&kept, exec, seats);
+        report.no_ops += dropped;
+        report
+    }
+
+    /// The unbiased per-class estimates with intervals.
+    pub fn estimate(&self) -> SampledEstimate {
+        estimate_sampled(
+            &self.inner.census(),
+            self.inner.overlay().node_count(),
+            self.inner.overlay().dyad_count(),
+            self.p,
+            self.z,
+        )
+    }
+
+    /// The rounded estimate as an integer census — byte-identical to
+    /// exact maintenance at `p = 1.0`.
+    pub fn census(&self) -> Census {
+        self.estimate().census()
+    }
+
+    /// The raw census of the sampled subgraph (no unbiasing).
+    pub fn sampled_census(&self) -> Census {
+        self.inner.census()
+    }
+
+    /// The overlay holding the sampled effective graph.
+    pub fn overlay(&self) -> &DeltaOverlay {
+        self.inner.overlay()
+    }
+
+    /// Counters of the inner exact maintenance over the sample.
+    pub fn stats(&self) -> StreamStats {
+        self.inner.stats()
+    }
+
+    /// Valid ops dropped because their dyad hashed out of the sample.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    /// Total ops offered to the session.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// The sampling rate.
+    pub fn sample_rate(&self) -> f64 {
+        self.p
+    }
+
+    /// The dyad-hash seed.
+    pub fn sample_seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Rebuild the sampled base from the effective sample and reset
+    /// the overlay; estimates are invariant under compaction.
+    pub fn compact(&mut self) {
+        self.inner.compact();
+    }
+
+    /// [`SampledCensus::compact`] with a parallel ingest sort.
+    pub fn compact_with(&mut self, threads: usize) {
+        self.inner.compact_with(threads);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_arcs;
+    use crate::graph::generators;
+
+    #[test]
+    fn degrade_table_matches_hand_counts() {
+        let tab = degrade_table();
+        for t in TriadType::ALL {
+            let (m, a, _) = t.man();
+            assert_eq!(tab.k[t.index() - 1], m + a, "{t}");
+            // dropping zero dyads is the identity
+            assert_eq!(tab.ways[t.index() - 1][0][t.index() - 1], 1, "{t}");
+        }
+        let s300 = TriadType::T300.index() - 1;
+        assert_eq!(tab.ways[s300][1][TriadType::T201.index() - 1], 3);
+        assert_eq!(tab.ways[s300][2][TriadType::T102.index() - 1], 3);
+        assert_eq!(tab.ways[s300][3][TriadType::T003.index() - 1], 1);
+        let s030t = TriadType::T030T.index() - 1;
+        for t in [TriadType::T021D, TriadType::T021U, TriadType::T021C] {
+            assert_eq!(tab.ways[s030t][1][t.index() - 1], 1, "030T minus one arc");
+        }
+        let s030c = TriadType::T030C.index() - 1;
+        assert_eq!(tab.ways[s030c][1][TriadType::T021C.index() - 1], 3);
+    }
+
+    #[test]
+    fn keep_dyad_is_symmetric_and_seeded() {
+        let mut kept = 0u32;
+        for u in 0..200u32 {
+            for v in (u + 1)..200u32 {
+                let k = keep_dyad(7, u, v, 0.3);
+                assert_eq!(k, keep_dyad(7, v, u, 0.3), "order-independent");
+                assert!(keep_dyad(7, u, v, 1.0), "p=1 keeps everything");
+                kept += k as u32;
+            }
+        }
+        let rate = kept as f64 / (200.0 * 199.0 / 2.0);
+        assert!((rate - 0.3).abs() < 0.03, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn p_one_is_byte_identical_to_exact() {
+        let exec = Executor::with_workers(2);
+        let base = generators::erdos_renyi(40, 120, 11);
+        let mut exact = StreamingCensus::new(Arc::new(base.clone()));
+        let mut sampled = SampledCensus::new(Arc::new(base), 1.0, 99);
+        let mut rng = crate::rng::Rng::new(5);
+        let ops: Vec<EdgeOp> = (0..300)
+            .map(|_| {
+                let (u, v) = (rng.node(40), rng.node(40));
+                if rng.chance(0.4) {
+                    EdgeOp::Delete(u, v)
+                } else {
+                    EdgeOp::Insert(u, v)
+                }
+            })
+            .collect();
+        for chunk in ops.chunks(50) {
+            let a = exact.apply_batch(chunk, &exec, 2);
+            let b = sampled.apply_batch(chunk, &exec, 2);
+            assert_eq!(a, b, "p=1 batch reports agree");
+            assert_eq!(exact.census(), sampled.census());
+            assert_eq!(exact.census(), sampled.sampled_census());
+        }
+        assert_eq!(sampled.skipped(), 0);
+        let est = sampled.estimate();
+        for t in TriadType::ALL {
+            let c = est.class(t);
+            assert_eq!(c.std_err, 0.0, "{t}: no sampling noise at p=1");
+            assert_eq!(c.lo, c.hi, "{t}");
+            assert_eq!(c.estimate, exact.census()[t] as f64, "{t}");
+        }
+    }
+
+    #[test]
+    fn estimates_close_the_triad_total() {
+        let g = generators::power_law(120, 2.2, 5.0, 3);
+        for &p in &[0.2, 0.5, 0.8] {
+            let sc = SampledCensus::new(Arc::new(g.clone()), p, 17);
+            let est = sc.estimate();
+            let want = Census::expected_total(120) as f64;
+            let drift = (est.total() - want).abs();
+            assert!(drift < 1e-6 * want, "p={p}: total {} vs {want}", est.total());
+            for t in TriadType::ALL {
+                let c = est.class(t);
+                assert!(c.lo <= c.hi, "{t}");
+                assert!(c.std_err >= 0.0, "{t}");
+            }
+        }
+    }
+
+    #[test]
+    fn dyadic_pair_classes_scale_by_inverse_p_squared_without_spill() {
+        // a bipartite digraph has no triad with three connected dyads,
+        // so the 1/p² unbiasing of the two-dyad classes has no
+        // spill-down correction and must equal the raw scaled count
+        let g = from_arcs(8, &[(0, 4), (4, 1), (1, 5), (5, 1), (2, 6), (6, 3), (3, 7), (7, 0)]);
+        let p = 0.6;
+        let sc = SampledCensus::new(Arc::new(g), p, 23);
+        let est = sc.estimate();
+        let obs = sc.sampled_census();
+        for t in [
+            TriadType::T021D,
+            TriadType::T021U,
+            TriadType::T021C,
+            TriadType::T111D,
+            TriadType::T111U,
+            TriadType::T201,
+        ] {
+            let want = obs[t] as f64 / (p * p);
+            let got = est.class(t).estimate;
+            assert!((got - want).abs() < 1e-9, "{t}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sampled_out_ops_are_constant_time_no_change() {
+        let mut sc = SampledCensus::new(Arc::new(CsrGraph::empty(50)), 0.3, 41);
+        let mut dropped = 0u64;
+        for u in 0..50u32 {
+            for v in 0..50u32 {
+                if u == v {
+                    continue;
+                }
+                match sc.apply(EdgeOp::Insert(u, v)) {
+                    ApplyOutcome::NoChange if !keep_dyad(41, u, v, 0.3) => dropped += 1,
+                    ApplyOutcome::Rejected(_) => panic!("valid op rejected"),
+                    _ => {}
+                }
+            }
+        }
+        assert_eq!(sc.skipped(), dropped);
+        assert!(dropped > 0, "p=0.3 drops some dyads");
+        // invalid ops still reject exactly as in exact mode
+        assert!(matches!(
+            sc.apply(EdgeOp::Insert(3, 3)),
+            ApplyOutcome::Rejected(_)
+        ));
+        assert!(matches!(
+            sc.apply(EdgeOp::Insert(0, 99)),
+            ApplyOutcome::Rejected(_)
+        ));
+        assert_eq!(sc.stats().rejected, 2);
+    }
+
+    #[test]
+    fn estimate_is_a_pure_function_of_the_final_state() {
+        // two different interleavings over disjoint dyads must land on
+        // bit-identical estimates under a fixed seed
+        let exec = Executor::with_workers(2);
+        let ops: Vec<EdgeOp> = (0..60u32)
+            .map(|k| EdgeOp::Insert(2 * k, 2 * k + 1))
+            .collect();
+        let mut fwd = SampledCensus::new(Arc::new(CsrGraph::empty(120)), 0.5, 77);
+        let mut rev = SampledCensus::new(Arc::new(CsrGraph::empty(120)), 0.5, 77);
+        fwd.apply_batch(&ops, &exec, 2);
+        let flipped: Vec<EdgeOp> = ops.iter().rev().copied().collect();
+        rev.apply_batch(&flipped, &exec, 2);
+        let (a, b) = (fwd.estimate(), rev.estimate());
+        for t in TriadType::ALL {
+            let (ca, cb) = (a.class(t), b.class(t));
+            assert_eq!(ca.estimate.to_bits(), cb.estimate.to_bits(), "{t}");
+            assert_eq!(ca.std_err.to_bits(), cb.std_err.to_bits(), "{t}");
+        }
+    }
+
+    #[test]
+    fn compaction_preserves_the_estimate() {
+        let base = generators::erdos_renyi(30, 80, 9);
+        let mut sc = SampledCensus::new(Arc::new(base), 0.7, 13);
+        for k in 0..40u32 {
+            sc.apply(EdgeOp::Insert((k * 7) % 30, (k * 11 + 1) % 30));
+        }
+        let before = sc.estimate();
+        sc.compact();
+        assert_eq!(before, sc.estimate());
+        assert_eq!(sc.stats().compactions, 1);
+    }
+}

@@ -249,8 +249,11 @@ impl TriadicClient {
 
     /// Open a streaming census session over the request's graph source
     /// (the request's `engine` picks the seed-census engine; `threads`,
-    /// `policy` and `classes` are ignored). The session lives server-side
-    /// until [`TriadicClient::stream_close`] and is shared across
+    /// `policy` and `classes` are ignored). A `sampled:P` `fidelity`
+    /// on the request opens the session over the p-filtered base —
+    /// snapshots then carry rounded estimates plus a `sampling`
+    /// interval report. The session lives server-side until
+    /// [`TriadicClient::stream_close`] and is shared across
     /// connections by its id.
     pub fn stream_open(&mut self, request: &CensusRequest) -> Result<StreamOpened, WireError> {
         let mut frame = RequestFrame::new(0, Verb::StreamOpen);

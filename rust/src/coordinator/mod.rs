@@ -66,7 +66,12 @@
 //!   `stream_compact` / `stream_close` maintain live incremental
 //!   censuses ([`crate::census::StreamingCensus`]) in a cross-connection
 //!   session table — edge mutations between requests cost
-//!   O(deg(u) + deg(v)) instead of a full recompute.
+//!   O(deg(u) + deg(v)) instead of a full recompute. A request-level
+//!   `fidelity` knob (`exact` | `sampled:P`) downgrades a session (or a
+//!   one-shot census) to maintenance over a deterministically p-sampled
+//!   dyad overlay ([`crate::census::SampledCensus`]), with unbiased
+//!   per-class estimates and confidence intervals ([`SampleReport`])
+//!   beside the rounded table.
 //! * **Metrics**: counters + gauges + latency histograms per backend,
 //!   job lifecycle counters, served by the `metrics` verb.
 
@@ -78,9 +83,9 @@ pub mod service;
 
 pub use client::{ClientTimeouts, TriadicClient};
 pub use protocol::{
-    CensusRequest, CensusResponse, ErrorCode, GraphSource, JobReport, JobStateKind, Provenance,
-    SchedStats, Shard, StreamApplyReport, StreamOpened, StreamSnapshot, WireError,
-    DEFAULT_PRIORITY, MAX_PRIORITY, PROTOCOL_VERSION,
+    CensusRequest, CensusResponse, ErrorCode, Fidelity, GraphSource, JobReport, JobStateKind,
+    Provenance, SampleReport, SchedStats, Shard, StreamApplyReport, StreamOpened, StreamSnapshot,
+    WireError, DEFAULT_PRIORITY, MAX_PRIORITY, PROTOCOL_VERSION,
 };
 pub use router::{Route, Router, RoutingPolicy};
 pub use server::CensusServer;

@@ -35,7 +35,7 @@
 
 use std::fmt;
 
-use crate::census::{Census, TriadType};
+use crate::census::{Census, SampledEstimate, TriadType};
 use crate::graph::{EdgeOp, VertexOrdering};
 use crate::sched::{Policy, ThreadPoolStats};
 
@@ -790,6 +790,12 @@ pub struct CensusRequest {
     /// sooner; FIFO within a level). `None` = the tenant's configured
     /// priority, or [`DEFAULT_PRIORITY`].
     pub priority: Option<u8>,
+    /// Census fidelity. `None` / `Exact` computes the exact table;
+    /// `Sampled{p}` estimates it from a deterministic dyad sample,
+    /// attaching per-class intervals to the response. Distributed
+    /// planning and shard sub-requests are exact-only — the planner
+    /// strips this field from the sub-jobs it ships.
+    pub fidelity: Option<Fidelity>,
 }
 
 /// Default submit-queue priority for requests (and tenants) that do
@@ -811,6 +817,7 @@ impl CensusRequest {
             shard: None,
             tenant: None,
             priority: None,
+            fidelity: None,
         }
     }
 
@@ -891,6 +898,17 @@ impl CensusRequest {
         self
     }
 
+    /// Set the census fidelity explicitly.
+    pub fn fidelity(mut self, fidelity: Fidelity) -> CensusRequest {
+        self.fidelity = Some(fidelity);
+        self
+    }
+
+    /// Request sampled fidelity at dyad rate `p` (`0 < p <= 1`).
+    pub fn sampled(self, p: f64) -> CensusRequest {
+        self.fidelity(Fidelity::Sampled { p })
+    }
+
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![("source".into(), self.source.to_json())];
         if let Some(e) = &self.engine {
@@ -919,6 +937,9 @@ impl CensusRequest {
         }
         if let Some(p) = self.priority {
             pairs.push(("priority".into(), Json::from(p as u64)));
+        }
+        if let Some(f) = self.fidelity {
+            pairs.push(("fidelity".into(), Json::from(f.wire_name())));
         }
         Json::Obj(pairs)
     }
@@ -977,6 +998,19 @@ impl CensusRequest {
             }
             None => None,
         };
+        // strict like ordering/policy: unknown or out-of-range values
+        // are structured errors naming the valid forms, not defaults
+        let fidelity = match v.get("fidelity") {
+            Some(f) => {
+                let s = f.as_str().ok_or_else(|| {
+                    bad(format!(
+                        "fidelity {f} invalid (valid: \"exact\" or \"sampled:P\" with 0 < P <= 1)"
+                    ))
+                })?;
+                Some(Fidelity::parse(s).map_err(bad)?)
+            }
+            None => None,
+        };
         Ok(CensusRequest {
             source,
             engine,
@@ -987,6 +1021,7 @@ impl CensusRequest {
             shard,
             tenant,
             priority,
+            fidelity,
         })
     }
 }
@@ -998,6 +1033,64 @@ pub fn policy_to_wire(p: &Policy) -> String {
         Policy::Static { chunk } => format!("static:{chunk}"),
         Policy::Dynamic { chunk } => format!("dynamic:{chunk}"),
         Policy::Guided { min_chunk } => format!("guided:{min_chunk}"),
+    }
+}
+
+/// Requested census fidelity: the exact table, or unbiased estimation
+/// over a p-sampled dyad overlay
+/// ([`SampledCensus`](crate::census::SampledCensus)) with per-class
+/// confidence intervals riding beside the counts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fidelity {
+    /// The exact census (the default when the field is absent).
+    Exact,
+    /// Estimates unbiased from a deterministic dyad sample of rate `p`.
+    Sampled {
+        /// Dyad sampling rate, `0 < p <= 1`; `1.0` is byte-identical
+        /// to exact.
+        p: f64,
+    },
+}
+
+impl Fidelity {
+    /// Wire / CLI form: `"exact"` or `"sampled:P"`.
+    pub fn wire_name(self) -> String {
+        match self {
+            Fidelity::Exact => "exact".to_string(),
+            Fidelity::Sampled { p } => format!("sampled:{p}"),
+        }
+    }
+
+    /// The sampling rate, when sampled.
+    pub fn sample_p(self) -> Option<f64> {
+        match self {
+            Fidelity::Exact => None,
+            Fidelity::Sampled { p } => Some(p),
+        }
+    }
+
+    /// Parse the wire / CLI form. Strict: anything but `"exact"` or
+    /// `"sampled:P"` with `0 < P <= 1` errors, naming the valid forms.
+    pub fn parse(s: &str) -> Result<Fidelity, String> {
+        if s == "exact" {
+            return Ok(Fidelity::Exact);
+        }
+        if let Some(num) = s.strip_prefix("sampled:") {
+            if let Ok(p) = num.parse::<f64>() {
+                if p > 0.0 && p <= 1.0 {
+                    return Ok(Fidelity::Sampled { p });
+                }
+            }
+        }
+        Err(format!(
+            "fidelity {s:?} invalid (valid: \"exact\" or \"sampled:P\" with 0 < P <= 1)"
+        ))
+    }
+}
+
+impl fmt::Display for Fidelity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.wire_name())
     }
 }
 
@@ -1017,6 +1110,9 @@ pub struct Provenance {
     /// Vertex ordering the sparse path ran under (`natural` or
     /// `degree`; dense routes are always `natural`).
     pub ordering: String,
+    /// Fidelity actually applied ([`Fidelity::wire_name`]: `exact` or
+    /// `sampled:P`). Old peers never send it; decode defaults `exact`.
+    pub fidelity: String,
     pub nodes: u64,
     pub arcs: u64,
 }
@@ -1112,6 +1208,9 @@ pub struct CensusResponse {
     pub provenance: Provenance,
     /// `None` for dense routes (no chunk scheduler ran).
     pub stats: Option<SchedStats>,
+    /// Per-class interval report; present iff the applied fidelity was
+    /// sampled.
+    pub sampling: Option<SampleReport>,
     /// End-to-end seconds (load + route + census).
     pub seconds: f64,
 }
@@ -1154,12 +1253,19 @@ impl CensusResponse {
                     "ordering".into(),
                     Json::from(self.provenance.ordering.clone()),
                 ),
+                (
+                    "fidelity".into(),
+                    Json::from(self.provenance.fidelity.clone()),
+                ),
                 ("nodes".into(), Json::from(self.provenance.nodes)),
                 ("arcs".into(), Json::from(self.provenance.arcs)),
             ]),
         ));
         if let Some(stats) = &self.stats {
             pairs.push(("stats".into(), stats.to_json()));
+        }
+        if let Some(sampling) = &self.sampling {
+            pairs.push(("sampling".into(), sampling.to_json()));
         }
         pairs.push(("seconds".into(), Json::Num(self.seconds)));
         Json::Obj(pairs)
@@ -1218,10 +1324,18 @@ impl CensusResponse {
                     s if s.is_empty() => VertexOrdering::Natural.name().to_string(),
                     s => s,
                 },
+                fidelity: match getstr(prov, "fidelity") {
+                    s if s.is_empty() => Fidelity::Exact.wire_name(),
+                    s => s,
+                },
                 nodes: prov.get("nodes").and_then(Json::as_u64).unwrap_or(0),
                 arcs: prov.get("arcs").and_then(Json::as_u64).unwrap_or(0),
             },
             stats: v.get("stats").map(SchedStats::from_json),
+            sampling: match v.get("sampling") {
+                Some(s) => Some(SampleReport::from_json(s)?),
+                None => None,
+            },
             seconds: v.get("seconds").and_then(Json::as_f64).unwrap_or(0.0),
         })
     }
@@ -1399,6 +1513,100 @@ fn census_from_json(v: &Json) -> Result<Census, WireError> {
     Ok(census)
 }
 
+/// Per-class interval report attached to sampled-fidelity responses.
+///
+/// One row per Holland–Leinhardt class: the unbiased point estimate and
+/// the `[lo, hi]` confidence interval at the server's configured `z`.
+/// Counts in the sibling census table are these estimates rounded to
+/// integers; the report carries the unrounded values so clients can
+/// reason about uncertainty without re-deriving the variance model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleReport {
+    /// Dyad keep probability actually applied.
+    pub p: f64,
+    /// Normal quantile the intervals were derived at.
+    pub z: f64,
+    /// Unbiased per-class point estimates, [`TriadType::ALL`] order.
+    pub estimate: [f64; 16],
+    /// Interval lower bounds, same order.
+    pub lo: [f64; 16],
+    /// Interval upper bounds, same order.
+    pub hi: [f64; 16],
+}
+
+impl SampleReport {
+    pub fn from_estimate(est: &SampledEstimate) -> SampleReport {
+        let mut report = SampleReport {
+            p: est.p,
+            z: est.z,
+            estimate: [0.0; 16],
+            lo: [0.0; 16],
+            hi: [0.0; 16],
+        };
+        for (i, &t) in TriadType::ALL.iter().enumerate() {
+            let c = est.class(t);
+            report.estimate[i] = c.estimate;
+            report.lo[i] = c.lo;
+            report.hi[i] = c.hi;
+        }
+        report
+    }
+
+    pub fn to_json(&self) -> Json {
+        let classes = TriadType::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                let row = vec![
+                    Json::Num(self.estimate[i]),
+                    Json::Num(self.lo[i]),
+                    Json::Num(self.hi[i]),
+                ];
+                (t.label().to_string(), Json::Arr(row))
+            })
+            .collect();
+        Json::Obj(vec![
+            ("p".into(), Json::Num(self.p)),
+            ("z".into(), Json::Num(self.z)),
+            ("classes".into(), Json::Obj(classes)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<SampleReport, WireError> {
+        let bad = |m: String| WireError::new(ErrorCode::BadFrame, m);
+        let p = v
+            .get("p")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad("sampling report carries no p".into()))?;
+        let z = v.get("z").and_then(Json::as_f64).unwrap_or(0.0);
+        let mut report = SampleReport {
+            p,
+            z,
+            estimate: [0.0; 16],
+            lo: [0.0; 16],
+            hi: [0.0; 16],
+        };
+        let classes = v
+            .get("classes")
+            .ok_or_else(|| bad("sampling report carries no classes".into()))?;
+        for (i, &t) in TriadType::ALL.iter().enumerate() {
+            let row = classes
+                .get(t.label())
+                .and_then(Json::as_arr)
+                .filter(|r| r.len() == 3)
+                .ok_or_else(|| bad(format!("sampling row for {} malformed", t.label())))?;
+            let nums: Vec<f64> = row.iter().filter_map(Json::as_f64).collect();
+            if nums.len() != 3 {
+                return Err(bad(format!("sampling row for {} non-numeric", t.label())));
+            }
+            report.estimate[i] = nums[0];
+            report.lo[i] = nums[1];
+            report.hi[i] = nums[2];
+        }
+        Ok(report)
+    }
+}
+
 /// `stream_open` result: the session id plus the opened graph's shape.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StreamOpened {
@@ -1407,6 +1615,9 @@ pub struct StreamOpened {
     pub arcs: u64,
     /// Engine that computed the seed census.
     pub engine: String,
+    /// Fidelity the session runs at (`exact` or `sampled:P`); old
+    /// peers never send it and decode defaults to `exact`.
+    pub fidelity: String,
 }
 
 impl StreamOpened {
@@ -1416,10 +1627,15 @@ impl StreamOpened {
             ("nodes".into(), Json::from(self.nodes)),
             ("arcs".into(), Json::from(self.arcs)),
             ("engine".into(), Json::from(self.engine.clone())),
+            ("fidelity".into(), Json::from(self.fidelity.clone())),
         ])
     }
 
     pub fn from_json(v: &Json) -> Result<StreamOpened, WireError> {
+        let fidelity = match v.get("fidelity").and_then(Json::as_str) {
+            Some(s) if !s.is_empty() => s.to_string(),
+            _ => Fidelity::Exact.wire_name(),
+        };
         Ok(StreamOpened {
             stream: require_u64(v, "stream")?,
             nodes: require_u64(v, "nodes")?,
@@ -1429,6 +1645,7 @@ impl StreamOpened {
                 .and_then(Json::as_str)
                 .unwrap_or_default()
                 .to_string(),
+            fidelity,
         })
     }
 }
@@ -1488,11 +1705,14 @@ pub struct StreamSnapshot {
     pub reclassified: u64,
     /// Lifetime compaction count.
     pub compactions: u64,
+    /// Interval report; present iff the session runs sampled fidelity
+    /// (the census table then holds the rounded estimates).
+    pub sampling: Option<SampleReport>,
 }
 
 impl StreamSnapshot {
     pub fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut pairs = vec![
             ("stream".into(), Json::from(self.stream)),
             ("counts".into(), census_to_json(&self.census)),
             ("nodes".into(), Json::from(self.nodes)),
@@ -1501,7 +1721,11 @@ impl StreamSnapshot {
             ("applied".into(), Json::from(self.applied)),
             ("reclassified".into(), Json::from(self.reclassified)),
             ("compactions".into(), Json::from(self.compactions)),
-        ])
+        ];
+        if let Some(sampling) = &self.sampling {
+            pairs.push(("sampling".into(), sampling.to_json()));
+        }
+        Json::Obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<StreamSnapshot, WireError> {
@@ -1517,6 +1741,10 @@ impl StreamSnapshot {
             applied: require_u64(v, "applied")?,
             reclassified: require_u64(v, "reclassified")?,
             compactions: require_u64(v, "compactions")?,
+            sampling: match v.get("sampling") {
+                Some(s) => Some(SampleReport::from_json(s)?),
+                None => None,
+            },
         })
     }
 }
@@ -1922,6 +2150,7 @@ mod tests {
                 engine: "parallel".to_string(),
                 route: "sparse".to_string(),
                 ordering: "degree".to_string(),
+                fidelity: "exact".to_string(),
                 nodes: 100,
                 arcs: 440,
             },
@@ -1937,6 +2166,7 @@ mod tests {
                 remote_steals: 1,
                 socket_imbalance: 1.5,
             }),
+            sampling: None,
             seconds: 0.005,
         };
         let back =
@@ -2112,6 +2342,7 @@ mod tests {
             nodes: 100,
             arcs: 440,
             engine: "merged".to_string(),
+            fidelity: "sampled:0.25".to_string(),
         };
         let back =
             StreamOpened::from_json(&Json::parse(&opened.to_json().to_string()).unwrap()).unwrap();
@@ -2142,6 +2373,7 @@ mod tests {
             applied: 10,
             reclassified: 77,
             compactions: 1,
+            sampling: None,
         };
         let back =
             StreamSnapshot::from_json(&Json::parse(&snapshot.to_json().to_string()).unwrap())
@@ -2150,6 +2382,87 @@ mod tests {
         // a snapshot with no counts is a broken frame
         let err = StreamSnapshot::from_json(&Json::parse(r#"{"stream":1}"#).unwrap()).unwrap_err();
         assert_eq!(err.code, ErrorCode::BadFrame);
+    }
+
+    #[test]
+    fn fidelity_parses_and_round_trips() {
+        assert_eq!(Fidelity::parse("exact").unwrap(), Fidelity::Exact);
+        assert_eq!(
+            Fidelity::parse("sampled:0.25").unwrap(),
+            Fidelity::Sampled { p: 0.25 }
+        );
+        assert_eq!(Fidelity::parse("sampled:1").unwrap(), Fidelity::Sampled { p: 1.0 });
+        for f in [Fidelity::Exact, Fidelity::Sampled { p: 0.1 }] {
+            assert_eq!(Fidelity::parse(&f.wire_name()).unwrap(), f);
+        }
+        for bad in ["", "sampled", "sampled:", "sampled:0", "sampled:1.5", "sampled:abc", "bogus"] {
+            let err = Fidelity::parse(bad).unwrap_err();
+            assert!(
+                err.contains("valid: \"exact\" or \"sampled:P\""),
+                "error for {bad:?} must name the valid forms: {err}"
+            );
+        }
+        assert_eq!(Fidelity::Sampled { p: 0.5 }.sample_p(), Some(0.5));
+        assert_eq!(Fidelity::Exact.sample_p(), None);
+    }
+
+    #[test]
+    fn fidelity_rides_the_request_wire() {
+        let req = CensusRequest::path("g.csr").sampled(0.2);
+        let line = req.to_json().to_string();
+        let back = CensusRequest::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.fidelity, Some(Fidelity::Sampled { p: 0.2 }));
+        // old peers omit the field entirely: decode keeps it None
+        let old = Json::parse(r#"{"source":{"kind":"path","path":"g.csr"}}"#).unwrap();
+        assert_eq!(CensusRequest::from_json(&old).unwrap().fidelity, None);
+        // malformed fidelity is a structured error naming the valid forms
+        for bad in [
+            r#"{"source":{"kind":"path","path":"g"},"fidelity":"sampled:2"}"#,
+            r#"{"source":{"kind":"path","path":"g"},"fidelity":"sampled:0"}"#,
+            r#"{"source":{"kind":"path","path":"g"},"fidelity":"fast"}"#,
+            r#"{"source":{"kind":"path","path":"g"},"fidelity":7}"#,
+        ] {
+            let err = CensusRequest::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(err.code, ErrorCode::BadRequest, "{bad}");
+            assert!(err.message.contains("valid: \"exact\" or \"sampled:P\""), "{err}");
+        }
+    }
+
+    #[test]
+    fn sampling_reports_round_trip() {
+        let mut report = SampleReport {
+            p: 0.2,
+            z: 2.576,
+            estimate: [0.0; 16],
+            lo: [0.0; 16],
+            hi: [0.0; 16],
+        };
+        for i in 0..16 {
+            report.estimate[i] = i as f64 * 1.5;
+            report.lo[i] = i as f64;
+            report.hi[i] = i as f64 * 2.0;
+        }
+        let back =
+            SampleReport::from_json(&Json::parse(&report.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, report);
+        // a report with no p is a broken frame
+        let err = SampleReport::from_json(&Json::parse(r#"{"z":2.0}"#).unwrap()).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadFrame);
+    }
+
+    #[test]
+    fn old_peer_payloads_default_to_exact_fidelity() {
+        let opened = StreamOpened::from_json(
+            &Json::parse(r#"{"stream":1,"nodes":5,"arcs":4,"engine":"merged"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(opened.fidelity, "exact");
+        let line = r#"{"job":1,"counts":{},"provenance":{"source":"s","engine":"merged",
+            "route":"sparse","nodes":5,"arcs":4},"seconds":0.1}"#
+            .replace('\n', "");
+        let back = CensusResponse::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.provenance.fidelity, "exact");
+        assert_eq!(back.sampling, None);
     }
 
     #[test]

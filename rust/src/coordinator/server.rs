@@ -46,17 +46,75 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::protocol::{
-    ErrorCode, Json, RequestFrame, ResponseFrame, StreamApplyReport, StreamOpened, StreamSnapshot,
-    Verb, WireError, PROTOCOL_VERSION,
+    ErrorCode, Fidelity, Json, RequestFrame, ResponseFrame, SampleReport, StreamApplyReport,
+    StreamOpened, StreamSnapshot, Verb, WireError, PROTOCOL_VERSION,
 };
 use super::service::{Coordinator, JobHandle};
-use crate::census::StreamingCensus;
+use crate::census::{
+    BatchReport, Census, SampledCensus, StreamStats, StreamingCensus, DEFAULT_SAMPLE_SEED,
+};
 use crate::error::{Context, Result};
+use crate::graph::{DeltaOverlay, EdgeOp};
 use crate::net::conn::{read_bounded_line, BoundedLine, ConnLimits};
+use crate::sched::Executor;
+
+/// A session's census maintainer: exact incremental maintenance, or
+/// sampled maintenance over the p-filtered base (the `fidelity` knob
+/// of `stream_open`).
+enum SessionCensus {
+    Exact(StreamingCensus),
+    Sampled(SampledCensus),
+}
+
+impl SessionCensus {
+    fn apply_batch(&mut self, ops: &[EdgeOp], exec: &Executor, seats: usize) -> BatchReport {
+        match self {
+            SessionCensus::Exact(c) => c.apply_batch(ops, exec, seats),
+            SessionCensus::Sampled(c) => c.apply_batch(ops, exec, seats),
+        }
+    }
+
+    /// The servable table: exact counts, or rounded unbiased estimates.
+    fn census(&self) -> Census {
+        match self {
+            SessionCensus::Exact(c) => c.census(),
+            SessionCensus::Sampled(c) => c.census(),
+        }
+    }
+
+    /// The interval report beside a sampled session's table.
+    fn sampling(&self) -> Option<SampleReport> {
+        match self {
+            SessionCensus::Exact(_) => None,
+            SessionCensus::Sampled(c) => Some(SampleReport::from_estimate(&c.estimate())),
+        }
+    }
+
+    fn overlay(&self) -> &DeltaOverlay {
+        match self {
+            SessionCensus::Exact(c) => c.overlay(),
+            SessionCensus::Sampled(c) => c.overlay(),
+        }
+    }
+
+    fn stats(&self) -> StreamStats {
+        match self {
+            SessionCensus::Exact(c) => c.stats(),
+            SessionCensus::Sampled(c) => c.stats(),
+        }
+    }
+
+    fn compact_with(&mut self, threads: usize) {
+        match self {
+            SessionCensus::Exact(c) => c.compact_with(threads),
+            SessionCensus::Sampled(c) => c.compact_with(threads),
+        }
+    }
+}
 
 /// One live streaming census session.
 struct StreamSession {
-    census: StreamingCensus,
+    census: SessionCensus,
 }
 
 /// The transport-independent serving state: the coordinator, the
@@ -432,17 +490,34 @@ pub(crate) fn execute(state: &ServiceState, frame: &RequestFrame) -> Result<Json
             })?;
             let coord = &state.coordinator;
             let base = coord.resolve_source(&request.source)?;
-            let (seed, engine) =
-                coord.seed_census(&base, request.engine.as_deref(), request.ordering)?;
+            // sampled fidelity: the returned session base is already
+            // the p-filtered graph, censused by the seed engine
+            let (seed, engine, session_base) = coord.seed_census(
+                &base,
+                request.engine.as_deref(),
+                request.ordering,
+                request.fidelity,
+            )?;
+            let fidelity = request.fidelity.unwrap_or(Fidelity::Exact);
             let opened = StreamOpened {
                 stream: state.stream_seq.fetch_add(1, Ordering::Relaxed) + 1,
-                nodes: base.node_count() as u64,
-                arcs: base.arc_count(),
+                nodes: session_base.node_count() as u64,
+                arcs: session_base.arc_count(),
                 engine,
+                fidelity: fidelity.wire_name(),
             };
-            let session = StreamSession {
-                census: StreamingCensus::with_initial(base, seed),
+            let census = match fidelity {
+                Fidelity::Sampled { p } => SessionCensus::Sampled(SampledCensus::with_initial(
+                    session_base,
+                    seed,
+                    p,
+                    DEFAULT_SAMPLE_SEED,
+                )),
+                Fidelity::Exact => {
+                    SessionCensus::Exact(StreamingCensus::with_initial(session_base, seed))
+                }
             };
+            let session = StreamSession { census };
             state
                 .streams
                 .lock()
@@ -487,6 +562,7 @@ pub(crate) fn execute(state: &ServiceState, frame: &RequestFrame) -> Result<Json
                 applied: stats.applied,
                 reclassified: stats.reclassified,
                 compactions: stats.compactions,
+                sampling: s.census.sampling(),
             }
             .to_json())
         }

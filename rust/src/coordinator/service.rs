@@ -21,13 +21,13 @@ use std::time::Instant;
 
 use super::client::{ClientTimeouts, TriadicClient};
 use super::protocol::{
-    CensusRequest, CensusResponse, ErrorCode, GraphSource, JobReport, JobStateKind, Provenance,
-    SchedStats, Shard, WireError, DEFAULT_PRIORITY, PROTOCOL_VERSION,
+    CensusRequest, CensusResponse, ErrorCode, Fidelity, GraphSource, JobReport, JobStateKind,
+    Provenance, SampleReport, SchedStats, Shard, WireError, DEFAULT_PRIORITY, PROTOCOL_VERSION,
 };
 use super::router::{Route, Router, RoutingPolicy};
 use crate::census::{
-    census_parallel_range, hybrid_registry, Census, CensusEngine, EngineRegistry, ParallelConfig,
-    ParallelRun,
+    census_parallel_range, estimate_sampled, hybrid_registry, sample_base, Census, CensusEngine,
+    EngineRegistry, ParallelConfig, ParallelRun, DEFAULT_CONFIDENCE_Z, DEFAULT_SAMPLE_SEED,
 };
 use crate::error::{Context, Error, Result};
 use crate::graph::relabel;
@@ -591,9 +591,18 @@ fn cancelled_error() -> WireError {
     WireError::new(ErrorCode::Cancelled, "job cancelled")
 }
 
-/// What [`Core::run_route`] hands back:
-/// `(census, route, sparse stats, engine name, applied ordering)`.
-type RouteOutcome = (Census, Route, Option<ThreadPoolStats>, String, VertexOrdering);
+/// What [`Core::run_route`] hands back. Under sampled fidelity,
+/// `census` holds the rounded unbiased estimates and `sampling` the
+/// unrounded intervals; under exact fidelity `sampling` is `None`.
+struct RouteOutcome {
+    census: Census,
+    route: Route,
+    stats: Option<ThreadPoolStats>,
+    engine: String,
+    ordering: VertexOrdering,
+    fidelity: Fidelity,
+    sampling: Option<SampleReport>,
+}
 
 /// Resolve and run one sparse engine over any [`GraphView`] — the
 /// natural path hands the CSR straight in, the degree-ordered path
@@ -663,35 +672,39 @@ impl Core {
         }
         if !self.workers.is_empty()
             && matches!(req.ordering, None | Some(VertexOrdering::Natural))
+            && matches!(req.fidelity, None | Some(Fidelity::Exact))
         {
             return self.serve_distributed(req, &g, cancel, job, t0);
         }
-        let (census, route, stats, engine, ordering) = self.run_route(
+        let out = self.run_route(
             &g,
             Some(&g),
             req.engine.as_deref(),
             req.threads,
             req.policy,
             req.ordering,
+            req.fidelity,
             cancel,
         )?;
         Ok(CensusResponse {
             protocol_version: PROTOCOL_VERSION,
             job,
-            census,
+            census: out.census,
             classes: req.classes.clone(),
             provenance: Provenance {
                 source: req.source.describe(),
-                engine,
-                route: match route {
+                engine: out.engine,
+                route: match out.route {
                     Route::Sparse => "sparse".to_string(),
                     Route::Dense { size } => format!("dense:{size}"),
                 },
-                ordering: ordering.name().to_string(),
+                ordering: out.ordering.name().to_string(),
+                fidelity: out.fidelity.wire_name(),
                 nodes: g.node_count() as u64,
                 arcs: g.arc_count(),
             },
-            stats: stats.map(|s| SchedStats::from_pool(&s)),
+            stats: out.stats.map(|s| SchedStats::from_pool(&s)),
+            sampling: out.sampling,
             seconds: t0.elapsed().as_secs_f64(),
         })
     }
@@ -788,8 +801,9 @@ impl Core {
     /// sparse path through it; otherwise the router may pick the dense
     /// backend. `ordering: degree` preprocesses the sparse path with
     /// the degree-descending relabel + direction split (the census is
-    /// invariant; dense routes ignore the knob). Returns
-    /// `(census, route, sparse stats, engine name, applied ordering)`.
+    /// invariant; dense routes ignore the knob). Sampled fidelity
+    /// detours through [`Core::run_sampled`].
+    #[allow(clippy::too_many_arguments)]
     fn run_route(
         &self,
         g: &CsrGraph,
@@ -798,8 +812,12 @@ impl Core {
         threads: Option<usize>,
         policy: Option<Policy>,
         ordering: Option<VertexOrdering>,
+        fidelity: Option<Fidelity>,
         cancel: &CancelToken,
     ) -> std::result::Result<RouteOutcome, WireError> {
+        if let Some(Fidelity::Sampled { p }) = fidelity {
+            return self.run_sampled(g, engine_override, threads, policy, ordering, p, cancel);
+        }
         if let Some(p) = &policy {
             p.validate()
                 .map_err(|e| WireError::new(ErrorCode::BadRequest, e))?;
@@ -824,7 +842,15 @@ impl Core {
                     WireError::new(ErrorCode::Internal, "dense service dropped the request")
                 })?
                 .map_err(|e| WireError::new(ErrorCode::Internal, e))?;
-            return Ok((census, route, None, "dense".to_string(), VertexOrdering::Natural));
+            return Ok(RouteOutcome {
+                census,
+                route,
+                stats: None,
+                engine: "dense".to_string(),
+                ordering: VertexOrdering::Natural,
+                fidelity: Fidelity::Exact,
+                sampling: None,
+            });
         }
         self.metrics.inc("census_sparse_total", 1);
         let name = engine_override.unwrap_or(&self.engine);
@@ -876,7 +902,64 @@ impl Core {
             .inc("census_steals_local_total", run.stats.local_steals);
         self.metrics
             .inc("census_steals_remote_total", run.stats.remote_steals);
-        Ok((run.census, route, Some(run.stats), engine_name, ordering))
+        Ok(RouteOutcome {
+            census: run.census,
+            route,
+            stats: Some(run.stats),
+            engine: engine_name,
+            ordering,
+            fidelity: Fidelity::Exact,
+            sampling: None,
+        })
+    }
+
+    /// The sampled-fidelity route: filter the base graph down to the
+    /// deterministically kept dyads, census the sampled graph exactly
+    /// with the sparse machinery (the dense backend only produces exact
+    /// tables, so the engine is always pinned), then invert the
+    /// estimator — the response census holds the rounded unbiased
+    /// estimates and `sampling` the unrounded intervals. The sampled
+    /// graph is ephemeral and never touches the split cache.
+    fn run_sampled(
+        &self,
+        g: &CsrGraph,
+        engine_override: Option<&str>,
+        threads: Option<usize>,
+        policy: Option<Policy>,
+        ordering: Option<VertexOrdering>,
+        p: f64,
+        cancel: &CancelToken,
+    ) -> std::result::Result<RouteOutcome, WireError> {
+        self.metrics.inc("census_sampled_total", 1);
+        self.metrics.histogram("sample_rate").observe(p);
+        let sampled = self.metrics.time("sample_filter", || {
+            sample_base(g, p, DEFAULT_SAMPLE_SEED)
+        });
+        if cancel.is_cancelled() {
+            return Err(cancelled_error());
+        }
+        let name = engine_override.unwrap_or(&self.engine);
+        let mut out = self.run_route(
+            &sampled,
+            None,
+            Some(name),
+            threads,
+            policy,
+            ordering,
+            None,
+            cancel,
+        )?;
+        let est = estimate_sampled(
+            &out.census,
+            g.node_count(),
+            sampled.dyad_count(),
+            p,
+            DEFAULT_CONFIDENCE_Z,
+        );
+        out.census = est.census();
+        out.fidelity = Fidelity::Sampled { p };
+        out.sampling = Some(SampleReport::from_estimate(&est));
+        Ok(out)
     }
 
     /// Serve the leaf of a distributed census: the *raw* partial tallies
@@ -902,6 +985,13 @@ impl Core {
             return Err(WireError::new(
                 ErrorCode::BadRequest,
                 format!("shard {shard} out of bounds (valid: 0 <= lo <= hi <= {n})"),
+            ));
+        }
+        if matches!(req.fidelity, Some(Fidelity::Sampled { .. })) {
+            return Err(WireError::new(
+                ErrorCode::BadRequest,
+                "shard sub-censuses are exact-only (sampled unbiasing is a \
+                 whole-graph operation); drop the fidelity field",
             ));
         }
         if let Some(p) = &req.policy {
@@ -930,10 +1020,12 @@ impl Core {
                 engine: "parallel".to_string(),
                 route: "sparse".to_string(),
                 ordering: VertexOrdering::Natural.name().to_string(),
+                fidelity: Fidelity::Exact.wire_name(),
                 nodes: n as u64,
                 arcs: g.arc_count(),
             },
             stats: Some(SchedStats::from_pool(&run.stats)),
+            sampling: None,
             seconds: t0.elapsed().as_secs_f64(),
         })
     }
@@ -966,10 +1058,12 @@ impl Core {
                 engine: format!("distributed:{}", shards.len()),
                 route: "sparse".to_string(),
                 ordering: VertexOrdering::Natural.name().to_string(),
+                fidelity: Fidelity::Exact.wire_name(),
                 nodes: n as u64,
                 arcs: g.arc_count(),
             },
             stats: None,
+            sampling: None,
             seconds: t0.elapsed().as_secs_f64(),
         })
     }
@@ -1059,8 +1153,8 @@ impl Core {
 /// keeps the parent's source verbatim (path sources make each worker
 /// mmap the file locally; generator/inline sources re-materialize
 /// deterministically) plus its `threads`/`policy` knobs; `engine`,
-/// `ordering`, `classes` and admission fields are planner-level
-/// concerns and are stripped. Connection and transport failures
+/// `ordering`, `classes`, `fidelity` and admission fields are
+/// planner-level concerns and are stripped. Connection and transport failures
 /// surface as `transport` errors, which [`Core::dispatch_shard`]
 /// treats as retryable. Connecting is bounded so one dead worker
 /// costs seconds, not a planner thread pinned forever; the read stays
@@ -1077,6 +1171,7 @@ fn dispatch_once(
     sub.classes = None;
     sub.tenant = None;
     sub.priority = None;
+    sub.fidelity = None;
     let timeouts = ClientTimeouts::default().connect(std::time::Duration::from_secs(5));
     let mut client = TriadicClient::connect_with_timeouts(addr, timeouts)?;
     Ok(client.census(&sub)?.census)
@@ -1274,14 +1369,29 @@ impl Coordinator {
     /// executor. `ordering: degree` runs the seed over the relabeled
     /// direction-split form — the census is relabeling-invariant, so
     /// the result seeds the *original* base exactly; the overlay keeps
-    /// operating in original ids. Returns the census and the engine
-    /// name that produced it.
+    /// operating in original ids. Sampled fidelity first filters the
+    /// base down to the deterministically kept dyads; the returned
+    /// graph is then the *sampled* base the session must maintain over
+    /// (exact fidelity hands `g` back unchanged). Returns the census,
+    /// the engine name that produced it, and the session base.
     pub fn seed_census(
         &self,
         g: &Arc<CsrGraph>,
         engine_override: Option<&str>,
         ordering: Option<VertexOrdering>,
-    ) -> std::result::Result<(Census, String), WireError> {
+        fidelity: Option<Fidelity>,
+    ) -> std::result::Result<(Census, String, Arc<CsrGraph>), WireError> {
+        let base = match fidelity {
+            Some(Fidelity::Sampled { p }) if p < 1.0 => {
+                self.core.metrics.inc("census_sampled_total", 1);
+                self.core.metrics.histogram("sample_rate").observe(p);
+                let sampled = self.core.metrics.time("sample_filter", || {
+                    sample_base(g, p, DEFAULT_SAMPLE_SEED)
+                });
+                Arc::new(sampled)
+            }
+            _ => g.clone(),
+        };
         let name = engine_override.unwrap_or(&self.core.engine);
         match ordering.unwrap_or_default() {
             VertexOrdering::Natural => {
@@ -1290,11 +1400,10 @@ impl Coordinator {
                     .engines
                     .get_or_err(name)
                     .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
-                let run = self
-                    .core
-                    .metrics
-                    .time("stream_seed_census", || engine.census(g, &self.core.executor));
-                Ok((run.census, engine.name().to_string()))
+                let run = self.core.metrics.time("stream_seed_census", || {
+                    engine.census(base.as_ref(), &self.core.executor)
+                });
+                Ok((run.census, engine.name().to_string(), base))
             }
             VertexOrdering::Degree => {
                 let engine = self
@@ -1302,11 +1411,11 @@ impl Coordinator {
                     .split_engines
                     .get_or_err(name)
                     .map_err(|e| WireError::new(ErrorCode::UnknownEngine, e))?;
-                let split = self.core.degree_split(g, Some(g));
+                let split = self.core.degree_split(&base, Some(&base));
                 let run = self.core.metrics.time("stream_seed_census", || {
                     engine.census(split.as_ref(), &self.core.executor)
                 });
-                Ok((run.census, engine.name().to_string()))
+                Ok((run.census, engine.name().to_string(), base))
             }
         }
     }
@@ -1388,16 +1497,16 @@ impl Coordinator {
         ordering: Option<VertexOrdering>,
     ) -> Result<CensusOutcome> {
         let t0 = Instant::now();
-        let (census, route, stats, _engine, applied) = self
+        let out = self
             .core
-            .run_route(g, None, None, None, None, ordering, &CancelToken::new())
+            .run_route(g, None, None, None, None, ordering, None, &CancelToken::new())
             .map_err(Error::msg)?;
         Ok(CensusOutcome {
-            census,
-            route,
+            census: out.census,
+            route: out.route,
             seconds: t0.elapsed().as_secs_f64(),
-            stats,
-            ordering: applied,
+            stats: out.stats,
+            ordering: out.ordering,
         })
     }
 
@@ -1920,21 +2029,29 @@ mod tests {
             })
             .unwrap();
         assert_eq!(g.node_count(), 200);
-        let (census, engine) = coord.seed_census(&g, Some("merged"), None).unwrap();
+        let (census, engine, base) = coord.seed_census(&g, Some("merged"), None, None).unwrap();
         assert_eq!(census, merged::census(g.as_ref()));
         assert_eq!(engine, "merged");
-        let (default_census, default_engine) = coord.seed_census(&g, None, None).unwrap();
+        assert!(Arc::ptr_eq(&base, &g), "exact fidelity keeps the base");
+        let (default_census, default_engine, _) = coord.seed_census(&g, None, None, None).unwrap();
         assert_eq!(default_census, census);
         assert_eq!(default_engine, "parallel");
         // degree-ordered seeding is census-invariant
-        let (ordered_census, _) = coord
-            .seed_census(&g, Some("merged"), Some(VertexOrdering::Degree))
+        let (ordered_census, _, _) = coord
+            .seed_census(&g, Some("merged"), Some(VertexOrdering::Degree), None)
             .unwrap();
         assert_eq!(ordered_census, census);
-        let err = coord.seed_census(&g, Some("quantum"), None).unwrap_err();
+        // sampled fidelity seeds over the filtered base
+        let fid = Some(Fidelity::Sampled { p: 0.5 });
+        let (sampled_census, _, sampled_base) =
+            coord.seed_census(&g, Some("merged"), None, fid).unwrap();
+        assert!(sampled_base.arc_count() < g.arc_count());
+        assert_eq!(sampled_census, merged::census(sampled_base.as_ref()));
+        assert_eq!(coord.metrics().get("census_sampled_total"), 1);
+        let err = coord.seed_census(&g, Some("quantum"), None, None).unwrap_err();
         assert_eq!(err.code, ErrorCode::UnknownEngine);
         let err = coord
-            .seed_census(&g, Some("quantum"), Some(VertexOrdering::Degree))
+            .seed_census(&g, Some("quantum"), Some(VertexOrdering::Degree), None)
             .unwrap_err();
         assert_eq!(err.code, ErrorCode::UnknownEngine);
         let err = coord

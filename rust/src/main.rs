@@ -43,8 +43,9 @@ use triadic::analysis::{builtin_patterns, census_series, MonitorConfig, TriadMon
 use triadic::analysis::{TrafficGenerator, TrafficScenario};
 use triadic::bail;
 use triadic::census::{
-    census_parallel, hybrid_registry, merged, Accumulation, EngineRegistry, ParallelConfig,
-    StreamingCensus, TriadType,
+    census_parallel, estimate_sampled, hybrid_registry, merged, sample_base, Accumulation,
+    EngineRegistry, ParallelConfig, SampledCensus, StreamingCensus, TriadType,
+    DEFAULT_CONFIDENCE_Z, DEFAULT_SAMPLE_SEED,
 };
 use triadic::config::{graph_spec_from, Args};
 use triadic::coordinator::protocol::Json;
@@ -55,7 +56,7 @@ use triadic::coordinator::{
 use triadic::error::{Context, Error, Result};
 use triadic::figures::{self, Scale};
 use triadic::graph::relabel::{self, Relabeling};
-use triadic::graph::{degree, io, CsrGraph, EdgeOp, HubSplit, VertexOrdering};
+use triadic::graph::{degree, io, CsrGraph, DeltaOverlay, EdgeOp, HubSplit, VertexOrdering};
 use triadic::net::{Gateway, GatewayConfig, TenantTable};
 use triadic::sched::{Executor, ExecutorConfig, Policy};
 use triadic::simulator::{
@@ -72,7 +73,7 @@ COMMANDS
             [--threads T] [--policy static|dynamic|guided[:chunk]]
             [--engine naive|bm|merged|parallel|moody] [--pool-threads W]
             [--order natural|degree] [--backend auto|sparse]
-            [--artifacts DIR] [--mmap]
+            [--artifacts DIR] [--mmap] [--sample-p P]
   generate  --graph ... --out FILE [--format txt|bin|v2]
   convert   --input FILE --out FILE [--threads T] [--verify]
   smoke     [--nodes N] [--threads T] [--seed S] [--engine E]
@@ -84,6 +85,7 @@ COMMANDS
   stream    --input FILE [--nodes N] [--base FILE] [--batch K]
             [--threads T] [--pool-threads W] [--order natural|degree]
             [--compact-every B] [--verify-every B] [--oracle] [--json FILE]
+            [--sample-p P] [--oracle-interval]
   serve     [--listen ADDR] [--stdin] [--artifacts DIR] [--threads T]
             [--trusted] [--engine E] [--pool-threads W] [--max-jobs K]
             [--job-workers J] [--max-request-nodes N]
@@ -101,6 +103,14 @@ COMMANDS
 `--order degree` renumbers vertices in descending degree order and
 direction-splits neighborhoods before the sparse census runs; the
 census itself is invariant (byte-identical tables), only timing moves.
+
+`--sample-p P` (census, stream) trades exactness for throughput: the
+census runs over a deterministic hash-sample of the dyads (keep
+probability P in (0, 1]), printing rounded unbiased per-class estimates
+plus `# interval LABEL est stderr lo hi` bounds; at P=1 the table is
+byte-identical to exact. `--oracle-interval` (stream) also replays the
+ops exactly and exits nonzero if any class's exact count falls outside
+its widened interval.
 ";
 
 fn main() {
@@ -182,6 +192,7 @@ fn cmd_census(args: &Args) -> Result<()> {
     let order = VertexOrdering::parse(&args.str_or("order", "natural")).map_err(Error::msg)?;
     let backend = args.str_or("backend", "auto");
     let artifacts = args.str_or("artifacts", "artifacts");
+    let sample_p = parse_sample_p(args)?;
     args.reject_unknown().map_err(Error::msg)?;
 
     let sparse = ParallelConfig {
@@ -189,6 +200,10 @@ fn cmd_census(args: &Args) -> Result<()> {
         policy,
         accumulation: Accumulation::Bank { slots: 64 },
     };
+
+    if let Some(p) = sample_p {
+        return census_sampled_cli(&name, &g, p, pool_threads, sparse, &engine_name);
+    }
 
     let t0 = std::time::Instant::now();
     let census = if backend == "sparse" {
@@ -257,6 +272,83 @@ fn cmd_census(args: &Args) -> Result<()> {
     );
     print!("{}", census.table());
     Ok(())
+}
+
+/// Parse and range-check `--sample-p` (the CLI spelling of the wire
+/// protocol's `fidelity: sampled:P` knob).
+fn parse_sample_p(args: &Args) -> Result<Option<f64>> {
+    match args.opt_str("sample-p") {
+        Some(s) => {
+            let p = s
+                .parse::<f64>()
+                .map_err(|e| Error::msg(format!("bad --sample-p {s:?}: {e}")))?;
+            if !(p > 0.0 && p <= 1.0) {
+                bail!("--sample-p {p} out of range (valid: 0 < P <= 1)");
+            }
+            Ok(Some(p))
+        }
+        None => Ok(None),
+    }
+}
+
+/// `repro census --sample-p P`: the approximate census path. Filters
+/// the graph down to the deterministically kept dyads, runs the
+/// selected sparse engine over the sample, and prints the rounded
+/// unbiased table (byte-identical to the exact table at `p = 1.0`)
+/// followed by one `# interval` comment per class.
+fn census_sampled_cli(
+    name: &str,
+    g: &CsrGraph,
+    p: f64,
+    pool_threads: usize,
+    sparse: ParallelConfig,
+    engine_name: &str,
+) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let sampled = sample_base(g, p, DEFAULT_SAMPLE_SEED);
+    let exec = Executor::new(ExecutorConfig {
+        workers: pool_threads,
+        max_concurrent_jobs: 0,
+    });
+    let registry = EngineRegistry::builtin(sparse);
+    let engine = registry.get_or_err(engine_name).map_err(Error::msg)?;
+    let run = engine.census(&sampled, &exec);
+    let est = estimate_sampled(
+        &run.census,
+        g.node_count(),
+        sampled.dyad_count(),
+        p,
+        DEFAULT_CONFIDENCE_Z,
+    );
+    println!(
+        "# graph={name} nodes={} arcs={} fidelity=sampled:{p} sampled_arcs={} \
+         engine={} elapsed={:.3}s",
+        g.node_count(),
+        g.arc_count(),
+        sampled.arc_count(),
+        engine.name(),
+        t0.elapsed().as_secs_f64()
+    );
+    print!("{}", est.census().table());
+    print_intervals(&est);
+    Ok(())
+}
+
+/// One `# interval LABEL estimate std_err lo hi` comment per class —
+/// the machine-readable tail shared by `census --sample-p` and
+/// `stream --sample-p` (scripts join it against an exact table).
+fn print_intervals(est: &triadic::census::SampledEstimate) {
+    for &t in TriadType::ALL.iter() {
+        let c = est.class(t);
+        println!(
+            "# interval {} {:.3} {:.3} {:.3} {:.3}",
+            t.label(),
+            c.estimate,
+            c.std_err,
+            c.lo,
+            c.hi
+        );
+    }
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -662,8 +754,13 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let verify_every = args.get_or("verify-every", 0usize).map_err(Error::msg)?;
     let order = VertexOrdering::parse(&args.str_or("order", "natural")).map_err(Error::msg)?;
     let oracle = args.flag("oracle");
+    let oracle_interval = args.flag("oracle-interval");
+    let sample_p = parse_sample_p(args)?;
     let json_path = args.opt_str("json");
     args.reject_unknown().map_err(Error::msg)?;
+    if oracle_interval && sample_p.is_none() {
+        bail!("--oracle-interval requires --sample-p (the exact path has --oracle)");
+    }
 
     // parse the whole stream up front (replay order = file order)
     let text = std::fs::read_to_string(&input)
@@ -728,6 +825,21 @@ fn cmd_stream(args: &Args) -> Result<()> {
         base.arc_count(),
         ops.len()
     );
+    if let Some(p) = sample_p {
+        return stream_sampled(
+            base,
+            ops,
+            p,
+            batch,
+            threads,
+            pool_threads,
+            compact_every,
+            verify_every,
+            oracle,
+            oracle_interval,
+            json_path,
+        );
+    }
 
     let exec = Executor::new(ExecutorConfig {
         workers: pool_threads,
@@ -818,6 +930,156 @@ fn cmd_stream(args: &Args) -> Result<()> {
         );
         std::fs::write(&path, json)?;
         eprintln!("stream: wrote machine-readable results to {path}");
+    }
+    Ok(())
+}
+
+/// Band widening for the single-run `--oracle-interval` gate: one
+/// deterministic replay is one realization, so the z-interval alone
+/// would fail a fair fraction of honest runs. See
+/// `SampledEstimate::covers` for the gate's semantics.
+const ORACLE_BAND: f64 = 4.0;
+const ORACLE_SLACK: f64 = 2.0;
+
+/// `repro stream --sample-p P`: replay the stream through the sampled
+/// incremental census. With `--oracle-interval`, an exact overlay is
+/// maintained alongside and every class's widened confidence interval
+/// must cover the exact end-state count, or the run exits nonzero.
+#[allow(clippy::too_many_arguments)]
+fn stream_sampled(
+    base: CsrGraph,
+    ops: Vec<EdgeOp>,
+    p: f64,
+    batch: usize,
+    threads: usize,
+    pool_threads: usize,
+    compact_every: usize,
+    verify_every: usize,
+    oracle: bool,
+    oracle_interval: bool,
+    json_path: Option<String>,
+) -> Result<()> {
+    let n = base.node_count();
+    let exec = Executor::new(ExecutorConfig {
+        workers: pool_threads,
+        max_concurrent_jobs: 0,
+    });
+    let base = Arc::new(base);
+    let t_seed = std::time::Instant::now();
+    let mut sc = SampledCensus::new(base.clone(), p, DEFAULT_SAMPLE_SEED);
+    let seed_seconds = t_seed.elapsed().as_secs_f64();
+    eprintln!(
+        "stream: fidelity=sampled:{p} kept_arcs={} of {}",
+        sc.overlay().arc_count(),
+        base.arc_count()
+    );
+    // the exact side of the interval oracle: a plain overlay replayed
+    // op-by-op, recomputed once at the end (no incremental maintenance)
+    let mut exact = oracle_interval.then(|| DeltaOverlay::new(base));
+
+    let verify = |sc: &SampledCensus, what: &str| -> Result<()> {
+        let want = merged::census(sc.overlay());
+        if sc.sampled_census() != want {
+            bail!("sampled incremental census diverged from the recompute ({what})");
+        }
+        Ok(())
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut batches = 0usize;
+    for chunk in ops.chunks(batch) {
+        sc.apply_batch(chunk, &exec, threads.max(1));
+        if let Some(overlay) = exact.as_mut() {
+            for op in chunk {
+                overlay.apply(*op);
+            }
+        }
+        batches += 1;
+        if compact_every > 0 && batches % compact_every == 0 {
+            sc.compact_with(threads.max(1));
+        }
+        if verify_every > 0 && batches % verify_every == 0 {
+            verify(&sc, &format!("after batch {batches}"))?;
+        }
+    }
+    let replay_seconds = t0.elapsed().as_secs_f64();
+
+    if oracle {
+        verify(&sc, "final")?;
+        eprintln!("stream oracle OK: sampled live census == sampled recompute");
+    }
+
+    let est = sc.estimate();
+    let s = sc.stats();
+    println!(
+        "# stream: fidelity=sampled:{p} ops={} applied={} sampled_out={} rejected={} \
+         batches={} compactions={}",
+        ops.len(),
+        s.applied,
+        sc.skipped(),
+        s.rejected,
+        s.batches,
+        s.compactions
+    );
+    println!(
+        "# stream timings: seed={seed_seconds:.3}s replay={replay_seconds:.3}s \
+         ({:.0} ops/s) final_arcs={}",
+        ops.len() as f64 / replay_seconds.max(1e-9),
+        sc.overlay().arc_count()
+    );
+    print!("{}", est.census().table());
+    print_intervals(&est);
+
+    let mut missed = Vec::new();
+    if let Some(overlay) = exact {
+        let want = merged::census(&overlay);
+        for &t in TriadType::ALL.iter() {
+            if !est.covers(t, want[t], ORACLE_BAND, ORACLE_SLACK) {
+                let c = est.class(t);
+                eprintln!(
+                    "interval miss {}: exact={} estimate={:.1} interval=[{:.1}, {:.1}]",
+                    t.label(),
+                    want[t],
+                    c.estimate,
+                    c.lo,
+                    c.hi
+                );
+                missed.push(t.label());
+            }
+        }
+        if missed.is_empty() {
+            eprintln!("interval oracle OK: every class interval covers the exact count");
+        }
+    }
+
+    if let Some(path) = json_path {
+        let json = format!(
+            concat!(
+                "{{\"schema_version\":1,\"bench\":\"stream_replay_sampled\",\"nodes\":{},",
+                "\"ops\":{},\"p\":{},\"applied\":{},\"sampled_out\":{},",
+                "\"seed_seconds\":{:.6},\"replay_seconds\":{:.6},\"ops_per_second\":{:.1},",
+                "\"interval_misses\":{},\"pass\":{}}}\n"
+            ),
+            n,
+            ops.len(),
+            p,
+            s.applied,
+            sc.skipped(),
+            seed_seconds,
+            replay_seconds,
+            ops.len() as f64 / replay_seconds.max(1e-9),
+            missed.len(),
+            missed.is_empty(),
+        );
+        std::fs::write(&path, json)?;
+        eprintln!("stream: wrote machine-readable results to {path}");
+    }
+    if !missed.is_empty() {
+        bail!(
+            "sampled interval oracle failed for {} class(es): {}",
+            missed.len(),
+            missed.join(",")
+        );
     }
     Ok(())
 }

@@ -252,6 +252,40 @@ fn hybrid_hub_kernel_handles_degenerate_hub_shapes() {
 }
 
 #[test]
+fn sampled_fidelity_at_p_one_reproduces_the_golden_censuses() {
+    // the approximate path at p = 1.0 must be byte-identical to the
+    // hand counts on every fixture: both the rounded estimate table of
+    // a grown SampledCensus session and the one-shot estimator over
+    // the full graph's exact census
+    use triadic::census::{estimate_sampled, SampledCensus, DEFAULT_CONFIDENCE_Z};
+
+    for name in FIXTURES {
+        let g = load_graph(name);
+        let want = load_census(name);
+        let mut sc = SampledCensus::new(Arc::new(CsrGraph::empty(g.node_count())), 1.0, 0);
+        for (u, v) in g.arcs() {
+            sc.apply(EdgeOp::Insert(u, v));
+        }
+        assert_eq!(sc.census(), want, "sampled p=1 build of {name}");
+        assert_eq!(sc.sampled_census(), want, "raw sampled table of {name}");
+        assert_eq!(sc.skipped(), 0, "{name}: p=1 samples nothing out");
+        let est = estimate_sampled(
+            &want,
+            g.node_count(),
+            g.dyad_count(),
+            1.0,
+            DEFAULT_CONFIDENCE_Z,
+        );
+        assert_eq!(est.census(), want, "one-shot estimator on {name}");
+        for t in TriadType::ALL {
+            let c = est.class(t);
+            assert_eq!(c.std_err, 0.0, "{name} {t}: no sampling noise at p=1");
+            assert_eq!(c.estimate, want[t] as f64, "{name} {t}: point estimate");
+        }
+    }
+}
+
+#[test]
 fn streaming_census_reproduces_the_golden_censuses() {
     // grow each fixture from an empty graph one arc at a time — the
     // incremental path must land on the same hand-counted census

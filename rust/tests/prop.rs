@@ -273,6 +273,86 @@ fn prop_generator_determinism_across_kinds() {
 }
 
 #[test]
+fn prop_sampled_estimates_close_the_triad_total() {
+    // the null-class closure pins the sum of point estimates to
+    // exactly C(n,3), and the rounded census re-closes to the same
+    // invariant, at every sampling rate
+    use std::sync::Arc;
+    use triadic::census::{SampledCensus, DEFAULT_SAMPLE_SEED};
+
+    for seed in 0..SWEEPS / 4 {
+        let n = 20 + (seed % 30) as u32;
+        let g = random_digraph(n, (n as usize) * 3, seed * 41 + 11);
+        for &p in &[0.3, 0.6, 0.9] {
+            let sc = SampledCensus::new(Arc::new(g.clone()), p, DEFAULT_SAMPLE_SEED + seed);
+            let est = sc.estimate();
+            let want = Census::expected_total(n as usize);
+            let drift = (est.total() - want as f64).abs();
+            assert!(
+                drift <= 1e-6 * want as f64,
+                "seed {seed} p={p}: estimate total {} vs C(n,3) {want}",
+                est.total()
+            );
+            assert_eq!(est.census().total(), want, "seed {seed} p={p}: rounded total");
+            for t in TriadType::ALL.iter().copied() {
+                let c = est.class(t);
+                assert!(c.lo <= c.hi, "seed {seed} p={p} {t}: interval ordered");
+                assert!(c.lo >= 0.0, "seed {seed} p={p} {t}: interval floor");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sampled_dyadic_unbiasing_matches_scaled_recount_without_triangles() {
+    // bipartite digraphs have no triad with three connected dyads, so
+    // the two-dyad classes carry no spill-down correction and must
+    // unbias to exactly obs/p² — where obs is a brute-force naive
+    // recount of the sampled subgraph, not the session's own counter
+    use std::sync::Arc;
+    use triadic::census::{SampledCensus, DEFAULT_SAMPLE_SEED};
+
+    let dyadic = [
+        TriadType::T021D,
+        TriadType::T021U,
+        TriadType::T021C,
+        TriadType::T111D,
+        TriadType::T111U,
+        TriadType::T201,
+    ];
+    let mut nonzero = 0usize;
+    for seed in 0..SWEEPS / 4 {
+        let n = 16 + (seed % 12) as u32 * 2;
+        let half = n / 2;
+        let mut rng = Rng::new(seed * 53 + 29);
+        let mut b = GraphBuilder::new(n as usize);
+        for _ in 0..(n as usize * 2) {
+            let (u, v) = (rng.node(half), half + rng.node(half));
+            if rng.chance(0.5) {
+                b.arc(u, v);
+            } else {
+                b.arc(v, u);
+            }
+        }
+        let p = 0.4 + 0.1 * (seed % 5) as f64;
+        let sc = SampledCensus::new(Arc::new(b.build()), p, DEFAULT_SAMPLE_SEED);
+        let obs = naive::census(sc.overlay());
+        assert_eq!(obs, sc.sampled_census(), "seed {seed}: recount disagrees");
+        let est = sc.estimate();
+        for &t in &dyadic {
+            let want = obs[t] as f64 / (p * p);
+            let got = est.class(t).estimate;
+            assert!(
+                (got - want).abs() < 1e-9 * want.max(1.0),
+                "seed {seed} p={p} {t}: {got} vs {want}"
+            );
+            nonzero += (obs[t] > 0) as usize;
+        }
+    }
+    assert!(nonzero > 0, "sweep never sampled a dyadic-pair triad");
+}
+
+#[test]
 fn prop_csr_round_trips_through_io() {
     for seed in 0..10 {
         let g = random_digraph(60, 300, seed * 31 + 9);

@@ -1,0 +1,210 @@
+//! Seeded differential harness for the sampled census.
+//!
+//! Drives randomized insert/delete batches over a grid of sampling
+//! rates × graph shapes, maintaining an exact oracle (a plain overlay
+//! plus a merged-engine recompute) beside every [`SampledCensus`]
+//! session, and asserts the three contracts the estimator ships under:
+//!
+//! 1. the per-class confidence interval covers the exact count at the
+//!    configured confidence, measured over ≥ 200 (trial, class)
+//!    checkpoints with an explicit coverage tolerance;
+//! 2. `p = 1.0` is byte-identical to exact maintenance after every
+//!    batch — reports, tables, and counters;
+//! 3. for a fixed sampling seed the estimates are a pure function of
+//!    the final graph state: permuting batch order (over an op set
+//!    whose arcs are distinct) changes no bit of any estimate.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use triadic::census::{merged, SampledCensus, StreamingCensus, TriadType, DEFAULT_SAMPLE_SEED};
+use triadic::graph::builder::GraphBuilder;
+use triadic::graph::{generators, CsrGraph, DeltaOverlay, EdgeOp};
+use triadic::rng::Rng;
+use triadic::sched::Executor;
+
+const SHAPES: [&str; 4] = ["power_law", "star", "cycle", "dense"];
+
+/// Build one of the grid's graph shapes on `n` nodes.
+fn shape(name: &str, n: u32, seed: u64) -> CsrGraph {
+    let mut b = GraphBuilder::new(n as usize);
+    match name {
+        "power_law" => return generators::power_law(n as usize, 2.2, 4.0, seed),
+        "star" => {
+            // hub-dominated: every spoke from 0, a third reciprocated
+            for v in 1..n {
+                b.arc(0, v);
+                if v % 3 == 0 {
+                    b.arc(v, 0);
+                }
+            }
+        }
+        "cycle" => {
+            for v in 0..n {
+                b.arc(v, (v + 1) % n);
+            }
+        }
+        "dense" => {
+            // a dense random block on the first half of the id space
+            let mut rng = Rng::new(seed);
+            let k = (n / 2).max(4);
+            for _ in 0..(k as usize * k as usize / 2) {
+                b.arc(rng.node(k), rng.node(k));
+            }
+        }
+        other => panic!("unknown shape {other:?}"),
+    }
+    b.build()
+}
+
+/// A randomized mutation batch: inserts of random pairs mixed with
+/// deletes biased toward the base's real arcs. Self-loops and repeats
+/// are left in deliberately — both sides must agree on rejection and
+/// no-op semantics too.
+fn random_ops(n: u32, count: usize, arcs: &[(u32, u32)], seed: u64) -> Vec<EdgeOp> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            if !arcs.is_empty() && rng.chance(0.3) {
+                let (u, v) = arcs[rng.node(arcs.len() as u32) as usize];
+                EdgeOp::Delete(u, v)
+            } else if rng.chance(0.2) {
+                EdgeOp::Delete(rng.node(n), rng.node(n))
+            } else {
+                EdgeOp::Insert(rng.node(n), rng.node(n))
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn sampled_interval_covers_exact_across_the_grid() {
+    // coverage contract: per-class intervals cover the exact count at
+    // well over the asserted floors (the nominal z is two-sided 99%
+    // and the variance model is deliberately conservative); the floors
+    // leave room for the model being a model
+    let exec = Executor::with_workers(2);
+    let ps = [0.25, 0.5, 0.75];
+    let seeds = 6u64;
+    let batches = 3usize;
+    let n = 48u32;
+    let (mut trials, mut covered, mut total) = (0usize, 0usize, 0usize);
+    for shape_name in SHAPES {
+        let (mut shape_cov, mut shape_total) = (0usize, 0usize);
+        for &p in &ps {
+            for seed in 0..seeds {
+                let base = Arc::new(shape(shape_name, n, seed * 131 + 7));
+                let arcs: Vec<(u32, u32)> = base.arcs().collect();
+                let mut sc = SampledCensus::new(base.clone(), p, DEFAULT_SAMPLE_SEED + seed);
+                let mut oracle = DeltaOverlay::new(base);
+                for b in 0..batches {
+                    let ops = random_ops(n, 80, &arcs, seed * 977 + b as u64 * 31 + 1);
+                    sc.apply_batch(&ops, &exec, 2);
+                    for &op in &ops {
+                        oracle.apply(op);
+                    }
+                    let exact = merged::census(&oracle);
+                    let est = sc.estimate();
+                    trials += 1;
+                    for t in TriadType::ALL {
+                        let c = est.class(t);
+                        let e = exact[t] as f64;
+                        total += 1;
+                        shape_total += 1;
+                        if c.lo <= e && e <= c.hi {
+                            covered += 1;
+                            shape_cov += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let rate = shape_cov as f64 / shape_total as f64;
+        assert!(
+            rate >= 0.70,
+            "shape {shape_name}: interval coverage {rate:.3} below the 0.70 floor \
+             ({shape_cov}/{shape_total})"
+        );
+    }
+    assert!(trials >= 200, "grid too small for a coverage claim: {trials} trials");
+    let rate = covered as f64 / total as f64;
+    assert!(
+        rate >= 0.90,
+        "overall interval coverage {rate:.3} below the 0.90 floor ({covered}/{total})"
+    );
+}
+
+#[test]
+fn p_one_replay_is_byte_identical_to_exact_after_every_batch() {
+    let exec = Executor::with_workers(2);
+    for shape_name in SHAPES {
+        let base = Arc::new(shape(shape_name, 40, 5));
+        let arcs: Vec<(u32, u32)> = base.arcs().collect();
+        let mut sc = SampledCensus::new(base.clone(), 1.0, DEFAULT_SAMPLE_SEED);
+        let mut exact = StreamingCensus::new(base.clone());
+        let mut oracle = DeltaOverlay::new(base);
+        for b in 0..4u64 {
+            let ops = random_ops(40, 60, &arcs, b * 17 + 3);
+            let ra = sc.apply_batch(&ops, &exec, 2);
+            let rb = exact.apply_batch(&ops, &exec, 2);
+            assert_eq!(ra, rb, "{shape_name} batch {b}: p=1 reports diverge");
+            for &op in &ops {
+                oracle.apply(op);
+            }
+            let want = merged::census(&oracle);
+            assert_eq!(sc.census(), want, "{shape_name} batch {b}: sampled table");
+            assert_eq!(exact.census(), want, "{shape_name} batch {b}: exact table");
+            assert_eq!(sc.sampled_census(), want, "{shape_name} batch {b}: raw table");
+        }
+        assert_eq!(sc.skipped(), 0, "{shape_name}: p=1 samples nothing out");
+    }
+}
+
+#[test]
+fn estimates_invariant_under_batch_order_permutation() {
+    // an op set whose arcs are all distinct (deletes of real base
+    // arcs, inserts of dyads absent from the base) commutes — so the
+    // final state, and with it every bit of the estimate, must not
+    // depend on batch order or batch size
+    let exec = Executor::with_workers(2);
+    let base = Arc::new(generators::power_law(90, 2.2, 4.0, 11));
+    let mut dyads: HashSet<(u32, u32)> = base
+        .arcs()
+        .map(|(u, v)| if u < v { (u, v) } else { (v, u) })
+        .collect();
+    let mut ops: Vec<EdgeOp> = base
+        .arcs()
+        .enumerate()
+        .filter(|(i, _)| i % 3 == 0)
+        .map(|(_, (u, v))| EdgeOp::Delete(u, v))
+        .collect();
+    let mut rng = Rng::new(4242);
+    while ops.len() < 160 {
+        let (u, v) = (rng.node(90), rng.node(90));
+        if u == v {
+            continue;
+        }
+        let key = if u < v { (u, v) } else { (v, u) };
+        if dyads.insert(key) {
+            ops.push(EdgeOp::Insert(u, v));
+        }
+    }
+    let run = |ops: &[EdgeOp], batch: usize| {
+        let mut sc = SampledCensus::new(base.clone(), 0.5, DEFAULT_SAMPLE_SEED);
+        for chunk in ops.chunks(batch) {
+            sc.apply_batch(chunk, &exec, 2);
+        }
+        sc.estimate()
+    };
+    let fwd = run(&ops, 32);
+    let flipped: Vec<EdgeOp> = ops.iter().rev().copied().collect();
+    let rev = run(&flipped, 7);
+    for t in TriadType::ALL {
+        let (a, b) = (fwd.class(t), rev.class(t));
+        assert_eq!(a.observed, b.observed, "{t}: raw count");
+        assert_eq!(a.estimate.to_bits(), b.estimate.to_bits(), "{t}: estimate");
+        assert_eq!(a.std_err.to_bits(), b.std_err.to_bits(), "{t}: std_err");
+        assert_eq!(a.lo.to_bits(), b.lo.to_bits(), "{t}: lo");
+        assert_eq!(a.hi.to_bits(), b.hi.to_bits(), "{t}: hi");
+    }
+}

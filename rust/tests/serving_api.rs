@@ -804,6 +804,163 @@ fn stream_frames_without_targets_are_bad_requests() {
     server_thread.join().unwrap();
 }
 
+/// Malformed `fidelity` values are refused with a structured
+/// `bad_request` naming the valid forms — over the nonblocking
+/// gateway and the legacy `--legacy-accept` transport alike, on both
+/// the one-shot (`submit`) and streaming (`stream_open`) intakes.
+#[test]
+fn invalid_fidelity_is_a_structured_bad_request_on_both_transports() {
+    fn fidelity_frame(id: usize, verb: &str, fidelity: &str) -> String {
+        format!(
+            concat!(
+                "{{\"v\":1,\"id\":{},\"verb\":\"{}\",\"request\":",
+                "{{\"source\":{{\"kind\":\"inline\",\"nodes\":3,\"arcs\":[[0,1]]}},",
+                "\"fidelity\":{}}}}}\n"
+            ),
+            id, verb, fidelity
+        )
+    }
+    // out of range high, zero, non-numeric rate, unknown name, not a
+    // string at all — every one must name the valid forms back
+    let bad = [
+        r#""sampled:1.5""#,
+        r#""sampled:0""#,
+        r#""sampled:abc""#,
+        r#""bogus""#,
+        "0.5",
+    ];
+    let check = |addr: std::net::SocketAddr| {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut buf = Vec::new();
+        let mut id = 0usize;
+        for f in bad {
+            for verb in ["submit", "stream_open"] {
+                id += 1;
+                let line = fidelity_frame(id, verb, f);
+                stream.write_all(line.as_bytes()).unwrap();
+                let reply =
+                    ResponseFrame::decode(&read_frame_line(&mut stream, &mut buf)).unwrap();
+                let err = reply.result.unwrap_err();
+                assert_eq!(err.code, ErrorCode::BadRequest, "{verb} fidelity {f}");
+                assert!(
+                    err.message.contains(r#"valid: "exact" or "sampled:P""#),
+                    "{verb} fidelity {f}: error does not name the valid forms: {}",
+                    err.message
+                );
+            }
+        }
+        // the connection survives the refusals, and a well-formed
+        // sampled request on the same socket is admitted
+        let good = fidelity_frame(99, "submit", r#""sampled:0.5""#);
+        stream.write_all(good.as_bytes()).unwrap();
+        let reply = ResponseFrame::decode(&read_frame_line(&mut stream, &mut buf)).unwrap();
+        assert!(reply.result.is_ok(), "valid sampled request refused");
+    };
+
+    let (addr, _coord, server_thread) = start_server();
+    check(addr);
+    let mut client = TriadicClient::connect(addr).unwrap();
+    // sharded sub-censuses are exact-only: valid fidelity, wrong place
+    let err = client
+        .census(
+            &CensusRequest::inline(4, vec![(0, 1), (1, 2)])
+                .engine("merged")
+                .shard(0, 2)
+                .sampled(0.5),
+        )
+        .unwrap_err();
+    assert_eq!(err.code, ErrorCode::BadRequest, "shard + sampled");
+    assert!(err.message.contains("exact-only"), "{}", err.message);
+    client.shutdown().unwrap();
+    server_thread.join().unwrap();
+
+    let (addr, _coord, gateway_thread) =
+        start_gateway(GatewayConfig::default(), TenantTable::default());
+    check(addr);
+    let mut client = TriadicClient::connect(addr).unwrap();
+    client.shutdown().unwrap();
+    gateway_thread.join().unwrap();
+}
+
+/// The happy sampled-fidelity path over TCP: at `p = 1.0` the sampled
+/// table is byte-identical to the exact oracle while provenance and
+/// the interval report record the applied fidelity; at `p < 1` the
+/// report carries ordered intervals and the table still closes to
+/// C(n,3).
+#[test]
+fn sampled_fidelity_end_to_end_over_tcp() {
+    let (addr, coord, server_thread) = start_server();
+    let mut client = TriadicClient::connect(addr).unwrap();
+
+    let arcs = vec![(0u32, 1u32), (1, 2), (2, 0), (0, 3), (3, 4), (4, 0)];
+    let want = merged::census(&GraphBuilder::new(5).arcs(&arcs).build());
+
+    // one-shot census at p = 1.0: exact table + degenerate intervals
+    let resp = client
+        .census(&CensusRequest::inline(5, arcs.clone()).engine("merged").sampled(1.0))
+        .unwrap();
+    assert_eq!(resp.census, want);
+    assert_eq!(resp.provenance.fidelity, "sampled:1");
+    let report = resp.sampling.expect("sampled fidelity carries a report");
+    assert_eq!(report.p, 1.0);
+    for i in 0..16 {
+        assert_eq!(report.lo[i], report.hi[i], "class {i}: no noise at p=1");
+    }
+
+    // exact requests carry no report and record exact fidelity
+    let exact = client
+        .census(&CensusRequest::inline(5, arcs.clone()).engine("merged"))
+        .unwrap();
+    assert_eq!(exact.provenance.fidelity, "exact");
+    assert!(exact.sampling.is_none());
+
+    // p < 1 on a generator: deterministic sampling, ordered intervals
+    let resp = client
+        .census(&CensusRequest::generator("patents", 400).seed(9).sampled(0.35))
+        .unwrap();
+    assert_eq!(resp.provenance.fidelity, "sampled:0.35");
+    let report = resp.sampling.expect("sampled report present");
+    assert_eq!(report.p, 0.35);
+    for i in 0..16 {
+        assert!(report.lo[i] <= report.hi[i], "class {i}: interval ordered");
+    }
+    let n = 400u128;
+    assert_eq!(resp.census.total(), n * (n - 1) * (n - 2) / 6, "closure");
+    assert!(coord.metrics().get("census_sampled_total") >= 2);
+
+    // streaming session at p = 1.0 tracks the exact oracle while the
+    // opened frame and snapshots record the sampled fidelity
+    let opened = client
+        .stream_open(&CensusRequest::inline(5, arcs.clone()).engine("merged").sampled(1.0))
+        .unwrap();
+    assert_eq!(opened.fidelity, "sampled:1");
+    let ops = vec![EdgeOp::Insert(1, 3), EdgeOp::Delete(4, 0)];
+    client.stream_apply(opened.stream, &ops).unwrap();
+    let mut arcs = arcs;
+    arcs.push((1, 3));
+    arcs.retain(|&a| a != (4, 0));
+    let want = merged::census(&GraphBuilder::new(5).arcs(&arcs).build());
+    let snapshot = client.stream_query(opened.stream).unwrap();
+    assert_eq!(snapshot.census, want);
+    let report = snapshot.sampling.expect("sampled session reports intervals");
+    for (i, t) in TriadType::ALL.iter().enumerate() {
+        assert_eq!(report.estimate[i], want[*t] as f64, "{t}: exact at p=1");
+    }
+    // exact sessions snapshot without a report
+    let exact_session = client
+        .stream_open(&CensusRequest::inline(5, arcs).engine("merged"))
+        .unwrap();
+    assert_eq!(exact_session.fidelity, "exact");
+    let snap = client.stream_query(exact_session.stream).unwrap();
+    assert!(snap.sampling.is_none());
+
+    client.stream_close(opened.stream).unwrap();
+    client.stream_close(exact_session.stream).unwrap();
+    client.shutdown().unwrap();
+    server_thread.join().unwrap();
+}
+
 #[test]
 fn cancellation_over_the_wire_is_best_effort() {
     let (addr, _coord, server_thread) = start_server();
