@@ -1,21 +1,30 @@
 //! FIG12 bench: NUMA parallel-efficiency detail at 32-48 cores, plus a
-//! measured-vs-predicted socket-balance check.
+//! measured pinned-vs-unpinned accumulation ablation.
 //!
 //! The simulated series (fig12 table) models the paper's 48-core
-//! Magny-Cours box. Since the executor now places seats and chunk slabs
-//! per socket, this bench also runs a *measured* census on a synthetic
-//! two-socket topology and compares the executor's per-socket busy-time
-//! imbalance (and local/remote steal split) against the simulator's
-//! predicted balance for the same worker count — recorded in
-//! `BENCH_fig12_numa.json`. No pass/fail gate: the container is
-//! single-socket, so the measured number tracks the placement logic,
-//! not real NUMA latency.
+//! Magny-Cours box. Since the executor now places seats, chunk slabs
+//! and accumulation banks per socket and can pin workers to their
+//! socket's CPU set, this bench runs the census twice on a synthetic
+//! two-socket topology:
+//!
+//! * `pinned_banked`   — `PinMode::Sockets` + `Accumulation::Banked`
+//!   (one bank per socket, the NUMA-local write path), and
+//! * `unpinned_global` — `PinMode::None` + the paper's global
+//!   `Bank { slots: 64 }` (every worker hashes into one shared bank).
+//!
+//! Both censuses must be byte-identical to the serial merged oracle
+//! (the `"pass"` gate CI greps for). The JSON records the wall-clock
+//! pair, the per-socket busy-time imbalance, the local/remote steal
+//! split and the bank write-locality split — on a real multi-socket
+//! host the remote-write count is the contention the banked layout
+//! removes; in the single-socket container it still verifies the
+//! accounting plumbing end to end.
 
 use triadic::bench::Bench;
-use triadic::census::{census_parallel_on, ParallelConfig};
+use triadic::census::{census_parallel_on, merged, Accumulation, ParallelConfig, ParallelRun};
 use triadic::figures::{fig12, Scale};
 use triadic::graph::GraphSpec;
-use triadic::sched::{Executor, ExecutorConfig, Policy, Topology};
+use triadic::sched::{Executor, ExecutorConfig, PinMode, Policy, Topology};
 use triadic::simulator::{simulate, NumaMachine, WorkloadProfile};
 
 fn main() {
@@ -29,21 +38,43 @@ fn main() {
     let spec = GraphSpec::orkut(10_000);
     let g = spec.generate();
     let prof = WorkloadProfile::from_graph(spec.name, &g);
-    let exec = Executor::with_topology(
-        ExecutorConfig {
-            workers,
-            max_concurrent_jobs: 0,
-        },
-        Topology::synthetic(vec![4, 4]),
-    );
-    let cfg = ParallelConfig {
-        threads: workers,
-        policy: Policy::dynamic_default(),
-        ..ParallelConfig::default()
+    let want = merged::census(&g);
+
+    let run_with = |pin: PinMode, accumulation: Accumulation| -> ParallelRun {
+        let exec = Executor::with_topology(
+            ExecutorConfig {
+                workers,
+                max_concurrent_jobs: 0,
+                pin,
+            },
+            Topology::synthetic(vec![4, 4]),
+        );
+        let cfg = ParallelConfig {
+            threads: workers,
+            policy: Policy::dynamic_default(),
+            accumulation,
+        };
+        census_parallel_on(&g, &cfg, &exec)
     };
-    let run = census_parallel_on(&g, &cfg, &exec);
-    let measured_imbalance = run.stats.socket_imbalance();
-    let busy = run.stats.socket_busy();
+
+    let pinned = run_with(PinMode::Sockets, Accumulation::Banked);
+    let unpinned = run_with(PinMode::None, Accumulation::Bank { slots: 64 });
+    let pass = pinned.census == want && unpinned.census == want;
+    assert!(pass, "pinned/unpinned censuses must match the serial merged oracle");
+
+    let bank_sums = |run: &ParallelRun| -> (u64, u64, usize, usize) {
+        match &run.bank {
+            Some(t) => (
+                t.local_writes.iter().sum(),
+                t.remote_writes.iter().sum(),
+                t.banks,
+                t.slots,
+            ),
+            None => (0, 0, 0, 0),
+        }
+    };
+    let (pin_local_w, pin_remote_w, pin_banks, pin_slots) = bank_sums(&pinned);
+    let (unp_local_w, unp_remote_w, unp_banks, unp_slots) = bank_sums(&unpinned);
 
     let numa = NumaMachine::magny_cours();
     let sim = simulate(&numa, &prof, workers, Policy::dynamic_default());
@@ -52,29 +83,67 @@ fn main() {
     let predicted_imbalance = 1.0 / sim.balance().max(1e-12);
 
     println!(
-        "# sockets: busy={busy:?} measured_imbalance={measured_imbalance:.3} \
-         predicted_imbalance={predicted_imbalance:.3} steals local={} remote={}",
-        run.stats.local_steals, run.stats.remote_steals
+        "# pinned_banked: wall={:.3}s pinned_workers={} imbalance={:.3} steals local={} \
+         remote={} bank_writes local={pin_local_w} remote={pin_remote_w} \
+         ({pin_banks} banks x {pin_slots} slots)",
+        pinned.stats.wall,
+        pinned.stats.pinned_workers,
+        pinned.stats.socket_imbalance(),
+        pinned.stats.local_steals,
+        pinned.stats.remote_steals,
+    );
+    println!(
+        "# unpinned_global: wall={:.3}s pinned_workers={} imbalance={:.3} steals local={} \
+         remote={} bank_writes local={unp_local_w} remote={unp_remote_w} \
+         ({unp_banks} banks x {unp_slots} slots)",
+        unpinned.stats.wall,
+        unpinned.stats.pinned_workers,
+        unpinned.stats.socket_imbalance(),
+        unpinned.stats.local_steals,
+        unpinned.stats.remote_steals,
+    );
+    println!(
+        "# sockets: busy={:?} measured_imbalance={:.3} \
+         predicted_imbalance={predicted_imbalance:.3}",
+        pinned.stats.socket_busy(),
+        pinned.stats.socket_imbalance(),
     );
 
     let json = format!(
         concat!(
-            "{{\"schema_version\":1,\"bench\":\"fig12_numa\",\"nodes\":{},\"arcs\":{},",
+            "{{\"schema_version\":2,\"bench\":\"fig12_numa\",\"nodes\":{},\"arcs\":{},",
             "\"workers\":{},\"sockets\":{},",
-            "\"measured_socket_imbalance\":{:.4},\"predicted_imbalance\":{:.4},",
-            "\"local_steals\":{},\"remote_steals\":{},",
-            "\"simulated_makespan_seconds\":{:.6},\"measured_wall_seconds\":{:.6}}}\n"
+            "\"pinned_banked_wall_seconds\":{:.6},\"unpinned_global_wall_seconds\":{:.6},",
+            "\"pinned_workers\":{},",
+            "\"pinned_socket_imbalance\":{:.4},\"unpinned_socket_imbalance\":{:.4},",
+            "\"predicted_imbalance\":{:.4},",
+            "\"pinned_local_steals\":{},\"pinned_remote_steals\":{},",
+            "\"unpinned_local_steals\":{},\"unpinned_remote_steals\":{},",
+            "\"pinned_bank_local_writes\":{},\"pinned_bank_remote_writes\":{},",
+            "\"unpinned_bank_local_writes\":{},\"unpinned_bank_remote_writes\":{},",
+            "\"simulated_makespan_seconds\":{:.6},\"census_identical\":{},\"pass\":{}}}\n"
         ),
         g.node_count(),
         g.arc_count(),
         workers,
-        busy.len(),
-        measured_imbalance,
+        pinned.stats.socket_busy().len(),
+        pinned.stats.wall,
+        unpinned.stats.wall,
+        pinned.stats.pinned_workers,
+        pinned.stats.socket_imbalance(),
+        unpinned.stats.socket_imbalance(),
         predicted_imbalance,
-        run.stats.local_steals,
-        run.stats.remote_steals,
+        pinned.stats.local_steals,
+        pinned.stats.remote_steals,
+        unpinned.stats.local_steals,
+        unpinned.stats.remote_steals,
+        pin_local_w,
+        pin_remote_w,
+        unp_local_w,
+        unp_remote_w,
         sim.makespan,
-        run.stats.wall,
+        pass,
+        pass,
     );
     std::fs::write("BENCH_fig12_numa.json", &json).expect("writing BENCH_fig12_numa.json");
     println!("# wrote BENCH_fig12_numa.json");

@@ -1,26 +1,30 @@
-//! Hub-bitmap hybrid kernel vs the degree-ordered run-merge kernel.
+//! Hub-bitmap hybrid kernel vs the degree-ordered run-merge kernel,
+//! plus the scalar-vs-wide dense-kernel ablation.
 //!
 //! After the degree-descending relabel the heavy hub rows are nodes
 //! `0..k`; the hybrid kernel classifies hub-involving dyads with packed
 //! 2-bit-direction bitmap words (AND + popcount) instead of three-run
-//! merges. This bench pins the trade on a 100k-node power-law graph:
-//! the parallel engine runs over the natural CSR, the degree-ordered
-//! direction-split form and the hub-split form, the censuses are
-//! asserted byte-identical, and the speedup ratios land in
-//! `BENCH_hub.json`.
+//! merges. The dense hub×hub path now has two kernels: the reference
+//! scalar word loop and the 4-wide unrolled loop that skips range
+//! masking for every word past the dyad boundary. This bench pins both
+//! trades on a 100k-node power-law graph: the parallel engine runs over
+//! the natural CSR, the degree-ordered direction-split form and the
+//! hub-split form under each kernel, every census is asserted
+//! byte-identical, and the speedup ratios land in `BENCH_hub.json`.
 //!
-//! Gate: `"pass"` is true iff the hybrid kernel beats the plain
-//! degree-ordered kernel (`speedup_vs_degree > 1.0`) — CI's perf-smoke
-//! job greps for it. The comparison holds preprocessing constant (both
+//! Gate: `"pass"` is true iff the wide hybrid beats the plain
+//! degree-ordered kernel (`speedup_vs_degree > 1.0`) AND beats the
+//! scalar hybrid (`speedup_wide_vs_scalar > 1.0`) — CI's perf-smoke job
+//! greps for it. The comparison holds preprocessing constant (both
 //! sides pay the same relabel + split; the bitmap build is reported
 //! separately as one-off cost).
 
 use triadic::bench::Bench;
-use triadic::census::{census_hybrid_on, census_parallel_on, ParallelConfig};
+use triadic::census::{census_hybrid_with, census_parallel_on, HubKernelMode, ParallelConfig};
 use triadic::graph::generators::power_law;
 use triadic::graph::relabel;
 use triadic::graph::HubSplit;
-use triadic::sched::Executor;
+use triadic::sched::{CancelToken, Executor};
 
 const NODES: usize = 100_000;
 
@@ -50,13 +54,19 @@ fn main() {
         threads,
         ..ParallelConfig::default()
     };
+    let never = CancelToken::new();
+    let hybrid_run = |mode: HubKernelMode| {
+        census_hybrid_with(&hub, &cfg, &exec, &never, mode).expect("fresh token never cancels")
+    };
 
-    // identity first: timing means nothing if the kernels disagree
+    // identity first: timing means nothing if any kernel disagrees
     let natural_run = census_parallel_on(&g, &cfg, &exec);
     let degree_run = census_parallel_on(hub.split(), &cfg, &exec);
-    let hybrid_run = census_hybrid_on(&hub, &cfg, &exec);
+    let scalar_run = hybrid_run(HubKernelMode::Scalar);
+    let wide_run = hybrid_run(HubKernelMode::Wide);
     assert_eq!(natural_run.census, degree_run.census, "degree-ordered census diverged");
-    assert_eq!(natural_run.census, hybrid_run.census, "hybrid census diverged");
+    assert_eq!(natural_run.census, scalar_run.census, "scalar hybrid census diverged");
+    assert_eq!(natural_run.census, wide_run.census, "wide hybrid census diverged");
 
     let parallel_natural = b
         .run(&format!("parallel_natural_t{threads}"), || {
@@ -68,31 +78,40 @@ fn main() {
             census_parallel_on(hub.split(), &cfg, &exec)
         })
         .mean_s;
-    let hybrid = b
-        .run(&format!("hybrid_hub_t{threads}"), || {
-            census_hybrid_on(&hub, &cfg, &exec)
+    let hybrid_scalar = b
+        .run(&format!("hybrid_hub_scalar_t{threads}"), || {
+            hybrid_run(HubKernelMode::Scalar)
+        })
+        .mean_s;
+    let hybrid_wide = b
+        .run(&format!("hybrid_hub_wide_t{threads}"), || {
+            hybrid_run(HubKernelMode::Wide)
         })
         .mean_s;
 
-    let speedup_vs_natural = parallel_natural / hybrid.max(1e-12);
-    let speedup_vs_degree = parallel_degree / hybrid.max(1e-12);
-    let pass = speedup_vs_degree > 1.0;
+    let speedup_vs_natural = parallel_natural / hybrid_wide.max(1e-12);
+    let speedup_vs_degree = parallel_degree / hybrid_wide.max(1e-12);
+    let speedup_wide_vs_scalar = hybrid_scalar / hybrid_wide.max(1e-12);
+    let pass = speedup_vs_degree > 1.0 && speedup_wide_vs_scalar > 1.0;
     println!(
-        "# hybrid(t{threads}): {:.1} ms vs degree {:.1} ms ({speedup_vs_degree:.2}x) vs natural \
-         {:.1} ms ({speedup_vs_natural:.2}x) pass={pass}",
-        hybrid * 1e3,
+        "# hybrid_wide(t{threads}): {:.1} ms vs scalar {:.1} ms ({speedup_wide_vs_scalar:.2}x) \
+         vs degree {:.1} ms ({speedup_vs_degree:.2}x) vs natural {:.1} ms \
+         ({speedup_vs_natural:.2}x) pass={pass}",
+        hybrid_wide * 1e3,
+        hybrid_scalar * 1e3,
         parallel_degree * 1e3,
         parallel_natural * 1e3
     );
 
     let json = format!(
         concat!(
-            "{{\"schema_version\":1,\"bench\":\"hub_kernel\",\"nodes\":{},\"arcs\":{},",
+            "{{\"schema_version\":2,\"bench\":\"hub_kernel\",\"nodes\":{},\"arcs\":{},",
             "\"threads\":{},\"hub_rows\":{},",
             "\"prep_split_seconds\":{:.6},\"prep_hub_seconds\":{:.6},",
             "\"parallel_natural_seconds\":{:.6},\"parallel_degree_seconds\":{:.6},",
-            "\"hybrid_seconds\":{:.6},",
+            "\"hybrid_scalar_seconds\":{:.6},\"hybrid_wide_seconds\":{:.6},",
             "\"speedup_vs_natural\":{:.4},\"speedup_vs_degree\":{:.4},",
+            "\"speedup_wide_vs_scalar\":{:.4},",
             "\"census_identical\":true,\"pass\":{}}}\n"
         ),
         g.node_count(),
@@ -103,9 +122,11 @@ fn main() {
         prep_hub_seconds,
         parallel_natural,
         parallel_degree,
-        hybrid,
+        hybrid_scalar,
+        hybrid_wide,
         speedup_vs_natural,
         speedup_vs_degree,
+        speedup_wide_vs_scalar,
         pass,
     );
     std::fs::write("BENCH_hub.json", &json).expect("writing BENCH_hub.json");

@@ -80,7 +80,9 @@ fn serial_run<F: FnOnce() -> Census>(items: usize, f: F) -> ParallelRun {
             seat_sockets: vec![0],
             local_steals: 0,
             remote_steals: 0,
+            pinned_workers: 0,
         },
+        bank: None,
     }
 }
 

@@ -35,14 +35,45 @@ use crate::sched::{CancelToken, Executor};
 /// `N(v)` beats scanning `n/64` words per plane.
 const DENSE_DEGREE_DIVISOR: usize = 16;
 
+/// Dense-path word-loop selection. The scalar loop is the tested
+/// baseline; the wide loop splits the word range at `v`'s word so the
+/// unmasked bulk (every word strictly above it — nearly the whole row,
+/// since hubs sit at small ids after degree ordering) runs in explicit
+/// 4-wide u64 AND/popcount blocks the compiler can vectorize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HubKernelMode {
+    /// Reference word-at-a-time loop with per-word range masks.
+    Scalar,
+    /// Masked prefix handled scalar, unmasked tail in 4-wide blocks.
+    #[default]
+    Wide,
+}
+
 /// Classify one canonical hub-anchored dyad (`u < v`, `u` a bitmap
-/// hub), accumulating exactly the increments `dyad_task` would.
+/// hub) with the default kernel mode, accumulating exactly the
+/// increments `dyad_task` would.
 #[inline]
 pub fn hub_dyad_task<S: CensusSink>(h: &HubSplit, u: u32, v: u32, uv_bits: u8, c: &mut S) {
+    hub_dyad_task_with(h, u, v, uv_bits, HubKernelMode::default(), c);
+}
+
+/// [`hub_dyad_task`] with an explicit dense-path kernel selection.
+#[inline]
+pub fn hub_dyad_task_with<S: CensusSink>(
+    h: &HubSplit,
+    u: u32,
+    v: u32,
+    uv_bits: u8,
+    mode: HubKernelMode,
+    c: &mut S,
+) {
     debug_assert!(u < v && h.is_hub(u));
     debug_assert!(uv_bits != 0 && uv_bits < 4);
     if h.is_hub(v) && h.degree(v) * DENSE_DEGREE_DIVISOR >= h.node_count() {
-        hub_dense_dyad_task(h, u, v, uv_bits, c);
+        match mode {
+            HubKernelMode::Scalar => hub_dense_dyad_task(h, u, v, uv_bits, c),
+            HubKernelMode::Wide => hub_dense_dyad_task_wide(h, u, v, uv_bits, c),
+        }
     } else {
         hub_sparse_dyad_task(h, u, v, uv_bits, c);
     }
@@ -105,47 +136,53 @@ fn bits_ge(wi: usize, t: u32) -> u64 {
     }
 }
 
-/// Dense path: both rows are bitmaps — popcount the 15 non-null
-/// `(uw, vw)` state intersections over the canonical-guard range masks.
-fn hub_dense_dyad_task<S: CensusSink>(h: &HubSplit, u: u32, v: u32, uv_bits: u8, c: &mut S) {
-    let n = h.node_count();
-    let words = h.words();
-    let (uo, ui) = h.planes(u);
-    let (vo, vi) = h.planes(v);
+/// The four direction-state planes (null / out-only / in-only /
+/// reciprocal) of one row word, indexed by 2-bit dyad code.
+#[inline]
+fn state_planes(o: u64, i: u64) -> [u64; 4] {
+    [!(o | i), o & !i, i & !o, o & i]
+}
+
+/// State planes of four consecutive row words, laid out `[state][lane]`
+/// — the wide kernel's register block.
+#[inline]
+fn state_lanes4(o: &[u64], i: &[u64], wi: usize) -> [[u64; 4]; 4] {
+    let mut s = [[0u64; 4]; 4];
+    for l in 0..4 {
+        let (ow, iw) = (o[wi + l], i[wi + l]);
+        s[0][l] = !(ow | iw);
+        s[1][l] = ow & !iw;
+        s[2][l] = iw & !ow;
+        s[3][l] = ow & iw;
+    }
+    s
+}
+
+/// Four-lane AND + popcount reduction (the wide kernel's inner op).
+#[inline]
+fn and_count4(a: &[u64; 4], b: &[u64; 4]) -> u64 {
+    ((a[0] & b[0]).count_ones()
+        + (a[1] & b[1]).count_ones()
+        + (a[2] & b[2]).count_ones()
+        + (a[3] & b[3]).count_ones()) as u64
+}
+
+/// Emit the dense path's accumulated tallies. Shared by the scalar and
+/// wide word loops, which must hand over identical `counts`/`mid`/
+/// `union_bits` for any input.
+fn emit_dense_counts<S: CensusSink>(
+    n: usize,
+    uv_bits: u8,
+    counts: &[[u64; 4]; 4],
+    mid: &[u64; 4],
+    union_bits: u64,
+    c: &mut S,
+) {
     let dyadic = if uv_bits == 0b11 {
         TriadType::T102
     } else {
         TriadType::T012
     };
-    // counts[a][b]: members of the w > v region in u-state a, v-state b;
-    // mid[b]: u < w < v members with null (u, w) (the ¬uÂw guard)
-    let mut counts = [[0u64; 4]; 4];
-    let mut mid = [0u64; 4];
-    let mut union_bits = 0u64;
-    for wi in 0..words {
-        let (o1, i1) = (uo[wi], ui[wi]);
-        let (o2, i2) = (vo[wi], vi[wi]);
-        // state planes by 2-bit dyad code; null includes padding bits
-        // past n, but those are null in *both* rows and the (0, 0)
-        // combination is never counted
-        let ua = [!(o1 | i1), o1 & !i1, i1 & !o1, o1 & i1];
-        let va = [!(o2 | i2), o2 & !i2, i2 & !o2, o2 & i2];
-        let hi = bits_ge(wi, v + 1);
-        let mid_mask = bits_ge(wi, u + 1) & !bits_ge(wi, v);
-        union_bits += (o1 | i1 | o2 | i2).count_ones() as u64;
-        for (a, &uw) in ua.iter().enumerate() {
-            for (b, &vw) in va.iter().enumerate() {
-                if a == 0 && b == 0 {
-                    continue;
-                }
-                let m = uw & vw;
-                counts[a][b] += (m & hi).count_ones() as u64;
-                if a == 0 {
-                    mid[b] += (m & mid_mask).count_ones() as u64;
-                }
-            }
-        }
-    }
     for (a, row) in counts.iter().enumerate() {
         for (b, &k) in row.iter().enumerate() {
             if k > 0 {
@@ -166,25 +203,147 @@ fn hub_dense_dyad_task<S: CensusSink>(h: &HubSplit, u: u32, v: u32, uv_bits: u8,
     c.add(dyadic, n as u64 - union_size - 2);
 }
 
+/// Dense path, scalar kernel: popcount the 15 non-null `(uw, vw)`
+/// state intersections over the canonical-guard range masks, one word
+/// at a time. The tested baseline the wide kernel is checked against.
+fn hub_dense_dyad_task<S: CensusSink>(h: &HubSplit, u: u32, v: u32, uv_bits: u8, c: &mut S) {
+    let n = h.node_count();
+    let words = h.words();
+    let (uo, ui) = h.planes(u);
+    let (vo, vi) = h.planes(v);
+    // counts[a][b]: members of the w > v region in u-state a, v-state b;
+    // mid[b]: u < w < v members with null (u, w) (the ¬uÂw guard)
+    let mut counts = [[0u64; 4]; 4];
+    let mut mid = [0u64; 4];
+    let mut union_bits = 0u64;
+    for wi in 0..words {
+        let (o1, i1) = (uo[wi], ui[wi]);
+        let (o2, i2) = (vo[wi], vi[wi]);
+        // state planes by 2-bit dyad code; null includes padding bits
+        // past n, but those are null in *both* rows and the (0, 0)
+        // combination is never counted
+        let ua = state_planes(o1, i1);
+        let va = state_planes(o2, i2);
+        let hi = bits_ge(wi, v + 1);
+        let mid_mask = bits_ge(wi, u + 1) & !bits_ge(wi, v);
+        union_bits += (o1 | i1 | o2 | i2).count_ones() as u64;
+        for (a, &uw) in ua.iter().enumerate() {
+            for (b, &vw) in va.iter().enumerate() {
+                if a == 0 && b == 0 {
+                    continue;
+                }
+                let m = uw & vw;
+                counts[a][b] += (m & hi).count_ones() as u64;
+                if a == 0 {
+                    mid[b] += (m & mid_mask).count_ones() as u64;
+                }
+            }
+        }
+    }
+    emit_dense_counts(n, uv_bits, &counts, &mid, union_bits, c);
+}
+
+/// Dense path, wide kernel. Every word strictly above `v`'s needs no
+/// range masks at all (`hi` saturates, `mid` vanishes), and after
+/// degree-descending relabeling both hubs sit at small ids — so the
+/// masked prefix is typically a single word and the whole remaining
+/// row runs as unmasked 4-wide u64 AND/popcount blocks.
+fn hub_dense_dyad_task_wide<S: CensusSink>(h: &HubSplit, u: u32, v: u32, uv_bits: u8, c: &mut S) {
+    let n = h.node_count();
+    let words = h.words();
+    let (uo, ui) = h.planes(u);
+    let (vo, vi) = h.planes(v);
+    let mut counts = [[0u64; 4]; 4];
+    let mut mid = [0u64; 4];
+    let mut union_bits = 0u64;
+    // masked prefix: words holding ids <= v keep the scalar handling
+    let masked = (v as usize / 64 + 1).min(words);
+    for wi in 0..masked {
+        let (o1, i1) = (uo[wi], ui[wi]);
+        let (o2, i2) = (vo[wi], vi[wi]);
+        let ua = state_planes(o1, i1);
+        let va = state_planes(o2, i2);
+        let hi = bits_ge(wi, v + 1);
+        let mid_mask = bits_ge(wi, u + 1) & !bits_ge(wi, v);
+        union_bits += (o1 | i1 | o2 | i2).count_ones() as u64;
+        for (a, &uw) in ua.iter().enumerate() {
+            for (b, &vw) in va.iter().enumerate() {
+                if a == 0 && b == 0 {
+                    continue;
+                }
+                let m = uw & vw;
+                counts[a][b] += (m & hi).count_ones() as u64;
+                if a == 0 {
+                    mid[b] += (m & mid_mask).count_ones() as u64;
+                }
+            }
+        }
+    }
+    // unmasked bulk: 4-wide blocks, no hi/mid masking
+    let mut wi = masked;
+    while wi + 4 <= words {
+        let ua = state_lanes4(uo, ui, wi);
+        let va = state_lanes4(vo, vi, wi);
+        for l in 0..4 {
+            let w = wi + l;
+            union_bits += (uo[w] | ui[w] | vo[w] | vi[w]).count_ones() as u64;
+        }
+        for (a, ul) in ua.iter().enumerate() {
+            for (b, vl) in va.iter().enumerate() {
+                if a == 0 && b == 0 {
+                    continue;
+                }
+                counts[a][b] += and_count4(ul, vl);
+            }
+        }
+        wi += 4;
+    }
+    // unmasked remainder (< 4 words)
+    while wi < words {
+        let (o1, i1) = (uo[wi], ui[wi]);
+        let (o2, i2) = (vo[wi], vi[wi]);
+        let ua = state_planes(o1, i1);
+        let va = state_planes(o2, i2);
+        union_bits += (o1 | i1 | o2 | i2).count_ones() as u64;
+        for (a, &uw) in ua.iter().enumerate() {
+            for (b, &vw) in va.iter().enumerate() {
+                if a == 0 && b == 0 {
+                    continue;
+                }
+                counts[a][b] += (uw & vw).count_ones() as u64;
+            }
+        }
+        wi += 1;
+    }
+    emit_dense_counts(n, uv_bits, &counts, &mid, union_bits, c);
+}
+
 /// The hybrid sweep's per-dyad kernel: hub rows take the bitmap path,
-/// the sparse tail keeps the merged walk.
-pub(crate) struct HubKernel;
+/// the sparse tail keeps the merged walk. Every dyad task is tallied
+/// into the split's hit/miss counters, which feed the adaptive-`k`
+/// retune ([`HubSplit::retune_k`](crate::graph::HubSplit::retune_k)).
+pub(crate) struct HubKernel {
+    /// Dense-path word-loop selection.
+    pub mode: HubKernelMode,
+}
 
 impl DyadKernel<HubSplit> for HubKernel {
     #[inline]
     fn dyad<S: CensusSink>(&self, g: &HubSplit, u: u32, v: u32, bits: u8, sink: &mut S) {
         if g.is_hub(u) {
-            hub_dyad_task(g, u, v, bits, sink);
+            g.record_hub_hit(u);
+            hub_dyad_task_with(g, u, v, bits, self.mode, sink);
         } else {
+            g.record_hub_miss(u);
             dyad_task(g, u, v, bits, sink);
         }
     }
 }
 
 /// Hybrid parallel census on an explicit executor (the serving path
-/// for `--order degree`).
+/// for `--order degree`), with the default kernel mode.
 pub fn census_hybrid_on(h: &HubSplit, cfg: &ParallelConfig, exec: &Executor) -> ParallelRun {
-    census_kernel_cancellable(h, cfg, exec, &CancelToken::new(), &HubKernel)
+    census_hybrid_with(h, cfg, exec, &CancelToken::new(), HubKernelMode::default())
         .expect("fresh token never cancels")
 }
 
@@ -195,16 +354,34 @@ pub fn census_hybrid_cancellable(
     exec: &Executor,
     cancel: &CancelToken,
 ) -> Option<ParallelRun> {
-    census_kernel_cancellable(h, cfg, exec, cancel, &HubKernel)
+    census_hybrid_with(h, cfg, exec, cancel, HubKernelMode::default())
+}
+
+/// Fully explicit hybrid census: cancellation hook plus dense-path
+/// kernel selection (the scalar/wide ablation entry point).
+pub fn census_hybrid_with(
+    h: &HubSplit,
+    cfg: &ParallelConfig,
+    exec: &Executor,
+    cancel: &CancelToken,
+    mode: HubKernelMode,
+) -> Option<ParallelRun> {
+    census_kernel_cancellable(h, cfg, exec, cancel, &HubKernel { mode })
 }
 
 /// Serial hybrid census (tests and the differential oracle harness).
 pub fn census_hybrid_serial(h: &HubSplit) -> Census {
+    census_hybrid_serial_with(h, HubKernelMode::default())
+}
+
+/// [`census_hybrid_serial`] with an explicit kernel selection.
+pub fn census_hybrid_serial_with(h: &HubSplit, mode: HubKernelMode) -> Census {
+    let kernel = HubKernel { mode };
     let mut c = Census::zero();
     for u in 0..h.node_count() as u32 {
         for (v, bits) in h.neighbors(u) {
             if u < v {
-                HubKernel.dyad(h, u, v, bits, &mut c);
+                kernel.dyad(h, u, v, bits, &mut c);
             }
         }
     }
@@ -217,6 +394,8 @@ pub fn census_hybrid_serial(h: &HubSplit) -> Census {
 /// engine name, same telemetry shape, byte-identical census.
 pub struct HybridEngine {
     pub cfg: ParallelConfig,
+    /// Dense-path kernel selection (wide unless ablating).
+    pub kernel: HubKernelMode,
 }
 
 impl CensusEngine<HubSplit> for HybridEngine {
@@ -225,7 +404,8 @@ impl CensusEngine<HubSplit> for HybridEngine {
     }
 
     fn census(&self, g: &HubSplit, exec: &Executor) -> ParallelRun {
-        census_hybrid_on(g, &self.cfg, exec)
+        census_hybrid_with(g, &self.cfg, exec, &CancelToken::new(), self.kernel)
+            .expect("fresh token never cancels")
     }
 
     fn census_cancellable(
@@ -234,11 +414,14 @@ impl CensusEngine<HubSplit> for HybridEngine {
         exec: &Executor,
         cancel: &CancelToken,
     ) -> Option<ParallelRun> {
-        census_hybrid_cancellable(g, &self.cfg, exec, cancel)
+        census_hybrid_with(g, &self.cfg, exec, cancel, self.kernel)
     }
 
     fn with_config(&self, cfg: ParallelConfig) -> Option<Box<dyn CensusEngine<HubSplit>>> {
-        Some(Box::new(HybridEngine { cfg }))
+        Some(Box::new(HybridEngine {
+            cfg,
+            kernel: self.kernel,
+        }))
     }
 }
 
@@ -247,7 +430,10 @@ impl CensusEngine<HubSplit> for HybridEngine {
 /// ordered requests from.
 pub fn hybrid_registry(cfg: ParallelConfig) -> EngineRegistry<HubSplit> {
     let mut r = EngineRegistry::builtin(cfg);
-    r.register(Box::new(HybridEngine { cfg }));
+    r.register(Box::new(HybridEngine {
+        cfg,
+        kernel: HubKernelMode::default(),
+    }));
     r
 }
 
@@ -337,6 +523,66 @@ mod tests {
     }
 
     #[test]
+    fn wide_and_scalar_kernels_are_byte_identical() {
+        // dense-heavy inputs: mutual cliques (every dyad dense) at word
+        // boundaries, and power-law graphs with every row a bitmap
+        for n in [4, 63, 64, 65, 127, 128, 130, 257, 320] {
+            let g = named::complete_mutual(n);
+            let h = hub_of(&g, Some(n));
+            let scalar = census_hybrid_serial_with(&h, HubKernelMode::Scalar);
+            let wide = census_hybrid_serial_with(&h, HubKernelMode::Wide);
+            assert_eq!(scalar, wide, "K{n}");
+            assert_eq!(scalar, merged::census(&g), "K{n} vs merged");
+        }
+        for seed in 0..4 {
+            let g = generators::power_law(300, 2.0, 8.0, seed);
+            let n = g.node_count();
+            for k in [n / 4, n] {
+                let h = hub_of(&g, Some(k));
+                assert_eq!(
+                    census_hybrid_serial_with(&h, HubKernelMode::Scalar),
+                    census_hybrid_serial_with(&h, HubKernelMode::Wide),
+                    "seed {seed} k {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_wide_and_scalar_agree_with_merged() {
+        let exec = Executor::with_workers(2);
+        let g = generators::power_law(400, 2.1, 7.0, 29);
+        let want = merged::census(&g);
+        let h = hub_of(&g, Some(400));
+        let cfg = ParallelConfig {
+            threads: 3,
+            ..ParallelConfig::default()
+        };
+        for mode in [HubKernelMode::Scalar, HubKernelMode::Wide] {
+            let run = census_hybrid_with(&h, &cfg, &exec, &CancelToken::new(), mode)
+                .expect("fresh token never cancels");
+            assert_eq!(run.census, want, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn census_records_hub_traffic_for_retuning() {
+        let g = generators::power_law(200, 2.2, 6.0, 13);
+        let h = hub_of(&g, Some(20));
+        assert_eq!(h.hub_stats().total(), 0);
+        census_hybrid_serial(&h);
+        let s = h.hub_stats();
+        assert!(s.hits > 0, "hub-anchored dyads must be recorded as hits");
+        assert!(s.misses > 0, "tail dyads must be recorded as misses");
+        assert_eq!(s.total(), g.dyad_count(), "one tally per canonical dyad");
+        // a second census doubles the window; reset clears it
+        census_hybrid_serial(&h);
+        assert_eq!(h.hub_stats().total(), 2 * g.dyad_count());
+        h.reset_hub_stats();
+        assert_eq!(h.hub_stats().total(), 0);
+    }
+
+    #[test]
     fn hybrid_registry_replaces_parallel_only() {
         let reg = hybrid_registry(ParallelConfig::default());
         let mut names = reg.names();
@@ -362,6 +608,7 @@ mod tests {
         let h = hub_of(&g, Some(8));
         let engine = HybridEngine {
             cfg: ParallelConfig::default(),
+            kernel: HubKernelMode::default(),
         };
         let cancelled = CancelToken::new();
         cancelled.cancel();

@@ -57,13 +57,14 @@ pub mod types;
 
 pub use engine::{CensusEngine, EngineRegistry};
 pub use hybrid::{
-    census_hybrid_cancellable, census_hybrid_on, census_hybrid_serial, hybrid_registry,
-    HybridEngine,
+    census_hybrid_cancellable, census_hybrid_on, census_hybrid_serial, census_hybrid_serial_with,
+    census_hybrid_with, hybrid_registry, HubKernelMode, HybridEngine,
 };
 pub use isotricode::{classify_tricode, tricode_of, TRICODE_TABLE};
 pub use parallel::{
-    census_parallel, census_parallel_cancellable, census_parallel_on, census_parallel_range,
-    census_parallel_scoped, Accumulation, ParallelConfig, ParallelRun,
+    auto_bank_slots, census_parallel, census_parallel_cancellable, census_parallel_on,
+    census_parallel_range, census_parallel_scoped, Accumulation, BankTelemetry, ParallelConfig,
+    ParallelRun,
 };
 pub use sampled::{
     estimate_sampled, keep_dyad, sample_base, ClassEstimate, SampledCensus, SampledEstimate,

@@ -14,9 +14,13 @@
 //! * **Local census vectors** — instead of hammering one shared
 //!   16-element vector, increments go to one of `B` (default 64) atomic
 //!   census vectors selected by a hash of `(u, v)`, exactly the paper's
-//!   hot-spot mitigation; the bank is summed once at the end. The
-//!   alternative `PerThread` accumulation (fully private vectors, no
-//!   atomics) is provided for the ablation bench.
+//!   hot-spot mitigation; the bank is summed once at the end. Three
+//!   accumulation modes exist: the paper's single *global* bank
+//!   (`Bank`), the NUMA-hardened *per-socket* banks (`Banked` — each
+//!   socket's seats fetch-add only into a bank sized for that socket,
+//!   so no census increment ever crosses a socket boundary before the
+//!   final reduce), and fully private `PerThread` vectors (no atomics)
+//!   for the ablation bench.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -24,16 +28,34 @@ use super::merged::dyad_task;
 use super::types::{Census, CensusSink, TriadType};
 use crate::graph::GraphView;
 use crate::rng::splitmix64;
-use crate::sched::{run_partitioned_scoped, CancelToken, Executor, Policy, ThreadPoolStats};
+use crate::sched::{
+    run_partitioned_scoped, CancelToken, Executor, Policy, ThreadPoolStats, Topology,
+};
 
 /// How triad increments are accumulated across threads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Accumulation {
     /// The paper's scheme: `B` shared atomic census vectors, selected per
-    /// dyad by `hash(u, v) % B`.
+    /// dyad by `hash(u, v) % B` — one *global* bank, so on a NUMA host
+    /// the hash scatters increments across sockets.
     Bank { slots: usize },
+    /// Socket-local banks: one bank per socket, each sized from the
+    /// [`Topology`] and the seats the socket owns
+    /// ([`auto_bank_slots`]), with the `(u, v)` hash picking a slot
+    /// *within* the writer's own socket bank. A 1-thread run allocates
+    /// a few slots, not the paper's full 64, and no increment crosses a
+    /// socket until the single final reduce.
+    Banked,
     /// Fully private per-thread vectors (no shared writes at all).
     PerThread,
+}
+
+/// Slots for one socket's census bank, derived from the seats the
+/// socket actually runs: 8 slots per seat (enough spread that two seats
+/// rarely collide on a slot) clamped to the paper's 64-vector bank, and
+/// at least 1 so an unseated socket still has a valid (empty) bank.
+pub fn auto_bank_slots(socket_seats: usize) -> usize {
+    (socket_seats * 8).max(1).next_power_of_two().min(64)
 }
 
 /// Configuration of a parallel census run.
@@ -130,12 +152,36 @@ impl CensusSink for BankSlot<'_> {
     }
 }
 
+/// Telemetry of one banked accumulation: how the bank was sized and
+/// how its write traffic split across sockets. "Writes" are counted
+/// per routed dyad task (each task then issues its class increments
+/// into the chosen slot), which is the unit the hash distributes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BankTelemetry {
+    /// Banks allocated (1 for the global `Bank`, one per socket for
+    /// `Banked`).
+    pub banks: usize,
+    /// Total slots across all banks.
+    pub slots: usize,
+    /// Per socket: dyads routed into the writer socket's own bank (or
+    /// its proportional share of the global bank).
+    pub local_writes: Vec<u64>,
+    /// Per socket: dyads whose global-bank slot fell in another
+    /// socket's share — the cross-socket hot-spot traffic the paper's
+    /// Fig 5 mitigation trades for hash spreading, and that `Banked`
+    /// eliminates by construction (always 0 there).
+    pub remote_writes: Vec<u64>,
+}
+
 /// Result of a parallel census run: the census plus scheduler telemetry
 /// (consumed by the workload characterizer and the figures harness).
 #[derive(Debug, Clone)]
 pub struct ParallelRun {
     pub census: Census,
     pub stats: ThreadPoolStats,
+    /// Bank sizing and write-split telemetry; `None` under `PerThread`
+    /// accumulation and for serial engines.
+    pub bank: Option<BankTelemetry>,
 }
 
 /// Per-dyad classification kernel the collapsed sweep dispatches to.
@@ -167,6 +213,16 @@ enum LoopRunner<'e> {
 }
 
 impl LoopRunner<'_> {
+    /// The socket inventory banked accumulation sizes itself against.
+    /// The scoped baseline is topology-blind by design, so it banks as
+    /// a single socket.
+    fn topology(&self) -> Topology {
+        match self {
+            LoopRunner::Pool(exec) => exec.topology().clone(),
+            LoopRunner::Scoped => Topology::single_socket(),
+        }
+    }
+
     fn run<A, I, W>(
         &self,
         len: usize,
@@ -244,25 +300,85 @@ fn census_entries_with<G: GraphView, K: DyadKernel<G>>(
     let offsets = g.flat_offsets();
     let offsets: &[usize] = &offsets;
 
-    let (census, stats, cancelled) = match cfg.accumulation {
+    let (census, stats, cancelled, bank) = match cfg.accumulation {
         Accumulation::Bank { slots } => {
-            let bank = CensusBank::new(slots);
-            let (_, stats, cancelled) = runner.run(
+            let topo = runner.topology();
+            let nseats = cfg.threads.max(1);
+            let nsockets = topo.nsockets();
+            let bank = CensusBank::new(slots.max(1));
+            // Per-seat (local, remote) routed-dyad counters: a slot in
+            // the writer socket's proportional share of the global bank
+            // counts as local, everything else as the cross-socket
+            // scatter the per-socket banks exist to eliminate.
+            let (parts, stats, cancelled) = runner.run(
                 len,
                 cfg.threads,
                 cfg.policy,
                 cancel,
-                |_tid| (),
-                |_acc, _tid, s, e| {
+                |_tid| (0u64, 0u64),
+                |acc: &mut (u64, u64), seat, s, e| {
+                    let socket = topo.socket_of(seat, nseats);
+                    walk_chunk(g, offsets, base + s, base + e, |u, v, bits| {
+                        let slot = bank.slot_of(u, v);
+                        let mut sink = BankSlot {
+                            slot: &bank.slots[slot],
+                        };
+                        kernel.dyad(g, u, v, bits, &mut sink);
+                        if nsockets > 1 && topo.socket_of(slot, bank.len()) != socket {
+                            acc.1 += 1;
+                        } else {
+                            acc.0 += 1;
+                        }
+                    });
+                },
+            );
+            let (local, remote) = split_writes(&topo, nseats, &parts);
+            let telemetry = BankTelemetry {
+                banks: 1,
+                slots: bank.len(),
+                local_writes: local,
+                remote_writes: remote,
+            };
+            (bank.reduce(), stats, cancelled, Some(telemetry))
+        }
+        Accumulation::Banked => {
+            let topo = runner.topology();
+            let nseats = cfg.threads.max(1);
+            // One bank per socket, sized from the seats the socket owns
+            // — a 1-thread run gets auto_bank_slots(1) slots, not the
+            // paper's full 64-vector bank.
+            let banks: Vec<CensusBank> = (0..topo.nsockets())
+                .map(|s| {
+                    let (gs, ge) = topo.group(s, nseats);
+                    CensusBank::new(auto_bank_slots(ge - gs))
+                })
+                .collect();
+            let (parts, stats, cancelled) = runner.run(
+                len,
+                cfg.threads,
+                cfg.policy,
+                cancel,
+                |_tid| (0u64, 0u64),
+                |acc: &mut (u64, u64), seat, s, e| {
+                    let bank = &banks[topo.socket_of(seat, nseats)];
                     walk_chunk(g, offsets, base + s, base + e, |u, v, bits| {
                         let mut sink = BankSlot {
                             slot: &bank.slots[bank.slot_of(u, v)],
                         };
                         kernel.dyad(g, u, v, bits, &mut sink);
+                        acc.0 += 1;
                     });
                 },
             );
-            (bank.reduce(), stats, cancelled)
+            let (local, remote) = split_writes(&topo, nseats, &parts);
+            let telemetry = BankTelemetry {
+                banks: banks.len(),
+                slots: banks.iter().map(CensusBank::len).sum(),
+                local_writes: local,
+                remote_writes: remote,
+            };
+            let census = banks.iter().fold(Census::zero(), |acc, b| acc + b.reduce());
+            (census, stats, cancelled, Some(telemetry))
         }
         Accumulation::PerThread => {
             let (parts, stats, cancelled) = runner.run(
@@ -281,6 +397,7 @@ fn census_entries_with<G: GraphView, K: DyadKernel<G>>(
                 parts.into_iter().fold(Census::zero(), |a, b| a + b),
                 stats,
                 cancelled,
+                None,
             )
         }
     };
@@ -288,7 +405,28 @@ fn census_entries_with<G: GraphView, K: DyadKernel<G>>(
         // a partially swept census is a wrong census — discard it
         return None;
     }
-    Some(ParallelRun { census, stats })
+    if let (LoopRunner::Pool(exec), Some(b)) = (&runner, &bank) {
+        exec.record_bank_writes(&b.local_writes, &b.remote_writes);
+    }
+    Some(ParallelRun {
+        census,
+        stats,
+        bank,
+    })
+}
+
+/// Fold per-seat `(local, remote)` routed-dyad counts into per-socket
+/// totals, attributing each seat to the socket that owns it in the
+/// proportional layout.
+fn split_writes(topo: &Topology, nseats: usize, parts: &[(u64, u64)]) -> (Vec<u64>, Vec<u64>) {
+    let mut local = vec![0u64; topo.nsockets()];
+    let mut remote = vec![0u64; topo.nsockets()];
+    for (seat, &(l, r)) in parts.iter().enumerate() {
+        let s = topo.socket_of(seat, nseats);
+        local[s] += l;
+        remote[s] += r;
+    }
+    (local, remote)
 }
 
 /// Parallel triad census over the collapsed entry space, on the shared
@@ -430,7 +568,11 @@ mod tests {
             Policy::Dynamic { chunk: 16 },
             Policy::Guided { min_chunk: 4 },
         ] {
-            for acc in [Accumulation::Bank { slots: 64 }, Accumulation::PerThread] {
+            for acc in [
+                Accumulation::Bank { slots: 64 },
+                Accumulation::Banked,
+                Accumulation::PerThread,
+            ] {
                 for threads in [1, 2, 4] {
                     let run = census_parallel(&g, &cfg(threads, policy, acc));
                     assert_eq!(run.census, want, "{policy:?} {acc:?} x{threads}");
@@ -445,6 +587,83 @@ mod tests {
         let want = crate::census::merged::census(&g);
         let run = census_parallel(&g, &ParallelConfig::default());
         assert_eq!(run.census, want);
+    }
+
+    #[test]
+    fn auto_bank_slots_scale_with_seats() {
+        assert_eq!(auto_bank_slots(0), 1, "seatless sockets keep a valid bank");
+        assert_eq!(auto_bank_slots(1), 8);
+        assert_eq!(auto_bank_slots(3), 32);
+        assert_eq!(auto_bank_slots(8), 64);
+        assert_eq!(auto_bank_slots(100), 64, "clamped at the paper's bank");
+    }
+
+    #[test]
+    fn banked_single_thread_allocates_a_small_bank() {
+        // regression: `Bank { slots: 64 }` allocated the full bank even
+        // for a 1-thread run; `Banked` derives its size from the
+        // topology and the seat count instead
+        let g = generators::power_law(120, 2.2, 5.0, 9);
+        let want = naive::census(&g);
+        let c = cfg(1, Policy::dynamic_default(), Accumulation::Banked);
+        let run = census_parallel(&g, &c);
+        assert_eq!(run.census, want);
+        let bank = run.bank.expect("banked runs report telemetry");
+        assert!(
+            bank.slots < 64,
+            "1 seat must not allocate the full 64-slot bank (got {})",
+            bank.slots
+        );
+        // one socket carries the seat (8 slots); any others idle at 1
+        assert_eq!(bank.slots, auto_bank_slots(1) + (bank.banks - 1));
+    }
+
+    #[test]
+    fn banked_on_two_sockets_keeps_writes_local() {
+        use crate::sched::{ExecutorConfig, PinMode, Topology};
+        let g = generators::power_law(300, 2.2, 6.0, 17);
+        let want = naive::census(&g);
+        let exec = Executor::with_topology(
+            ExecutorConfig {
+                workers: 2,
+                max_concurrent_jobs: 0,
+                pin: PinMode::None,
+            },
+            Topology::synthetic(vec![1, 1]),
+        );
+        let run = census_parallel_on(
+            &g,
+            &cfg(4, Policy::Dynamic { chunk: 16 }, Accumulation::Banked),
+            &exec,
+        );
+        assert_eq!(run.census, want);
+        let bank = run.bank.expect("banked runs report telemetry");
+        assert_eq!(bank.banks, 2);
+        assert_eq!(bank.remote_writes, vec![0, 0], "socket banks never cross");
+        assert_eq!(bank.local_writes.iter().sum::<u64>(), g.dyad_count());
+        let es = exec.stats();
+        assert_eq!(es.bank_local_writes.iter().sum::<u64>(), g.dyad_count());
+        assert_eq!(es.bank_remote_writes.iter().sum::<u64>(), 0);
+
+        // the global bank on the same pool scatters a share of the
+        // writes into the other socket's slots
+        let run = census_parallel_on(
+            &g,
+            &cfg(
+                4,
+                Policy::Dynamic { chunk: 16 },
+                Accumulation::Bank { slots: 64 },
+            ),
+            &exec,
+        );
+        assert_eq!(run.census, want);
+        let bank = run.bank.expect("bank runs report telemetry");
+        assert_eq!(bank.banks, 1);
+        assert_eq!(bank.slots, 64);
+        let local: u64 = bank.local_writes.iter().sum();
+        let remote: u64 = bank.remote_writes.iter().sum();
+        assert_eq!(local + remote, g.dyad_count());
+        assert!(remote > 0, "a global bank on two sockets must scatter");
     }
 
     #[test]
@@ -581,7 +800,11 @@ mod tests {
     fn scoped_and_executor_paths_agree() {
         let g = generators::power_law(400, 2.2, 6.0, 33);
         let exec = Executor::with_workers(2);
-        for acc in [Accumulation::Bank { slots: 16 }, Accumulation::PerThread] {
+        for acc in [
+            Accumulation::Bank { slots: 16 },
+            Accumulation::Banked,
+            Accumulation::PerThread,
+        ] {
             let c = cfg(3, Policy::Dynamic { chunk: 32 }, acc);
             let on_pool = census_parallel_on(&g, &c, &exec);
             let scoped = census_parallel_scoped(&g, &c);

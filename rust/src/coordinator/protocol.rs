@@ -1115,6 +1115,13 @@ pub struct Provenance {
     pub fidelity: String,
     pub nodes: u64,
     pub arcs: u64,
+    /// Hub-bitmap rows (`k`) the degree-ordered hybrid kernel ran
+    /// with; `None` off the degree-ordered sparse path. Old peers
+    /// never send it; decode defaults `None`.
+    pub hub_k: Option<u64>,
+    /// Adaptive-`k` retunes the cached split serving this request has
+    /// absorbed so far (same presence rules as `hub_k`).
+    pub hub_retunes: Option<u64>,
 }
 
 /// Flattened per-job scheduler telemetry (from [`ThreadPoolStats`]).
@@ -1141,6 +1148,10 @@ pub struct SchedStats {
     pub remote_steals: u64,
     /// Max/mean busy ratio across *sockets* (1.0 = balanced).
     pub socket_imbalance: f64,
+    /// Pool workers pinned to their socket's CPUs when the job ran
+    /// (0 = unpinned: `--pin none`, a fallback platform, or a serial
+    /// engine). Old peers never send it; decode defaults 0.
+    pub pinned_workers: usize,
 }
 
 impl SchedStats {
@@ -1156,6 +1167,7 @@ impl SchedStats {
             local_steals: stats.local_steals,
             remote_steals: stats.remote_steals,
             socket_imbalance: stats.socket_imbalance(),
+            pinned_workers: stats.pinned_workers,
         }
     }
 
@@ -1171,6 +1183,7 @@ impl SchedStats {
             ("local_steals".into(), Json::from(self.local_steals)),
             ("remote_steals".into(), Json::from(self.remote_steals)),
             ("socket_imbalance".into(), Json::Num(self.socket_imbalance)),
+            ("pinned_workers".into(), Json::from(self.pinned_workers)),
         ])
     }
 
@@ -1189,6 +1202,10 @@ impl SchedStats {
                 .get("socket_imbalance")
                 .and_then(Json::as_f64)
                 .unwrap_or(1.0),
+            pinned_workers: v
+                .get("pinned_workers")
+                .and_then(Json::as_usize)
+                .unwrap_or_default(),
         }
     }
 }
@@ -1243,24 +1260,28 @@ impl CensusResponse {
                 Json::Arr(classes.iter().map(|t| Json::from(t.label())).collect()),
             ));
         }
-        pairs.push((
-            "provenance".into(),
-            Json::Obj(vec![
-                ("source".into(), Json::from(self.provenance.source.clone())),
-                ("engine".into(), Json::from(self.provenance.engine.clone())),
-                ("route".into(), Json::from(self.provenance.route.clone())),
-                (
-                    "ordering".into(),
-                    Json::from(self.provenance.ordering.clone()),
-                ),
-                (
-                    "fidelity".into(),
-                    Json::from(self.provenance.fidelity.clone()),
-                ),
-                ("nodes".into(), Json::from(self.provenance.nodes)),
-                ("arcs".into(), Json::from(self.provenance.arcs)),
-            ]),
-        ));
+        let mut prov = vec![
+            ("source".into(), Json::from(self.provenance.source.clone())),
+            ("engine".into(), Json::from(self.provenance.engine.clone())),
+            ("route".into(), Json::from(self.provenance.route.clone())),
+            (
+                "ordering".into(),
+                Json::from(self.provenance.ordering.clone()),
+            ),
+            (
+                "fidelity".into(),
+                Json::from(self.provenance.fidelity.clone()),
+            ),
+            ("nodes".into(), Json::from(self.provenance.nodes)),
+            ("arcs".into(), Json::from(self.provenance.arcs)),
+        ];
+        if let Some(k) = self.provenance.hub_k {
+            prov.push(("hub_k".into(), Json::from(k)));
+        }
+        if let Some(r) = self.provenance.hub_retunes {
+            prov.push(("hub_retunes".into(), Json::from(r)));
+        }
+        pairs.push(("provenance".into(), Json::Obj(prov)));
         if let Some(stats) = &self.stats {
             pairs.push(("stats".into(), stats.to_json()));
         }
@@ -1330,6 +1351,8 @@ impl CensusResponse {
                 },
                 nodes: prov.get("nodes").and_then(Json::as_u64).unwrap_or(0),
                 arcs: prov.get("arcs").and_then(Json::as_u64).unwrap_or(0),
+                hub_k: prov.get("hub_k").and_then(Json::as_u64),
+                hub_retunes: prov.get("hub_retunes").and_then(Json::as_u64),
             },
             stats: v.get("stats").map(SchedStats::from_json),
             sampling: match v.get("sampling") {
@@ -2153,6 +2176,8 @@ mod tests {
                 fidelity: "exact".to_string(),
                 nodes: 100,
                 arcs: 440,
+                hub_k: Some(12),
+                hub_retunes: Some(1),
             },
             stats: Some(SchedStats {
                 seats: 4,
@@ -2165,6 +2190,7 @@ mod tests {
                 local_steals: 5,
                 remote_steals: 1,
                 socket_imbalance: 1.5,
+                pinned_workers: 4,
             }),
             sampling: None,
             seconds: 0.005,

@@ -34,7 +34,7 @@ use crate::graph::relabel;
 use crate::graph::{generators, io, CsrGraph, GraphBuilder, GraphView, HubSplit, VertexOrdering};
 use crate::metrics::Metrics;
 use crate::runtime::DenseCensusRuntime;
-use crate::sched::{CancelToken, Executor, ExecutorConfig, Policy, ThreadPoolStats};
+use crate::sched::{CancelToken, Executor, ExecutorConfig, PinMode, Policy, ThreadPoolStats};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -89,6 +89,12 @@ pub struct CoordinatorConfig {
     /// merged by exact summation (byte-identical to a single-process
     /// run). Empty = everything runs in-process.
     pub workers: Vec<String>,
+    /// CPU affinity for the executor's workers (`--pin`): pin each
+    /// worker to its socket's CPU set (default), to one CPU, or not at
+    /// all. Pinning failures degrade to unpinned and are reported via
+    /// `SchedStats::pinned_workers`, never errors. Ignored by
+    /// [`Coordinator::start_with_executor`] (the pool already exists).
+    pub pin: PinMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -109,6 +115,7 @@ impl Default for CoordinatorConfig {
             job_workers: 0,
             max_request_nodes: 10_000_000,
             workers: Vec::new(),
+            pin: PinMode::default(),
         }
     }
 }
@@ -287,6 +294,25 @@ impl SplitCache {
             entries.pop_front();
         }
         entries.push_back((Arc::downgrade(g), split));
+    }
+
+    /// Swap the cached split of this graph allocation in place (the
+    /// adaptive-`k` retune path); a plain insert when no entry exists.
+    fn replace(&self, g: &Arc<CsrGraph>, split: Arc<HubSplit>) {
+        if self.capacity == 0 {
+            return;
+        }
+        {
+            let mut entries = self.entries.lock().unwrap();
+            let slot = entries
+                .iter_mut()
+                .find(|(weak, _)| weak.upgrade().is_some_and(|live| Arc::ptr_eq(&live, g)));
+            if let Some((_, cached)) = slot {
+                *cached = split;
+                return;
+            }
+        }
+        self.put(g, split);
     }
 }
 
@@ -602,6 +628,10 @@ struct RouteOutcome {
     ordering: VertexOrdering,
     fidelity: Fidelity,
     sampling: Option<SampleReport>,
+    /// Hub-bitmap rows the degree-ordered run used, and the serving
+    /// split's retune generation; `None` off the degree-ordered path.
+    hub_k: Option<u64>,
+    hub_retunes: Option<u64>,
 }
 
 /// Resolve and run one sparse engine over any [`GraphView`] — the
@@ -702,6 +732,8 @@ impl Core {
                 fidelity: out.fidelity.wire_name(),
                 nodes: g.node_count() as u64,
                 arcs: g.arc_count(),
+                hub_k: out.hub_k,
+                hub_retunes: out.hub_retunes,
             },
             stats: out.stats.map(|s| SchedStats::from_pool(&s)),
             sampling: out.sampling,
@@ -850,11 +882,15 @@ impl Core {
                 ordering: VertexOrdering::Natural,
                 fidelity: Fidelity::Exact,
                 sampling: None,
+                hub_k: None,
+                hub_retunes: None,
             });
         }
         self.metrics.inc("census_sparse_total", 1);
         let name = engine_override.unwrap_or(&self.engine);
         let ordering = ordering.unwrap_or_default();
+        let mut hub_k = None;
+        let mut hub_retunes = None;
         let (run, engine_name) = match ordering {
             VertexOrdering::Natural => self.metrics.time("sparse_census", || {
                 sparse_engine_run(
@@ -877,7 +913,7 @@ impl Core {
                 if cancel.is_cancelled() {
                     return Err(cancelled_error());
                 }
-                self.metrics.time("sparse_census", || {
+                let out = self.metrics.time("sparse_census", || {
                     sparse_engine_run(
                         &self.split_engines,
                         name,
@@ -888,7 +924,11 @@ impl Core {
                         &self.executor,
                         cancel,
                     )
-                })?
+                })?;
+                hub_k = Some(split.hub_count() as u64);
+                hub_retunes = Some(split.retune_count());
+                self.maybe_retune(&split, identity);
+                out
             }
         };
         // per-job telemetry: slots walked by this job (executor job
@@ -910,7 +950,25 @@ impl Core {
             ordering,
             fidelity: Fidelity::Exact,
             sampling: None,
+            hub_k,
+            hub_retunes,
         })
+    }
+
+    /// After a degree-ordered census, let the split's measured hub-row
+    /// traffic propose a better `k` ([`HubSplit::retune_k`]); when it
+    /// does, the rebuilt split replaces the cache entry so subsequent
+    /// requests for the same graph run with the corrected hub count.
+    /// The request that triggered the retune already ran — retunes are
+    /// between-census work, never on the serving path of a job.
+    fn maybe_retune(&self, split: &Arc<HubSplit>, identity: Option<&Arc<CsrGraph>>) {
+        let Some(arc) = identity else { return };
+        let Some(new_k) = split.retune_k() else { return };
+        let rebuilt = Arc::new(
+            self.metrics.time("split_retune", || split.rebuild_with_k(new_k)),
+        );
+        self.metrics.inc("split_retunes_total", 1);
+        self.splits.replace(arc, rebuilt);
     }
 
     /// The sampled-fidelity route: filter the base graph down to the
@@ -1023,6 +1081,8 @@ impl Core {
                 fidelity: Fidelity::Exact.wire_name(),
                 nodes: n as u64,
                 arcs: g.arc_count(),
+                hub_k: None,
+                hub_retunes: None,
             },
             stats: Some(SchedStats::from_pool(&run.stats)),
             sampling: None,
@@ -1061,6 +1121,8 @@ impl Core {
                 fidelity: Fidelity::Exact.wire_name(),
                 nodes: n as u64,
                 arcs: g.arc_count(),
+                hub_k: None,
+                hub_retunes: None,
             },
             stats: None,
             sampling: None,
@@ -1235,6 +1297,7 @@ impl Coordinator {
         let executor = Arc::new(Executor::new(ExecutorConfig {
             workers: cfg.pool_threads,
             max_concurrent_jobs: cfg.max_concurrent_jobs,
+            pin: cfg.pin,
         }));
         Coordinator::start_with_executor(cfg, executor)
     }

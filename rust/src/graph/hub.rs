@@ -26,12 +26,58 @@
 //! so generic engines run unchanged and byte-identical.
 
 use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::relabel::{DirSplit, DirSplitNeighbors};
 use super::view::GraphView;
 
 /// Memory ceiling for the bitmap planes + rank arrays (bytes).
 const DEFAULT_MEMORY_BUDGET: usize = 64 << 20;
+
+/// Stripes for the hub-row traffic counters (power of two). The hot
+/// path bumps one counter per canonical dyad task; striping by `u`
+/// keeps concurrent workers off a single contended line.
+const TRAFFIC_STRIPES: usize = 8;
+
+/// Below this many measured dyad tasks a retune has no signal.
+const RETUNE_MIN_DYADS: u64 = 1024;
+
+/// A cache-line-padded counter stripe: adjacent stripes must not share
+/// a line or the striping buys nothing.
+#[repr(align(64))]
+struct PaddedCounter(AtomicU64);
+
+fn counter_stripes() -> [PaddedCounter; TRAFFIC_STRIPES] {
+    std::array::from_fn(|_| PaddedCounter(AtomicU64::new(0)))
+}
+
+/// Measured hub-row traffic accumulated by censuses since the last
+/// [`HubSplit::reset_hub_stats`] (or since the split was built).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HubStats {
+    /// Canonical dyad tasks answered from a hub bitmap row.
+    pub hits: u64,
+    /// Dyad tasks that fell through to the merged union walk.
+    pub misses: u64,
+}
+
+impl HubStats {
+    /// Total dyad tasks measured.
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of dyad tasks the bitmap rows answered (0.0 when
+    /// nothing was measured).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
 
 /// Degree above which a row repays its bitmap: the hub kernel saves
 /// ~deg(u) work on each of the hub's ~deg(u) canonical dyads, while the
@@ -59,6 +105,12 @@ pub struct HubSplit {
     rank_recip: Vec<u32>,
     rank_out: Vec<u32>,
     rank_in: Vec<u32>,
+    /// Striped dyad-task counters: tasks answered from a bitmap row.
+    hits: [PaddedCounter; TRAFFIC_STRIPES],
+    /// Striped dyad-task counters: tasks that fell to the merged walk.
+    misses: [PaddedCounter; TRAFFIC_STRIPES],
+    /// Adaptive-`k` rebuild generation (0 = never retuned).
+    retunes: u64,
 }
 
 impl HubSplit {
@@ -80,15 +132,24 @@ impl HubSplit {
         if n == 0 {
             return 0;
         }
-        let words = n.div_ceil(64);
-        let bytes_per_hub = 2 * words * 8 + 3 * (words + 1) * 4;
-        let cap = (memory_budget / bytes_per_hub.max(1)).min(n);
+        let cap = Self::budget_hub_cap(n, memory_budget);
         let threshold = hub_degree_threshold(n);
         let mut k = 0;
         while k < cap && split.degree(k as u32) >= threshold {
             k += 1;
         }
         k
+    }
+
+    /// Maximum hub rows `memory_budget` bytes of plane + rank storage
+    /// can hold for an `n`-node graph.
+    pub fn budget_hub_cap(n: usize, memory_budget: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let words = n.div_ceil(64);
+        let bytes_per_hub = 2 * words * 8 + 3 * (words + 1) * 4;
+        (memory_budget / bytes_per_hub.max(1)).min(n)
     }
 
     /// Build with an explicit hub count (tests force `k = 0` / `k = n`;
@@ -136,7 +197,95 @@ impl HubSplit {
             rank_recip,
             rank_out,
             rank_in,
+            hits: counter_stripes(),
+            misses: counter_stripes(),
+            retunes: 0,
         }
+    }
+
+    /// Rebuild the planes and rank arrays for a different hub count.
+    /// The inner split is cloned (O(m)); the traffic counters of the
+    /// new split start at zero and its retune generation advances.
+    /// This is the retune path — cheap enough to run between censuses,
+    /// never on one.
+    pub fn rebuild_with_k(&self, k: usize) -> HubSplit {
+        let mut h = Self::with_hub_count(self.split.clone(), k);
+        h.retunes = self.retunes + 1;
+        h
+    }
+
+    /// How many adaptive-`k` rebuilds produced this split (0 = the
+    /// original build).
+    pub fn retune_count(&self) -> u64 {
+        self.retunes
+    }
+
+    /// Count one dyad task answered from a hub bitmap row.
+    #[inline]
+    pub fn record_hub_hit(&self, u: u32) {
+        self.hits[u as usize % TRAFFIC_STRIPES].0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one dyad task that fell through to the merged walk.
+    #[inline]
+    pub fn record_hub_miss(&self, u: u32) {
+        self.misses[u as usize % TRAFFIC_STRIPES].0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Traffic measured since the last reset (or since build).
+    pub fn hub_stats(&self) -> HubStats {
+        let sum = |strips: &[PaddedCounter; TRAFFIC_STRIPES]| {
+            strips.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+        };
+        HubStats {
+            hits: sum(&self.hits),
+            misses: sum(&self.misses),
+        }
+    }
+
+    /// Zero the traffic counters (a retune window boundary).
+    pub fn reset_hub_stats(&self) {
+        for s in self.hits.iter().chain(self.misses.iter()) {
+            s.0.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Propose a better hub count from measured traffic, or `None` when
+    /// the current `k` is fine (or there is not enough signal yet).
+    ///
+    /// * **Shrink** when the bitmap budget is mis-spent: rows exist but
+    ///   answer under 1/16 of dyad tasks — halve `k` (possibly to 0,
+    ///   degrading to plain [`DirSplit`] behavior).
+    /// * **Grow** when hub rows answer the majority of tasks, budget
+    ///   remains, and the next rows still clear a relaxed (halved)
+    ///   degree threshold — measured traffic has proven the bitmap
+    ///   path out, so the admission bar drops. Growth is capped at
+    ///   `2k` per retune so one window cannot overshoot.
+    ///
+    /// The dead band between 1/16 and 1/2 prevents shrink/grow
+    /// oscillation across retune windows.
+    pub fn retune_k(&self) -> Option<usize> {
+        let s = self.hub_stats();
+        if self.k == 0 || s.total() < RETUNE_MIN_DYADS {
+            return None;
+        }
+        if s.hits * 16 < s.total() {
+            return Some(self.k / 2);
+        }
+        let n = self.split.node_count();
+        let cap = Self::budget_hub_cap(n, DEFAULT_MEMORY_BUDGET);
+        if s.hits * 2 > s.total() && self.k < cap {
+            let relaxed = hub_degree_threshold(n) / 2;
+            let ceiling = cap.min(self.k * 2);
+            let mut new_k = self.k;
+            while new_k < ceiling && self.split.degree(new_k as u32) >= relaxed {
+                new_k += 1;
+            }
+            if new_k > self.k {
+                return Some(new_k);
+            }
+        }
+        None
     }
 
     /// Number of bitmap-backed hub rows.
@@ -371,6 +520,91 @@ mod tests {
                     assert_eq!(h.dyad_bits(u, v), h.split().dyad_bits(u, v));
                 }
             }
+        }
+    }
+
+    #[test]
+    fn traffic_counters_accumulate_and_reset() {
+        let h = forced(100, 3, 10);
+        assert_eq!(h.hub_stats(), HubStats::default());
+        for u in 0..40u32 {
+            h.record_hub_hit(u);
+        }
+        for u in 0..60u32 {
+            h.record_hub_miss(u);
+        }
+        let s = h.hub_stats();
+        assert_eq!((s.hits, s.misses, s.total()), (40, 60, 100));
+        assert!((s.hit_rate() - 0.4).abs() < 1e-12);
+        h.reset_hub_stats();
+        assert_eq!(h.hub_stats().total(), 0);
+        assert_eq!(HubStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn retune_needs_signal_before_proposing() {
+        let h = forced(100, 3, 8);
+        for _ in 0..100 {
+            h.record_hub_miss(1);
+        }
+        assert_eq!(h.retune_k(), None, "under the signal floor");
+        let h0 = forced(100, 3, 0);
+        for _ in 0..5000 {
+            h0.record_hub_miss(1);
+        }
+        assert_eq!(h0.retune_k(), None, "k = 0 has no rows to tune");
+    }
+
+    #[test]
+    fn retune_shrinks_idle_rows_and_grows_hot_ones() {
+        // idle rows: 64 bitmap rows answering < 1/16 of the traffic
+        let h = forced(200, 5, 64);
+        for _ in 0..100 {
+            h.record_hub_hit(0);
+        }
+        for _ in 0..5000 {
+            h.record_hub_miss(100);
+        }
+        assert_eq!(h.retune_k(), Some(32), "halve the mis-spent budget");
+        // hot rows: the majority of traffic is hub-answered and every
+        // row of the mutual clique clears the relaxed threshold
+        let g = crate::graph::generators::named::complete_mutual(128);
+        let (_, split) = degree_split(&g, 2);
+        let h = HubSplit::with_hub_count(split, 3);
+        for _ in 0..900 {
+            h.record_hub_hit(1);
+        }
+        for _ in 0..300 {
+            h.record_hub_miss(50);
+        }
+        assert_eq!(h.retune_k(), Some(6), "double within the budget cap");
+        // dead band: neither branch fires between 1/16 and 1/2
+        h.reset_hub_stats();
+        for _ in 0..400 {
+            h.record_hub_hit(1);
+        }
+        for _ in 0..800 {
+            h.record_hub_miss(50);
+        }
+        assert_eq!(h.retune_k(), None, "hit rate 1/3 sits in the dead band");
+    }
+
+    #[test]
+    fn rebuild_with_k_matches_a_fresh_build() {
+        let h = forced(150, 7, 150);
+        let r = h.rebuild_with_k(5);
+        assert_eq!(r.hub_count(), 5);
+        assert_eq!(r.hub_stats().total(), 0, "rebuilt counters start at zero");
+        assert_eq!((h.retune_count(), r.retune_count()), (0, 1));
+        assert_eq!(r.rebuild_with_k(3).retune_count(), 2);
+        let n = r.node_count() as u32;
+        for u in 0..5u32 {
+            for w in 0..n {
+                if u != w {
+                    assert_eq!(r.hub_dyad_bits(u, w), h.split().dyad_bits(u, w));
+                }
+            }
+            assert_eq!(r.counts_above(u, n - 1), [0, 0, 0, 0]);
         }
     }
 

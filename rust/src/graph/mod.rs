@@ -22,7 +22,7 @@ pub use builder::GraphBuilder;
 pub use csr::{CsrGraph, Dir, DyadType, PackedEdge};
 pub use degree::{DegreeStats, OutDegreeHistogram};
 pub use generators::{named, GraphSpec};
-pub use hub::HubSplit;
+pub use hub::{HubSplit, HubStats};
 pub use mmap::MmapFile;
 pub use overlay::{ApplyOutcome, DeltaOverlay, EdgeOp, RejectReason};
 pub use relabel::{DirSplit, Relabeling, VertexOrdering};

@@ -196,6 +196,7 @@ pub fn degree_split<G: GraphView>(g: &G, threads: usize) -> (Relabeling, DirSpli
 /// [`GraphView`] whose merged iteration is a three-way run merge with
 /// direction bits implied by run membership, and whose directional
 /// degree hints are O(1).
+#[derive(Clone)]
 pub struct DirSplit {
     /// `n + 1` offsets into `nbrs` (whole-node segments).
     offsets: Vec<usize>,

@@ -58,7 +58,7 @@ use triadic::figures::{self, Scale};
 use triadic::graph::relabel::{self, Relabeling};
 use triadic::graph::{degree, io, CsrGraph, DeltaOverlay, EdgeOp, HubSplit, VertexOrdering};
 use triadic::net::{Gateway, GatewayConfig, TenantTable};
-use triadic::sched::{Executor, ExecutorConfig, Policy};
+use triadic::sched::{Executor, ExecutorConfig, PinMode, Policy};
 use triadic::simulator::{
     simulate, Machine, NumaMachine, SuperdomeMachine, WorkloadProfile, XmtMachine,
 };
@@ -73,11 +73,12 @@ COMMANDS
             [--threads T] [--policy static|dynamic|guided[:chunk]]
             [--engine naive|bm|merged|parallel|moody] [--pool-threads W]
             [--order natural|degree] [--backend auto|sparse]
-            [--artifacts DIR] [--mmap] [--sample-p P]
+            [--artifacts DIR] [--mmap] [--sample-p P] [--pin cpus|sockets|none]
   generate  --graph ... --out FILE [--format txt|bin|v2]
   convert   --input FILE --out FILE [--threads T] [--verify]
   smoke     [--nodes N] [--threads T] [--seed S] [--engine E]
             [--pool-threads W] [--order natural|degree] [--json FILE]
+            [--pin cpus|sockets|none]
   figures   [--fig 6|9|10|11|12|13|sched|all] [--scale small|full] [--out DIR]
   simulate  --machine xmt|xmt512|numa|superdome --graph ... [--procs 1,2,...]
   monitor   [--hosts N] [--rate EPS] [--duration S] [--window S]
@@ -91,10 +92,10 @@ COMMANDS
             [--job-workers J] [--max-request-nodes N]
             [--workers HOST:PORT,HOST:PORT,...] [--workers-file FILE]
             [--reactor-threads R] [--max-conns C] [--tenant-config FILE]
-            [--scan-backend] [--legacy-accept]
+            [--scan-backend] [--legacy-accept] [--pin cpus|sockets|none]
   worker    [--listen ADDR] [--threads T] [--pool-threads W]
             [--max-jobs K] [--job-workers J] [--trusted]
-            [--max-request-nodes N]
+            [--max-request-nodes N] [--pin cpus|sockets|none]
   client    [--addr HOST:PORT] [--verb census|status|metrics|poll|cancel|shutdown]
             [--input FILE | --graph patents|orkut|web --nodes N [--seed S]]
             [--engine E] [--threads T] [--policy P] [--order natural|degree]
@@ -103,6 +104,11 @@ COMMANDS
 `--order degree` renumbers vertices in descending degree order and
 direction-splits neighborhoods before the sparse census runs; the
 census itself is invariant (byte-identical tables), only timing moves.
+
+`--pin MODE` sets worker CPU affinity: `sockets` (default) confines each
+worker to its socket's CPU set, `cpus` binds one worker per CPU, `none`
+leaves placement to the OS. Pinning soft-fails — unsupported platforms
+degrade to unpinned and report `pinned_workers=0` in stats/metrics.
 
 `--sample-p P` (census, stream) trades exactness for throughput: the
 census runs over a deterministic hash-sample of the dyads (keep
@@ -193,16 +199,19 @@ fn cmd_census(args: &Args) -> Result<()> {
     let backend = args.str_or("backend", "auto");
     let artifacts = args.str_or("artifacts", "artifacts");
     let sample_p = parse_sample_p(args)?;
+    let pin = parse_pin(args)?;
     args.reject_unknown().map_err(Error::msg)?;
 
+    // Banked sizes the accumulation to the socket topology and seat
+    // count (auto_bank_slots) instead of the paper's fixed 64 slots.
     let sparse = ParallelConfig {
         threads,
         policy,
-        accumulation: Accumulation::Bank { slots: 64 },
+        accumulation: Accumulation::Banked,
     };
 
     if let Some(p) = sample_p {
-        return census_sampled_cli(&name, &g, p, pool_threads, sparse, &engine_name);
+        return census_sampled_cli(&name, &g, p, pool_threads, pin, sparse, &engine_name);
     }
 
     let t0 = std::time::Instant::now();
@@ -210,6 +219,7 @@ fn cmd_census(args: &Args) -> Result<()> {
         let exec = Executor::new(ExecutorConfig {
             workers: pool_threads,
             max_concurrent_jobs: 0,
+            pin,
         });
         let (run, engine_label) = match order {
             VertexOrdering::Natural => {
@@ -231,15 +241,17 @@ fn cmd_census(args: &Args) -> Result<()> {
                 (engine.census(&split, &exec), engine.name().to_string())
             }
         };
+        let estats = exec.stats();
         println!(
             "# backend=sparse engine={engine_label} order={} threads={threads} \
-             pool_workers={} policy={} wall={:.3}s imbalance={:.2} steals={}",
+             pool_workers={} policy={} wall={:.3}s imbalance={:.2} steals={} pinned={}",
             order.name(),
             exec.worker_count(),
             policy.name(),
             run.stats.wall,
             run.stats.imbalance(),
-            exec.stats().steals
+            estats.steals,
+            estats.pinned_workers
         );
         run.census
     } else {
@@ -248,6 +260,7 @@ fn cmd_census(args: &Args) -> Result<()> {
             sparse,
             engine: engine_name,
             pool_threads,
+            pin,
             ..CoordinatorConfig::default()
         })?;
         let out = coord.census_ordered(&g, Some(order))?;
@@ -272,6 +285,13 @@ fn cmd_census(args: &Args) -> Result<()> {
     );
     print!("{}", census.table());
     Ok(())
+}
+
+/// Parse `--pin` (worker CPU affinity: cpus|sockets|none). PinMode's
+/// FromStr names the valid modes in its error, mirroring the other
+/// "unknown value" contracts.
+fn parse_pin(args: &Args) -> Result<PinMode> {
+    args.str_or("pin", "sockets").parse::<PinMode>().map_err(Error::msg)
 }
 
 /// Parse and range-check `--sample-p` (the CLI spelling of the wire
@@ -301,6 +321,7 @@ fn census_sampled_cli(
     g: &CsrGraph,
     p: f64,
     pool_threads: usize,
+    pin: PinMode,
     sparse: ParallelConfig,
     engine_name: &str,
 ) -> Result<()> {
@@ -309,6 +330,7 @@ fn census_sampled_cli(
     let exec = Executor::new(ExecutorConfig {
         workers: pool_threads,
         max_concurrent_jobs: 0,
+        pin,
     });
     let registry = EngineRegistry::builtin(sparse);
     let engine = registry.get_or_err(engine_name).map_err(Error::msg)?;
@@ -437,6 +459,7 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     let pool_threads = args.get_or("pool-threads", 0usize).map_err(Error::msg)?;
     let order = VertexOrdering::parse(&args.str_or("order", "natural")).map_err(Error::msg)?;
     let json_path = args.opt_str("json");
+    let pin = parse_pin(args)?;
     args.reject_unknown().map_err(Error::msg)?;
 
     let t0 = std::time::Instant::now();
@@ -452,11 +475,12 @@ fn cmd_smoke(args: &Args) -> Result<()> {
     let cfg = ParallelConfig {
         threads,
         policy: Policy::dynamic_default(),
-        accumulation: Accumulation::Bank { slots: 64 },
+        accumulation: Accumulation::Banked,
     };
     let exec = Executor::new(ExecutorConfig {
         workers: pool_threads,
         max_concurrent_jobs: 0,
+        pin,
     });
     let registry = EngineRegistry::builtin(cfg);
     let engine = registry.get_or_err(&engine_name).map_err(Error::msg)?;
@@ -514,10 +538,11 @@ fn cmd_smoke(args: &Args) -> Result<()> {
          v2_write={t_write:.3}s mmap_load={t_map:.6}s parallel_mapped={t_mapped:.3}s"
     );
     println!(
-        "smoke: imbalance={:.2} utilization={:.2} speedup_vs_serial={:.2}x",
+        "smoke: imbalance={:.2} utilization={:.2} speedup_vs_serial={:.2}x pinned_workers={}",
         run.stats.imbalance(),
         run.stats.utilization(),
-        t_serial / t_par.max(1e-9)
+        t_serial / t_par.max(1e-9),
+        exec.stats().pinned_workers
     );
     if let Some(path) = json_path {
         let estats = exec.stats();
@@ -844,6 +869,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let exec = Executor::new(ExecutorConfig {
         workers: pool_threads,
         max_concurrent_jobs: 0,
+        pin: PinMode::default(),
     });
     let t_seed = std::time::Instant::now();
     let mut sc = StreamingCensus::new(Arc::new(base));
@@ -963,6 +989,7 @@ fn stream_sampled(
     let exec = Executor::new(ExecutorConfig {
         workers: pool_threads,
         max_concurrent_jobs: 0,
+        pin: PinMode::default(),
     });
     let base = Arc::new(base);
     let t_seed = std::time::Instant::now();
@@ -1103,6 +1130,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tenant_config = args.opt_str("tenant-config");
     let scan_backend = args.flag("scan-backend");
     let legacy_accept = args.flag("legacy-accept");
+    let pin = parse_pin(args)?;
     args.reject_unknown().map_err(Error::msg)?;
 
     let coord = Arc::new(Coordinator::start(CoordinatorConfig {
@@ -1118,6 +1146,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         job_workers,
         max_request_nodes,
         workers,
+        pin,
         ..CoordinatorConfig::default()
     })?);
     eprintln!(
@@ -1222,6 +1251,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let max_request_nodes = args
         .get_or("max-request-nodes", CoordinatorConfig::default().max_request_nodes)
         .map_err(Error::msg)?;
+    let pin = parse_pin(args)?;
     args.reject_unknown().map_err(Error::msg)?;
 
     let coord = Arc::new(Coordinator::start(CoordinatorConfig {
@@ -1235,6 +1265,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         max_concurrent_jobs: max_jobs,
         job_workers,
         max_request_nodes,
+        pin,
         ..CoordinatorConfig::default()
     })?);
     eprintln!(

@@ -1,0 +1,198 @@
+//! CPU affinity for executor workers, with no libc dependency.
+//!
+//! The paper's NUMA runs (the 48-core Magny-Cours in particular) only
+//! behave when threads stay put: a worker that migrates off its socket
+//! turns every "local" accumulation bank and chunk slab remote. The
+//! executor therefore pins each worker at spawn according to
+//! [`PinMode`]: to its socket's full CPU set (`sockets`), to one
+//! dedicated CPU round-robined within the socket (`cpus`), or not at
+//! all (`none`, the PR 7 structural-placement behavior).
+//!
+//! On Linux x86_64/aarch64 the pin is a raw `sched_setaffinity(2)`
+//! syscall through `asm!`, same idiom as `net/reactor.rs`'s epoll
+//! shims. Everywhere else it is a no-op that *reports* the thread as
+//! unpinned instead of erroring, so portable builds and masked-sysfs
+//! containers keep working with `pinned: false` telemetry.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// How executor workers bind to the CPUs their socket owns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PinMode {
+    /// No affinity calls — placement stays structural (deques and
+    /// banks are socket-grouped but the kernel may migrate threads).
+    None,
+    /// Pin each worker to its socket's full CPU set; the kernel
+    /// balances within the socket but never migrates across sockets.
+    #[default]
+    Sockets,
+    /// Pin each worker to a single CPU, round-robined over its
+    /// socket's CPU list — the strictest placement, matching the
+    /// paper's one-thread-per-core runs.
+    Cpus,
+}
+
+impl PinMode {
+    /// All modes, for CLI help strings and exhaustive tests.
+    pub const ALL: [PinMode; 3] = [PinMode::None, PinMode::Sockets, PinMode::Cpus];
+}
+
+impl fmt::Display for PinMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            PinMode::None => "none",
+            PinMode::Sockets => "sockets",
+            PinMode::Cpus => "cpus",
+        })
+    }
+}
+
+impl FromStr for PinMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "none" => Ok(PinMode::None),
+            "sockets" => Ok(PinMode::Sockets),
+            "cpus" => Ok(PinMode::Cpus),
+            other => Err(format!("unknown pin mode '{other}' (expected cpus|sockets|none)")),
+        }
+    }
+}
+
+/// Bind the calling thread to `cpus` (kernel CPU ids). Returns `true`
+/// when the affinity call succeeded and the thread is now pinned,
+/// `false` when the set is empty, the syscall failed (e.g. the cgroup
+/// mask excludes those CPUs), or the platform has no affinity shim.
+/// Never errors: pinning is an optimization, not a correctness
+/// requirement, and the caller records the outcome in telemetry.
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    if cpus.is_empty() {
+        return false;
+    }
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        setaffinity::pin(cpus)
+    }
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        false
+    }
+}
+
+/// Raw-syscall `sched_setaffinity`, Linux x86_64/aarch64 only. Same
+/// ABI notes as the epoll shim: `syscall` clobbers rcx/r11 on x86_64,
+/// `svc 0` takes the number in x8 on aarch64.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod setaffinity {
+    #[cfg(target_arch = "x86_64")]
+    const NR_SCHED_SETAFFINITY: usize = 203;
+    #[cfg(target_arch = "aarch64")]
+    const NR_SCHED_SETAFFINITY: usize = 122;
+
+    /// Words in the cpu_set_t we pass: 16 × u64 = 1024 CPUs, the
+    /// kernel's conventional CPU_SETSIZE.
+    const MASK_WORDS: usize = 16;
+
+    #[cfg(target_arch = "x86_64")]
+    #[inline]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 as isize => ret,
+            in("x1") a2,
+            in("x2") a3,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// `sched_setaffinity(pid = 0, …)` binds the calling thread (the
+    /// kernel resolves pid 0 to the current task, and affinity is
+    /// per-thread). CPUs beyond the mask width are silently dropped;
+    /// if every requested CPU is out of range the mask is empty and
+    /// the kernel rejects it with EINVAL, reported here as `false`.
+    pub(super) fn pin(cpus: &[usize]) -> bool {
+        let mut mask = [0u64; MASK_WORDS];
+        let mut any = false;
+        for &cpu in cpus {
+            if cpu < MASK_WORDS * 64 {
+                mask[cpu / 64] |= 1u64 << (cpu % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        let ret = unsafe {
+            syscall3(
+                NR_SCHED_SETAFFINITY,
+                0,
+                std::mem::size_of_val(&mask),
+                mask.as_ptr() as usize,
+            )
+        };
+        ret == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_mode_round_trips_through_str() {
+        for mode in PinMode::ALL {
+            assert_eq!(mode.to_string().parse::<PinMode>().unwrap(), mode);
+        }
+        assert!("socket".parse::<PinMode>().is_err());
+        assert_eq!(PinMode::default(), PinMode::Sockets);
+    }
+
+    #[test]
+    fn empty_set_reports_unpinned_without_erroring() {
+        // the no-op / fallback contract: `false`, never a panic or Err
+        assert!(!pin_current_thread(&[]));
+    }
+
+    #[test]
+    fn out_of_range_cpus_report_unpinned() {
+        // ids beyond the 1024-CPU mask can't be expressed; the call
+        // must degrade to "not pinned", not error
+        assert!(!pin_current_thread(&[100_000]));
+    }
+
+    #[test]
+    fn pinning_to_all_cpus_is_accepted_where_supported() {
+        // pin to every CPU the process could run on — semantically a
+        // no-op mask, so it succeeds wherever the shim exists and
+        // reports false only on fallback platforms
+        let all: Vec<usize> = (0..1024).collect();
+        let pinned = pin_current_thread(&all);
+        if cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))) {
+            assert!(pinned, "full-mask pin should succeed on Linux");
+        } else {
+            assert!(!pinned);
+        }
+    }
+}

@@ -50,17 +50,21 @@
 //! prediction. The static policy keeps the paper's global block-cyclic
 //! assignment untouched — its measured imbalance is a reported result —
 //! and on a single-socket topology every socket-aware path reduces
-//! exactly to the topology-blind behavior. Placement is structural
-//! (groups, steal order, slab affinity), not enforced by CPU pinning:
-//! the crate stays std-only, and the OS scheduler usually keeps parked
-//! worker threads where they last ran.
+//! exactly to the topology-blind behavior. Placement is *enforced* by
+//! CPU pinning where the platform allows it: each worker binds itself
+//! to its socket's CPU set (or one CPU of it) at spawn via the raw
+//! `sched_setaffinity` shim in [`super::affinity`], per
+//! [`ExecutorConfig::pin`]. The crate stays std-only — no libc — and
+//! where the shim is unavailable the workers simply run unpinned and
+//! report it ([`ExecutorStats::pinned_workers`]).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Barrier, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
+use super::affinity::{pin_current_thread, PinMode};
 use super::policy::{ChunkSource, Policy};
 use super::pool::ThreadPoolStats;
 use super::topology::Topology;
@@ -110,6 +114,14 @@ pub struct ExecutorConfig {
     /// finite limit, or the nested submission may wait on its own
     /// parent's permit.
     pub max_concurrent_jobs: usize,
+    /// CPU affinity applied to each worker at spawn (see [`PinMode`]).
+    /// The default pins workers to their socket's CPU set, which is a
+    /// no-op mask on single-socket hosts and keeps workers from
+    /// migrating off their bank/slab socket on NUMA ones. Pin failures
+    /// (fallback platforms, cgroup masks, synthetic CPU ids that don't
+    /// exist on the host) degrade to unpinned workers and are reported
+    /// in [`ExecutorStats::pinned_workers`], never errors.
+    pub pin: PinMode,
 }
 
 impl Default for ExecutorConfig {
@@ -117,12 +129,13 @@ impl Default for ExecutorConfig {
         ExecutorConfig {
             workers: 0,
             max_concurrent_jobs: 0,
+            pin: PinMode::default(),
         }
     }
 }
 
 /// Point-in-time executor telemetry.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ExecutorStats {
     /// Pool worker threads (fixed at spawn).
     pub workers: usize,
@@ -145,6 +158,19 @@ pub struct ExecutorStats {
     pub peak_workers_busy: usize,
     /// Peak jobs simultaneously admitted through the gate.
     pub peak_admitted: usize,
+    /// The affinity mode workers were spawned with.
+    pub pin: PinMode,
+    /// Workers whose affinity call succeeded (0 on fallback platforms
+    /// and under `PinMode::None`; at most `workers`).
+    pub pinned_workers: usize,
+    /// Per socket: census-bank increments routed to the writer's own
+    /// socket bank (or its share of a global bank), accumulated over
+    /// every banked census run on this executor.
+    pub bank_local_writes: Vec<u64>,
+    /// Per socket: increments that crossed into another socket's share
+    /// of a global bank — the hash-scatter contention the socket-local
+    /// banks eliminate (always 0 under `Accumulation::Banked`).
+    pub bank_remote_writes: Vec<u64>,
 }
 
 /// One seat's outcome: the accumulator plus its loop telemetry.
@@ -488,6 +514,8 @@ struct Inner {
     /// Socket inventory every job's seat groups and chunk slabs are
     /// laid out against.
     topology: Topology,
+    /// Affinity mode workers were spawned with.
+    pin: PinMode,
     // admission gate
     max_jobs: usize,
     admitted: Mutex<usize>,
@@ -502,6 +530,11 @@ struct Inner {
     workers_busy: AtomicUsize,
     peak_workers_busy: AtomicUsize,
     peak_admitted: AtomicUsize,
+    pinned_workers: AtomicUsize,
+    /// Per socket: census-bank writes kept socket-local vs scattered
+    /// across sockets (reported by the banked census accumulators).
+    bank_local: Vec<AtomicU64>,
+    bank_remote: Vec<AtomicU64>,
 }
 
 impl Inner {
@@ -556,11 +589,13 @@ impl Executor {
         } else {
             cfg.workers
         };
+        let nsockets = topo.nsockets();
         let inner = Arc::new(Inner {
             queue: Mutex::new(VecDeque::new()),
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             topology: topo,
+            pin: cfg.pin,
             max_jobs: cfg.max_concurrent_jobs,
             admitted: Mutex::new(0),
             gate_cv: Condvar::new(),
@@ -573,17 +608,43 @@ impl Executor {
             workers_busy: AtomicUsize::new(0),
             peak_workers_busy: AtomicUsize::new(0),
             peak_admitted: AtomicUsize::new(0),
+            pinned_workers: AtomicUsize::new(0),
+            bank_local: (0..nsockets).map(|_| AtomicU64::new(0)).collect(),
+            bank_remote: (0..nsockets).map(|_| AtomicU64::new(0)).collect(),
         });
+        // Workers pin themselves on their own thread (affinity is
+        // per-task); the barrier makes the outcome visible before the
+        // constructor returns, so `stats().pinned_workers` is
+        // deterministic rather than racing thread startup.
+        let ready = Arc::new(Barrier::new(workers + 1));
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
             let inner = inner.clone();
+            let ready = ready.clone();
             let socket = inner.topology.socket_of(i, workers);
+            let (group_start, _) = inner.topology.group(socket, workers);
+            let slot_in_socket = i - group_start;
             let h = std::thread::Builder::new()
                 .name(format!("triadic-worker-{i}"))
-                .spawn(move || worker_loop(&inner, socket))
+                .spawn(move || {
+                    let ids = inner.topology.socket_cpu_ids(socket);
+                    let pinned = match inner.pin {
+                        PinMode::None => false,
+                        PinMode::Sockets => pin_current_thread(ids),
+                        PinMode::Cpus => {
+                            pin_current_thread(&[ids[slot_in_socket % ids.len()]])
+                        }
+                    };
+                    if pinned {
+                        inner.pinned_workers.fetch_add(1, Ordering::Relaxed);
+                    }
+                    ready.wait();
+                    worker_loop(&inner, socket)
+                })
                 .expect("spawning executor worker");
             handles.push(h);
         }
+        ready.wait();
         Executor {
             inner,
             handles,
@@ -595,7 +656,7 @@ impl Executor {
     pub fn with_workers(workers: usize) -> Executor {
         Executor::new(ExecutorConfig {
             workers,
-            max_concurrent_jobs: 0,
+            ..ExecutorConfig::default()
         })
     }
 
@@ -630,6 +691,37 @@ impl Executor {
             sockets: self.inner.topology.nsockets(),
             peak_workers_busy: self.inner.peak_workers_busy.load(Ordering::Relaxed),
             peak_admitted: self.inner.peak_admitted.load(Ordering::Relaxed),
+            pin: self.inner.pin,
+            pinned_workers: self.inner.pinned_workers.load(Ordering::Relaxed),
+            bank_local_writes: self
+                .inner
+                .bank_local
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect(),
+            bank_remote_writes: self
+                .inner
+                .bank_remote
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+
+    /// Workers whose affinity call succeeded at spawn.
+    pub fn pinned_workers(&self) -> usize {
+        self.inner.pinned_workers.load(Ordering::Relaxed)
+    }
+
+    /// Fold one banked census run's per-socket write split into the
+    /// executor's lifetime counters (called by `census::parallel` after
+    /// each banked sweep on this pool).
+    pub(crate) fn record_bank_writes(&self, local: &[u64], remote: &[u64]) {
+        for (a, &v) in self.inner.bank_local.iter().zip(local) {
+            a.fetch_add(v, Ordering::Relaxed);
+        }
+        for (a, &v) in self.inner.bank_remote.iter().zip(remote) {
+            a.fetch_add(v, Ordering::Relaxed);
         }
     }
 
@@ -695,6 +787,7 @@ impl Executor {
             seat_sockets: vec![0; nseats],
             local_steals: 0,
             remote_steals: 0,
+            pinned_workers: self.inner.pinned_workers.load(Ordering::Relaxed),
         };
 
         if nseats == 1 {
@@ -1014,6 +1107,9 @@ mod tests {
             ExecutorConfig {
                 workers: 4,
                 max_concurrent_jobs: 0,
+                // synthetic CPU ids 0 and 1 exist on the host; pinning
+                // would serialize 4 workers onto 2 CPUs for no coverage
+                pin: PinMode::None,
             },
             Topology::synthetic(vec![1, 1]),
         );
@@ -1051,6 +1147,7 @@ mod tests {
         let exec = Arc::new(Executor::new(ExecutorConfig {
             workers: 3,
             max_concurrent_jobs: 2,
+            ..ExecutorConfig::default()
         }));
         let mut handles = Vec::new();
         for t in 0..6u64 {
@@ -1222,6 +1319,77 @@ mod tests {
         );
         assert!(!cancelled);
         assert_eq!(parts.iter().sum::<u64>(), 1_000);
+    }
+
+    #[test]
+    fn pin_none_reports_zero_pinned_workers() {
+        let exec = Executor::with_topology(
+            ExecutorConfig {
+                workers: 2,
+                max_concurrent_jobs: 0,
+                pin: PinMode::None,
+            },
+            Topology::single_socket(),
+        );
+        let s = exec.stats();
+        assert_eq!(s.pinned_workers, 0);
+        assert_eq!(s.pin, PinMode::None);
+        assert_eq!(s.bank_local_writes, vec![0]);
+    }
+
+    #[test]
+    fn pin_sockets_reports_outcome_without_erroring() {
+        // single-socket pin is a full-CPU mask: succeeds wherever the
+        // affinity shim exists, and must *report* (not error) on the
+        // fallback path everywhere else
+        let exec = Executor::with_topology(
+            ExecutorConfig {
+                workers: 2,
+                max_concurrent_jobs: 0,
+                pin: PinMode::Sockets,
+            },
+            Topology::single_socket(),
+        );
+        let s = exec.stats();
+        assert!(s.pinned_workers <= 2);
+        if cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))) {
+            assert_eq!(s.pinned_workers, 2, "Linux shim should pin both workers");
+        } else {
+            assert_eq!(s.pinned_workers, 0, "fallback reports unpinned");
+        }
+        // the pool still works either way
+        let (parts, stats) = exec.run(
+            1_000,
+            2,
+            Policy::dynamic_default(),
+            |_| 0u64,
+            |acc, _, s, e| *acc += (e - s) as u64,
+        );
+        assert_eq!(parts.iter().sum::<u64>(), 1_000);
+        assert_eq!(stats.pinned_workers, s.pinned_workers);
+    }
+
+    #[test]
+    fn pin_cpus_on_unreal_topology_degrades_to_unpinned() {
+        // a synthetic topology can name CPU ids the host doesn't have;
+        // the affinity call must fail soft and leave the pool usable
+        let exec = Executor::with_topology(
+            ExecutorConfig {
+                workers: 2,
+                max_concurrent_jobs: 0,
+                pin: PinMode::Cpus,
+            },
+            Topology::with_cpu_ids(vec![vec![100_000], vec![100_001]]),
+        );
+        assert_eq!(exec.stats().pinned_workers, 0);
+        let (parts, _) = exec.run(
+            500,
+            2,
+            Policy::dynamic_default(),
+            |_| 0u64,
+            |acc, _, s, e| *acc += (e - s) as u64,
+        );
+        assert_eq!(parts.iter().sum::<u64>(), 500);
     }
 
     #[test]

@@ -14,11 +14,13 @@
 //! implementation is kept as [`run_partitioned_scoped`] for the
 //! pool-reuse ablation bench.
 
+pub mod affinity;
 pub mod executor;
 pub mod policy;
 pub mod pool;
 pub mod topology;
 
+pub use affinity::{pin_current_thread, PinMode};
 pub use executor::{CancelToken, Executor, ExecutorConfig, ExecutorStats};
 pub use policy::{ChunkIter, Policy};
 pub use pool::{run_partitioned, run_partitioned_scoped, ThreadPoolStats};

@@ -35,6 +35,10 @@ pub struct ThreadPoolStats {
     pub local_steals: u64,
     /// Steals that crossed a socket boundary (a whole socket ran dry).
     pub remote_steals: u64,
+    /// Pool workers successfully bound to their socket's CPUs when this
+    /// job ran (0 = unpinned: `PinMode::None`, a fallback platform, or
+    /// the topology-blind scoped/serial paths).
+    pub pinned_workers: usize,
 }
 
 impl ThreadPoolStats {
@@ -141,6 +145,7 @@ where
         seat_sockets: vec![0; nthreads],
         local_steals: 0,
         remote_steals: 0,
+        pinned_workers: 0,
     };
 
     if nthreads == 1 {

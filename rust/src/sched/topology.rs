@@ -3,7 +3,9 @@
 //! The paper's subject is how NUMA hardware (the 48-core Magny-Cours
 //! Opteron in particular) copes with triad-census parallelism; the
 //! executor uses this module to group workers and scheduler deques per
-//! socket so steals stay socket-local until a whole socket runs dry.
+//! socket so steals stay socket-local until a whole socket runs dry,
+//! and — since the topology now carries the actual CPU ids per node —
+//! to pin workers onto their socket's CPUs with `sched_setaffinity`.
 //!
 //! Detection reads `/sys/devices/system/node/node*/cpulist` (Linux's
 //! NUMA node inventory). Everywhere that is absent or unreadable —
@@ -15,13 +17,16 @@
 use std::fs;
 use std::path::Path;
 
-/// Socket inventory: how many CPUs each socket holds, plus the
+/// Socket inventory: which CPU ids each socket holds, plus the
 /// proportional slot arithmetic the executor uses to map worker/seat/
 /// chunk ordinals onto sockets.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Topology {
-    /// CPUs per socket, ascending by node id. Never empty; entries > 0.
-    cpus: Vec<usize>,
+    /// CPU ids per socket, ascending by node id. Never empty; every
+    /// socket holds at least one CPU. Synthetic topologies number CPUs
+    /// sequentially (socket 0 gets `0..c0`, socket 1 gets `c0..c0+c1`,
+    /// …); sysfs-detected ones carry the kernel's real ids.
+    ids: Vec<Vec<usize>>,
     /// Cumulative CPU counts (`cum[s]` = CPUs in sockets `< s`).
     cum: Vec<usize>,
 }
@@ -30,7 +35,7 @@ impl Topology {
     /// Detect the host topology from sysfs; portable fallback to one
     /// synthetic socket holding every CPU.
     pub fn detect() -> Topology {
-        Self::from_sysfs(Path::new("/sys/devices/system/node"))
+        Self::from_sysfs_dir(Path::new("/sys/devices/system/node"))
             .unwrap_or_else(Self::single_socket)
     }
 
@@ -45,47 +50,66 @@ impl Topology {
 
     /// Build from explicit per-socket CPU counts (tests and benches
     /// model multi-socket machines on single-socket hosts this way).
+    /// CPU ids are assigned sequentially across sockets.
     pub fn synthetic(cpus: Vec<usize>) -> Topology {
-        assert!(
-            !cpus.is_empty() && cpus.iter().all(|&c| c > 0),
-            "topology needs at least one socket with at least one CPU"
-        );
-        let mut cum = Vec::with_capacity(cpus.len() + 1);
-        cum.push(0);
-        for &c in &cpus {
-            cum.push(cum.last().unwrap() + c);
-        }
-        Topology { cpus, cum }
+        let mut next = 0usize;
+        let ids = cpus
+            .iter()
+            .map(|&c| {
+                let v: Vec<usize> = (next..next + c).collect();
+                next += c;
+                v
+            })
+            .collect();
+        Topology::with_cpu_ids(ids)
     }
 
-    /// Parse a sysfs NUMA node directory. `None` when the directory is
-    /// missing, holds no `node*` entries, or any cpulist is unreadable.
-    fn from_sysfs(dir: &Path) -> Option<Topology> {
-        let mut nodes: Vec<(usize, usize)> = Vec::new();
+    /// Build from explicit per-socket CPU id lists (what sysfs
+    /// detection produces — ids need not be contiguous or sequential).
+    pub fn with_cpu_ids(ids: Vec<Vec<usize>>) -> Topology {
+        assert!(
+            !ids.is_empty() && ids.iter().all(|s| !s.is_empty()),
+            "topology needs at least one socket with at least one CPU"
+        );
+        let mut cum = Vec::with_capacity(ids.len() + 1);
+        cum.push(0);
+        for s in &ids {
+            cum.push(cum.last().unwrap() + s.len());
+        }
+        Topology { ids, cum }
+    }
+
+    /// Parse a sysfs-shaped NUMA node directory (`node*/cpulist`
+    /// files). `None` when the directory is missing, holds no usable
+    /// `node*` entries, or any cpulist is malformed. Nodes whose
+    /// cpulist is empty (all CPUs offline) are skipped, matching the
+    /// kernel's memory-only-node layout. Public so tests can point it
+    /// at fixture directories instead of the live `/sys`.
+    pub fn from_sysfs_dir(dir: &Path) -> Option<Topology> {
+        let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
         for entry in fs::read_dir(dir).ok()? {
             let entry = entry.ok()?;
             let name = entry.file_name();
             let name = name.to_str()?;
-            let Some(id) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok())
-            else {
+            let Some(id) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
                 continue;
             };
             let list = fs::read_to_string(entry.path().join("cpulist")).ok()?;
-            let count = count_cpulist(list.trim())?;
-            if count > 0 {
-                nodes.push((id, count));
+            let cpus = parse_cpulist(list.trim())?;
+            if !cpus.is_empty() {
+                nodes.push((id, cpus));
             }
         }
         if nodes.is_empty() {
             return None;
         }
         nodes.sort_unstable();
-        Some(Topology::synthetic(nodes.into_iter().map(|(_, c)| c).collect()))
+        Some(Topology::with_cpu_ids(nodes.into_iter().map(|(_, c)| c).collect()))
     }
 
     /// Number of sockets (≥ 1).
     pub fn nsockets(&self) -> usize {
-        self.cpus.len()
+        self.ids.len()
     }
 
     /// Total CPUs across sockets.
@@ -95,7 +119,13 @@ impl Topology {
 
     /// CPUs on socket `s`.
     pub fn socket_cpus(&self, s: usize) -> usize {
-        self.cpus[s]
+        self.ids[s].len()
+    }
+
+    /// The CPU ids socket `s` holds — the affinity mask for pinning a
+    /// worker to that socket.
+    pub fn socket_cpu_ids(&self, s: usize) -> &[usize] {
+        &self.ids[s]
     }
 
     /// When `total` slots (workers, seats, chunk ordinals) are laid out
@@ -127,28 +157,30 @@ impl Default for Topology {
     }
 }
 
-/// Number of CPUs in a sysfs cpulist string (`"0-7,16-23"`).
-fn count_cpulist(s: &str) -> Option<usize> {
+/// The CPU ids in a sysfs cpulist string (`"0-7,16-23"`). `Some(vec![])`
+/// for the empty string (a node whose CPUs are all offline); `None` for
+/// malformed input.
+pub fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
     if s.is_empty() {
-        return Some(0);
+        return Some(Vec::new());
     }
-    let mut total = 0usize;
+    let mut cpus = Vec::new();
     for part in s.split(',') {
         match part.split_once('-') {
             Some((lo, hi)) => {
-                let (lo, hi) = (lo.trim().parse::<usize>().ok()?, hi.trim().parse::<usize>().ok()?);
+                let lo = lo.trim().parse::<usize>().ok()?;
+                let hi = hi.trim().parse::<usize>().ok()?;
                 if hi < lo {
                     return None;
                 }
-                total += hi - lo + 1;
+                cpus.extend(lo..=hi);
             }
             None => {
-                part.trim().parse::<usize>().ok()?;
-                total += 1;
+                cpus.push(part.trim().parse::<usize>().ok()?);
             }
         }
     }
-    Some(total)
+    Some(cpus)
 }
 
 #[cfg(test)]
@@ -157,12 +189,13 @@ mod tests {
 
     #[test]
     fn cpulist_parses_ranges_and_singles() {
-        assert_eq!(count_cpulist("0-7"), Some(8));
-        assert_eq!(count_cpulist("0,2,4"), Some(3));
-        assert_eq!(count_cpulist("0-1,8-9,15"), Some(5));
-        assert_eq!(count_cpulist(""), Some(0));
-        assert_eq!(count_cpulist("7-3"), None);
-        assert_eq!(count_cpulist("x"), None);
+        assert_eq!(parse_cpulist("0-7"), Some((0..8).collect()));
+        assert_eq!(parse_cpulist("0,2,4"), Some(vec![0, 2, 4]));
+        assert_eq!(parse_cpulist("0-1,8-9,15"), Some(vec![0, 1, 8, 9, 15]));
+        assert_eq!(parse_cpulist("0-3,8-11"), Some(vec![0, 1, 2, 3, 8, 9, 10, 11]));
+        assert_eq!(parse_cpulist(""), Some(vec![]));
+        assert_eq!(parse_cpulist("7-3"), None);
+        assert_eq!(parse_cpulist("x"), None);
     }
 
     #[test]
@@ -190,6 +223,14 @@ mod tests {
     }
 
     #[test]
+    fn synthetic_numbers_cpu_ids_sequentially() {
+        let t = Topology::synthetic(vec![2, 3]);
+        assert_eq!(t.socket_cpu_ids(0), &[0, 1]);
+        assert_eq!(t.socket_cpu_ids(1), &[2, 3, 4]);
+        assert_eq!(t.socket_cpus(1), 3);
+    }
+
+    #[test]
     fn single_socket_owns_everything() {
         let t = Topology::synthetic(vec![8]);
         assert_eq!(t.group(0, 10), (0, 10));
@@ -210,5 +251,64 @@ mod tests {
     #[should_panic(expected = "at least one socket")]
     fn synthetic_rejects_empty() {
         Topology::synthetic(vec![]);
+    }
+
+    fn fixture(name: &str, nodes: &[(&str, Option<&str>)]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("triadic_topo_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        for (node, list) in nodes {
+            let nd = dir.join(node);
+            fs::create_dir_all(&nd).unwrap();
+            if let Some(list) = list {
+                fs::write(nd.join("cpulist"), list).unwrap();
+            }
+        }
+        dir
+    }
+
+    #[test]
+    fn sysfs_fixture_parses_multi_socket_ids() {
+        // non-contiguous ids (the common SMT interleave) and an extra
+        // non-node entry that must be ignored
+        let dir = fixture(
+            "multi",
+            &[("node0", Some("0-3,8-11\n")), ("node1", Some("4-7,12-15\n")), ("power", None)],
+        );
+        let t = Topology::from_sysfs_dir(&dir).unwrap();
+        assert_eq!(t.nsockets(), 2);
+        assert_eq!(t.socket_cpu_ids(0), &[0, 1, 2, 3, 8, 9, 10, 11]);
+        assert_eq!(t.socket_cpu_ids(1), &[4, 5, 6, 7, 12, 13, 14, 15]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sysfs_fixture_missing_dir_and_no_nodes_yield_none() {
+        let missing = std::env::temp_dir().join("triadic_topo_definitely_absent");
+        assert_eq!(Topology::from_sysfs_dir(&missing), None);
+        let dir = fixture("empty", &[("cpufreq", None)]);
+        assert_eq!(Topology::from_sysfs_dir(&dir), None);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sysfs_fixture_skips_offline_nodes_and_rejects_malformed() {
+        // node1 is memory-only (empty cpulist — all CPUs offline):
+        // skipped, not an error
+        let dir = fixture("offline", &[("node0", Some("0-3\n")), ("node1", Some("\n"))]);
+        let t = Topology::from_sysfs_dir(&dir).unwrap();
+        assert_eq!(t.nsockets(), 1);
+        assert_eq!(t.socket_cpu_ids(0), &[0, 1, 2, 3]);
+        let _ = fs::remove_dir_all(&dir);
+
+        // a node directory without a cpulist file is unreadable → None
+        let dir = fixture("nolist", &[("node0", None)]);
+        assert_eq!(Topology::from_sysfs_dir(&dir), None);
+        let _ = fs::remove_dir_all(&dir);
+
+        // malformed cpulist → None
+        let dir = fixture("bad", &[("node0", Some("0-3,zz\n"))]);
+        assert_eq!(Topology::from_sysfs_dir(&dir), None);
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -24,7 +24,7 @@ fn concurrent_clients_share_one_bounded_pool() {
             sparse: ParallelConfig {
                 threads: 4,
                 policy: Policy::Dynamic { chunk: 64 },
-                accumulation: Accumulation::Bank { slots: 64 },
+                accumulation: Accumulation::Banked,
             },
             pool_threads: POOL_CAP,
             max_concurrent_jobs: MAX_JOBS,

@@ -43,7 +43,7 @@ fn full_pipeline_traffic_to_alerts() {
     let cfg = ParallelConfig {
         threads: 2,
         policy: Policy::dynamic_default(),
-        accumulation: Accumulation::Bank { slots: 64 },
+        accumulation: Accumulation::Banked,
     };
     let series = census_series(&events, 1.0, |g| census_parallel(g, &cfg).census);
     let mut mon = TriadMonitor::new(MonitorConfig::default(), builtin_patterns());

@@ -182,6 +182,64 @@ fn prop_hybrid_kernel_identical_to_merged_at_every_hub_count() {
 }
 
 #[test]
+fn prop_accumulation_modes_identical_across_engines() {
+    // socket-banked, fixed global-bank and fully private per-thread
+    // accumulation must all be byte-identical to the serial merged
+    // oracle for every registered engine, on an executor whose
+    // synthetic two-socket topology makes `Banked` allocate more than
+    // one bank — and the hub-split form must agree under both dense
+    // kernels on top of each accumulation mode
+    use triadic::census::{
+        census_hybrid_serial_with, hybrid_registry, Accumulation, EngineRegistry, HubKernelMode,
+        ParallelConfig,
+    };
+    use triadic::graph::relabel;
+    use triadic::graph::HubSplit;
+    use triadic::sched::{Executor, ExecutorConfig, PinMode, Topology};
+
+    let exec = Executor::with_topology(
+        ExecutorConfig {
+            workers: 4,
+            max_concurrent_jobs: 0,
+            // synthetic CPU ids need not exist on the host; keep the
+            // differential about accumulation, not affinity
+            pin: PinMode::None,
+        },
+        Topology::synthetic(vec![2, 2]),
+    );
+    let modes = [
+        Accumulation::Banked,
+        Accumulation::Bank { slots: 8 },
+        Accumulation::PerThread,
+    ];
+    for seed in 0..6u64 {
+        let n = 30 + (seed % 20) as u32;
+        let g = random_digraph(n, (n as usize) * 4, seed * 37 + 5);
+        let want = merged::census(&g);
+        let split = relabel::degree_split(&g, 2).1;
+        let h = HubSplit::with_hub_count(split, n as usize / 3);
+        for kernel in [HubKernelMode::Scalar, HubKernelMode::Wide] {
+            let got = census_hybrid_serial_with(&h, kernel);
+            assert_eq!(got, want, "serial hybrid {kernel:?} seed {seed}");
+        }
+        for acc in modes {
+            let cfg = ParallelConfig {
+                threads: 3,
+                accumulation: acc,
+                ..ParallelConfig::default()
+            };
+            let registry = EngineRegistry::builtin(cfg);
+            for name in registry.names() {
+                let run = registry.get(name).unwrap().census(&g, &exec);
+                assert_eq!(run.census, want, "engine {name} acc {acc:?} seed {seed}");
+            }
+            let run = hybrid_registry(cfg).get("parallel").unwrap().census(&h, &exec);
+            assert_eq!(run.census, want, "hybrid acc {acc:?} seed {seed}");
+        }
+    }
+}
+
+#[test]
 fn prop_adding_an_arc_only_moves_counts_up_the_lattice() {
     // adding one arc changes exactly n-2 triads, each to a class with
     // one more arc
